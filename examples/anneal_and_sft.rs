@@ -1,0 +1,179 @@
+//! Annealing + two-stage SFT pipeline (paper §4.1 annealing, §5 SFT,
+//! Tables 2 & 3 analogues).
+//!
+//! ```bash
+//! cargo run --release --example anneal_and_sft -- \
+//!     --artifacts artifacts/tiny --pretrain-rounds 20 --out results/sft
+//! ```
+//!
+//! 1. quick SparseLoCo pre-training on the web mixture (or load
+//!    --checkpoint from e2e_pretrain),
+//! 2. *anneal*: short high-quality-mixture phase (Table 3 before/after),
+//! 3. *SFT stage 1*: instruction data, answer-masked loss,
+//! 4. *SFT stage 2*: continued with 20% pre-training replay,
+//! 5. evals after every phase.
+
+use anyhow::Result;
+use covenant::config::run::RunConfig;
+use covenant::coordinator::network::{Network, NetworkParams};
+use covenant::data::grammar::{GrammarKind, AMARK, QMARK};
+use covenant::data::{BatchSampler, Grammar};
+use covenant::eval::{Scorer, SuiteResult};
+use covenant::runtime::Engine;
+use covenant::train::{checkpoint, Schedule, Segment, Trainer};
+use covenant::util::cli::Args;
+use covenant::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let artifacts = args.get_or("artifacts", "artifacts/tiny");
+    let pre_rounds = args.get_usize("pretrain-rounds", 20)?;
+    let anneal_steps = args.get_usize("anneal-steps", 40)?;
+    let sft1_steps = args.get_usize("sft1-steps", 60)?;
+    let sft2_steps = args.get_usize("sft2-steps", 40)?;
+    let eval_tasks = args.get_usize("eval-tasks", 60)?;
+    let out = args.get_or("out", "results/sft");
+    let ckpt = args.get("checkpoint").map(|s| s.to_string());
+
+    let eng = Engine::new(&artifacts)?;
+    let man = eng.manifest().clone();
+    let h = man.config.inner_steps;
+    let grammar = Grammar::new(man.config.vocab_size, 0xC0DE ^ 0xDA7A); // == quick(run.seed=0xC0DE) world
+    let scorer = Scorer::new(&eng);
+
+    // ---- phase 0: pre-train (or load) ------------------------------------
+    let base_params = match ckpt {
+        Some(path) => {
+            println!("loading checkpoint {path}");
+            checkpoint::load(path)?
+        }
+        None => {
+            println!("pre-training {pre_rounds} rounds on the web mixture...");
+            let mut run = RunConfig::default();
+            run.artifacts = artifacts.clone();
+            run.max_contributors = 4;
+            run.target_active = 5;
+            run.seed = 0xC0DE;
+            let mut p = NetworkParams::quick(run, h, pre_rounds);
+            p.initial_peers = 4;
+            p.schedule =
+                Schedule::new(vec![Segment::Constant { lr: 2e-3, steps: 1_000_000 }]);
+            let mut net = Network::new(&eng, p)?;
+            for r in 0..pre_rounds {
+                let rep = net.run_round()?;
+                if r % 5 == 0 {
+                    println!("  round {r}: loss {:.4}", rep.mean_loss);
+                }
+            }
+            net.global_params.clone()
+        }
+    };
+    let eval_pre = scorer.run_all(&base_params, &grammar, eval_tasks, 1)?;
+
+    // ---- phase 1: anneal on the high-quality mixture (Table 3) ----------
+    println!("\nannealing {anneal_steps} steps on the high-quality mixture...");
+    let mut tr = Trainer::from_params(&eng, base_params.clone());
+    let hq = grammar.stream(GrammarKind::HighQuality, 42, 200_000);
+    // 25% replay of natural web text, mirroring the paper's anneal blend.
+    let replay = grammar.stream(GrammarKind::Web, 43, 70_000);
+    let mut blend = hq;
+    blend.extend(replay);
+    let mut sampler = BatchSampler::new(blend, man.config.seq_len, man.config.batch_size, 7);
+    // rapid warmup + decay (the Fig. 2 anneal tail shape)
+    let anneal_sched = Schedule::new(vec![
+        Segment::Linear { from: 1e-4, to: 1e-3, steps: anneal_steps / 8 },
+        Segment::Cosine { from: 1e-3, to: 1e-5, steps: anneal_steps - anneal_steps / 8 },
+    ]);
+    for s in 0..anneal_steps {
+        tr.step(&sampler.batch(), &sampler.ones_mask(), anneal_sched.lr(s) as f32)?;
+    }
+    let annealed = tr.params.clone();
+    let eval_anneal = scorer.run_all(&annealed, &grammar, eval_tasks, 1)?;
+
+    // ---- phase 2: SFT stage 1 (instruction data, answer-masked) ----------
+    println!("SFT stage 1: {sft1_steps} steps on instruction data (answer-masked loss, clip=1.0)...");
+    let mut sft = Trainer::from_params(&eng, annealed.clone());
+    sft.clip = 1.0; // paper §5: gradient clipping at 1.0
+    sft.reset_optimizer();
+    let sched1 = Schedule::sft_stage1_scaled(sft1_steps as f64 / 36_500.0);
+    let mut rng = Rng::new(0x5F7);
+    for s in 0..sft1_steps {
+        let (tokens, mask) = instruction_batch(&grammar, &man, &mut rng, 0.0);
+        // SFT LRs are tiny at paper scale; scale up for the small model.
+        let lr = (sched1.lr(s) * 200.0) as f32;
+        sft.step(&tokens, &mask, lr)?;
+    }
+    let eval_sft1 = scorer.run_all(&sft.params, &grammar, eval_tasks, 1)?;
+
+    // ---- phase 3: SFT stage 2 (20% pre-training replay) -------------------
+    println!("SFT stage 2: {sft2_steps} steps with 20% replay...");
+    let sched2 = Schedule::sft_stage2_scaled(sft2_steps as f64 / 20_500.0);
+    for s in 0..sft2_steps {
+        let (tokens, mask) = instruction_batch(&grammar, &man, &mut rng, 0.2);
+        let lr = (sched2.lr(s) * 200.0) as f32;
+        sft.step(&tokens, &mask, lr)?;
+    }
+    let eval_sft2 = scorer.run_all(&sft.params, &grammar, eval_tasks, 1)?;
+
+    // ---- report (Tables 2/3 analogue) -------------------------------------
+    println!("\n== accuracy by phase (4 choices, chance=25%) ==");
+    println!(
+        "{:<36} {:>9} {:>9} {:>9} {:>9}",
+        "suite", "pre", "anneal", "sft-1", "sft-2"
+    );
+    let rows = |r: &[SuiteResult]| -> Vec<f64> { r.iter().map(|x| x.accuracy()).collect() };
+    let (a, b, c, d) = (rows(&eval_pre), rows(&eval_anneal), rows(&eval_sft1), rows(&eval_sft2));
+    for i in 0..eval_pre.len() {
+        println!(
+            "{:<36} {:>8.1}% {:>8.1}% {:>8.1}% {:>8.1}%",
+            eval_pre[i].suite.name(),
+            100.0 * a[i],
+            100.0 * b[i],
+            100.0 * c[i],
+            100.0 * d[i]
+        );
+    }
+    checkpoint::save(format!("{out}/covenant-chat.ckpt"), &sft.params)?;
+    println!("\nwrote {out}/covenant-chat.ckpt");
+    println!("anneal_and_sft OK");
+    Ok(())
+}
+
+/// An instruction-formatted batch with the loss masked to the answer
+/// token (the paper masks non-answer content), with `replay_frac` of rows
+/// drawn from the natural web mixture (full-sequence loss).
+fn instruction_batch(
+    grammar: &Grammar,
+    man: &covenant::runtime::Manifest,
+    rng: &mut Rng,
+    replay_frac: f64,
+) -> (Vec<i32>, Vec<f32>) {
+    let b = man.config.batch_size;
+    let t = man.config.seq_len;
+    let mut tokens = Vec::with_capacity(b * (t + 1));
+    let mut mask = vec![0f32; b * t];
+    for row in 0..b {
+        if rng.f64() < replay_frac {
+            let stream = grammar.stream(GrammarKind::Web, rng.next_u64(), t + 64);
+            tokens.extend_from_slice(&stream[..t + 1]);
+            for j in 0..t {
+                mask[row * t + j] = 1.0;
+            }
+        } else {
+            let stream = grammar.stream(GrammarKind::Instruction, rng.next_u64(), t + 64);
+            tokens.extend_from_slice(&stream[..t + 1]);
+            // mask only answer positions: target index j predicts token
+            // j+1; we want positions where token j+1 follows AMARK.
+            for j in 0..t {
+                if stream[j] == AMARK {
+                    mask[row * t + j] = 1.0;
+                }
+                // also keep a small LM signal on question starts
+                if stream[j + 1] == QMARK {
+                    mask[row * t + j] = 0.1;
+                }
+            }
+        }
+    }
+    (tokens, mask)
+}

@@ -1,0 +1,89 @@
+//! Permissionless participation showcase: heavy churn + a high adversary
+//! rate, demonstrating that Gauntlet keeps the run healthy (paper §2.2,
+//! §4.4, Appendix A).
+//!
+//! ```bash
+//! cargo run --release --example permissionless_run -- \
+//!     --artifacts artifacts/tiny --rounds 12 --adversarial 0.4
+//! ```
+//!
+//! Prints per-round validator verdicts (who was selected, who was caught,
+//! and why) and the participation summary.
+
+use anyhow::Result;
+use covenant::config::run::RunConfig;
+use covenant::coordinator::network::{Network, NetworkParams};
+use covenant::runtime::Engine;
+use covenant::train::{Schedule, Segment};
+use covenant::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let artifacts = args.get_or("artifacts", "artifacts/tiny");
+    let rounds = args.get_usize("rounds", 12)?;
+    let adversarial = args.get_f64("adversarial", 0.4)?;
+    let peers = args.get_usize("peers", 8)?;
+
+    let eng = Engine::new(&artifacts)?;
+    let h = eng.manifest().config.inner_steps;
+    println!(
+        "permissionless_run: {} rounds, target {} peers, {:.0}% of joiners adversarial",
+        rounds,
+        peers,
+        adversarial * 100.0
+    );
+
+    let mut run = RunConfig::default();
+    run.artifacts = artifacts.clone();
+    run.max_contributors = peers.saturating_sub(2).max(2);
+    run.target_active = peers;
+    run.seed = 0x7EE5;
+    let mut p = NetworkParams::quick(run, h, rounds);
+    p.initial_peers = peers;
+    p.churn.p_adversarial = adversarial;
+    p.churn.p_leave = 0.08; // heavy churn
+    p.schedule = Schedule::new(vec![Segment::Constant { lr: 2e-3, steps: 1_000_000 }]);
+
+    let mut net = Network::new(&eng, p)?;
+    let mut adv_submitted_total = 0usize;
+    let mut adv_selected_total = 0usize;
+    let mut contributing_sum = 0usize;
+    let mut active_sum = 0usize;
+    for r in 0..rounds {
+        let rep = net.run_round()?;
+        adv_submitted_total += rep.adversarial_submitted;
+        adv_selected_total += rep.adversarial_selected;
+        contributing_sum += rep.contributing;
+        active_sum += rep.active;
+        println!(
+            "round {r:>3}: active {:>2} submitted {:>2} selected {:>2} | adversarial submitted {:>2} selected {:>2} | loss {:.4}",
+            rep.active,
+            rep.submitted,
+            rep.contributing,
+            rep.adversarial_submitted,
+            rep.adversarial_selected,
+            rep.mean_loss,
+        );
+    }
+
+    let filter_rate = if adv_submitted_total > 0 {
+        100.0 * (1.0 - adv_selected_total as f64 / adv_submitted_total as f64)
+    } else {
+        100.0
+    };
+    println!("\n== summary ==");
+    println!("mean active peers:       {:.1}", active_sum as f64 / rounds as f64);
+    println!("mean contributing peers: {:.1}", contributing_sum as f64 / rounds as f64);
+    println!(
+        "adversarial submissions: {} ({} slipped through) -> {:.1}% filtered",
+        adv_submitted_total, adv_selected_total, filter_rate
+    );
+    println!("unique peers ever seen:  {}", net.unique_peers_ever());
+    println!(
+        "final loss: {:.4} (ln V = {:.3})",
+        net.recent_loss(3),
+        (eng.manifest().config.vocab_size as f64).ln()
+    );
+    println!("permissionless_run OK");
+    Ok(())
+}

@@ -1,0 +1,6 @@
+"""Build-time-only Python package: L2 JAX model + L1 Pallas kernels + AOT.
+
+Nothing here runs at request time — ``aot.py`` lowers everything to HLO
+text once (``make artifacts``), and the Rust coordinator is self-contained
+afterwards.
+"""

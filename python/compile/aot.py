@@ -1,0 +1,181 @@
+"""AOT: lower every L2 graph to HLO *text* + a manifest for the Rust runtime.
+
+Run once per config (``make artifacts``):
+
+    cd python && python -m compile.aot --config tiny --out ../artifacts/tiny
+
+Interchange is HLO text, NOT a serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+the published ``xla`` crate binds) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts per config (all f32 unless noted; Na = padded flat param length,
+nc = Na/4096 chunks, k = 64, B/T/H from the config):
+
+  init_params  (seed i32)                                   -> (params[Na])
+  train_step   (params,m,v, step, tokens[B,T+1]i32,
+                mask[B,T], lr, clip)                        -> (params',m',v', loss)
+  train_round  (params,m,v, step0, tokens[H,B,T+1]i32,
+                mask[H,B,T], lrs[H], clip)                  -> (params',m',v', losses[H])
+  compress     (delta[Na], ef[Na], beta)                    -> (ef'[Na], idx[nc,k]i32,
+                                                                codes[nc,k]i32, scales[nc,1])
+  decompress   (idx, codes, scales)                         -> (dense[Na])
+  outer_step   (params[Na], delta[Na], alpha)               -> (params')
+  eval_loss    (params, tokens[B,T+1]i32, mask[B,T])        -> (loss)
+  loss_per_seq (params, tokens[B,T+1]i32, mask[B,T])        -> (losses[B])
+"""
+
+import argparse
+import functools
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .configs import get_config, build_layout, PRESETS, asdict
+from . import model, optim, sparseloco
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the rust-loadable form)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_artifacts(cfg):
+    """Returns {name: (fn, example_args)} for one config."""
+    lay = build_layout(cfg)
+    na = lay.n_alloc
+    nc = lay.n_chunks
+    k = cfg.topk
+    b, t, h = cfg.batch_size, cfg.seq_len, cfg.inner_steps
+    f32 = jnp.float32
+    i32 = jnp.int32
+    scalar = _spec((), f32)
+
+    arts = {
+        "init_params": (
+            lambda seed: (model.init_params(seed, cfg),),
+            [_spec((), i32)],
+        ),
+        "train_step": (
+            lambda p, m, v, s, tok, msk, lr, cl: optim.train_step(
+                p, m, v, s, tok, msk, lr, cl, cfg
+            ),
+            [
+                _spec((na,)), _spec((na,)), _spec((na,)), scalar,
+                _spec((b, t + 1), i32), _spec((b, t)), scalar, scalar,
+            ],
+        ),
+        "train_round": (
+            lambda p, m, v, s, tok, msk, lrs, cl: optim.train_round(
+                p, m, v, s, tok, msk, lrs, cl, cfg
+            ),
+            [
+                _spec((na,)), _spec((na,)), _spec((na,)), scalar,
+                _spec((h, b, t + 1), i32), _spec((h, b, t)), _spec((h,)), scalar,
+            ],
+        ),
+        "compress": (
+            lambda d, ef, beta: sparseloco.compress(d, ef, beta, cfg),
+            [_spec((na,)), _spec((na,)), scalar],
+        ),
+        "decompress": (
+            lambda idx, codes, scales: (sparseloco.decompress(idx, codes, scales, cfg),),
+            [_spec((nc, k), i32), _spec((nc, k), i32), _spec((nc, 1))],
+        ),
+        "outer_step": (
+            lambda p, d, a: (sparseloco.outer_step(p, d, a),),
+            [_spec((na,)), _spec((na,)), scalar],
+        ),
+        "eval_loss": (
+            lambda p, tok, msk: (model.loss_fn(p, tok, msk, cfg),),
+            [_spec((na,)), _spec((b, t + 1), i32), _spec((b, t))],
+        ),
+        "loss_per_seq": (
+            lambda p, tok, msk: (model.loss_per_seq(p, tok, msk, cfg),),
+            [_spec((na,)), _spec((b, t + 1), i32), _spec((b, t))],
+        ),
+    }
+    return arts
+
+
+def _dt(s: jax.ShapeDtypeStruct) -> str:
+    return {"float32": "f32", "int32": "i32"}[str(s.dtype)]
+
+
+def compile_config(name: str, out_dir: Path, only=None) -> dict:
+    cfg = get_config(name)
+    lay = build_layout(cfg)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    arts = build_artifacts(cfg)
+    manifest = {
+        "config": asdict(cfg),
+        "n_params": lay.n_params,
+        "n_alloc": lay.n_alloc,
+        "n_chunks": lay.n_chunks,
+        "tensors": [
+            {
+                "name": s.name, "shape": list(s.shape), "offset": s.offset,
+                "size": s.size, "slot": s.slot, "is_2d": s.is_2d,
+                "decay": s.decay,
+            }
+            for s in lay.slots
+        ],
+        "artifacts": {},
+    }
+    for art_name, (fn, args) in arts.items():
+        if only and art_name not in only:
+            continue
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{art_name}.hlo.txt"
+        (out_dir / fname).write_text(text)
+        outs = lowered.out_info
+        out_list = jax.tree_util.tree_leaves(outs)
+        manifest["artifacts"][art_name] = {
+            "file": fname,
+            "inputs": [{"shape": list(a.shape), "dtype": _dt(a)} for a in args],
+            "outputs": [
+                {"shape": list(o.shape), "dtype": _dt(o)} for o in out_list
+            ],
+        }
+        print(
+            f"  {name}/{art_name}: {len(text)/1e6:.2f} MB HLO text "
+            f"({time.time()-t0:.1f}s)"
+        )
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--config", default="tiny,small",
+                    help=f"comma-separated preset names from {sorted(PRESETS)}")
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts root (per-config subdirs)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact names (default: all)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    root = Path(args.out)
+    for name in args.config.split(","):
+        name = name.strip()
+        print(f"[aot] lowering config '{name}' -> {root / name}")
+        compile_config(name, root / name, only=only)
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""L1 — Pallas kernels for the paper's compute hot-spots.
+
+- ``topk_chunk``: fused chunk-wise Top-k + 2-bit quant + EF payload
+  (SparseLoCo's compression operator — the communication hot-spot).
+- ``quant2bit``: standalone 2-bit quantize/dequantize.
+- ``rmsnorm``: fused RMSNorm used by every transformer block.
+- ``attention``: causal GQA attention.
+- ``ref``: pure-jnp oracles for all of the above.
+
+All kernels run with interpret=True so the AOT HLO executes on the CPU
+PJRT client; TPU performance is estimated analytically (DESIGN §Perf).
+"""
+
+from . import ref  # noqa: F401
+from .rmsnorm import rmsnorm, rmsnorm_pallas  # noqa: F401
+from .attention import gqa_attention, gqa_attention_pallas  # noqa: F401
+from .quant2bit import quantize2bit_pallas, dequantize2bit_pallas  # noqa: F401
+from .topk_chunk import compress_chunks_pallas  # noqa: F401

@@ -1,0 +1,89 @@
+"""Causal GQA attention as a Pallas kernel.
+
+TPU mapping (DESIGN §Hardware-Adaptation): the paper's GPU attention
+tiles over threadblocks with shared-memory staging; here the BlockSpec
+grid is (batch, query-head, query-block). Each grid step keeps one
+(Tq, dh) query tile plus the full (T, dh) K and V panels of the *shared
+KV head* in VMEM — GQA means H/KV query heads reuse the same K/V panel,
+which the index_map expresses directly (h -> h // group), so the HBM->VMEM
+traffic for K/V is amortized across the group exactly like the paper's
+shared-memory reuse. The two matmuls are MXU-shaped ((Tq,dh)x(dh,T) and
+(Tq,T)x(T,dh)); VMEM footprint per step is
+  Tq*dh + 2*T*dh + Tq*T floats  (~1.3 MiB at T=2048, dh=128, Tq=128).
+
+interpret=True on this CPU testbed (lowers to plain HLO; real-TPU would
+emit a Mosaic custom-call the CPU PJRT client cannot run).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .common import row_block
+
+_TARGET_TQ = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, tq: int):
+    q = q_ref[0, 0]          # [tq, dh]
+    k = k_ref[0, 0]          # [T, dh]
+    v = v_ref[0, 0]          # [T, dh]
+    t, dh = k.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    s = jnp.dot(q, k.T) * scale                       # [tq, T]
+    row = pl.program_id(2) * tq + jax.lax.iota(jnp.int32, tq)
+    col = jax.lax.iota(jnp.int32, t)
+    mask = col[None, :] <= row[:, None]
+    s = jnp.where(mask, s, jnp.asarray(-1e30, s.dtype))
+    # Numerically-stable softmax over the key axis.
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[0, 0] = jnp.dot(p, v)
+
+
+def gqa_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """q: [B,H,T,dh]; k,v: [B,KV,T,dh] -> [B,H,T,dh] (causal)."""
+    b, h, t, dh = q.shape
+    kv = k.shape[1]
+    group = h // kv
+    tq = row_block(t, _TARGET_TQ)
+    kv_spec = pl.BlockSpec((1, 1, t, dh), lambda bi, hi, qi: (bi, hi // group, 0, 0))
+    return pl.pallas_call(
+        functools.partial(_kernel, tq=tq),
+        grid=(b, h, t // tq),
+        in_specs=[
+            pl.BlockSpec((1, 1, tq, dh), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            kv_spec,
+            kv_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, tq, dh), lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+# --------------------------------------------------------------------------
+# Differentiable wrapper: Pallas forward, jax.vjp-of-reference backward
+# (flash-style remat: the backward recomputes attention probabilities from
+# q,k,v instead of materializing the [B,H,T,T] tensor in residuals).
+# --------------------------------------------------------------------------
+@jax.custom_vjp
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    return gqa_attention_pallas(q, k, v)
+
+
+def _fwd(q, k, v):
+    return gqa_attention_pallas(q, k, v), (q, k, v)
+
+
+def _bwd(res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(ref.gqa_attention, q, k, v)
+    return vjp(g)
+
+
+gqa_attention.defvjp(_fwd, _bwd)

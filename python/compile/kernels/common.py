@@ -1,0 +1,17 @@
+"""Shared helpers for the Pallas kernels."""
+
+
+def row_block(rows: int, target: int) -> int:
+    """Largest divisor of ``rows`` that is <= ``target``.
+
+    Pallas grids must tile the array exactly; all our row counts (B*T,
+    n_chunks, ...) are highly composite, so an exact divisor close to the
+    VMEM-friendly target always exists.
+    """
+    if rows <= target:
+        return rows
+    best = 1
+    for d in range(1, target + 1):
+        if rows % d == 0:
+            best = d
+    return best

@@ -1,0 +1,63 @@
+"""2-bit symmetric quantization of transmitted Top-k values (Pallas).
+
+The paper quantizes the Top-k-selected pseudo-gradient values to 2 bits
+per value (§2.1, §4.1), with indices encoded at 12 bits/value, for a
+total >146x compression vs dense f32. The codebook here is symmetric
+4-level: {-1, -1/3, +1/3, +1} * scale with scale = per-chunk max-|v|.
+
+TPU mapping: pure VPU element-wise work; grid tiles rows of the (n, k)
+value matrix so each step holds one (rows_block, k) tile in VMEM.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .common import row_block
+
+_TARGET_ROWS = 256
+
+
+def _quant_kernel(v_ref, s_ref, o_ref):
+    x = v_ref[...] / jnp.maximum(s_ref[...], 1e-12)
+    c = jnp.where(x < -2.0 / 3.0, 0, jnp.where(x < 0.0, 1, jnp.where(x < 2.0 / 3.0, 2, 3)))
+    o_ref[...] = c.astype(jnp.int32)
+
+
+def _dequant_kernel(c_ref, s_ref, o_ref):
+    o_ref[...] = ref.levels(c_ref[...]) * s_ref[...]
+
+
+def quantize2bit_pallas(vals: jax.Array, scales: jax.Array) -> jax.Array:
+    """vals: [n, k]; scales: [n, 1] -> int32 codes [n, k]."""
+    n, k = vals.shape
+    br = row_block(n, _TARGET_ROWS)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(n // br,),
+        in_specs=[
+            pl.BlockSpec((br, k), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.int32),
+        interpret=True,
+    )(vals, scales)
+
+
+def dequantize2bit_pallas(codes: jax.Array, scales: jax.Array) -> jax.Array:
+    """codes: [n, k] int32; scales: [n, 1] -> f32 values [n, k]."""
+    n, k = codes.shape
+    br = row_block(n, _TARGET_ROWS)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(n // br,),
+        in_specs=[
+            pl.BlockSpec((br, k), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), jnp.float32),
+        interpret=True,
+    )(codes, scales)

@@ -1,0 +1,109 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness ground truth: pytest compares each kernel's
+output against its oracle with ``assert_allclose`` (including hypothesis
+shape/dtype sweeps), and the model's custom-VJP backward passes are the
+``jax.vjp`` of these references (remat-style recompute — see DESIGN §Perf).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+# --------------------------------------------------------------------------
+# RMSNorm
+# --------------------------------------------------------------------------
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """y = x / rms(x) * w along the last axis."""
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+# --------------------------------------------------------------------------
+# GQA causal attention
+# --------------------------------------------------------------------------
+def gqa_attention(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Causal grouped-query attention.
+
+    q: [B, H, T, dh]; k, v: [B, KV, T, dh]; H % KV == 0.
+    Returns [B, H, T, dh].
+    """
+    b, h, t, dh = q.shape
+    kv = k.shape[1]
+    group = h // kv
+    # Expand KV heads to query heads.
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, q.dtype))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+    s = jnp.where(mask[None, None, :, :], s, jnp.asarray(-1e30, s.dtype))
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+# --------------------------------------------------------------------------
+# 2-bit symmetric quantization
+# --------------------------------------------------------------------------
+# Codebook: code c in {0,1,2,3} -> level (c * 2/3 - 1) in
+# {-1, -1/3, +1/3, +1}, times the per-chunk scale. Decision thresholds at
+# {-2/3, 0, +2/3} * scale. The arithmetic form (instead of a lookup table)
+# is used so the Pallas kernels need no captured constants and kernel/ref
+# agree bit-for-bit.
+def levels(codes: jax.Array) -> jax.Array:
+    return codes.astype(jnp.float32) * jnp.float32(2.0 / 3.0) - 1.0
+
+
+def quantize2bit(vals: jax.Array, scale: jax.Array) -> jax.Array:
+    """vals: [..., k]; scale: [..., 1] (max-abs per chunk). Returns int32 codes."""
+    x = vals / jnp.maximum(scale, 1e-12)
+    c = jnp.where(x < -2.0 / 3.0, 0, jnp.where(x < 0.0, 1, jnp.where(x < 2.0 / 3.0, 2, 3)))
+    return c.astype(jnp.int32)
+
+
+def dequantize2bit(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of quantize2bit (up to quantization error)."""
+    return levels(codes) * scale
+
+
+# --------------------------------------------------------------------------
+# Chunk-wise Top-k compression (SparseLoCo Eq. 1 compression operator)
+# --------------------------------------------------------------------------
+def topk_abs_indices(x: jax.Array, k: int) -> jax.Array:
+    """Indices of the k largest |values| along the last axis (desc order).
+
+    Implemented with argsort rather than ``jax.lax.top_k``: the TopK HLO op
+    grew a ``largest=`` attribute in recent XLA that the 0.5.1 HLO-text
+    parser used by the Rust loader rejects; ``sort`` round-trips cleanly.
+    """
+    return jnp.argsort(-jnp.abs(x), axis=-1)[..., :k].astype(jnp.int32)
+
+
+def compress_chunks(chunks: jax.Array, k: int):
+    """Per-chunk Top-k by |value| + 2-bit quantization.
+
+    chunks: [nc, C] f32.
+    Returns (idx [nc,k] i32, codes [nc,k] i32, scales [nc,1] f32,
+             transmitted [nc, C] f32) where ``transmitted`` is the dense
+    dequantized payload (what every peer will reconstruct), used for the
+    error-feedback update ef' = acc - transmitted.
+    """
+    nc, _ = chunks.shape
+    idx = topk_abs_indices(chunks, k)                     # [nc, k]
+    vals = jnp.take_along_axis(chunks, idx, axis=1)       # [nc, k]
+    scales = jnp.max(jnp.abs(vals), axis=1, keepdims=True)  # [nc, 1]
+    codes = quantize2bit(vals, scales)
+    deq = dequantize2bit(codes, scales)
+    rows = jnp.arange(nc)[:, None]
+    transmitted = jnp.zeros_like(chunks).at[rows, idx].set(deq)
+    return idx.astype(jnp.int32), codes, scales, transmitted
+
+
+def decompress_chunks(idx: jax.Array, codes: jax.Array, scales: jax.Array,
+                      chunk: int) -> jax.Array:
+    """Scatter dequantized values back to dense [nc, C]."""
+    nc = idx.shape[0]
+    deq = dequantize2bit(codes, scales)
+    rows = jnp.arange(nc)[:, None]
+    dense = jnp.zeros((nc, chunk), dtype=jnp.float32)
+    return dense.at[rows, idx].set(deq)

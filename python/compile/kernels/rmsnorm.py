@@ -1,0 +1,69 @@
+"""Fused RMSNorm as a Pallas kernel.
+
+TPU mapping (DESIGN §Hardware-Adaptation): the grid tiles rows (tokens) so
+each step holds a (rows_block, D) tile plus the (D,) gain in VMEM; the
+reduction and scale are VPU element-wise work fused into one pass over the
+tile (one HBM read + one write per element instead of the 3 passes of the
+unfused mean/rsqrt/mul chain).
+
+interpret=True everywhere on this CPU testbed — the kernel lowers to plain
+HLO so the AOT artifacts run on the PJRT CPU client (see README gotchas).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .common import row_block
+
+# VMEM budget: rows_block * D * 4B * ~3 live tiles <= ~2 MiB at D=8192.
+_TARGET_ROWS = 64
+
+
+def _kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...]
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    o_ref[...] = x * jax.lax.rsqrt(ms + eps) * w_ref[...]
+
+
+def rmsnorm_pallas(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """x: [rows, D]; w: [D] -> [rows, D]."""
+    rows, d = x.shape
+    br = row_block(rows, _TARGET_ROWS)
+    return pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=True,
+    )(x, w)
+
+
+# --------------------------------------------------------------------------
+# Differentiable wrapper: Pallas forward, jax.vjp-of-reference backward
+# (remat policy: backward recomputes the cheap normalization instead of
+# saving rsqrt residuals — see DESIGN §Perf L2).
+# --------------------------------------------------------------------------
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def rmsnorm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    return rmsnorm_pallas(x, w, eps)
+
+
+def _fwd(x, w, eps):
+    return rmsnorm_pallas(x, w, eps), (x, w)
+
+
+def _bwd(eps, res, g):
+    x, w = res
+    _, vjp = jax.vjp(lambda x_, w_: ref.rmsnorm(x_, w_, eps), x, w)
+    return vjp(g)
+
+
+rmsnorm.defvjp(_fwd, _bwd)

@@ -1,0 +1,191 @@
+"""L2 — LLaMA-3-style decoder-only transformer over a flat parameter vector.
+
+Architecture (paper §4.1, Table 4): GQA, RoPE (theta=500k), RMSNorm,
+SwiGLU, tied token-embedding/LM-head. All parameters live in one flat f32
+vector with the chunk-aligned, 64x64-block-major layout of ``configs.py``
+so SparseLoCo compression is a plain reshape and Rust handles exactly one
+buffer per state (params / m / v / error-feedback).
+
+The forward calls the L1 Pallas kernels (rmsnorm, gqa_attention); their
+backward passes are jax.vjp of the jnp references (remat policy).
+"""
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, Layout, build_layout, BLOCK
+from .kernels.rmsnorm import rmsnorm
+from .kernels.attention import gqa_attention
+
+
+# --------------------------------------------------------------------------
+# Flat-vector <-> named-tensor (block-major layout)
+# --------------------------------------------------------------------------
+def to_block_major(t: jax.Array) -> jax.Array:
+    """Flatten a tensor into its stored order.
+
+    2-D [R, C] (R, C multiples of 64) -> 64x64 blocks, block-row-major,
+    each block row-major. 1-D -> identity.
+    """
+    if t.ndim == 1:
+        return t
+    r, c = t.shape
+    return (
+        t.reshape(r // BLOCK, BLOCK, c // BLOCK, BLOCK)
+        .transpose(0, 2, 1, 3)
+        .reshape(-1)
+    )
+
+
+def from_block_major(flat: jax.Array, shape) -> jax.Array:
+    """Inverse of :func:`to_block_major`."""
+    if len(shape) == 1:
+        return flat.reshape(shape)
+    r, c = shape
+    return (
+        flat.reshape(r // BLOCK, c // BLOCK, BLOCK, BLOCK)
+        .transpose(0, 2, 1, 3)
+        .reshape(r, c)
+    )
+
+
+def unflatten(flat: jax.Array, lay: Layout) -> Dict[str, jax.Array]:
+    """Slice the flat vector into named tensors (undoing block-major)."""
+    out = {}
+    for s in lay.slots:
+        raw = jax.lax.dynamic_slice_in_dim(flat, s.offset, s.size)
+        out[s.name] = from_block_major(raw, s.shape)
+    return out
+
+
+def flatten(tensors: Dict[str, jax.Array], lay: Layout) -> jax.Array:
+    """Pack named tensors into the flat vector (block-major + slot pad)."""
+    parts = []
+    for s in lay.slots:
+        t = to_block_major(tensors[s.name].astype(jnp.float32))
+        if s.slot > s.size:
+            t = jnp.concatenate([t, jnp.zeros(s.slot - s.size, jnp.float32)])
+        parts.append(t)
+    return jnp.concatenate(parts)
+
+
+def decay_mask(lay: Layout) -> jax.Array:
+    """1.0 where weight decay applies (2-D tensors), 0.0 elsewhere
+    (norm gains and slot padding). Built from broadcasts so the lowered
+    HLO stays small (no giant literal)."""
+    parts = []
+    for s in lay.slots:
+        parts.append(jnp.full((s.size,), 1.0 if s.decay else 0.0, jnp.float32))
+        if s.slot > s.size:
+            parts.append(jnp.zeros(s.slot - s.size, jnp.float32))
+    return jnp.concatenate(parts)
+
+
+# --------------------------------------------------------------------------
+# Initialization
+# --------------------------------------------------------------------------
+def init_params(seed: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Deterministic init from an int32 seed -> flat param vector.
+
+    N(0, init_std) for 2-D tensors, with the residual-output projections
+    (wo, w_down) scaled by 1/sqrt(2*n_layers) (GPT-2/LLaMA practice);
+    norm gains init to 1.
+    """
+    lay = build_layout(cfg)
+    key = jax.random.PRNGKey(seed)
+    tensors = {}
+    resid_scale = 1.0 / jnp.sqrt(2.0 * cfg.n_layers)
+    for s in lay.slots:
+        key, sub = jax.random.split(key)
+        if not s.is_2d:
+            tensors[s.name] = jnp.ones(s.shape, jnp.float32)
+            continue
+        std = cfg.init_std
+        t = jax.random.normal(sub, s.shape, jnp.float32) * std
+        if s.name.endswith("wo") or s.name.endswith("w_down"):
+            t = t * resid_scale
+        tensors[s.name] = t
+    return flatten(tensors, lay)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+def rope_cos_sin(t: int, dh: int, theta: float):
+    """cos/sin tables [T, dh/2]."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    pos = jnp.arange(t, dtype=jnp.float32)
+    ang = pos[:, None] * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [B, n, T, dh] -> rotated pairs (x0, x1) convention."""
+    x0 = x[..., 0::2]
+    x1 = x[..., 1::2]
+    r0 = x0 * cos - x1 * sin
+    r1 = x0 * sin + x1 * cos
+    # Interleave back.
+    return jnp.stack([r0, r1], axis=-1).reshape(x.shape)
+
+
+# --------------------------------------------------------------------------
+# Forward + loss
+# --------------------------------------------------------------------------
+def forward_logits(flat_params: jax.Array, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """tokens: [B, T] int32 -> logits [B, T, V]."""
+    lay = build_layout(cfg)
+    p = unflatten(flat_params, lay)
+    b, t = tokens.shape
+    x = p["embed"][tokens]                                  # [B, T, D]
+    cos, sin = rope_cos_sin(t, cfg.d_head, cfg.rope_theta)  # [T, dh/2]
+    for i in range(cfg.n_layers):
+        pre = f"layers.{i}."
+        h = rmsnorm(x.reshape(b * t, cfg.d_model), p[pre + "attn_norm"], cfg.norm_eps)
+        h = h.reshape(b, t, cfg.d_model)
+        q = (h @ p[pre + "wq"]).reshape(b, t, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+        k = (h @ p[pre + "wk"]).reshape(b, t, cfg.n_kv_heads, cfg.d_head).transpose(0, 2, 1, 3)
+        v = (h @ p[pre + "wv"]).reshape(b, t, cfg.n_kv_heads, cfg.d_head).transpose(0, 2, 1, 3)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+        a = gqa_attention(q, k, v)                          # [B, H, T, dh]
+        a = a.transpose(0, 2, 1, 3).reshape(b, t, cfg.q_dim)
+        x = x + a @ p[pre + "wo"]
+        h2 = rmsnorm(x.reshape(b * t, cfg.d_model), p[pre + "mlp_norm"], cfg.norm_eps)
+        h2 = h2.reshape(b, t, cfg.d_model)
+        gate = jax.nn.silu(h2 @ p[pre + "w_gate"]) * (h2 @ p[pre + "w_up"])
+        x = x + gate @ p[pre + "w_down"]
+    x = rmsnorm(x.reshape(b * t, cfg.d_model), p["final_norm"], cfg.norm_eps)
+    head = p["lm_head"] if cfg.untie_embeddings else p["embed"]
+    return (x @ head.T).reshape(b, t, cfg.vocab_size)
+
+
+def loss_per_seq(flat_params: jax.Array, tokens: jax.Array, loss_mask: jax.Array,
+                 cfg: ModelConfig) -> jax.Array:
+    """Masked mean next-token cross-entropy per sequence.
+
+    tokens: [B, T+1] int32; loss_mask: [B, T] f32 over *target* positions.
+    Returns [B] f32 (nats).
+    """
+    inp = tokens[:, :-1]
+    tgt = tokens[:, 1:]
+    logits = forward_logits(flat_params, inp, cfg)          # [B, T, V]
+    lse = jax.nn.logsumexp(logits, axis=-1)                 # [B, T]
+    tl = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    ce = lse - tl                                           # [B, T]
+    denom = jnp.maximum(jnp.sum(loss_mask, axis=1), 1e-6)
+    return jnp.sum(ce * loss_mask, axis=1) / denom
+
+
+def loss_fn(flat_params: jax.Array, tokens: jax.Array, loss_mask: jax.Array,
+            cfg: ModelConfig) -> jax.Array:
+    """Masked mean cross-entropy over the whole batch (scalar, nats)."""
+    inp = tokens[:, :-1]
+    tgt = tokens[:, 1:]
+    logits = forward_logits(flat_params, inp, cfg)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tl = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    ce = lse - tl
+    return jnp.sum(ce * loss_mask) / jnp.maximum(jnp.sum(loss_mask), 1e-6)

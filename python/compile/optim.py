@@ -1,0 +1,74 @@
+"""L2 — AdamW inner optimizer (paper §4.1) over the flat parameter vector.
+
+Bias-corrected Adam with decoupled weight decay; decay applies only to
+2-D tensors (mask from the layout). Optional global-norm gradient
+clipping (used by the SFT stage, clip=1.0; disabled with clip<=0).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from . import model
+
+
+def clip_by_global_norm(g: jax.Array, clip: jax.Array) -> jax.Array:
+    """Scale g so ||g|| <= clip; no-op when clip <= 0."""
+    norm = jnp.sqrt(jnp.sum(jnp.square(g)))
+    scale = jnp.where(
+        clip > 0.0, jnp.minimum(1.0, clip / jnp.maximum(norm, 1e-12)), 1.0
+    )
+    return g * scale
+
+
+def adamw_step(params, grads, m, v, step, lr, clip, cfg: ModelConfig, wd_mask):
+    """One AdamW step. ``step`` is the 1-based step index (f32 scalar).
+
+    Returns (params', m', v').
+    """
+    g = clip_by_global_norm(grads, clip)
+    b1 = cfg.adam_b1
+    b2 = cfg.adam_b2
+    m2 = b1 * m + (1.0 - b1) * g
+    v2 = b2 * v + (1.0 - b2) * jnp.square(g)
+    mh = m2 / (1.0 - b1**step)
+    vh = v2 / (1.0 - b2**step)
+    upd = mh / (jnp.sqrt(vh) + cfg.adam_eps) + cfg.weight_decay * wd_mask * params
+    return params - lr * upd, m2, v2
+
+
+def train_step(params, m, v, step, tokens, loss_mask, lr, clip, cfg: ModelConfig):
+    """fwd/bwd + AdamW for one inner step.
+
+    tokens: [B, T+1] i32; loss_mask: [B, T] f32; step/lr/clip: f32 scalars.
+    Returns (params', m', v', loss).
+    """
+    wd_mask = model.decay_mask(model.build_layout(cfg))
+    loss, grads = jax.value_and_grad(model.loss_fn)(params, tokens, loss_mask, cfg)
+    params2, m2, v2 = adamw_step(params, grads, m, v, step, lr, clip, cfg, wd_mask)
+    return params2, m2, v2, loss
+
+
+def train_round(params, m, v, step0, tokens, loss_mask, lrs, clip, cfg: ModelConfig):
+    """H inner steps as one fused graph (lax.scan) — the compute phase.
+
+    tokens: [H, B, T+1] i32; loss_mask: [H, B, T] f32; lrs: [H] f32;
+    step0: f32 scalar (0-based global inner-step count before this round).
+    Returns (params', m', v', losses [H]).
+
+    One call per round means one host<->device round-trip per compute
+    window instead of per step (DESIGN §Perf L2/L3).
+    """
+    wd_mask = model.decay_mask(model.build_layout(cfg))
+
+    def body(carry, xs):
+        p, m_, v_, s = carry
+        toks, mask, lr = xs
+        loss, grads = jax.value_and_grad(model.loss_fn)(p, toks, mask, cfg)
+        p2, m2, v2 = adamw_step(p, grads, m_, v_, s + 1.0, lr, clip, cfg, wd_mask)
+        return (p2, m2, v2, s + 1.0), loss
+
+    (p, m2, v2, _), losses = jax.lax.scan(
+        body, (params, m, v, step0), (tokens, loss_mask, lrs)
+    )
+    return p, m2, v2, losses

@@ -1,0 +1,65 @@
+"""L2 — SparseLoCo pseudo-gradient compression + outer step (paper §2.1).
+
+The flat parameter layout makes the paper's chunking a single reshape:
+contiguous 4096-element chunks are exactly 64x64 blocks for 2-D tensors
+(block-major storage) and contiguous runs for 1-D tensors. The fused L1
+Pallas kernel does Top-k + 2-bit quant + the dense transmitted tensor in
+one pass; this module wires it to the error-feedback recursion:
+
+    acc   = beta * ef + delta
+    (idx, codes, scales, transmitted) = TopK+Q(acc)      # kernel
+    ef'   = acc - transmitted                            # Eq. 1
+
+and the outer update theta' = theta - alpha * mean_r(decompress(payload_r))
+(Eq. 2 — the mean and median-norm scaling happen in Rust where individual
+peer payloads live; the dense-delta apply is this graph).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.topk_chunk import compress_chunks_pallas
+from .kernels.quant2bit import dequantize2bit_pallas
+
+
+def compress(delta: jax.Array, ef: jax.Array, beta: jax.Array, cfg: ModelConfig):
+    """SparseLoCo compression with error feedback.
+
+    delta, ef: [Na] f32 (Na a multiple of cfg.chunk); beta: f32 scalar.
+    Returns (ef_new [Na], idx [nc,k] i32, codes [nc,k] i32, scales [nc,1]).
+    """
+    acc = beta * ef + delta
+    chunks = acc.reshape(-1, cfg.chunk)
+    nc = chunks.shape[0]
+    # Pad chunk rows to a multiple of 64 so the Pallas grid uses a large
+    # row block (a ragged row count like 3085 = 5*617 would force a
+    # 5-row block and 617 grid steps — ~6x slower; see EXPERIMENTS §Perf).
+    pad = (-nc) % 64
+    if pad:
+        chunks = jnp.concatenate(
+            [chunks, jnp.zeros((pad, cfg.chunk), jnp.float32)], axis=0
+        )
+    idx, codes, scales, transmitted = compress_chunks_pallas(chunks, cfg.topk)
+    if pad:
+        idx = idx[:nc]
+        codes = codes[:nc]
+        scales = scales[:nc]
+        transmitted = transmitted[:nc]
+    ef_new = acc - transmitted.reshape(-1)
+    return ef_new, idx, codes, scales
+
+
+def decompress(idx: jax.Array, codes: jax.Array, scales: jax.Array,
+               cfg: ModelConfig) -> jax.Array:
+    """Payload -> dense flat delta [Na] (what every peer reconstructs)."""
+    nc = idx.shape[0]
+    deq = dequantize2bit_pallas(codes, scales)          # [nc, k]
+    rows = jnp.arange(nc)[:, None]
+    dense = jnp.zeros((nc, cfg.chunk), jnp.float32).at[rows, idx].set(deq)
+    return dense.reshape(-1)
+
+
+def outer_step(params: jax.Array, delta_mean: jax.Array, alpha: jax.Array) -> jax.Array:
+    """theta' = theta - alpha * mean-aggregated pseudo-gradient (Eq. 2)."""
+    return params - alpha * delta_mean

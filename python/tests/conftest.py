@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Make `compile` importable when pytest runs from python/.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+import jax
+
+# Deterministic, CPU-only.
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,71 @@
+"""AOT pipeline tests: lowering produces parseable HLO text + a manifest
+consistent with the layout; HLO contains no ops the 0.5.1 parser rejects."""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from compile.configs import get_config, build_layout
+from compile.aot import build_artifacts, compile_config
+
+
+def test_build_artifacts_signatures():
+    cfg = get_config("tiny")
+    lay = build_layout(cfg)
+    arts = build_artifacts(cfg)
+    assert set(arts) == {
+        "init_params", "train_step", "train_round", "compress",
+        "decompress", "outer_step", "eval_loss", "loss_per_seq",
+    }
+    # train_step: params,m,v,step,tokens,mask,lr,clip
+    _, args = arts["train_step"]
+    assert args[0].shape == (lay.n_alloc,)
+    assert args[4].shape == (cfg.batch_size, cfg.seq_len + 1)
+    # train_round stacks H batches
+    _, args = arts["train_round"]
+    assert args[4].shape == (cfg.inner_steps, cfg.batch_size, cfg.seq_len + 1)
+
+
+@pytest.fixture(scope="module")
+def compiled_tiny(tmp_path_factory):
+    out = tmp_path_factory.mktemp("arts") / "tiny"
+    manifest = compile_config("tiny", out, only={"outer_step", "compress"})
+    return out, manifest
+
+
+def test_manifest_contents(compiled_tiny):
+    out, manifest = compiled_tiny
+    data = json.loads((out / "manifest.json").read_text())
+    cfg = get_config("tiny")
+    lay = build_layout(cfg)
+    assert data["n_alloc"] == lay.n_alloc
+    assert data["n_params"] == lay.n_params
+    assert data["n_chunks"] == lay.n_chunks
+    assert data["config"]["vocab_size"] == cfg.vocab_size
+    names = [t["name"] for t in data["tensors"]]
+    assert names[0] == "embed" and names[-1] == "final_norm"
+    art = data["artifacts"]["outer_step"]
+    assert art["inputs"][0]["shape"] == [lay.n_alloc]
+    assert art["outputs"][0]["shape"] == [lay.n_alloc]
+
+
+def test_hlo_text_exists_and_versionless(compiled_tiny):
+    out, _ = compiled_tiny
+    text = (out / "compress.hlo.txt").read_text()
+    assert text.startswith("HloModule")
+    # Ops that the xla_extension 0.5.1 HLO parser rejects must not appear.
+    for bad in ["topk(", "largest=true"]:
+        assert bad not in text, f"forbidden op '{bad}' in lowered HLO"
+
+
+def test_repo_artifacts_in_sync_if_present():
+    """If `make artifacts` already ran, the checked manifest must match the
+    current python layout (guards against stale artifacts)."""
+    repo_manifest = Path(__file__).resolve().parents[2] / "artifacts/tiny/manifest.json"
+    if not repo_manifest.exists():
+        pytest.skip("artifacts not built")
+    data = json.loads(repo_manifest.read_text())
+    lay = build_layout(get_config("tiny"))
+    assert data["n_alloc"] == lay.n_alloc
+    assert data["n_params"] == lay.n_params

@@ -1,0 +1,268 @@
+"""L1 kernel correctness: every Pallas kernel vs its pure-jnp oracle,
+with hypothesis sweeps over shapes/k/values (the CORE correctness signal
+for the compression hot-spot)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.rmsnorm import rmsnorm, rmsnorm_pallas
+from compile.kernels.attention import gqa_attention, gqa_attention_pallas
+from compile.kernels.quant2bit import quantize2bit_pallas, dequantize2bit_pallas
+from compile.kernels.topk_chunk import compress_chunks_pallas
+from compile.kernels.common import row_block
+
+
+def key(i=0):
+    return jax.random.PRNGKey(i)
+
+
+# ---------------------------------------------------------------------------
+# row_block
+# ---------------------------------------------------------------------------
+@given(rows=st.integers(1, 4096), target=st.integers(1, 256))
+@settings(max_examples=200, deadline=None)
+def test_row_block_divides(rows, target):
+    b = row_block(rows, target)
+    assert rows % b == 0
+    assert 1 <= b <= max(rows, 1)
+    assert b <= target or rows <= target
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("rows,d", [(1, 64), (64, 128), (96, 320), (128, 256)])
+def test_rmsnorm_matches_ref(rows, d):
+    x = jax.random.normal(key(1), (rows, d))
+    w = jax.random.normal(key(2), (d,)) + 1.0
+    np.testing.assert_allclose(
+        rmsnorm_pallas(x, w), ref.rmsnorm(x, w), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_rmsnorm_scale_invariance_of_direction():
+    # rmsnorm(c*x) == rmsnorm(x) up to eps effects for c>0.
+    x = jax.random.normal(key(3), (8, 128))
+    w = jnp.ones((128,))
+    a = rmsnorm_pallas(x, w)
+    b = rmsnorm_pallas(4.0 * x, w)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_rmsnorm_grad_matches_ref_grad():
+    x = jax.random.normal(key(4), (16, 64))
+    w = jax.random.normal(key(5), (64,)) + 1.0
+
+    def f_kernel(x, w):
+        return jnp.sum(jnp.sin(rmsnorm(x, w)))
+
+    def f_ref(x, w):
+        return jnp.sum(jnp.sin(ref.rmsnorm(x, w)))
+
+    gk = jax.grad(f_kernel, argnums=(0, 1))(x, w)
+    gr = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+@given(
+    rows=st.sampled_from([2, 4, 8, 32, 96]),
+    d=st.sampled_from([64, 128, 320]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_rmsnorm_hypothesis_sweep(rows, d, seed):
+    x = jax.random.normal(key(seed), (rows, d)) * 3.0
+    w = jax.random.normal(key(seed + 1), (d,))
+    np.testing.assert_allclose(
+        rmsnorm_pallas(x, w), ref.rmsnorm(x, w), rtol=2e-5, atol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "b,h,kv,t,dh", [(1, 2, 1, 16, 8), (2, 4, 2, 32, 16), (1, 8, 2, 64, 32), (2, 6, 2, 128, 64)]
+)
+def test_attention_matches_ref(b, h, kv, t, dh):
+    q = jax.random.normal(key(10), (b, h, t, dh))
+    k = jax.random.normal(key(11), (b, kv, t, dh))
+    v = jax.random.normal(key(12), (b, kv, t, dh))
+    np.testing.assert_allclose(
+        gqa_attention_pallas(q, k, v), ref.gqa_attention(q, k, v), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_attention_is_causal():
+    # Output at position i must not depend on inputs at positions > i.
+    b, h, kv, t, dh = 1, 2, 1, 32, 16
+    q = jax.random.normal(key(13), (b, h, t, dh))
+    k = jax.random.normal(key(14), (b, kv, t, dh))
+    v = jax.random.normal(key(15), (b, kv, t, dh))
+    out1 = gqa_attention_pallas(q, k, v)
+    # Perturb the future (last position) of k and v.
+    k2 = k.at[:, :, -1, :].set(99.0)
+    v2 = v.at[:, :, -1, :].set(-99.0)
+    out2 = gqa_attention_pallas(q, k2, v2)
+    np.testing.assert_allclose(out1[:, :, :-1], out2[:, :, :-1], rtol=1e-5, atol=1e-6)
+
+
+def test_attention_rows_are_convex_combinations():
+    # Each output row is a convex combination of value rows -> within range.
+    b, h, kv, t, dh = 1, 2, 2, 16, 8
+    q = jax.random.normal(key(16), (b, h, t, dh))
+    k = jax.random.normal(key(17), (b, kv, t, dh))
+    v = jnp.ones((b, kv, t, dh))
+    out = gqa_attention_pallas(q, k, v)
+    np.testing.assert_allclose(out, jnp.ones_like(out), rtol=1e-5)
+
+
+def test_attention_grad_matches_ref():
+    b, h, kv, t, dh = 1, 4, 2, 16, 8
+    q = jax.random.normal(key(18), (b, h, t, dh))
+    k = jax.random.normal(key(19), (b, kv, t, dh))
+    v = jax.random.normal(key(20), (b, kv, t, dh))
+
+    def f(att):
+        def g(q, k, v):
+            return jnp.sum(att(q, k, v) ** 2)
+        return g
+
+    gk = jax.grad(f(gqa_attention), argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f(ref.gqa_attention), argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(gk, gr):
+        np.testing.assert_allclose(a, b_, rtol=2e-4, atol=2e-5)
+
+
+@given(
+    b=st.sampled_from([1, 2]),
+    heads=st.sampled_from([(2, 1), (4, 2), (6, 3), (8, 2)]),
+    t=st.sampled_from([8, 32, 96]),
+    dh=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=15, deadline=None)
+def test_attention_hypothesis_sweep(b, heads, t, dh, seed):
+    h, kv = heads
+    q = jax.random.normal(key(seed), (b, h, t, dh))
+    k = jax.random.normal(key(seed + 1), (b, kv, t, dh))
+    v = jax.random.normal(key(seed + 2), (b, kv, t, dh))
+    np.testing.assert_allclose(
+        gqa_attention_pallas(q, k, v), ref.gqa_attention(q, k, v), rtol=3e-5, atol=3e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# 2-bit quantization
+# ---------------------------------------------------------------------------
+def test_quantize_codebook_edges():
+    scale = jnp.ones((1, 1))
+    vals = jnp.asarray([[-1.0, -0.67, -0.5, -0.01, 0.01, 0.5, 0.67, 1.0]])
+    codes = quantize2bit_pallas(vals, scale)
+    assert codes.tolist() == [[0, 0, 1, 1, 2, 2, 3, 3]]
+
+
+def test_dequantize_levels():
+    scale = 2.0 * jnp.ones((1, 1))
+    codes = jnp.asarray([[0, 1, 2, 3]], dtype=jnp.int32)
+    deq = dequantize2bit_pallas(codes, scale)
+    np.testing.assert_allclose(deq, [[-2.0, -2.0 / 3.0, 2.0 / 3.0, 2.0]], rtol=1e-6)
+
+
+@given(n=st.sampled_from([1, 3, 16, 128]), k=st.sampled_from([4, 64]),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_quant_roundtrip_error_bounded(n, k, seed):
+    vals = jax.random.normal(key(seed), (n, k))
+    scales = jnp.max(jnp.abs(vals), axis=1, keepdims=True)
+    codes = quantize2bit_pallas(vals, scales)
+    np.testing.assert_array_equal(codes, ref.quantize2bit(vals, scales))
+    deq = dequantize2bit_pallas(codes, scales)
+    np.testing.assert_allclose(deq, ref.dequantize2bit(codes, scales), rtol=1e-6)
+    # 4-level symmetric quantizer: |err| <= scale/3 per element.
+    err = jnp.abs(deq - vals)
+    assert jnp.all(err <= scales / 3.0 + 1e-6)
+
+
+def test_quant_codes_in_range():
+    vals = 100.0 * jax.random.normal(key(30), (32, 64))
+    scales = jnp.max(jnp.abs(vals), axis=1, keepdims=True)
+    codes = quantize2bit_pallas(vals, scales)
+    assert int(codes.min()) >= 0 and int(codes.max()) <= 3
+
+
+# ---------------------------------------------------------------------------
+# Fused chunk compression
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("nc,c,k", [(1, 256, 16), (8, 4096, 64), (105, 4096, 64)])
+def test_compress_matches_ref(nc, c, k):
+    chunks = jax.random.normal(key(40), (nc, c))
+    i1, c1, s1, t1 = compress_chunks_pallas(chunks, k)
+    i2, c2, s2, t2 = ref.compress_chunks(chunks, k)
+    np.testing.assert_array_equal(i1, i2)
+    np.testing.assert_array_equal(c1, c2)
+    np.testing.assert_allclose(s1, s2, rtol=1e-6)
+    np.testing.assert_allclose(t1, t2, rtol=1e-6)
+
+
+def test_compress_transmitted_support_is_topk():
+    chunks = jax.random.normal(key(41), (4, 512))
+    idx, codes, scales, trans = compress_chunks_pallas(chunks, 32)
+    nz = np.count_nonzero(np.asarray(trans), axis=1)
+    # <=k nonzeros (quantized value can be 0 only if code level *scale == 0)
+    assert (nz <= 32).all()
+    # the k selected positions carry the largest magnitudes
+    for r in range(4):
+        sel = set(np.asarray(idx[r]).tolist())
+        absrow = np.abs(np.asarray(chunks[r]))
+        kth = np.sort(absrow)[-32]
+        above = set(np.where(absrow > kth)[0].tolist())
+        assert above.issubset(sel)
+
+
+def test_compress_error_feedback_identity():
+    # acc = transmitted + residual, residual = acc outside support.
+    chunks = jax.random.normal(key(42), (8, 4096))
+    idx, codes, scales, trans = compress_chunks_pallas(chunks, 64)
+    resid = np.asarray(chunks - trans)
+    trans = np.asarray(trans)
+    chunks = np.asarray(chunks)
+    rows = np.arange(8)[:, None]
+    # Off-support: residual equals acc exactly.
+    mask = np.ones_like(chunks, dtype=bool)
+    mask[rows, np.asarray(idx)] = False
+    np.testing.assert_array_equal(resid[mask], chunks[mask])
+    # On-support: |residual| <= scale/3 (quantization error bound).
+    s = np.asarray(scales)
+    per_row_bound = s[:, 0] / 3.0 + 1e-6
+    on = ~mask
+    for r in range(8):
+        assert np.all(np.abs(resid[r][on[r]]) <= per_row_bound[r])
+
+
+@given(
+    nc=st.sampled_from([1, 2, 16]),
+    c=st.sampled_from([128, 1024, 4096]),
+    kk=st.sampled_from([4, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_compress_hypothesis_sweep(nc, c, kk, seed):
+    chunks = jax.random.normal(key(seed), (nc, c)) * 0.1
+    i1, c1, s1, t1 = compress_chunks_pallas(chunks, kk)
+    i2, c2, s2, t2 = ref.compress_chunks(chunks, kk)
+    np.testing.assert_array_equal(i1, i2)
+    np.testing.assert_array_equal(c1, c2)
+    np.testing.assert_allclose(t1, t2, rtol=1e-6, atol=1e-9)
+
+
+def test_compress_zero_input():
+    chunks = jnp.zeros((2, 256))
+    idx, codes, scales, trans = compress_chunks_pallas(chunks, 8)
+    np.testing.assert_allclose(scales, 0.0)
+    np.testing.assert_allclose(trans, 0.0)

@@ -1,0 +1,228 @@
+"""L2 model tests: layout/flatten round-trips, forward shapes, loss
+sanity, gradient flow, RoPE properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import get_config, build_layout, CHUNK
+from compile import model
+
+
+CFG = get_config("tiny")
+LAY = build_layout(CFG)
+
+
+def key(i=0):
+    return jax.random.PRNGKey(i)
+
+
+# ---------------------------------------------------------------------------
+# Layout / flatten
+# ---------------------------------------------------------------------------
+def test_layout_totals():
+    assert LAY.n_alloc % CHUNK == 0
+    assert LAY.n_params <= LAY.n_alloc
+    assert LAY.n_chunks == LAY.n_alloc // CHUNK
+
+
+def test_layout_offsets_chunk_aligned():
+    for s in LAY.slots:
+        assert s.offset % CHUNK == 0
+        assert s.slot % CHUNK == 0
+
+
+def test_block_major_roundtrip_2d():
+    t = jax.random.normal(key(1), (128, 320))
+    flat = model.to_block_major(t)
+    back = model.from_block_major(flat, (128, 320))
+    np.testing.assert_array_equal(t, back)
+
+
+def test_block_major_is_blockwise():
+    # First 4096 elements of a block-major 2-D tensor == first 64x64 block.
+    t = jax.random.normal(key(2), (128, 128))
+    flat = model.to_block_major(t)
+    np.testing.assert_array_equal(
+        np.asarray(flat[:4096]).reshape(64, 64), np.asarray(t[:64, :64])
+    )
+
+
+def test_flatten_unflatten_roundtrip():
+    tensors = {}
+    for s in LAY.slots:
+        tensors[s.name] = jax.random.normal(key(hash(s.name) % 2**31), s.shape)
+    flat = model.flatten(tensors, LAY)
+    assert flat.shape == (LAY.n_alloc,)
+    back = model.unflatten(flat, LAY)
+    for s in LAY.slots:
+        np.testing.assert_array_equal(tensors[s.name], back[s.name])
+
+
+def test_decay_mask_padding_zero():
+    mask = model.decay_mask(LAY)
+    assert mask.shape == (LAY.n_alloc,)
+    m = np.asarray(mask)
+    for s in LAY.slots:
+        seg = m[s.offset : s.offset + s.slot]
+        # padding is 0
+        np.testing.assert_array_equal(seg[s.size :], 0.0)
+        np.testing.assert_array_equal(seg[: s.size], 1.0 if s.decay else 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def test_init_deterministic_and_seed_sensitive():
+    p0 = model.init_params(jnp.int32(0), CFG)
+    p0b = model.init_params(jnp.int32(0), CFG)
+    p1 = model.init_params(jnp.int32(1), CFG)
+    np.testing.assert_array_equal(p0, p0b)
+    assert float(jnp.max(jnp.abs(p0 - p1))) > 0
+
+
+def test_init_norms_are_one_padding_zero():
+    p = np.asarray(model.init_params(jnp.int32(0), CFG))
+    for s in LAY.slots:
+        seg = p[s.offset : s.offset + s.slot]
+        np.testing.assert_array_equal(seg[s.size :], 0.0)
+        if not s.is_2d:
+            np.testing.assert_array_equal(seg[: s.size], 1.0)
+
+
+def test_init_std_approx():
+    p = model.init_params(jnp.int32(0), CFG)
+    emb = model.unflatten(p, LAY)["embed"]
+    std = float(jnp.std(emb))
+    assert abs(std - CFG.init_std) < 0.15 * CFG.init_std
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def test_rope_preserves_norm():
+    cos, sin = model.rope_cos_sin(16, 32, 500_000.0)
+    x = jax.random.normal(key(3), (2, 4, 16, 32))
+    y = model.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(
+        jnp.linalg.norm(x, axis=-1), jnp.linalg.norm(y, axis=-1), rtol=1e-5
+    )
+
+
+def test_rope_position_zero_identity():
+    cos, sin = model.rope_cos_sin(8, 16, 500_000.0)
+    x = jax.random.normal(key(4), (1, 1, 8, 16))
+    y = model.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(y[:, :, 0], x[:, :, 0], rtol=1e-6)
+
+
+def test_rope_relative_property():
+    # <rope(q,m), rope(k,n)> depends only on m-n: shift both by 1.
+    t, dh = 8, 16
+    cos, sin = model.rope_cos_sin(t, dh, 500_000.0)
+    q = jax.random.normal(key(5), (1, 1, t, dh))
+    k = jax.random.normal(key(6), (1, 1, t, dh))
+    rq = model.apply_rope(q, cos, sin)[0, 0]
+    rk = model.apply_rope(k, cos, sin)[0, 0]
+    # score(m=2,n=1) with originals at positions 2,1 == score(3,2) when the
+    # same unrotated vectors are placed at 3,2.
+    q2 = jnp.zeros_like(q).at[0, 0, 2].set(q[0, 0, 2])
+    q3 = jnp.zeros_like(q).at[0, 0, 3].set(q[0, 0, 2])
+    k1 = jnp.zeros_like(k).at[0, 0, 1].set(k[0, 0, 1])
+    k2 = jnp.zeros_like(k).at[0, 0, 2].set(k[0, 0, 1])
+    s_a = jnp.dot(model.apply_rope(q2, cos, sin)[0, 0, 2], model.apply_rope(k1, cos, sin)[0, 0, 1])
+    s_b = jnp.dot(model.apply_rope(q3, cos, sin)[0, 0, 3], model.apply_rope(k2, cos, sin)[0, 0, 2])
+    np.testing.assert_allclose(s_a, s_b, rtol=1e-4)
+    _ = (rq, rk)
+
+
+# ---------------------------------------------------------------------------
+# Forward / loss
+# ---------------------------------------------------------------------------
+def test_forward_shapes():
+    p = model.init_params(jnp.int32(0), CFG)
+    tok = jax.random.randint(key(7), (2, CFG.seq_len), 0, CFG.vocab_size)
+    logits = model.forward_logits(p, tok, CFG)
+    assert logits.shape == (2, CFG.seq_len, CFG.vocab_size)
+
+
+def test_init_loss_close_to_uniform():
+    p = model.init_params(jnp.int32(0), CFG)
+    tok = jax.random.randint(key(8), (4, CFG.seq_len + 1), 0, CFG.vocab_size)
+    mask = jnp.ones((4, CFG.seq_len))
+    loss = float(model.loss_fn(p, tok, mask, CFG))
+    assert abs(loss - np.log(CFG.vocab_size)) < 0.5
+
+
+def test_loss_mask_zero_positions_ignored():
+    p = model.init_params(jnp.int32(0), CFG)
+    tok = jax.random.randint(key(9), (2, CFG.seq_len + 1), 0, CFG.vocab_size)
+    half = jnp.concatenate(
+        [jnp.ones((2, CFG.seq_len // 2)), jnp.zeros((2, CFG.seq_len // 2))], axis=1
+    )
+    # Changing targets in the masked-out half must not change the loss.
+    tok2 = tok.at[:, CFG.seq_len // 2 + 1 :].set(
+        (tok[:, CFG.seq_len // 2 + 1 :] + 7) % CFG.vocab_size
+    )
+    l1 = float(model.loss_fn(p, tok, half, CFG))
+    l2 = float(model.loss_fn(p, tok2, half, CFG))
+    assert abs(l1 - l2) < 1e-5
+
+
+def test_loss_per_seq_matches_scalar_loss():
+    p = model.init_params(jnp.int32(0), CFG)
+    tok = jax.random.randint(key(10), (4, CFG.seq_len + 1), 0, CFG.vocab_size)
+    mask = jnp.ones((4, CFG.seq_len))
+    per = model.loss_per_seq(p, tok, mask, CFG)
+    total = model.loss_fn(p, tok, mask, CFG)
+    np.testing.assert_allclose(jnp.mean(per), total, rtol=1e-5)
+
+
+def test_gradients_flow_to_all_tensors():
+    p = model.init_params(jnp.int32(0), CFG)
+    tok = jax.random.randint(key(11), (2, CFG.seq_len + 1), 0, CFG.vocab_size)
+    mask = jnp.ones((2, CFG.seq_len))
+    g = jax.grad(model.loss_fn)(p, tok, mask, CFG)
+    gt = model.unflatten(g, LAY)
+    for s in LAY.slots:
+        assert float(jnp.max(jnp.abs(gt[s.name]))) > 0, f"zero grad for {s.name}"
+
+
+def test_gradient_zero_on_padding():
+    p = model.init_params(jnp.int32(0), CFG)
+    tok = jax.random.randint(key(12), (2, CFG.seq_len + 1), 0, CFG.vocab_size)
+    mask = jnp.ones((2, CFG.seq_len))
+    g = np.asarray(jax.grad(model.loss_fn)(p, tok, mask, CFG))
+    for s in LAY.slots:
+        np.testing.assert_array_equal(g[s.offset + s.size : s.offset + s.slot], 0.0)
+
+
+@given(b=st.sampled_from([1, 2, 4]), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_loss_finite_hypothesis(b, seed):
+    p = model.init_params(jnp.int32(seed % 100), CFG)
+    tok = jax.random.randint(key(seed), (b, CFG.seq_len + 1), 0, CFG.vocab_size)
+    mask = jnp.ones((b, CFG.seq_len))
+    loss = float(model.loss_fn(p, tok, mask, CFG))
+    assert np.isfinite(loss)
+
+
+# ---------------------------------------------------------------------------
+# Config presets
+# ---------------------------------------------------------------------------
+def test_covenant72b_param_count():
+    cfg = get_config("covenant-72b")
+    lay = build_layout(cfg)
+    target = 72_747_327_488
+    rel = abs(lay.n_params - target) / target
+    assert rel < 2e-5, f"{lay.n_params} vs {target}"
+
+
+@pytest.mark.parametrize("name", ["tiny", "small", "base", "m100"])
+def test_presets_buildable(name):
+    cfg = get_config(name)
+    lay = build_layout(cfg)
+    assert lay.n_params > 0
+    assert lay.n_alloc % CHUNK == 0

@@ -1,0 +1,112 @@
+"""SparseLoCo compression tests: error-feedback recursion, compress/
+decompress round-trip, convergence of EF over repeated rounds, outer step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.configs import get_config, build_layout
+from compile import sparseloco
+from compile.kernels import ref
+
+
+CFG = get_config("tiny")
+LAY = build_layout(CFG)
+NA = LAY.n_alloc
+
+
+def key(i=0):
+    return jax.random.PRNGKey(i)
+
+
+def test_compress_shapes():
+    delta = jax.random.normal(key(1), (NA,)) * 1e-3
+    ef = jnp.zeros((NA,))
+    ef2, idx, codes, scales = sparseloco.compress(delta, ef, jnp.float32(0.95), CFG)
+    assert ef2.shape == (NA,)
+    assert idx.shape == (LAY.n_chunks, CFG.topk)
+    assert codes.shape == (LAY.n_chunks, CFG.topk)
+    assert scales.shape == (LAY.n_chunks, 1)
+
+
+def test_ef_recursion_identity():
+    # ef' + decompress(payload) == beta*ef + delta exactly.
+    delta = jax.random.normal(key(2), (NA,)) * 1e-3
+    ef = jax.random.normal(key(3), (NA,)) * 1e-4
+    beta = jnp.float32(0.95)
+    ef2, idx, codes, scales = sparseloco.compress(delta, ef, beta, CFG)
+    dense = sparseloco.decompress(idx, codes, scales, CFG)
+    np.testing.assert_allclose(ef2 + dense, beta * ef + delta, rtol=1e-5, atol=1e-8)
+
+
+def test_decompress_matches_ref():
+    delta = jax.random.normal(key(4), (NA,)) * 1e-3
+    ef = jnp.zeros((NA,))
+    _, idx, codes, scales = sparseloco.compress(delta, ef, jnp.float32(0.95), CFG)
+    dense = sparseloco.decompress(idx, codes, scales, CFG)
+    expected = ref.decompress_chunks(idx, codes, scales, CFG.chunk).reshape(-1)
+    np.testing.assert_allclose(dense, expected, rtol=1e-6)
+
+
+def test_transmitted_fraction():
+    # Exactly k of C positions per chunk are transmitted.
+    delta = jax.random.normal(key(5), (NA,))
+    _, idx, _, _ = sparseloco.compress(delta, jnp.zeros((NA,)), jnp.float32(0.0), CFG)
+    # all indices within chunk bounds, distinct per chunk
+    i = np.asarray(idx)
+    assert i.min() >= 0 and i.max() < CFG.chunk
+    for r in range(i.shape[0]):
+        assert len(set(i[r].tolist())) == CFG.topk
+
+
+def test_error_feedback_accumulates_untransmitted():
+    # With beta=1 and a constant delta, repeated compression must transmit
+    # an increasing share: the EF norm relative to accumulated mass shrinks.
+    delta = jax.random.normal(key(6), (NA,)) * 1e-3
+    ef = jnp.zeros((NA,))
+    transmitted_total = jnp.zeros((NA,))
+    beta = jnp.float32(1.0)
+    for _ in range(4):
+        ef, idx, codes, scales = sparseloco.compress(delta, ef, beta, CFG)
+        transmitted_total = transmitted_total + sparseloco.decompress(idx, codes, scales, CFG)
+    # Conservation: transmitted + ef == 4 * delta (beta=1).
+    np.testing.assert_allclose(transmitted_total + ef, 4.0 * delta, rtol=1e-4, atol=1e-7)
+
+
+def test_outer_step():
+    p = jax.random.normal(key(7), (NA,))
+    d = jax.random.normal(key(8), (NA,))
+    p2 = sparseloco.outer_step(p, d, jnp.float32(0.65))
+    np.testing.assert_allclose(p2, p - 0.65 * d, rtol=1e-6)
+
+
+def test_compression_reduces_error_vs_no_ef():
+    # Classic EF property: with error feedback, the *cumulative* applied
+    # update tracks the cumulative signal better than without.
+    signal = jax.random.normal(key(9), (NA,)) * 1e-3
+    beta = jnp.float32(1.0)
+
+    ef = jnp.zeros((NA,))
+    applied_ef = jnp.zeros((NA,))
+    applied_noef = jnp.zeros((NA,))
+    for _ in range(5):
+        ef, i, c, s = sparseloco.compress(signal, ef, beta, CFG)
+        applied_ef = applied_ef + sparseloco.decompress(i, c, s, CFG)
+        _, i2, c2, s2 = sparseloco.compress(signal, jnp.zeros((NA,)), jnp.float32(0.0), CFG)
+        applied_noef = applied_noef + sparseloco.decompress(i2, c2, s2, CFG)
+    target = 5.0 * signal
+    err_ef = float(jnp.linalg.norm(applied_ef - target))
+    err_noef = float(jnp.linalg.norm(applied_noef - target))
+    assert err_ef < err_noef, (err_ef, err_noef)
+
+
+@given(beta=st.sampled_from([0.0, 0.5, 0.95, 1.0]), seed=st.integers(0, 1000))
+@settings(max_examples=8, deadline=None)
+def test_ef_identity_hypothesis(beta, seed):
+    delta = jax.random.normal(key(seed), (NA,)) * 1e-2
+    ef = jax.random.normal(key(seed + 1), (NA,)) * 1e-3
+    b = jnp.float32(beta)
+    ef2, idx, codes, scales = sparseloco.compress(delta, ef, b, CFG)
+    dense = sparseloco.decompress(idx, codes, scales, CFG)
+    np.testing.assert_allclose(ef2 + dense, b * ef + delta, rtol=1e-4, atol=1e-7)

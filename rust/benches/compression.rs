@@ -1,0 +1,88 @@
+//! §2.1 compression claims (C1 in DESIGN.md): bits/value, compression
+//! ratio vs dense f32, the 7.36-bit information-theoretic index bound,
+//! and wire codec throughput across real model layouts.
+//!
+//! Run: cargo bench --bench compression
+
+use covenant::config::{presets, Layout};
+use covenant::sparseloco::{codec, topk};
+use covenant::util::rng::Rng;
+use covenant::util::stats::{bench, print_table, report};
+
+fn main() {
+    // ---- paper accounting -------------------------------------------------
+    let bound = codec::index_bits_lower_bound(4096, 64);
+    let paper_ratio = codec::paper_compression_ratio(4096, 64);
+    println!("information-theoretic index bound (C=4096, k=64): {bound:.2} bits/value (paper: ~7.36)");
+    println!("chosen index encoding: {} bits/value (paper: 12, no complex coder)", codec::INDEX_BITS);
+    println!("value encoding: {} bits (paper: 2-bit quantization)", codec::VALUE_BITS);
+    println!("paper-accounting compression ratio: {paper_ratio:.2}x (paper: >146x)");
+    assert!((bound - 7.36).abs() < 0.05);
+    assert!(paper_ratio > 146.0);
+
+    // ---- per-config wire ratios --------------------------------------------
+    let mut rows = Vec::new();
+    for name in ["tiny", "small", "base", "m100", "covenant-72b"] {
+        let cfg = presets::get(name).unwrap();
+        let lay = Layout::build(&cfg);
+        let wire = codec::wire_size(lay.n_chunks(), cfg.topk);
+        let ratio = codec::compression_ratio(lay.n_alloc, lay.n_chunks(), cfg.topk);
+        let bpv = codec::bits_per_value(lay.n_chunks(), cfg.topk);
+        rows.push(vec![
+            name.to_string(),
+            format!("{}", lay.n_params),
+            human_bytes(lay.dense_bytes() as f64),
+            human_bytes(wire as f64),
+            format!("{bpv:.2}"),
+            format!("{ratio:.1}x"),
+        ]);
+        assert!(ratio > 140.0, "{name}: ratio {ratio}");
+    }
+    print_table(
+        "wire compression by model (dense f32 pseudo-gradient vs SparseLoCo payload)",
+        &["config", "params", "dense", "payload", "bits/value", "ratio"],
+        &rows,
+    );
+
+    // ---- codec + compressor throughput --------------------------------------
+    println!("\n== codec throughput (base-config geometry, {} chunks) ==", {
+        let cfg = presets::get("base").unwrap();
+        Layout::build(&cfg).n_chunks()
+    });
+    let cfg = presets::get("base").unwrap();
+    let lay = Layout::build(&cfg);
+    let mut rng = Rng::new(42);
+    let dense: Vec<f32> = (0..lay.n_alloc).map(|_| rng.normal() as f32 * 1e-3).collect();
+    let payload = topk::compress_dense(&dense, cfg.chunk, cfg.topk);
+    let wire = codec::encode(&payload);
+
+    let s = bench(2, 10, || {
+        std::hint::black_box(topk::compress_dense(&dense, cfg.chunk, cfg.topk));
+    });
+    report("rust reference compress (argsort Top-k)", &s, Some(lay.dense_bytes() as f64));
+    let s = bench(2, 20, || {
+        std::hint::black_box(codec::encode(&payload));
+    });
+    report("wire encode", &s, Some(wire.len() as f64));
+    let s = bench(2, 20, || {
+        std::hint::black_box(codec::decode(&wire).unwrap());
+    });
+    report("wire decode", &s, Some(wire.len() as f64));
+    let mut acc = vec![0f32; lay.n_alloc];
+    let s = bench(2, 20, || {
+        payload.accumulate_into(&mut acc, 0.05).unwrap();
+    });
+    report("sparse scatter-accumulate (aggregation)", &s, Some((payload.n_values() * 6) as f64));
+
+    println!("\ncompression OK");
+}
+
+fn human_bytes(b: f64) -> String {
+    if b > 1e9 {
+        format!("{:.2} GB", b / 1e9)
+    } else if b > 1e6 {
+        format!("{:.2} MB", b / 1e6)
+    } else {
+        format!("{:.1} KB", b / 1e3)
+    }
+}

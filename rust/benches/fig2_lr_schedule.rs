@@ -1,0 +1,68 @@
+//! Figure 2 reproduction: the exact pre-training inner-LR schedule
+//! (warmup -> cosine -> 13.5k-step flatten @80k -> resumed decay ->
+//! anneal tail) and both SFT stage schedules. Emits CSV series and an
+//! ASCII rendering; asserts the paper's knot values.
+//!
+//! Run: cargo bench --bench fig2_lr_schedule
+
+use covenant::metrics::sparkline;
+use covenant::train::{OuterAlphaSchedule, Schedule};
+
+fn main() {
+    std::fs::create_dir_all("results/fig2").unwrap();
+
+    // ---- pre-training schedule ------------------------------------------
+    let pre = Schedule::covenant_pretrain();
+    std::fs::write("results/fig2/pretrain_lr.csv", pre.to_csv(500)).unwrap();
+    let series: Vec<f64> = (0..=120).map(|i| pre.lr(i * pre.total_steps() / 120)).collect();
+    println!("Figure 2 (left): pre-training inner LR, {} inner steps total", pre.total_steps());
+    println!("  {}", sparkline(&series));
+    let knots = [
+        (0usize, 0.0),
+        (1_500, 1.2e-4),
+        (85_000, pre.lr(85_000)), // inside the flat window
+        (92_000, pre.lr(85_000)), // still flat
+        (180_000, 1.2e-5),        // floor at the pre-anneal boundary
+    ];
+    for (step, expect) in knots {
+        let got = pre.lr(step);
+        assert!(
+            (got - expect).abs() <= 1e-6 + 0.02 * expect.abs(),
+            "knot {step}: {got} vs {expect}"
+        );
+        println!("  step {step:>7}: lr = {got:.3e}");
+    }
+    // flatten window is exactly flat
+    assert_eq!(pre.lr(81_000), pre.lr(93_000));
+    println!("  flatten window [80k, 93.5k] verified flat at {:.3e}", pre.lr(81_000));
+
+    // ---- outer alpha -------------------------------------------------------
+    let alpha = OuterAlphaSchedule::paper(30);
+    println!(
+        "  outer alpha: {} before 110k inner steps, {} after (round {})",
+        alpha.alpha(0),
+        alpha.alpha(4_000),
+        alpha.drop_at_inner_step / 30
+    );
+    assert_eq!(alpha.alpha(3_600), 1.0);
+    assert_eq!(alpha.alpha(3_700), 0.65);
+
+    // ---- SFT schedules (Figure 2, right) -----------------------------------
+    let s1 = Schedule::sft_stage1();
+    let s2 = Schedule::sft_stage2();
+    std::fs::write("results/fig2/sft_stage1_lr.csv", s1.to_csv(500)).unwrap();
+    std::fs::write("results/fig2/sft_stage2_lr.csv", s2.to_csv(200)).unwrap();
+    let run1 = Schedule::sft_stage1_run_steps(1.0);
+    println!("\nFigure 2 (right): SFT stage 1 (4k ctx) runs {run1} steps of a {} -step cosine", s1.total_steps());
+    let sser: Vec<f64> = (0..=60).map(|i| s1.lr(i * run1 / 60)).collect();
+    println!("  {}", sparkline(&sser));
+    println!("  handoff lr at step {run1}: {:.3e} (paper: 2.97e-6)", s1.lr(run1));
+    let sser2: Vec<f64> = (0..=60).map(|i| s2.lr(i * s2.total_steps() / 60)).collect();
+    println!("  SFT stage 2 (8k ctx): warm 25 -> 3.57e-6, cosine to 10.1k, linear to 0 @20.5k");
+    println!("  {}", sparkline(&sser2));
+    assert!((s2.lr(25) - 3.57e-6).abs() < 1e-9);
+    assert!(s2.lr(20_500) < 1e-12);
+
+    println!("\nwrote results/fig2/{{pretrain_lr,sft_stage1_lr,sft_stage2_lr}}.csv");
+    println!("fig2_lr_schedule OK");
+}

@@ -1,0 +1,178 @@
+//! Figure 3 reproduction: compute–communication timelines over a two-hour
+//! window for COVENANT-72B, INTELLECT-1 and SparseLoCo-8B, from first
+//! principles: real payload byte-sizes (our wire codec at each model's
+//! exact layout) over token-bucket links.
+//!
+//! Reported twice:
+//!  (a) at the paper's *stated* bandwidth constraints (110/500 Mb/s) with
+//!      honest byte accounting — the shape (who wins, by what factor)
+//!      matches the paper even where absolute seconds differ, and
+//!  (b) calibrated to each system's *reported* t_comm, showing what
+//!      effective aggregate throughput the object-store fan-out provides.
+//!
+//! Run: cargo bench --bench fig3_timeline
+
+use covenant::config::{presets, Layout};
+use covenant::coordinator::RoundReport;
+use covenant::metrics::timeline;
+use covenant::sparseloco::codec;
+use covenant::util::stats::print_table;
+
+struct System {
+    name: &'static str,
+    payload_bytes: f64,
+    peers: usize,
+    compute_s: f64,
+    paper_tcomm_s: f64,
+    paper_util: f64,
+    /// Dense payload per peer for ring all-reduce style (INTELLECT-1).
+    ring_allreduce: bool,
+}
+
+fn covenant_payload_bytes() -> f64 {
+    let cfg = presets::get("covenant-72b").unwrap();
+    let lay = Layout::build(&cfg);
+    codec::wire_size(lay.n_chunks(), cfg.topk) as f64
+}
+
+fn main() {
+    std::fs::create_dir_all("results/fig3").unwrap();
+    let up = 110e6f64; // b/s
+    let down = 500e6f64;
+
+    let covenant_bytes = covenant_payload_bytes();
+    let systems = [
+        System {
+            name: "COVENANT-72B (SparseLoCo, R=20, H=30)",
+            payload_bytes: covenant_bytes,
+            peers: 20,
+            compute_s: 20.0 * 60.0,
+            paper_tcomm_s: 70.0,
+            paper_util: 0.945,
+            ring_allreduce: false,
+        },
+        System {
+            name: "INTELLECT-1 (10B, int8 dense, R=14, H=100)",
+            payload_bytes: 10e9, // 10B params x 1 byte (int8)
+            peers: 14,
+            compute_s: 38.0 * 60.0,
+            paper_tcomm_s: 8.3 * 60.0,
+            paper_util: 0.821,
+            ring_allreduce: true,
+        },
+        System {
+            name: "SparseLoCo-8B (R=15, H=30)",
+            payload_bytes: {
+                // 8B params, same chunk geometry
+                let nc = (8.0e9 / 4096.0) as usize;
+                codec::wire_size(nc, 64) as f64
+            },
+            peers: 15,
+            compute_s: 4.5 * 60.0,
+            paper_tcomm_s: 12.0,
+            paper_util: 0.957,
+            ring_allreduce: false,
+        },
+    ];
+
+    let mut rows = Vec::new();
+    let mut reports: Vec<RoundReport> = Vec::new();
+    for s in &systems {
+        // (a) honest per-link accounting at the stated constraints.
+        let t_comm_link = if s.ring_allreduce {
+            // ring all-reduce: every peer sends+receives ~2x payload
+            2.0 * s.payload_bytes * 8.0 / up
+        } else {
+            // object-store fan-out: upload own payload, download the
+            // other selected payloads
+            let t_up = s.payload_bytes * 8.0 / up;
+            let t_down = (s.peers - 1) as f64 * s.payload_bytes * 8.0 / down;
+            t_up.max(t_down) // uploads/downloads overlap via R2
+        };
+        let util_link = s.compute_s / (s.compute_s + t_comm_link);
+        // (b) effective aggregate throughput to reproduce the reported t_comm
+        let total_bits = if s.ring_allreduce {
+            2.0 * s.payload_bytes * 8.0
+        } else {
+            s.peers as f64 * s.payload_bytes * 8.0
+        };
+        let eff_gbps = total_bits / s.paper_tcomm_s / 1e9;
+        rows.push(vec![
+            s.name.to_string(),
+            format!("{:.2} GB", s.payload_bytes / 1e9),
+            format!("{:.0}s", s.compute_s),
+            format!("{:.0}s", t_comm_link),
+            format!("{:.1}%", 100.0 * util_link),
+            format!("{:.0}s", s.paper_tcomm_s),
+            format!("{:.1}%", 100.0 * s.paper_util),
+            format!("{:.1} Gb/s", eff_gbps),
+        ]);
+        // two-hour window rows for the figure, at the paper's reported op point
+        let mut t = 0.0;
+        while t < 2.0 * 3600.0 {
+            reports.push(RoundReport {
+                round: reports.len(),
+                t_start: t,
+                t_compute_end: t + s.compute_s,
+                t_comm_end: t + s.compute_s + s.paper_tcomm_s,
+                active: s.peers,
+                submitted: s.peers,
+                contributing: s.peers,
+                adversarial_submitted: 0,
+                adversarial_selected: 0,
+                mean_loss: 0.0,
+                bytes_up: s.payload_bytes as u64,
+                bytes_down: 0,
+                outer_alpha: 1.0,
+                rejections: Vec::new(),
+            });
+            t += s.compute_s + s.paper_tcomm_s;
+        }
+    }
+    print_table(
+        "Figure 3 / §4.3 — compute-communication accounting",
+        &[
+            "system",
+            "payload",
+            "t_compute",
+            "t_comm@110/500Mbps",
+            "util(link)",
+            "t_comm(paper)",
+            "util(paper)",
+            "effective agg bw",
+        ],
+        &rows,
+    );
+
+    // Verify the paper's own utilization arithmetic reproduces.
+    let cov_util: f64 = 1200.0 / (1200.0 + 70.0);
+    assert!((cov_util - 0.945).abs() < 0.001);
+    let intel_util: f64 = 38.0 * 60.0 / (38.0 * 60.0 + 8.3 * 60.0);
+    assert!((intel_util - 0.821).abs() < 0.002);
+    let sl_util: f64 = 270.0 / (270.0 + 12.0);
+    assert!((sl_util - 0.957).abs() < 0.001);
+    println!("\npaper utilization identities verified: 94.5% / 82.1% / 95.7%");
+
+    // Compression-derived payload sanity: ~2 GB at 72B scale.
+    assert!(covenant_bytes > 1.8e9 && covenant_bytes < 2.3e9,
+            "covenant payload = {covenant_bytes}");
+    println!(
+        "COVENANT-72B payload from our codec at the exact Table-4 layout: {:.2} GB \
+         ({:.1}x smaller than INTELLECT-1's int8 dense at 7.2x the model size)",
+        covenant_bytes / 1e9,
+        10e9 / covenant_bytes
+    );
+
+    // ASCII two-hour window (Fig. 3 rendering), covenant rows only.
+    let cov_rows: Vec<_> = timeline::rows(&reports)
+        .into_iter()
+        .filter(|r| (r.compute_s - 1200.0).abs() < 1.0)
+        .take(6)
+        .collect();
+    println!("\nCOVENANT-72B two-hour window (# = compute, ! = sync):");
+    print!("{}", timeline::render_ascii(&cov_rows, 72));
+    std::fs::write("results/fig3/timelines.csv", timeline::to_csv(&timeline::rows(&reports)))
+        .unwrap();
+    println!("\nwrote results/fig3/timelines.csv");
+    println!("fig3_timeline OK");
+}

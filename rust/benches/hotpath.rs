@@ -1,0 +1,114 @@
+//! Hot-path microbenchmarks (§Perf instrument): XLA artifact execution
+//! times, the pure-Rust aggregation path, and the wire codec — the
+//! components that bound per-round overhead outside the compute window.
+//!
+//! Run: cargo bench --bench hotpath [-- --artifacts artifacts/tiny]
+
+use anyhow::Result;
+use covenant::coordinator::aggregator;
+use covenant::runtime::{ops, Engine};
+use covenant::sparseloco::{codec, topk, Payload};
+use covenant::util::cli::Args;
+use covenant::util::rng::Rng;
+use covenant::util::stats::{bench, report};
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let artifacts = args.get_or("artifacts", "artifacts/tiny");
+    let eng = Engine::new(&artifacts)?;
+    let man = eng.manifest().clone();
+    let na = man.n_alloc;
+    let (b, t, h) = (man.config.batch_size, man.config.seq_len, man.config.inner_steps);
+    println!(
+        "hotpath: config={} ({} params, {} chunks), B={b} T={t} H={h}\n",
+        man.config.name, man.n_params, man.n_chunks
+    );
+
+    let mut rng = Rng::new(7);
+    let params = ops::init_params(&eng, 0)?;
+    let m = vec![0f32; na];
+    let v = vec![0f32; na];
+    let tokens: Vec<i32> =
+        (0..b * (t + 1)).map(|_| rng.below(man.config.vocab_size) as i32).collect();
+    let mask = vec![1f32; b * t];
+    let round_tokens: Vec<i32> =
+        (0..h * b * (t + 1)).map(|_| rng.below(man.config.vocab_size) as i32).collect();
+    let round_mask = vec![1f32; h * b * t];
+    let lrs = vec![1e-3f32; h];
+
+    // ---- XLA artifact timings ---------------------------------------------
+    println!("== XLA artifacts (PJRT CPU, includes host<->literal transfer) ==");
+    let s = bench(1, 5, || {
+        ops::train_step(&eng, &params, &m, &v, 1.0, &tokens, &mask, 1e-3, 0.0).unwrap();
+    });
+    report("train_step (1 inner step)", &s, None);
+    let per_round = bench(1, 3, || {
+        ops::train_round(&eng, &params, &m, &v, 0.0, &round_tokens, &round_mask, &lrs, 0.0)
+            .unwrap();
+    });
+    report(&format!("train_round (H={h} fused steps)"), &per_round, None);
+    println!(
+        "  -> fused round vs {h} x single-step: {:.2}x faster\n",
+        s.mean * h as f64 / per_round.mean
+    );
+
+    let delta: Vec<f32> = (0..na).map(|_| rng.normal() as f32 * 1e-3).collect();
+    let ef = vec![0f32; na];
+    let s = bench(1, 5, || {
+        ops::compress(&eng, &delta, &ef, 0.95).unwrap();
+    });
+    report("compress (XLA: Top-k + 2-bit + EF)", &s, Some((na * 4) as f64));
+    let s = bench(1, 5, || {
+        ops::outer_step(&eng, &params, &delta, 1.0).unwrap();
+    });
+    report("outer_step (XLA)", &s, Some((na * 4) as f64));
+    let s = bench(1, 5, || {
+        ops::eval_loss(&eng, &params, &tokens, &mask).unwrap();
+    });
+    report("eval_loss (XLA fwd)", &s, None);
+
+    // ---- pure-Rust aggregation path -----------------------------------------
+    println!("\n== pure-Rust comm-phase components ==");
+    let payloads: Vec<Payload> = (0..20)
+        .map(|i| {
+            let d: Vec<f32> = (0..na)
+                .map(|_| Rng::new(i).normal() as f32 * 1e-3)
+                .collect();
+            topk::compress_dense(&d, man.config.chunk, man.config.topk)
+        })
+        .collect();
+    let refs: Vec<&Payload> = payloads.iter().collect();
+    let s = bench(2, 20, || {
+        std::hint::black_box(aggregator::aggregate(&refs, na).unwrap());
+    });
+    report("aggregate 20 payloads (median-norm + scatter)", &s, Some((20 * payloads[0].n_values() * 6) as f64));
+    let s = bench(2, 50, || {
+        std::hint::black_box(aggregator::median_norm_weights(&refs));
+    });
+    report("median-norm weights (20 payloads)", &s, None);
+    let wire = codec::encode(&payloads[0]);
+    let s = bench(2, 50, || {
+        std::hint::black_box(codec::encode(&payloads[0]));
+    });
+    report("wire encode", &s, Some(wire.len() as f64));
+    let s = bench(2, 50, || {
+        std::hint::black_box(codec::decode(&wire).unwrap());
+    });
+    report("wire decode", &s, Some(wire.len() as f64));
+    let rust_compress = bench(1, 10, || {
+        std::hint::black_box(topk::compress_dense(&delta, man.config.chunk, man.config.topk));
+    });
+    report("rust reference compress", &rust_compress, Some((na * 4) as f64));
+
+    // ---- summary ratio -------------------------------------------------------
+    let comm_overhead = s.mean; // decode dominates per-payload work
+    println!(
+        "\ncomm-phase CPU work per round (~20 decodes + 1 aggregate) ≈ {:.1} ms \
+         vs compute window {:.1} ms: L3 overhead {:.2}%",
+        (20.0 * comm_overhead + 0.02) * 1e3,
+        per_round.mean * 1e3,
+        100.0 * (20.0 * comm_overhead) / per_round.mean
+    );
+    println!("hotpath OK");
+    Ok(())
+}

@@ -1,0 +1,11 @@
+//! Blockchain substrate (Bittensor-subnet stand-in, paper §3).
+//!
+//! Provides the coordination primitives Gauntlet needs: hotkey
+//! registration into a bounded UID table (with recycling of the
+//! lowest-stake UID when full — the reason Fig. 5's unique-participant
+//! count is a lower bound), block production tied to the virtual clock,
+//! validator weight-setting, and per-round emissions.
+
+pub mod subnet;
+
+pub use subnet::{Neuron, Subnet};

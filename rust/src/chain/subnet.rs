@@ -1,0 +1,247 @@
+//! Subnet state machine: UIDs, hotkeys, stake, weights, emissions.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// One registered slot in the subnet's UID table.
+#[derive(Debug, Clone)]
+pub struct Neuron {
+    pub uid: usize,
+    /// Current owner hotkey (changes when the UID is recycled).
+    pub hotkey: String,
+    pub stake: f64,
+    /// Block at which the current owner registered.
+    pub registered_at: u64,
+    /// Validator-assigned weight (normalized at emission time).
+    pub weight: f64,
+    /// Cumulative rewards earned by the *current* owner.
+    pub emissions: f64,
+    pub active: bool,
+}
+
+/// A Bittensor-like subnet with a bounded UID table.
+#[derive(Debug)]
+pub struct Subnet {
+    pub netuid: u32,
+    pub max_uids: usize,
+    pub block: u64,
+    /// Seconds per block (Bittensor: 12s).
+    pub block_time_s: f64,
+    neurons: Vec<Option<Neuron>>,
+    /// Registration fee burned on entry (recycle cost).
+    pub burn: f64,
+    /// Emission per block distributed by weight.
+    pub emission_per_block: f64,
+    /// All hotkeys ever seen with their first-registration block
+    /// (ground truth for Fig. 5's "lower bound" comparison).
+    pub hotkey_history: BTreeMap<String, u64>,
+}
+
+impl Subnet {
+    pub fn new(netuid: u32, max_uids: usize) -> Self {
+        Self {
+            netuid,
+            max_uids,
+            block: 0,
+            block_time_s: 12.0,
+            neurons: vec![None; max_uids],
+            burn: 1.0,
+            emission_per_block: 1.0,
+            hotkey_history: BTreeMap::new(),
+        }
+    }
+
+    /// Advance the chain to the given simulated time.
+    pub fn sync_to_time(&mut self, t: f64) {
+        let target = (t / self.block_time_s) as u64;
+        while self.block < target {
+            self.block += 1;
+            self.emit_block();
+        }
+    }
+
+    fn emit_block(&mut self) {
+        let total_w: f64 = self
+            .neurons
+            .iter()
+            .flatten()
+            .filter(|n| n.active)
+            .map(|n| n.weight)
+            .sum();
+        if total_w <= 0.0 {
+            return;
+        }
+        for n in self.neurons.iter_mut().flatten() {
+            if n.active && n.weight > 0.0 {
+                let share = self.emission_per_block * n.weight / total_w;
+                n.emissions += share;
+                n.stake += share;
+            }
+        }
+    }
+
+    /// Register a hotkey; recycles the lowest-stake inactive (then active)
+    /// UID when the table is full. Returns the assigned UID.
+    pub fn register(&mut self, hotkey: &str, stake: f64) -> Result<usize> {
+        if self.uid_of(hotkey).is_some() {
+            bail!("hotkey '{hotkey}' already registered");
+        }
+        self.hotkey_history.entry(hotkey.to_string()).or_insert(self.block);
+        let uid = match self.neurons.iter().position(|n| n.is_none()) {
+            Some(free) => free,
+            None => {
+                // Recycle: prefer inactive, lowest stake.
+                let victim = self
+                    .neurons
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, n)| n.as_ref().map(|n| (i, n)))
+                    .min_by(|(_, a), (_, b)| {
+                        (a.active, a.stake)
+                            .partial_cmp(&(b.active, b.stake))
+                            .unwrap()
+                    })
+                    .map(|(i, _)| i)
+                    .ok_or_else(|| anyhow!("no UID to recycle"))?;
+                victim
+            }
+        };
+        self.neurons[uid] = Some(Neuron {
+            uid,
+            hotkey: hotkey.to_string(),
+            stake: (stake - self.burn).max(0.0),
+            registered_at: self.block,
+            weight: 0.0,
+            emissions: 0.0,
+            active: true,
+        });
+        Ok(uid)
+    }
+
+    /// Deregister (peer leaves voluntarily); the UID becomes free.
+    pub fn deregister(&mut self, hotkey: &str) -> Result<()> {
+        let uid = self.uid_of(hotkey).ok_or_else(|| anyhow!("hotkey '{hotkey}' not registered"))?;
+        self.neurons[uid] = None;
+        Ok(())
+    }
+
+    /// Mark liveness (peers that stop submitting go inactive).
+    pub fn set_active(&mut self, hotkey: &str, active: bool) -> Result<()> {
+        let uid = self.uid_of(hotkey).ok_or_else(|| anyhow!("hotkey '{hotkey}' not registered"))?;
+        self.neurons[uid].as_mut().unwrap().active = active;
+        Ok(())
+    }
+
+    /// Validator weight-setting (Gauntlet scores -> on-chain weights).
+    pub fn set_weights(&mut self, weights: &[(usize, f64)]) -> Result<()> {
+        for &(uid, w) in weights {
+            if w < 0.0 || !w.is_finite() {
+                bail!("invalid weight {w} for uid {uid}");
+            }
+            let n = self
+                .neurons
+                .get_mut(uid)
+                .and_then(|n| n.as_mut())
+                .ok_or_else(|| anyhow!("uid {uid} not registered"))?;
+            n.weight = w;
+        }
+        Ok(())
+    }
+
+    pub fn uid_of(&self, hotkey: &str) -> Option<usize> {
+        self.neurons
+            .iter()
+            .flatten()
+            .find(|n| n.hotkey == hotkey)
+            .map(|n| n.uid)
+    }
+
+    pub fn neuron(&self, uid: usize) -> Option<&Neuron> {
+        self.neurons.get(uid).and_then(|n| n.as_ref())
+    }
+
+    pub fn neurons(&self) -> impl Iterator<Item = &Neuron> {
+        self.neurons.iter().flatten()
+    }
+
+    pub fn registered_count(&self) -> usize {
+        self.neurons.iter().flatten().count()
+    }
+
+    /// Count of UIDs ever handed out is capped, but hotkey history keeps
+    /// the true unique-participant count (Fig. 5 is a lower bound because
+    /// the paper only tracks UIDs).
+    pub fn unique_hotkeys_ever(&self) -> usize {
+        self.hotkey_history.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_assigns_uids() {
+        let mut s = Subnet::new(3, 4);
+        let a = s.register("hk-a", 10.0).unwrap();
+        let b = s.register("hk-b", 10.0).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(s.registered_count(), 2);
+        assert!(s.register("hk-a", 10.0).is_err()); // duplicate
+    }
+
+    #[test]
+    fn recycles_lowest_stake_when_full() {
+        let mut s = Subnet::new(3, 2);
+        s.register("a", 10.0).unwrap();
+        s.register("b", 5.0).unwrap();
+        let uid_b = s.uid_of("b").unwrap();
+        // table full: "c" takes b's UID (lowest stake)
+        let uid_c = s.register("c", 20.0).unwrap();
+        assert_eq!(uid_b, uid_c);
+        assert!(s.uid_of("b").is_none());
+        // history keeps all three
+        assert_eq!(s.unique_hotkeys_ever(), 3);
+    }
+
+    #[test]
+    fn inactive_recycled_before_active() {
+        let mut s = Subnet::new(3, 2);
+        s.register("a", 1.0).unwrap();
+        s.register("b", 100.0).unwrap();
+        s.set_active("b", false).unwrap();
+        let uid_b = s.uid_of("b").unwrap();
+        let uid_c = s.register("c", 1.0).unwrap();
+        assert_eq!(uid_b, uid_c, "inactive high-stake UID should recycle first");
+    }
+
+    #[test]
+    fn emissions_follow_weights() {
+        let mut s = Subnet::new(3, 4);
+        let a = s.register("a", 0.0).unwrap();
+        let b = s.register("b", 0.0).unwrap();
+        s.set_weights(&[(a, 3.0), (b, 1.0)]).unwrap();
+        s.sync_to_time(120.0); // 10 blocks
+        let ea = s.neuron(a).unwrap().emissions;
+        let eb = s.neuron(b).unwrap().emissions;
+        assert!((ea / eb - 3.0).abs() < 1e-9, "{ea} vs {eb}");
+        assert!((ea + eb - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weight_validation() {
+        let mut s = Subnet::new(3, 2);
+        let a = s.register("a", 0.0).unwrap();
+        assert!(s.set_weights(&[(a, -1.0)]).is_err());
+        assert!(s.set_weights(&[(a, f64::NAN)]).is_err());
+        assert!(s.set_weights(&[(99, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn block_time() {
+        let mut s = Subnet::new(3, 2);
+        s.sync_to_time(60.0);
+        assert_eq!(s.block, 5);
+    }
+}

@@ -1,0 +1,128 @@
+//! Flat parameter layout (Rust mirror of `python/compile/configs.py`).
+//!
+//! Every tensor's allocation is padded to a multiple of the SparseLoCo
+//! chunk (4096), 2-D tensors stored 64x64-block-major, so chunk-wise
+//! compression is a plain reshape of the flat vector. Used for parameter
+//! counting (Table 4), payload sizing (Fig. 3 at 72B scale) and the
+//! offload manager's memory accounting (Fig. 1).
+
+use crate::runtime::manifest::{ModelConfig, TensorSlot};
+
+pub const BLOCK: usize = 64;
+
+/// The flat layout: ordered tensor slots + totals.
+#[derive(Debug, Clone)]
+pub struct Layout {
+    pub slots: Vec<TensorSlot>,
+    pub n_params: usize,
+    pub n_alloc: usize,
+    pub chunk: usize,
+}
+
+impl Layout {
+    pub fn build(cfg: &ModelConfig) -> Layout {
+        let chunk = cfg.chunk;
+        let mut slots = Vec::new();
+        let mut off = 0usize;
+        let mut n_params = 0usize;
+        let push = |name: String, shape: Vec<usize>, is_2d: bool, off: &mut usize, n_params: &mut usize, slots: &mut Vec<TensorSlot>| {
+            let size: usize = shape.iter().product();
+            let slot = size.div_ceil(chunk) * chunk;
+            slots.push(TensorSlot {
+                name,
+                shape,
+                offset: *off,
+                size,
+                slot,
+                is_2d,
+                decay: is_2d,
+            });
+            *off += slot;
+            *n_params += size;
+        };
+        let q_dim = cfg.n_heads * cfg.d_head;
+        let kv_dim = cfg.n_kv_heads * cfg.d_head;
+        push("embed".into(), vec![cfg.vocab_size, cfg.d_model], true, &mut off, &mut n_params, &mut slots);
+        for i in 0..cfg.n_layers {
+            let p = format!("layers.{i}.");
+            push(format!("{p}attn_norm"), vec![cfg.d_model], false, &mut off, &mut n_params, &mut slots);
+            push(format!("{p}wq"), vec![cfg.d_model, q_dim], true, &mut off, &mut n_params, &mut slots);
+            push(format!("{p}wk"), vec![cfg.d_model, kv_dim], true, &mut off, &mut n_params, &mut slots);
+            push(format!("{p}wv"), vec![cfg.d_model, kv_dim], true, &mut off, &mut n_params, &mut slots);
+            push(format!("{p}wo"), vec![q_dim, cfg.d_model], true, &mut off, &mut n_params, &mut slots);
+            push(format!("{p}mlp_norm"), vec![cfg.d_model], false, &mut off, &mut n_params, &mut slots);
+            push(format!("{p}w_gate"), vec![cfg.d_model, cfg.d_ff], true, &mut off, &mut n_params, &mut slots);
+            push(format!("{p}w_up"), vec![cfg.d_model, cfg.d_ff], true, &mut off, &mut n_params, &mut slots);
+            push(format!("{p}w_down"), vec![cfg.d_ff, cfg.d_model], true, &mut off, &mut n_params, &mut slots);
+        }
+        push("final_norm".into(), vec![cfg.d_model], false, &mut off, &mut n_params, &mut slots);
+        if cfg.untie_embeddings {
+            push("lm_head".into(), vec![cfg.vocab_size, cfg.d_model], true, &mut off, &mut n_params, &mut slots);
+        }
+        Layout { slots, n_params, n_alloc: off, chunk }
+    }
+
+    pub fn n_chunks(&self) -> usize {
+        self.n_alloc / self.chunk
+    }
+
+    /// Dense f32 bytes of the full flat state (one of params/m/v/ef).
+    pub fn dense_bytes(&self) -> usize {
+        self.n_alloc * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets;
+
+    #[test]
+    fn tiny_layout_matches_python() {
+        // Values cross-checked against python configs (see also the
+        // integration test that reads manifest.json).
+        let cfg = presets::get("tiny").unwrap();
+        let lay = Layout::build(&cfg);
+        assert_eq!(lay.n_params, 410_240);
+        assert_eq!(lay.n_alloc, 430_080);
+        assert_eq!(lay.n_chunks(), 105);
+    }
+
+    #[test]
+    fn covenant72b_param_count_matches_table4() {
+        // Table 4: 72,747,327,488 parameters. Our accounting (untied
+        // embeddings, d_ff=28672) matches to within 0.0015%.
+        let cfg = presets::get("covenant-72b").unwrap();
+        let lay = Layout::build(&cfg);
+        let target = 72_747_327_488u64;
+        let got = lay.n_params as u64;
+        let rel = (got as f64 - target as f64).abs() / target as f64;
+        assert!(rel < 2e-5, "param count {got} vs {target} (rel {rel:.2e})");
+    }
+
+    #[test]
+    fn chunks_never_straddle_tensors() {
+        for name in ["tiny", "small", "base", "m100"] {
+            let cfg = presets::get(name).unwrap();
+            let lay = Layout::build(&cfg);
+            for s in &lay.slots {
+                assert_eq!(s.offset % lay.chunk, 0, "{name}/{}", s.name);
+                assert_eq!(s.slot % lay.chunk, 0, "{name}/{}", s.name);
+                assert!(s.slot >= s.size);
+            }
+            assert_eq!(lay.n_alloc % lay.chunk, 0);
+        }
+    }
+
+    #[test]
+    fn slots_are_contiguous_and_sorted() {
+        let cfg = presets::get("small").unwrap();
+        let lay = Layout::build(&cfg);
+        let mut expect = 0;
+        for s in &lay.slots {
+            assert_eq!(s.offset, expect);
+            expect += s.slot;
+        }
+        assert_eq!(expect, lay.n_alloc);
+    }
+}

@@ -1,0 +1,10 @@
+//! Config system: model presets (mirroring `python/compile/configs.py`),
+//! the flat parameter layout, and run/network/gauntlet configuration for
+//! the launcher.
+
+pub mod layout;
+pub mod presets;
+pub mod run;
+
+pub use layout::Layout;
+pub use run::{GauntletConfig, NetworkConfig, RunConfig};

@@ -1,0 +1,105 @@
+//! Model presets — must stay in lock-step with `python/compile/configs.py`
+//! (the integration tests cross-check layouts against `manifest.json`).
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::ModelConfig;
+
+fn base(name: &str) -> ModelConfig {
+    ModelConfig {
+        name: name.to_string(),
+        vocab_size: 0,
+        d_model: 0,
+        n_layers: 0,
+        n_heads: 0,
+        n_kv_heads: 0,
+        d_head: 0,
+        d_ff: 0,
+        seq_len: 0,
+        batch_size: 4,
+        inner_steps: 10,
+        rope_theta: 500_000.0,
+        norm_eps: 1e-5,
+        init_std: 0.02,
+        adam_b1: 0.9,
+        adam_b2: 0.95,
+        adam_eps: 1e-8,
+        weight_decay: 0.1,
+        ef_beta: 0.95,
+        topk: 64,
+        chunk: 4096,
+        untie_embeddings: false,
+    }
+}
+
+/// Look up a preset by name.
+pub fn get(name: &str) -> Result<ModelConfig> {
+    let mut c = base(name);
+    match name {
+        "tiny" => {
+            c.vocab_size = 512;
+            c.d_model = 128;
+            c.n_layers = 2;
+            c.n_heads = 4;
+            c.n_kv_heads = 2;
+            c.d_head = 32;
+            c.d_ff = 320;
+            c.seq_len = 32;
+            c.batch_size = 4;
+            c.inner_steps = 4;
+        }
+        "small" => {
+            c.vocab_size = 4096;
+            c.d_model = 256;
+            c.n_layers = 4;
+            c.n_heads = 8;
+            c.n_kv_heads = 2;
+            c.d_head = 32;
+            c.d_ff = 704;
+            c.seq_len = 128;
+        }
+        "base" => {
+            c.vocab_size = 8192;
+            c.d_model = 384;
+            c.n_layers = 6;
+            c.n_heads = 6;
+            c.n_kv_heads = 2;
+            c.d_head = 64;
+            c.d_ff = 1024;
+            c.seq_len = 128;
+        }
+        "m100" => {
+            c.vocab_size = 16384;
+            c.d_model = 768;
+            c.n_layers = 12;
+            c.n_heads = 12;
+            c.n_kv_heads = 4;
+            c.d_head = 64;
+            c.d_ff = 2048;
+            c.seq_len = 256;
+        }
+        // The paper's model (Table 4). Published parameter count
+        // 72,747,327,488 matches untied-embedding accounting with
+        // d_ff=28672 to within 0.0015% (see EXPERIMENTS.md T4).
+        "covenant-72b" => {
+            c.vocab_size = 262_208;
+            c.d_model = 8192;
+            c.n_layers = 80;
+            c.n_heads = 64;
+            c.n_kv_heads = 8;
+            c.d_head = 128;
+            c.d_ff = 28_672;
+            c.seq_len = 2048;
+            c.batch_size = 192;
+            c.inner_steps = 30;
+            c.untie_embeddings = true;
+        }
+        other => bail!("unknown preset '{other}' (tiny|small|base|m100|covenant-72b)"),
+    }
+    Ok(c)
+}
+
+/// All preset names.
+pub fn names() -> &'static [&'static str] {
+    &["tiny", "small", "base", "m100", "covenant-72b"]
+}

@@ -1,0 +1,210 @@
+//! Run / network / gauntlet configuration for the launcher.
+//!
+//! Defaults reproduce the paper's operating point (§3, §4.3): R=20
+//! contributor cap, H=30 inner steps, 110 Mb/s uplink / 500 Mb/s downlink
+//! per peer, 20-minute compute window, slightly more active peers than
+//! aggregated contributors (Appendix A).
+//!
+//! Configs load from JSON files (`--config run.json`) and every field can
+//! be overridden from the CLI.
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Top-level run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    /// Artifact directory (model preset must already be AOT-compiled).
+    pub artifacts: String,
+    /// Outer rounds to run.
+    pub rounds: usize,
+    /// Contributor cap per round (paper: 20).
+    pub max_contributors: usize,
+    /// Target number of registered/active peers (paper: ~24 active mean).
+    pub target_active: usize,
+    /// Outer learning rate alpha (paper: 1.0, dropped to 0.65 late).
+    pub outer_lr: f64,
+    /// Error-feedback decay beta.
+    pub ef_beta: f64,
+    /// RNG seed for the whole run.
+    pub seed: u64,
+    pub network: NetworkConfig,
+    pub gauntlet: GauntletConfig,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            artifacts: "artifacts/tiny".into(),
+            rounds: 20,
+            max_contributors: 20,
+            target_active: 24,
+            outer_lr: 1.0,
+            ef_beta: 0.95,
+            seed: 0xC0DE,
+            network: NetworkConfig::default(),
+            gauntlet: GauntletConfig::default(),
+        }
+    }
+}
+
+/// Simulated internet link shape (paper §4.3 bandwidth constraints).
+#[derive(Debug, Clone)]
+pub struct NetworkConfig {
+    /// Per-peer uplink, bits/second (paper: 110 Mb/s).
+    pub uplink_bps: f64,
+    /// Per-peer downlink, bits/second (paper: 500 Mb/s).
+    pub downlink_bps: f64,
+    /// Per-transfer latency floor, seconds (object-store RTT).
+    pub latency_s: f64,
+    /// Fixed compute window per round, seconds (paper: 20 min at 72B).
+    pub compute_window_s: f64,
+}
+
+impl Default for NetworkConfig {
+    fn default() -> Self {
+        Self {
+            uplink_bps: 110e6,
+            downlink_bps: 500e6,
+            latency_s: 0.2,
+            compute_window_s: 20.0 * 60.0,
+        }
+    }
+}
+
+/// Gauntlet validator configuration (paper §2.2).
+#[derive(Debug, Clone)]
+pub struct GauntletConfig {
+    /// Peers evaluated with LossScore per round (subset for efficiency).
+    pub loss_eval_fraction: f64,
+    /// Batches per LossScore evaluation.
+    pub eval_batches: usize,
+    /// OpenSkill rating weight in the final score.
+    pub skill_weight: f64,
+    /// Fast-check weight in the final score.
+    pub fast_weight: f64,
+    /// Margin by which unassigned-data improvement must not exceed
+    /// assigned-data improvement (anti-copying, §2.2).
+    pub copy_margin: f64,
+    /// Sync-check: max relative L2 distance of claimed base params hash.
+    pub max_norm_ratio: f64,
+}
+
+impl Default for GauntletConfig {
+    fn default() -> Self {
+        Self {
+            loss_eval_fraction: 0.5,
+            eval_batches: 2,
+            skill_weight: 0.7,
+            fast_weight: 0.3,
+            // LossScore on small batches is noisy; a margin keeps honest
+            // peers (whose assigned/unassigned differential is small) from
+            // being flagged, while blatant duplication is caught by the
+            // duplicate-payload fast check.
+            copy_margin: 0.05,
+            max_norm_ratio: 10.0,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a JSON file; missing fields keep defaults.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let mut c = Self::default();
+        if let Some(v) = j.opt("artifacts") {
+            c.artifacts = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.opt("rounds") {
+            c.rounds = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("max_contributors") {
+            c.max_contributors = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("target_active") {
+            c.target_active = v.as_usize()?;
+        }
+        if let Some(v) = j.opt("outer_lr") {
+            c.outer_lr = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("ef_beta") {
+            c.ef_beta = v.as_f64()?;
+        }
+        if let Some(v) = j.opt("seed") {
+            c.seed = v.as_i64()? as u64;
+        }
+        if let Some(n) = j.opt("network") {
+            if let Some(v) = n.opt("uplink_bps") {
+                c.network.uplink_bps = v.as_f64()?;
+            }
+            if let Some(v) = n.opt("downlink_bps") {
+                c.network.downlink_bps = v.as_f64()?;
+            }
+            if let Some(v) = n.opt("latency_s") {
+                c.network.latency_s = v.as_f64()?;
+            }
+            if let Some(v) = n.opt("compute_window_s") {
+                c.network.compute_window_s = v.as_f64()?;
+            }
+        }
+        if let Some(g) = j.opt("gauntlet") {
+            if let Some(v) = g.opt("loss_eval_fraction") {
+                c.gauntlet.loss_eval_fraction = v.as_f64()?;
+            }
+            if let Some(v) = g.opt("eval_batches") {
+                c.gauntlet.eval_batches = v.as_usize()?;
+            }
+            if let Some(v) = g.opt("skill_weight") {
+                c.gauntlet.skill_weight = v.as_f64()?;
+            }
+            if let Some(v) = g.opt("fast_weight") {
+                c.gauntlet.fast_weight = v.as_f64()?;
+            }
+            if let Some(v) = g.opt("copy_margin") {
+                c.gauntlet.copy_margin = v.as_f64()?;
+            }
+            if let Some(v) = g.opt("max_norm_ratio") {
+                c.gauntlet.max_norm_ratio = v.as_f64()?;
+            }
+        }
+        Ok(c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_operating_point() {
+        let c = RunConfig::default();
+        assert_eq!(c.max_contributors, 20);
+        assert_eq!(c.network.uplink_bps, 110e6);
+        assert_eq!(c.network.downlink_bps, 500e6);
+        assert_eq!(c.network.compute_window_s, 1200.0);
+        assert!(c.target_active > c.max_contributors);
+    }
+
+    #[test]
+    fn json_overrides() {
+        let j = Json::parse(
+            r#"{"rounds": 5, "outer_lr": 0.65,
+                "network": {"uplink_bps": 1e6},
+                "gauntlet": {"eval_batches": 7}}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.rounds, 5);
+        assert_eq!(c.outer_lr, 0.65);
+        assert_eq!(c.network.uplink_bps, 1e6);
+        assert_eq!(c.gauntlet.eval_batches, 7);
+        // untouched fields keep defaults
+        assert_eq!(c.max_contributors, 20);
+    }
+}

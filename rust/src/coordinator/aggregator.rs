@@ -1,0 +1,137 @@
+//! Aggregation of selected pseudo-gradients (paper Eq. 2 + §2.2's
+//! median-norm normalization): contributions are scaled relative to the
+//! *median* norm so no single participant can dominate due to an
+//! abnormally large-magnitude update, then averaged into a dense delta.
+
+use anyhow::{ensure, Result};
+
+use crate::sparseloco::Payload;
+use crate::util::stats::median;
+
+/// Per-payload weights implementing median-norm scaling: payloads whose
+/// norm exceeds the median are scaled *down* to the median (dampening
+/// only — in-family updates are untouched).
+pub fn median_norm_weights(payloads: &[&Payload]) -> Vec<f32> {
+    let norms: Vec<f64> = payloads.iter().map(|p| p.l2_norm()).collect();
+    let positive: Vec<f64> = norms.iter().copied().filter(|&n| n > 0.0).collect();
+    if positive.is_empty() {
+        return vec![0.0; payloads.len()];
+    }
+    let med = median(&positive);
+    norms
+        .iter()
+        .map(|&n| if n > med && n > 0.0 { (med / n) as f32 } else { 1.0 })
+        .collect()
+}
+
+/// Aggregate selected payloads into a dense mean delta:
+/// delta = (1/R) * sum_r w_r * decompress(payload_r).
+///
+/// This is the L3 hot path (every peer runs it each round); the scatter
+/// kernel lives in `Payload::accumulate_into`.
+pub fn aggregate(payloads: &[&Payload], dense_len: usize) -> Result<Vec<f32>> {
+    ensure!(!payloads.is_empty(), "no payloads to aggregate");
+    let weights = median_norm_weights(payloads);
+    aggregate_weighted(payloads, &weights, dense_len)
+}
+
+/// Aggregate with explicit weights (ablation hook: no-normalization
+/// baseline passes all-ones).
+pub fn aggregate_weighted(
+    payloads: &[&Payload],
+    weights: &[f32],
+    dense_len: usize,
+) -> Result<Vec<f32>> {
+    ensure!(payloads.len() == weights.len(), "weights length mismatch");
+    let mut acc = vec![0f32; dense_len];
+    let inv_r = 1.0 / payloads.len() as f32;
+    for (p, &w) in payloads.iter().zip(weights) {
+        ensure!(p.dense_len() == dense_len, "payload dense length mismatch");
+        p.accumulate_into(&mut acc, w * inv_r)?;
+    }
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparseloco::topk::compress_dense;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    fn payload(seed: u64, mag: f32) -> Payload {
+        let mut rng = Rng::new(seed);
+        let dense: Vec<f32> = (0..4 * 64).map(|_| rng.normal() as f32 * mag).collect();
+        compress_dense(&dense, 64, 8)
+    }
+
+    #[test]
+    fn whale_cannot_dominate() {
+        let normal: Vec<Payload> = (0..6).map(|i| payload(i, 0.01)).collect();
+        let whale = payload(99, 10.0); // 1000x magnitude
+        let mut refs: Vec<&Payload> = normal.iter().collect();
+        refs.push(&whale);
+        let w = median_norm_weights(&refs);
+        // whale is dampened to ~median norm
+        let whale_effective = whale.l2_norm() * w[6] as f64;
+        let med: Vec<f64> = normal.iter().map(|p| p.l2_norm()).collect();
+        let med = crate::util::stats::median(&med);
+        // f32 weight rounding: agreement to ~0.2%
+        assert!((whale_effective - med).abs() / med < 5e-3, "effective={whale_effective} med={med}");
+        // normal peers untouched
+        assert!(w[..6].iter().filter(|&&x| x == 1.0).count() >= 3);
+    }
+
+    #[test]
+    fn aggregate_is_mean_of_dense() {
+        let a = payload(1, 0.01);
+        let b = payload(2, 0.01);
+        let agg = aggregate_weighted(&[&a, &b], &[1.0, 1.0], a.dense_len()).unwrap();
+        let da = a.to_dense();
+        let db = b.to_dense();
+        for i in 0..agg.len() {
+            assert!((agg[i] - 0.5 * (da[i] + db[i])).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn aggregation_permutation_invariant() {
+        check(
+            20,
+            |r| {
+                let n = r.range(2, 6);
+                (0..n).map(|i| payload(r.next_u64() ^ i as u64, 0.01)).collect::<Vec<_>>()
+            },
+            |ps| {
+                let refs: Vec<&Payload> = ps.iter().collect();
+                let mut rev: Vec<&Payload> = ps.iter().collect();
+                rev.reverse();
+                let a = aggregate(&refs, ps[0].dense_len()).unwrap();
+                let b = aggregate(&rev, ps[0].dense_len()).unwrap();
+                a.iter().zip(&b).all(|(x, y)| (x - y).abs() < 1e-5)
+            },
+        );
+    }
+
+    #[test]
+    fn empty_payloads_rejected() {
+        assert!(aggregate(&[], 10).is_err());
+    }
+
+    #[test]
+    fn all_zero_payloads_zero_weights() {
+        let mut p = payload(1, 0.01);
+        p.scales.iter_mut().for_each(|s| *s = 0.0);
+        let w = median_norm_weights(&[&p]);
+        assert_eq!(w, vec![0.0]);
+    }
+
+    #[test]
+    fn deterministic() {
+        let ps: Vec<Payload> = (0..4).map(|i| payload(i, 0.01)).collect();
+        let refs: Vec<&Payload> = ps.iter().collect();
+        let a = aggregate(&refs, ps[0].dense_len()).unwrap();
+        let b = aggregate(&refs, ps[0].dense_len()).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,12 @@
+//! The coordinator — the paper's systems contribution, wired together:
+//! round orchestration over simulated peers, object-store comms and the
+//! chain; aggregation with median-norm scaling (§2.2); and the
+//! phase-dependent optimizer-state offload protocol of Figure 1.
+
+pub mod aggregator;
+pub mod network;
+pub mod offload;
+
+pub use aggregator::{aggregate, median_norm_weights};
+pub use network::{Network, NetworkParams, RoundReport};
+pub use offload::{OffloadManager, Phase, StateKind};

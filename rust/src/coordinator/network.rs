@@ -1,0 +1,534 @@
+//! The full permissionless training network: peers + churn + object store
+//! + chain + Gauntlet validator + SparseLoCo aggregation, advancing on the
+//! virtual clock. One `Network::run_round` is one outer round of the
+//! paper's protocol (§3):
+//!
+//! 1. churn (joins register on-chain, download the current model; leaves
+//!    deregister),
+//! 2. compute phase — every active peer runs H inner steps (real XLA
+//!    compute through the engine),
+//! 3. compress phase — SparseLoCo Top-k + 2-bit quant + EF (Eq. 1),
+//! 4. upload to per-peer buckets under uplink constraints,
+//! 5. Gauntlet scoring + contributor selection + chain weights,
+//! 6. every peer downloads the selected payloads, median-norm-scaled
+//!    aggregation, outer step (Eq. 2), sync.
+
+use anyhow::Result;
+
+use crate::chain::Subnet;
+use crate::config::run::RunConfig;
+use crate::data::grammar::GrammarKind;
+use crate::data::shards::{BatchSampler, ShardStore};
+use crate::gauntlet::loss_score::EvalBatch;
+use crate::gauntlet::validator::{EvalDataProvider, Validator};
+use crate::gauntlet::Submission;
+use crate::netsim::{LinkPair, VirtualClock};
+use crate::peer::{Behavior, ChurnConfig, ChurnModel, PeerState};
+use crate::runtime::{ops, Engine};
+use crate::sparseloco::{codec, Payload};
+use crate::storage::ObjectStore;
+use crate::train::{OuterAlphaSchedule, Schedule};
+use crate::util::rng::Rng;
+
+/// Everything configurable about a network run.
+pub struct NetworkParams {
+    pub run: RunConfig,
+    pub churn: ChurnConfig,
+    pub schedule: Schedule,
+    pub alpha: OuterAlphaSchedule,
+    /// Tokens per data shard.
+    pub shard_tokens: usize,
+    pub n_shards: usize,
+    /// Shards assigned per peer per round.
+    pub assigned_per_peer: usize,
+    /// Upload deadline after compute end (seconds).
+    pub comm_deadline_s: f64,
+    /// Probability a peer's upload is pathologically slow this round.
+    pub p_slow_upload: f64,
+    /// Initial peer count.
+    pub initial_peers: usize,
+    /// Mixture to train on.
+    pub kind: GrammarKind,
+    /// Seed of the synthetic-corpus world (fact table + Markov chains).
+    /// MUST match the world used for evaluation.
+    pub world_seed: u64,
+    /// Use the verified-equivalent pure-Rust compressor instead of the
+    /// XLA/Pallas artifact (3x faster on CPU; see EXPERIMENTS.md §Perf).
+    pub rust_compress: bool,
+}
+
+impl NetworkParams {
+    pub fn quick(run: RunConfig, h: usize, rounds_hint: usize) -> Self {
+        let scale = (rounds_hint * h) as f64 / 183_000.0;
+        NetworkParams {
+            churn: ChurnConfig { target_active: run.target_active, ..Default::default() },
+            schedule: Schedule::covenant_pretrain_scaled(scale.max(1e-4)),
+            alpha: OuterAlphaSchedule::scaled(scale.max(1e-4), h),
+            shard_tokens: 16_384,
+            n_shards: 24,
+            assigned_per_peer: 2,
+            comm_deadline_s: 240.0,
+            p_slow_upload: 0.04,
+            initial_peers: run.target_active,
+            kind: GrammarKind::Web,
+            world_seed: run.seed ^ 0xDA7A,
+            rust_compress: false,
+            run,
+        }
+    }
+}
+
+/// Per-round observability (feeds Figures 3/4/5/6 + EXPERIMENTS.md).
+#[derive(Debug, Clone)]
+pub struct RoundReport {
+    pub round: usize,
+    /// Virtual times: round start, compute end, comm end.
+    pub t_start: f64,
+    pub t_compute_end: f64,
+    pub t_comm_end: f64,
+    pub active: usize,
+    pub submitted: usize,
+    pub contributing: usize,
+    pub adversarial_submitted: usize,
+    pub adversarial_selected: usize,
+    /// Mean training loss across honest peers (last inner step).
+    pub mean_loss: f64,
+    pub bytes_up: u64,
+    pub bytes_down: u64,
+    pub outer_alpha: f64,
+    /// Human-readable reasons for non-selected submissions (debugging +
+    /// observability): "hotkey fast=... score=...".
+    pub rejections: Vec<String>,
+}
+
+impl RoundReport {
+    pub fn t_comm(&self) -> f64 {
+        self.t_comm_end - self.t_compute_end
+    }
+
+    pub fn utilization(&self) -> f64 {
+        let total = self.t_comm_end - self.t_start;
+        (self.t_compute_end - self.t_start) / total.max(1e-9)
+    }
+}
+
+struct PeerSlot {
+    state: PeerState,
+    link: LinkPair,
+    joined_round: usize,
+}
+
+/// The whole simulated network.
+pub struct Network<'e> {
+    pub eng: &'e Engine,
+    pub p: NetworkParams,
+    pub clock: VirtualClock,
+    pub store: ObjectStore,
+    pub chain: Subnet,
+    pub validator: Validator,
+    pub churn: ChurnModel,
+    pub shards: ShardStore,
+    peers: Vec<PeerSlot>,
+    pub global_params: Vec<f32>,
+    pub round: usize,
+    pub reports: Vec<RoundReport>,
+    rng: Rng,
+    /// Previous round's selected payloads (copier source material).
+    prev_payloads: Vec<Payload>,
+}
+
+impl<'e> Network<'e> {
+    pub fn new(eng: &'e Engine, p: NetworkParams) -> Result<Self> {
+        let man = eng.manifest();
+        let mut rng = Rng::new(p.run.seed);
+        let clock = VirtualClock::new();
+        let mut store = ObjectStore::new();
+        let chain = Subnet::new(3, 256);
+        let grammar = crate::data::Grammar::new(man.config.vocab_size, p.world_seed);
+        let shards = ShardStore::new(grammar, p.shard_tokens, p.n_shards);
+        shards.publish(&mut store, p.kind)?;
+        let churn = ChurnModel::new(p.churn, p.run.seed ^ 0xC0DE);
+        let global_params = ops::init_params(eng, p.run.seed as i32)?;
+        let validator = Validator::new(p.run.gauntlet.clone(), p.run.seed ^ 0x5C0);
+
+        let mut net = Network {
+            eng,
+            clock,
+            store,
+            chain,
+            validator,
+            shards,
+            peers: Vec::new(),
+            global_params,
+            round: 0,
+            reports: Vec::new(),
+            rng: rng.fork(1),
+            prev_payloads: Vec::new(),
+            churn,
+            p,
+        };
+        for _ in 0..net.p.initial_peers {
+            net.add_peer(None)?;
+        }
+        // initial cohort is ready at round 0 (no join lag)
+        for s in &mut net.peers {
+            s.joined_round = 0;
+        }
+        Ok(net)
+    }
+
+    /// Register + provision a fresh peer (bucket, model download).
+    fn add_peer(&mut self, forced_behavior: Option<Behavior>) -> Result<()> {
+        let hotkey = self.churn.fresh_hotkey();
+        let uid = self.chain.register(&hotkey, 10.0)?;
+        let behavior = forced_behavior.unwrap_or_else(|| {
+            match self.churn.roll_adversarial() {
+                Some(i) => Behavior::adversarial_kinds()[i],
+                None => Behavior::Honest,
+            }
+        });
+        self.store.create_bucket(&hotkey, &format!("cred-{hotkey}"))?;
+        let mut link = LinkPair::new(
+            self.p.run.network.uplink_bps,
+            self.p.run.network.downlink_bps,
+            self.p.run.network.latency_s,
+        );
+        // Joining peers download the dense model (and shards) in the
+        // background; charge the downlink.
+        let dense = self.global_params.len() * 4;
+        link.download(&self.clock, dense + self.p.assigned_per_peer * self.shards.shard_bytes());
+        let state = PeerState::join(
+            hotkey,
+            uid,
+            behavior,
+            &self.global_params,
+            self.round * self.eng.manifest().config.inner_steps,
+            self.round,
+            self.rng.next_u64(),
+        );
+        self.peers.push(PeerSlot { state, link, joined_round: self.round + 1 });
+        Ok(())
+    }
+
+    pub fn active_peers(&self) -> usize {
+        self.peers.len()
+    }
+
+    pub fn unique_peers_ever(&self) -> usize {
+        self.chain.unique_hotkeys_ever()
+    }
+
+    /// Mean loss over the most recent `n` reports.
+    pub fn recent_loss(&self, n: usize) -> f64 {
+        let tail: Vec<f64> = self
+            .reports
+            .iter()
+            .rev()
+            .take(n)
+            .map(|r| r.mean_loss)
+            .collect();
+        tail.iter().sum::<f64>() / tail.len().max(1) as f64
+    }
+
+    fn sampler_for(&mut self, uid: usize, seed_tag: u64) -> Result<BatchSampler> {
+        let man = self.eng.manifest();
+        let ids = self.shards.assign(uid, self.round, self.p.assigned_per_peer);
+        let mut tokens = Vec::new();
+        for id in ids {
+            tokens.extend(self.shards.fetch(&mut self.store, self.p.kind, id)?);
+        }
+        Ok(BatchSampler::new(
+            tokens,
+            man.config.seq_len,
+            man.config.batch_size,
+            self.p.run.seed ^ uid as u64 ^ (self.round as u64) << 20 ^ seed_tag,
+        ))
+    }
+
+    /// Run one full outer round.
+    pub fn run_round(&mut self) -> Result<RoundReport> {
+        let man = self.eng.manifest().clone();
+        let h = man.config.inner_steps;
+        let t_start = self.clock.now();
+        let round = self.round;
+
+        // ---- 1. churn ----------------------------------------------------
+        let active_hotkeys: Vec<String> =
+            self.peers.iter().map(|s| s.state.hotkey.clone()).collect();
+        let ev = self.churn.step(&active_hotkeys);
+        for hk in &ev.leaves {
+            if let Some(i) = self.peers.iter().position(|s| &s.state.hotkey == hk) {
+                self.chain.deregister(hk)?;
+                let _ = self.store.delete_bucket(hk);
+                self.peers.remove(i);
+            }
+        }
+        for _ in 0..ev.joins {
+            self.add_peer(None)?;
+        }
+
+        // ---- 2+3. compute + compress (virtual window; real XLA work) -----
+        let mut losses = Vec::new();
+        let mut submissions: Vec<Submission> = Vec::new();
+        let inner_step0 = round * h;
+        let lrs = self.p.schedule.round_lrs(inner_step0, h);
+        let global_snapshot = self.global_params.clone();
+        let median_hint = 0.05f32; // noise peers' norm guess
+        let compute_end = t_start + self.p.run.network.compute_window_s;
+
+        let n_peers = self.peers.len();
+        let mut adversarial_submitted = 0;
+        for i in 0..n_peers {
+            let (uid, behavior, joined) = {
+                let s = &self.peers[i];
+                (s.state.uid, s.state.behavior, s.joined_round)
+            };
+            if joined > round {
+                continue; // still syncing; participates next round
+            }
+            // Honest-path compute (Honest, Stale, Whale run real steps).
+            let honest_payload = if matches!(
+                behavior,
+                Behavior::Honest | Behavior::Stale | Behavior::Whale
+            ) {
+                let mut sampler = self.sampler_for(uid, 0)?;
+                let tokens = sampler.round_batch(h);
+                let mask = sampler.ones_round_mask(h);
+                let slot = &mut self.peers[i];
+                let ls = slot.state.compute_phase(self.eng, &tokens, &mask, &lrs)?;
+                if behavior == Behavior::Honest {
+                    losses.push(*ls.last().unwrap() as f64);
+                }
+                let payload =
+                    self.peers[i].state.compress_phase(
+                    self.eng,
+                    &global_snapshot,
+                    self.p.run.ef_beta as f32,
+                    self.p.rust_compress,
+                )?;
+                Some(payload)
+            } else {
+                None
+            };
+            // Upload at compute end (+ occasional pathological slowness).
+            let slow = self.rng.bool(self.p.p_slow_upload);
+            let copy_src = if self.prev_payloads.is_empty() {
+                None
+            } else {
+                Some(&self.prev_payloads[self.rng.below(self.prev_payloads.len())])
+            };
+            let copy_src_cloned = copy_src.cloned();
+            let slot = &mut self.peers[i];
+            let mut sub = slot.state.fabricate_submission(
+                round,
+                honest_payload,
+                copy_src_cloned.as_ref(),
+                man.n_chunks,
+                man.config.topk,
+                man.config.chunk,
+                median_hint,
+                0.0,
+            );
+            if behavior.is_adversarial() || behavior == Behavior::Stale {
+                adversarial_submitted += 1;
+            }
+            // Charge the uplink from compute end.
+            slot.link.up.release_at(compute_end);
+            let mut done = slot.link.up.transfer(compute_end, sub.wire_bytes);
+            if slow {
+                done += self.p.comm_deadline_s; // stalled connection
+            }
+            sub.uploaded_at = done;
+            // Store in the peer's bucket (the validator reads from here).
+            let wire = codec::encode(&sub.payload);
+            self.store.put(&slot.state.hotkey, &format!("round-{round}/grad.bin"), wire)?;
+            submissions.push(sub);
+        }
+
+        // ---- 4. Gauntlet scoring ------------------------------------------
+        let deadline = compute_end + self.p.comm_deadline_s;
+        let apply_scale =
+            (self.p.alpha.alpha(round) / self.p.run.max_contributors as f64) as f32;
+        let mut provider = NetworkDataProvider {
+            shards: &self.shards,
+            store: &mut self.store,
+            round,
+            kind: self.p.kind,
+            cfg_seq: man.config.seq_len,
+            cfg_batch: man.config.batch_size,
+            assigned_per_peer: self.p.assigned_per_peer,
+            seed: self.p.run.seed ^ 0xE7A1,
+        };
+        let verdict = self.validator.score_round(
+            self.eng,
+            &global_snapshot,
+            &submissions,
+            round,
+            deadline,
+            apply_scale,
+            self.p.run.max_contributors,
+            &mut provider,
+        )?;
+        self.chain.set_weights(&verdict.weights)?;
+
+        // ---- 5. aggregation + outer step ----------------------------------
+        let selected_payloads: Vec<&Payload> =
+            verdict.selected.iter().map(|&i| &submissions[i].payload).collect();
+        let alpha = self.p.alpha.alpha(round);
+        let mut t_comm_end = compute_end;
+        let mut bytes_up = 0u64;
+        let mut bytes_down = 0u64;
+        if !selected_payloads.is_empty() {
+            let delta = crate::coordinator::aggregator::aggregate(
+                &selected_payloads,
+                self.global_params.len(),
+            )?;
+            self.global_params =
+                ops::outer_step(self.eng, &global_snapshot, &delta, alpha as f32)?;
+            // Downloads: every peer pulls every selected payload but its own.
+            let selected_bytes: Vec<usize> =
+                verdict.selected.iter().map(|&i| submissions[i].wire_bytes).collect();
+            let total_sel: usize = selected_bytes.iter().sum();
+            for (si, slot) in self.peers.iter_mut().enumerate() {
+                let own: usize = verdict
+                    .selected
+                    .iter()
+                    .map(|&i| &submissions[i])
+                    .filter(|s| s.uid == slot.state.uid)
+                    .map(|s| s.wire_bytes)
+                    .sum();
+                slot.link.down.release_at(compute_end);
+                let done = slot.link.down.transfer(compute_end, total_sel - own);
+                bytes_down += (total_sel - own) as u64;
+                // comm ends when the slowest *selected contributor* has
+                // uploaded and everyone downloaded
+                if si < submissions.len() {
+                    t_comm_end = t_comm_end.max(done);
+                }
+            }
+            for &i in &verdict.selected {
+                t_comm_end = t_comm_end.max(submissions[i].uploaded_at);
+                bytes_up += submissions[i].wire_bytes as u64;
+            }
+        }
+        self.prev_payloads = verdict
+            .selected
+            .iter()
+            .map(|&i| submissions[i].payload.clone())
+            .collect();
+
+        // ---- 6. EF restore for unselected honest contributions + sync ------
+        let selected_uids: std::collections::HashSet<usize> =
+            verdict.selected.iter().map(|&i| submissions[i].uid).collect();
+        for sub in &submissions {
+            if selected_uids.contains(&sub.uid) {
+                continue;
+            }
+            if let Some(slot) = self.peers.iter_mut().find(|s| s.state.uid == sub.uid) {
+                // Whales mutate their submitted scales post-compress, so
+                // restoring their submission would corrupt their EF —
+                // adversaries live with that.
+                if matches!(
+                    slot.state.behavior,
+                    Behavior::Honest | Behavior::Stale
+                ) {
+                    slot.state.restore_unselected(&sub.payload);
+                }
+            }
+        }
+        for slot in &mut self.peers {
+            slot.state.sync(&self.global_params, round + 1);
+        }
+        self.clock.advance_to(t_comm_end);
+        self.chain.sync_to_time(self.clock.now());
+
+        let rejections: Vec<String> = verdict
+            .per_peer
+            .iter()
+            .filter(|v| !v.selected)
+            .map(|v| {
+                format!(
+                    "{} fast={:?} score={:.4} eval={:?}",
+                    v.hotkey, v.fast, v.score,
+                    v.loss_eval.map(|l| (l.assigned_improvement, l.unassigned_improvement, l.suspected_copy))
+                )
+            })
+            .collect();
+        let adversarial_selected = verdict
+            .selected
+            .iter()
+            .filter(|&&i| {
+                let hk = &submissions[i].hotkey;
+                self.peers
+                    .iter()
+                    .find(|s| &s.state.hotkey == hk)
+                    .map(|s| s.state.behavior.is_adversarial() || s.state.behavior == Behavior::Stale)
+                    .unwrap_or(false)
+            })
+            .count();
+        let report = RoundReport {
+            round,
+            t_start,
+            t_compute_end: compute_end,
+            t_comm_end,
+            active: n_peers,
+            submitted: submissions.len(),
+            contributing: verdict.selected.len(),
+            adversarial_submitted,
+            adversarial_selected,
+            mean_loss: losses.iter().sum::<f64>() / losses.len().max(1) as f64,
+            bytes_up,
+            bytes_down,
+            outer_alpha: alpha,
+            rejections,
+        };
+        self.reports.push(report.clone());
+        self.round += 1;
+        Ok(report)
+    }
+}
+
+/// Eval data provider over the shard store (assigned per peer, reserved
+/// tail as unassigned).
+struct NetworkDataProvider<'a> {
+    shards: &'a ShardStore,
+    store: &'a mut ObjectStore,
+    round: usize,
+    kind: GrammarKind,
+    cfg_seq: usize,
+    cfg_batch: usize,
+    assigned_per_peer: usize,
+    seed: u64,
+}
+
+impl EvalDataProvider for NetworkDataProvider<'_> {
+    fn assigned_batches(&mut self, uid: usize, n: usize) -> Vec<EvalBatch> {
+        let ids = self.shards.assign(uid, self.round, self.assigned_per_peer);
+        let mut tokens = Vec::new();
+        for id in ids {
+            tokens.extend(
+                self.shards
+                    .fetch(self.store, self.kind, id)
+                    .expect("published shard"),
+            );
+        }
+        let mut sampler = BatchSampler::new(
+            tokens,
+            self.cfg_seq,
+            self.cfg_batch,
+            self.seed ^ uid as u64 ^ 0xA55,
+        );
+        (0..n).map(|_| (sampler.batch(), sampler.ones_mask())).collect()
+    }
+
+    fn unassigned_batches(&mut self, n: usize) -> Vec<EvalBatch> {
+        let id = self.shards.reserved_shard(self.round);
+        let tokens = self
+            .shards
+            .fetch(self.store, self.kind, id)
+            .expect("published shard");
+        let mut sampler =
+            BatchSampler::new(tokens, self.cfg_seq, self.cfg_batch, self.seed ^ 0xBEEF);
+        (0..n).map(|_| (sampler.batch(), sampler.ones_mask())).collect()
+    }
+}

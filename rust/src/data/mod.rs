@@ -1,0 +1,17 @@
+//! Data substrate: synthetic pre-tokenized corpus + shard hosting.
+//!
+//! The paper trains on ~1.1T DCLM tokens pre-tokenized into shards hosted
+//! on object storage (§4.1); peers download assigned shards ahead of time.
+//! Here the corpus is a deterministic synthetic token language with
+//! learnable structure at three levels (separator statistics, Markov
+//! filler chains, and a fact table used by the multiple-choice evals), so
+//! loss curves and benchmark accuracies measure real learning. Shards are
+//! generated per (seed, shard_id), stored in the object store, and
+//! assigned to peers in overlapping subsets exactly as Gauntlet expects
+//! (assigned vs unassigned data, §2.2).
+
+pub mod grammar;
+pub mod shards;
+
+pub use grammar::{Grammar, GrammarKind};
+pub use shards::{BatchSampler, ShardStore};

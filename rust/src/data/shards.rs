@@ -1,0 +1,232 @@
+//! Pre-tokenized shard hosting + assigned-shard batch sampling.
+//!
+//! Paper §4.1: "we pre-tokenize all data and host shards on object
+//! storage. Peers download shards ahead of time, replacing consumed
+//! shards in the background." And §2.2: each peer is assigned a
+//! (potentially overlapping) subset of data; the validator scores
+//! submissions on assigned vs unassigned data.
+//!
+//! Shards are u16-LE token arrays keyed `shards/<kind>/<id>.tok` in a
+//! `data` bucket. Assignment is deterministic per (round, uid).
+
+use anyhow::{ensure, Result};
+
+use super::grammar::{Grammar, GrammarKind};
+use crate::storage::ObjectStore;
+use crate::util::rng::Rng;
+
+pub const DATA_BUCKET: &str = "data";
+pub const DATA_CRED: &str = "data-public";
+
+/// Encode tokens as u16 little-endian bytes.
+pub fn encode_tokens(tokens: &[i32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(tokens.len() * 2);
+    for &t in tokens {
+        debug_assert!((0..65536).contains(&t));
+        out.extend_from_slice(&(t as u16).to_le_bytes());
+    }
+    out
+}
+
+/// Decode u16-LE bytes back to tokens.
+pub fn decode_tokens(bytes: &[u8]) -> Result<Vec<i32>> {
+    ensure!(bytes.len() % 2 == 0, "shard byte length not even");
+    Ok(bytes
+        .chunks_exact(2)
+        .map(|c| u16::from_le_bytes([c[0], c[1]]) as i32)
+        .collect())
+}
+
+fn kind_name(kind: GrammarKind) -> &'static str {
+    match kind {
+        GrammarKind::Web => "web",
+        GrammarKind::HighQuality => "hq",
+        GrammarKind::Instruction => "inst",
+    }
+}
+
+/// Generates shards into the object store and serves them.
+pub struct ShardStore {
+    pub grammar: Grammar,
+    pub shard_tokens: usize,
+    pub n_shards: usize,
+    /// Tail shards reserved as *unassigned* validation data (Gauntlet's
+    /// anti-copy check evaluates on data assigned to no peer, §2.2).
+    pub reserved: usize,
+}
+
+impl ShardStore {
+    pub fn new(grammar: Grammar, shard_tokens: usize, n_shards: usize) -> Self {
+        let reserved = (n_shards / 8).max(1);
+        Self { grammar, shard_tokens, n_shards, reserved }
+    }
+
+    /// Shards available for peer assignment (excludes reserved tail).
+    pub fn n_assignable(&self) -> usize {
+        self.n_shards - self.reserved
+    }
+
+    /// A reserved (never-assigned) shard id.
+    pub fn reserved_shard(&self, i: usize) -> usize {
+        self.n_assignable() + i % self.reserved
+    }
+
+    /// Publish all shards of a mixture into the store (idempotent).
+    pub fn publish(&self, store: &mut ObjectStore, kind: GrammarKind) -> Result<u64> {
+        if store.bucket(DATA_BUCKET).is_err() {
+            store.create_bucket(DATA_BUCKET, DATA_CRED)?;
+        }
+        let mut bytes = 0u64;
+        for id in 0..self.n_shards {
+            let key = format!("shards/{}/{id}.tok", kind_name(kind));
+            let toks = self.grammar.stream(kind, id as u64, self.shard_tokens);
+            bytes += (toks.len() * 2) as u64;
+            store.put(DATA_BUCKET, &key, encode_tokens(&toks))?;
+        }
+        Ok(bytes)
+    }
+
+    /// Fetch one shard (peer-side download; link time charged by caller).
+    pub fn fetch(
+        &self,
+        store: &mut ObjectStore,
+        kind: GrammarKind,
+        id: usize,
+    ) -> Result<Vec<i32>> {
+        let key = format!("shards/{}/{id}.tok", kind_name(kind));
+        decode_tokens(&store.get(DATA_BUCKET, &key, DATA_CRED)?)
+    }
+
+    /// Shard byte size (for netsim download accounting).
+    pub fn shard_bytes(&self) -> usize {
+        self.shard_tokens * 2
+    }
+
+    /// Deterministic shard assignment for a peer: `n_assigned` shard ids,
+    /// overlapping across peers (paper: "potentially overlapping subset").
+    pub fn assign(&self, uid: usize, round: usize, n_assigned: usize) -> Vec<usize> {
+        let mut rng = Rng::new(
+            (uid as u64)
+                .wrapping_mul(0x9E3779B97F4A7C15)
+                .wrapping_add(round as u64),
+        );
+        (0..n_assigned).map(|_| rng.below(self.n_assignable())).collect()
+    }
+}
+
+/// Samples fixed-shape training batches out of downloaded shards.
+#[derive(Debug, Clone)]
+pub struct BatchSampler {
+    pub seq_len: usize,
+    pub batch_size: usize,
+    rng: Rng,
+    tokens: Vec<i32>,
+}
+
+impl BatchSampler {
+    /// `tokens`: concatenation of the peer's downloaded shards.
+    pub fn new(tokens: Vec<i32>, seq_len: usize, batch_size: usize, seed: u64) -> Self {
+        assert!(tokens.len() > seq_len + 1, "not enough tokens for one sequence");
+        Self { seq_len, batch_size, rng: Rng::new(seed), tokens }
+    }
+
+    /// One batch: `[B, T+1]` tokens, row-major.
+    pub fn batch(&mut self) -> Vec<i32> {
+        let span = self.seq_len + 1;
+        let mut out = Vec::with_capacity(self.batch_size * span);
+        for _ in 0..self.batch_size {
+            let start = self.rng.below(self.tokens.len() - span);
+            out.extend_from_slice(&self.tokens[start..start + span]);
+        }
+        out
+    }
+
+    /// `h` stacked batches: `[H, B, T+1]` row-major (the train_round input).
+    pub fn round_batch(&mut self, h: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(h * self.batch_size * (self.seq_len + 1));
+        for _ in 0..h {
+            out.extend(self.batch());
+        }
+        out
+    }
+
+    /// All-ones loss mask matching `batch()` ([B, T]).
+    pub fn ones_mask(&self) -> Vec<f32> {
+        vec![1.0; self.batch_size * self.seq_len]
+    }
+
+    /// All-ones loss mask matching `round_batch(h)` ([H, B, T]).
+    pub fn ones_round_mask(&self, h: usize) -> Vec<f32> {
+        vec![1.0; h * self.batch_size * self.seq_len]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store_setup() -> (ObjectStore, ShardStore) {
+        let g = Grammar::new(512, 1);
+        (ObjectStore::new(), ShardStore::new(g, 4096, 8))
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let toks: Vec<i32> = (0..5000).map(|i| i % 512).collect();
+        assert_eq!(decode_tokens(&encode_tokens(&toks)).unwrap(), toks);
+        assert!(decode_tokens(&[1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn publish_fetch_roundtrip() {
+        let (mut store, ss) = store_setup();
+        let bytes = ss.publish(&mut store, GrammarKind::Web).unwrap();
+        assert_eq!(bytes, 8 * 4096 * 2);
+        let t0 = ss.fetch(&mut store, GrammarKind::Web, 0).unwrap();
+        assert_eq!(t0.len(), 4096);
+        // deterministic: same as regenerating
+        assert_eq!(t0, ss.grammar.stream(GrammarKind::Web, 0, 4096));
+    }
+
+    #[test]
+    fn assignments_deterministic_and_overlapping() {
+        let (_, ss) = store_setup();
+        let a1 = ss.assign(3, 10, 4);
+        let a2 = ss.assign(3, 10, 4);
+        assert_eq!(a1, a2);
+        let b = ss.assign(4, 10, 4);
+        assert_ne!(a1, b); // different peers -> different (w.h.p.)
+        // assignments never touch the reserved tail
+        assert!(a1.iter().all(|&s| s < ss.n_assignable()));
+    }
+
+    #[test]
+    fn reserved_shards_disjoint_from_assignable() {
+        let (_, ss) = store_setup();
+        assert!(ss.reserved >= 1);
+        for i in 0..ss.reserved {
+            assert!(ss.reserved_shard(i) >= ss.n_assignable());
+            assert!(ss.reserved_shard(i) < ss.n_shards);
+        }
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let toks: Vec<i32> = (0..10_000).map(|i| i % 512).collect();
+        let mut bs = BatchSampler::new(toks, 32, 4, 7);
+        assert_eq!(bs.batch().len(), 4 * 33);
+        assert_eq!(bs.round_batch(5).len(), 5 * 4 * 33);
+        assert_eq!(bs.ones_mask().len(), 4 * 32);
+        assert_eq!(bs.ones_round_mask(5).len(), 5 * 4 * 32);
+    }
+
+    #[test]
+    fn batches_deterministic_per_seed() {
+        let toks: Vec<i32> = (0..10_000).map(|i| i % 512).collect();
+        let mut a = BatchSampler::new(toks.clone(), 32, 4, 7);
+        let mut b = BatchSampler::new(toks.clone(), 32, 4, 7);
+        assert_eq!(a.batch(), b.batch());
+        let mut c = BatchSampler::new(toks, 32, 4, 8);
+        assert_ne!(a.batch(), c.batch());
+    }
+}

@@ -1,0 +1,14 @@
+//! Evaluation harness: synthetic multiple-choice benchmark suites scored
+//! by length-normalized continuation loss — the same mechanism lm-eval
+//! uses for the paper's zero-shot benchmarks (ARC, HellaSwag, MMLU, ...).
+//!
+//! Suite mapping to the paper's Table 1/2 benchmarks (DESIGN.md T1/T2):
+//! * `FactsEasy`  — frequent facts (ARC-Easy analogue)
+//! * `FactsHard`  — tail facts (ARC-Challenge/MMLU analogue)
+//! * `Filler`     — Markov-continuation plausibility (HellaSwag analogue)
+//! * `Instruct`   — Q/A-format facts (IFEval analogue; tests the SFT
+//!   format introduced in §5)
+
+pub mod mc;
+
+pub use mc::{EvalSuite, McTask, Scorer, SuiteResult};

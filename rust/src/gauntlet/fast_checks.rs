@@ -1,0 +1,232 @@
+//! Fast checks (paper §2.2): cheap per-submission validation the
+//! validator runs on *every* peer every round, without forward passes —
+//! liveness, synchronization with the main model, payload geometry and
+//! norm sanity.
+
+use crate::gauntlet::Submission;
+use crate::util::stats::median;
+
+/// Result of the fast-check battery for one submission.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FastCheck {
+    Pass,
+    /// Upload arrived after the round deadline.
+    Late,
+    /// Trained from a stale global model (base_round mismatch).
+    OutOfSync,
+    /// Malformed payload (geometry / NaN scales / out-of-range).
+    Malformed,
+    /// Update norm wildly out of family (> max_ratio * median norm).
+    AbnormalNorm,
+    /// Empty update (all-zero scales — free-rider).
+    Empty,
+    /// Byte-identical to another submission (this round or the previous
+    /// one) — copying/duplicate behaviour (§2.2).
+    Duplicate,
+}
+
+impl FastCheck {
+    pub fn passed(&self) -> bool {
+        matches!(self, FastCheck::Pass)
+    }
+
+    /// Contribution of the fast battery to the final score.
+    pub fn score(&self) -> f64 {
+        match self {
+            FastCheck::Pass => 1.0,
+            // failures disqualify rather than merely down-weight
+            _ => -1.0,
+        }
+    }
+}
+
+/// Parameters of the battery.
+#[derive(Debug, Clone, Copy)]
+pub struct FastCheckParams {
+    pub round: usize,
+    pub deadline: f64,
+    pub expect_chunks: usize,
+    pub expect_k: usize,
+    pub expect_chunk: usize,
+    /// Norm may exceed the round median by at most this factor.
+    pub max_norm_ratio: f64,
+}
+
+/// Run the battery on every submission of a round. `prev_hashes` are the
+/// payload content hashes from the previous round (copier detection).
+/// Returns one verdict per submission, in order.
+pub fn run_fast_checks(
+    subs: &[Submission],
+    p: &FastCheckParams,
+    prev_hashes: &std::collections::HashSet<u64>,
+) -> Vec<FastCheck> {
+    // Within-round duplicates: every submission after the first holder of
+    // a hash is flagged (the first might be the original).
+    let mut seen = std::collections::HashMap::new();
+    let hashes: Vec<u64> = subs.iter().map(|s| s.payload.content_hash()).collect();
+    let mut dup = vec![false; subs.len()];
+    for (i, &h) in hashes.iter().enumerate() {
+        if prev_hashes.contains(&h) {
+            dup[i] = true;
+        } else if let Some(&first) = seen.get(&h) {
+            let _: usize = first;
+            dup[i] = true;
+        } else {
+            seen.insert(h, i);
+        }
+    }
+    run_fast_checks_inner(subs, p, &dup)
+}
+
+fn run_fast_checks_inner(
+    subs: &[Submission],
+    p: &FastCheckParams,
+    dup: &[bool],
+) -> Vec<FastCheck> {
+    // Median norm across structurally-valid submissions (for the ratio check).
+    let norms: Vec<f64> = subs
+        .iter()
+        .filter(|s| {
+            s.payload
+                .validate(p.expect_chunks, p.expect_k, p.expect_chunk)
+                .is_ok()
+        })
+        .map(|s| s.payload.l2_norm())
+        .filter(|n| *n > 0.0)
+        .collect();
+    let med = if norms.is_empty() { 0.0 } else { median(&norms) };
+    subs.iter()
+        .zip(dup)
+        .map(|(s, &is_dup)| {
+            if is_dup {
+                return FastCheck::Duplicate;
+            }
+            if s.uploaded_at > p.deadline {
+                return FastCheck::Late;
+            }
+            if s.base_round != p.round {
+                return FastCheck::OutOfSync;
+            }
+            if s
+                .payload
+                .validate(p.expect_chunks, p.expect_k, p.expect_chunk)
+                .is_err()
+            {
+                return FastCheck::Malformed;
+            }
+            let n = s.payload.l2_norm();
+            if n == 0.0 {
+                return FastCheck::Empty;
+            }
+            if med > 0.0 && n > p.max_norm_ratio * med {
+                return FastCheck::AbnormalNorm;
+            }
+            FastCheck::Pass
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparseloco::topk::compress_dense;
+    use crate::util::rng::Rng;
+
+    fn sub(hot: &str, uid: usize, scale_mult: f32, base_round: usize, at: f64) -> Submission {
+        let mut rng = Rng::new(uid as u64 + 1);
+        let dense: Vec<f32> = (0..4 * 64).map(|_| rng.normal() as f32 * scale_mult).collect();
+        let payload = compress_dense(&dense, 64, 8);
+        Submission {
+            hotkey: hot.into(),
+            uid,
+            round: 5,
+            base_round,
+            wire_bytes: 100,
+            uploaded_at: at,
+            payload,
+        }
+    }
+
+    fn params() -> FastCheckParams {
+        FastCheckParams {
+            round: 5,
+            deadline: 100.0,
+            expect_chunks: 4,
+            expect_k: 8,
+            expect_chunk: 64,
+            max_norm_ratio: 10.0,
+        }
+    }
+
+    #[test]
+    fn all_good_pass() {
+        let subs: Vec<_> = (0..5).map(|i| sub(&format!("p{i}"), i, 0.01, 5, 50.0)).collect();
+        let checks = run_fast_checks(&subs, &params(), &Default::default());
+        assert!(checks.iter().all(|c| c.passed()));
+    }
+
+    #[test]
+    fn late_flagged() {
+        let subs = vec![sub("a", 0, 0.01, 5, 150.0), sub("b", 1, 0.01, 5, 50.0)];
+        let checks = run_fast_checks(&subs, &params(), &Default::default());
+        assert_eq!(checks[0], FastCheck::Late);
+        assert!(checks[1].passed());
+    }
+
+    #[test]
+    fn stale_flagged() {
+        let subs = vec![sub("a", 0, 0.01, 4, 50.0)];
+        assert_eq!(run_fast_checks(&subs, &params(), &Default::default())[0], FastCheck::OutOfSync);
+    }
+
+    #[test]
+    fn abnormal_norm_flagged() {
+        let mut subs: Vec<_> = (0..6).map(|i| sub(&format!("p{i}"), i, 0.01, 5, 50.0)).collect();
+        subs.push(sub("whale", 9, 50.0, 5, 50.0)); // ~5000x median
+        let checks = run_fast_checks(&subs, &params(), &Default::default());
+        assert_eq!(*checks.last().unwrap(), FastCheck::AbnormalNorm);
+        assert!(checks[..6].iter().all(|c| c.passed()));
+    }
+
+    #[test]
+    fn empty_flagged() {
+        let mut s = sub("z", 0, 0.01, 5, 50.0);
+        s.payload.scales.iter_mut().for_each(|x| *x = 0.0);
+        let subs = vec![s, sub("a", 1, 0.01, 5, 50.0)];
+        let checks = run_fast_checks(&subs, &params(), &Default::default());
+        assert_eq!(checks[0], FastCheck::Empty);
+    }
+
+    #[test]
+    fn malformed_flagged() {
+        let mut s = sub("m", 0, 0.01, 5, 50.0);
+        s.payload.scales[0] = f32::INFINITY;
+        let checks = run_fast_checks(&[s], &params(), &Default::default());
+        assert_eq!(checks[0], FastCheck::Malformed);
+    }
+
+    #[test]
+    fn duplicate_within_round_flagged() {
+        let a = sub("orig", 0, 0.01, 5, 50.0);
+        let mut b = sub("copycat", 1, 0.02, 5, 50.0);
+        b.payload = a.payload.clone();
+        let checks = run_fast_checks(&[a, b], &params(), &Default::default());
+        assert!(checks[0].passed(), "original must pass");
+        assert_eq!(checks[1], FastCheck::Duplicate);
+    }
+
+    #[test]
+    fn duplicate_of_previous_round_flagged() {
+        let a = sub("orig", 0, 0.01, 5, 50.0);
+        let prev: std::collections::HashSet<u64> =
+            [a.payload.content_hash()].into_iter().collect();
+        let checks = run_fast_checks(&[a], &params(), &prev);
+        assert_eq!(checks[0], FastCheck::Duplicate);
+    }
+
+    #[test]
+    fn scores() {
+        assert_eq!(FastCheck::Pass.score(), 1.0);
+        assert!(FastCheck::Late.score() < 0.0);
+    }
+}

@@ -1,0 +1,115 @@
+//! LossScore (paper §2.2): the validator's main evaluation signal — the
+//! loss difference before and after applying a participant's contribution,
+//! measured on small batches of the peer's *assigned* data and on random
+//! *unassigned* data. Improving unassigned data more than assigned data
+//! indicates copying/duplication and earns a negative score.
+
+use anyhow::Result;
+
+use crate::runtime::{ops, Engine};
+use crate::sparseloco::Payload;
+
+/// One evaluation batch: (tokens [B,(T+1)], mask [B,T]).
+pub type EvalBatch = (Vec<i32>, Vec<f32>);
+
+/// LossScore outcome for one submission.
+#[derive(Debug, Clone, Copy)]
+pub struct LossScoreResult {
+    /// Mean loss improvement on the peer's assigned shards.
+    pub assigned_improvement: f64,
+    /// Mean loss improvement on random unassigned data.
+    pub unassigned_improvement: f64,
+    /// Anti-copy flag: unassigned improved more than assigned (+margin).
+    pub suspected_copy: bool,
+}
+
+impl LossScoreResult {
+    /// Scalar score: assigned improvement, negated on copy suspicion.
+    pub fn score(&self) -> f64 {
+        if self.suspected_copy {
+            -self.assigned_improvement.abs().max(1e-6)
+        } else {
+            self.assigned_improvement
+        }
+    }
+}
+
+/// Apply a single peer's contribution to the base model (pure Rust —
+/// candidate = base - alpha * decompress(payload)).
+pub fn apply_single(base: &[f32], payload: &Payload, alpha: f32) -> Vec<f32> {
+    let mut candidate = base.to_vec();
+    payload
+        .accumulate_into(&mut candidate, -alpha)
+        .expect("payload geometry checked by fast checks");
+    candidate
+}
+
+/// Mean loss across batches.
+pub fn mean_loss(eng: &Engine, params: &[f32], batches: &[EvalBatch]) -> Result<f64> {
+    let mut acc = 0f64;
+    for (tokens, mask) in batches {
+        acc += ops::eval_loss(eng, params, tokens, mask)? as f64;
+    }
+    Ok(acc / batches.len().max(1) as f64)
+}
+
+/// Full LossScore for one submission.
+///
+/// `base_assigned_loss` / `base_unassigned_loss` are the base model's mean
+/// losses on the same batches (computed once per round by the validator,
+/// not per peer — that's what makes the subset evaluation cheap).
+#[allow(clippy::too_many_arguments)]
+pub fn loss_score(
+    eng: &Engine,
+    base: &[f32],
+    payload: &Payload,
+    alpha: f32,
+    assigned: &[EvalBatch],
+    unassigned: &[EvalBatch],
+    base_assigned_loss: f64,
+    base_unassigned_loss: f64,
+    copy_margin: f64,
+) -> Result<LossScoreResult> {
+    let candidate = apply_single(base, payload, alpha);
+    let a = base_assigned_loss - mean_loss(eng, &candidate, assigned)?;
+    let u = base_unassigned_loss - mean_loss(eng, &candidate, unassigned)?;
+    Ok(LossScoreResult {
+        assigned_improvement: a,
+        unassigned_improvement: u,
+        suspected_copy: u > a + copy_margin,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apply_single_subtracts_scaled() {
+        let base = vec![1.0f32; 128];
+        let payload = crate::sparseloco::topk::compress_dense(&vec![0.5f32; 128], 64, 2);
+        let cand = apply_single(&base, &payload, 2.0);
+        // exactly 2 positions per chunk changed by -2*0.5
+        let changed: Vec<f32> = cand.iter().copied().filter(|&x| x != 1.0).collect();
+        assert_eq!(changed.len(), 4);
+        for c in changed {
+            assert!((c - 0.0).abs() < 0.4, "got {c}"); // 1 - 2*~0.5
+        }
+    }
+
+    #[test]
+    fn score_sign() {
+        let good = LossScoreResult {
+            assigned_improvement: 0.1,
+            unassigned_improvement: 0.05,
+            suspected_copy: false,
+        };
+        assert!(good.score() > 0.0);
+        let copycat = LossScoreResult {
+            assigned_improvement: 0.1,
+            unassigned_improvement: 0.3,
+            suspected_copy: true,
+        };
+        assert!(copycat.score() < 0.0);
+    }
+}

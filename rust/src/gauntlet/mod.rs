@@ -1,0 +1,36 @@
+//! Gauntlet (paper §2.2): the permissionless validation + incentive
+//! mechanism. A validator scores submitted pseudo-gradients with
+//! * **LossScore** — loss improvement from applying each contribution,
+//!   measured on the peer's *assigned* vs *unassigned* data (anti-copy),
+//! * **fast checks** — liveness, geometry/sync, norm sanity on every
+//!   submission,
+//! * a persistent **OpenSkill** (Plackett–Luce) rating that stabilizes
+//!   round-to-round randomness,
+//! then selects the round's contributors (cap R=20) and writes weights to
+//! the chain for emissions.
+
+pub mod fast_checks;
+pub mod loss_score;
+pub mod openskill;
+pub mod validator;
+
+use crate::sparseloco::Payload;
+
+/// One peer's per-round submission (what lands in its R2 bucket).
+#[derive(Debug, Clone)]
+pub struct Submission {
+    pub hotkey: String,
+    pub uid: usize,
+    /// Round this submission is for.
+    pub round: usize,
+    /// Round of the global model the peer trained from (sync check).
+    pub base_round: usize,
+    pub payload: Payload,
+    /// Wire size actually uploaded (bytes).
+    pub wire_bytes: usize,
+    /// Virtual time the upload completed (liveness check).
+    pub uploaded_at: f64,
+}
+
+pub use openskill::{Rating, RatingBook};
+pub use validator::{RoundVerdict, Validator};

@@ -1,0 +1,201 @@
+//! OpenSkill ratings — Weng–Lin Bayesian approximation, Plackett–Luce
+//! model (Algorithm 4 of Weng & Lin 2011; the model used by the paper's
+//! Gauntlet to maintain persistent peer rankings under per-round
+//! randomness, §2.2).
+//!
+//! Single-player teams (each peer is its own team). Defaults match
+//! openskill.py: mu=25, sigma=25/3, beta=25/6.
+
+use std::collections::BTreeMap;
+
+/// One peer's persistent rating.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Rating {
+    pub mu: f64,
+    pub sigma: f64,
+}
+
+impl Default for Rating {
+    fn default() -> Self {
+        Rating { mu: 25.0, sigma: 25.0 / 3.0 }
+    }
+}
+
+impl Rating {
+    /// Conservative skill estimate (openskill's `ordinal`).
+    pub fn ordinal(&self) -> f64 {
+        self.mu - 3.0 * self.sigma
+    }
+}
+
+const BETA: f64 = 25.0 / 6.0;
+const KAPPA: f64 = 1e-4; // sigma floor factor
+
+/// Update ratings for one "match": `ranked` lists (key, rank) where rank 0
+/// is best; ties share a rank. Returns the updated ratings in input order.
+pub fn rate_plackett_luce(ratings: &[(Rating, usize)]) -> Vec<Rating> {
+    let n = ratings.len();
+    if n < 2 {
+        return ratings.iter().map(|(r, _)| *r).collect();
+    }
+    let c: f64 = ratings
+        .iter()
+        .map(|(r, _)| r.sigma * r.sigma + BETA * BETA)
+        .sum::<f64>()
+        .sqrt();
+    // A_q: number of teams tied with q.
+    let a: Vec<f64> = ratings
+        .iter()
+        .map(|(_, rq)| ratings.iter().filter(|(_, r2)| r2 == rq).count() as f64)
+        .collect();
+    // sum_q[q] = sum over s with rank(s) >= rank(q) of exp(mu_s / c)
+    let expmu: Vec<f64> = ratings.iter().map(|(r, _)| (r.mu / c).exp()).collect();
+    let sum_q: Vec<f64> = ratings
+        .iter()
+        .map(|(_, rq)| {
+            ratings
+                .iter()
+                .zip(&expmu)
+                .filter(|((_, rs), _)| rs >= rq)
+                .map(|(_, e)| *e)
+                .sum::<f64>()
+        })
+        .collect();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let (ri, rank_i) = ratings[i];
+        let mut omega = 0.0;
+        let mut delta = 0.0;
+        let gamma = ri.sigma / c;
+        for q in 0..n {
+            let (_, rank_q) = ratings[q];
+            if rank_q > rank_i {
+                continue; // only q with rank(q) <= rank(i)
+            }
+            let p_iq = expmu[i] / sum_q[q];
+            let d = if q == i { 1.0 } else { 0.0 };
+            omega += (d - p_iq) / a[q];
+            delta += gamma * p_iq * (1.0 - p_iq) / a[q];
+        }
+        let sigma2 = ri.sigma * ri.sigma;
+        let mu2 = ri.mu + omega * sigma2 / c;
+        let sig_scale = (1.0 - delta * sigma2 / (c * c)).max(KAPPA);
+        let sigma_new = ri.sigma * sig_scale.sqrt();
+        out.push(Rating { mu: mu2, sigma: sigma_new });
+    }
+    out
+}
+
+/// Persistent book of ratings keyed by hotkey.
+#[derive(Debug, Default, Clone)]
+pub struct RatingBook {
+    ratings: BTreeMap<String, Rating>,
+}
+
+impl RatingBook {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn get(&self, key: &str) -> Rating {
+        self.ratings.get(key).copied().unwrap_or_default()
+    }
+
+    pub fn ordinal(&self, key: &str) -> f64 {
+        self.get(key).ordinal()
+    }
+
+    /// Record one match: `ranked[i] = (hotkey, rank)`, rank 0 best.
+    pub fn record_match(&mut self, ranked: &[(&str, usize)]) {
+        let rs: Vec<(Rating, usize)> =
+            ranked.iter().map(|(k, r)| (self.get(k), *r)).collect();
+        let updated = rate_plackett_luce(&rs);
+        for ((k, _), r) in ranked.iter().zip(updated) {
+            self.ratings.insert(k.to_string(), r);
+        }
+    }
+
+    pub fn forget(&mut self, key: &str) {
+        self.ratings.remove(key);
+    }
+
+    pub fn len(&self) -> usize {
+        self.ratings.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ratings.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn winner_gains_loser_loses() {
+        let r = vec![(Rating::default(), 0), (Rating::default(), 1)];
+        let out = rate_plackett_luce(&r);
+        assert!(out[0].mu > 25.0, "winner mu {}", out[0].mu);
+        assert!(out[1].mu < 25.0, "loser mu {}", out[1].mu);
+        assert!(out[0].sigma < 25.0 / 3.0);
+        assert!(out[1].sigma < 25.0 / 3.0);
+    }
+
+    #[test]
+    fn repeated_wins_converge_to_ordering() {
+        let mut book = RatingBook::new();
+        for _ in 0..30 {
+            book.record_match(&[("strong", 0), ("mid", 1), ("weak", 2)]);
+        }
+        let s = book.ordinal("strong");
+        let m = book.ordinal("mid");
+        let w = book.ordinal("weak");
+        assert!(s > m && m > w, "{s} {m} {w}");
+        // sigma shrinks with evidence (PL updates shrink slowly)
+        assert!(book.get("strong").sigma < 25.0 / 3.0);
+    }
+
+    #[test]
+    fn upset_moves_ratings_more() {
+        let mut book = RatingBook::new();
+        for _ in 0..20 {
+            book.record_match(&[("a", 0), ("b", 1)]);
+        }
+        let a_before = book.get("a").mu;
+        // upset: b beats a
+        book.record_match(&[("b", 0), ("a", 1)]);
+        let drop_upset = a_before - book.get("a").mu;
+        assert!(drop_upset > 0.0);
+    }
+
+    #[test]
+    fn ties_share_rank() {
+        let r = vec![(Rating::default(), 0), (Rating::default(), 0)];
+        let out = rate_plackett_luce(&r);
+        assert!((out[0].mu - out[1].mu).abs() < 1e-9);
+    }
+
+    #[test]
+    fn single_entry_noop() {
+        let r = vec![(Rating::default(), 0)];
+        let out = rate_plackett_luce(&r);
+        assert_eq!(out[0], Rating::default());
+    }
+
+    #[test]
+    fn new_peer_default_rating() {
+        let book = RatingBook::new();
+        assert_eq!(book.get("nobody"), Rating::default());
+        assert!((book.ordinal("nobody") - 0.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sigma_never_collapses_to_zero() {
+        let mut book = RatingBook::new();
+        for _ in 0..500 {
+            book.record_match(&[("x", 0), ("y", 1)]);
+        }
+        assert!(book.get("x").sigma > 0.0);
+    }
+}

@@ -1,0 +1,236 @@
+//! The Gauntlet validator: fuses fast checks, subset LossScore evaluation
+//! and the persistent OpenSkill ranking into a final per-peer score, then
+//! selects the round's contributors (paper §2.2) and the weights written
+//! to the chain.
+
+use anyhow::Result;
+
+use crate::config::run::GauntletConfig;
+use crate::gauntlet::fast_checks::{run_fast_checks, FastCheck, FastCheckParams};
+use crate::gauntlet::loss_score::{loss_score, mean_loss, EvalBatch, LossScoreResult};
+use crate::gauntlet::openskill::RatingBook;
+use crate::gauntlet::Submission;
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+
+/// Provides evaluation data for LossScore (assigned per peer + shared
+/// unassigned) — implemented by the coordinator over the shard store.
+pub trait EvalDataProvider {
+    /// Batches from the peer's assigned shards for this round.
+    fn assigned_batches(&mut self, uid: usize, n: usize) -> Vec<EvalBatch>;
+    /// Batches from data assigned to no evaluated peer.
+    fn unassigned_batches(&mut self, n: usize) -> Vec<EvalBatch>;
+}
+
+/// Verdict for one submission.
+#[derive(Debug, Clone)]
+pub struct PeerVerdict {
+    pub hotkey: String,
+    pub uid: usize,
+    pub fast: FastCheck,
+    pub loss_eval: Option<LossScoreResult>,
+    /// Final fused score; selected contributors have the highest scores.
+    pub score: f64,
+    pub selected: bool,
+}
+
+/// Result of scoring one round.
+#[derive(Debug, Clone)]
+pub struct RoundVerdict {
+    pub per_peer: Vec<PeerVerdict>,
+    /// Indices (into the submission slice) selected for aggregation.
+    pub selected: Vec<usize>,
+    /// (uid, weight) pairs for `Subnet::set_weights`.
+    pub weights: Vec<(usize, f64)>,
+}
+
+/// Persistent validator state.
+pub struct Validator {
+    pub cfg: GauntletConfig,
+    pub book: RatingBook,
+    rng: Rng,
+    /// Payload hashes from the previous round (duplicate detection).
+    prev_hashes: std::collections::HashSet<u64>,
+    /// Peers whose most recent LossScore evaluation was harmful/copying:
+    /// excluded and force-re-evaluated until they test clean.
+    suspended: std::collections::HashSet<String>,
+    /// Probation (§2.2 calibration "slightly more active participants
+    /// than aggregated contributors"): a peer becomes selectable only
+    /// after at least one clean LossScore evaluation, so fresh
+    /// adversaries never poison the aggregation on their first rounds.
+    proven: std::collections::HashSet<String>,
+}
+
+impl Validator {
+    pub fn new(cfg: GauntletConfig, seed: u64) -> Self {
+        Self {
+            cfg,
+            book: RatingBook::new(),
+            rng: Rng::new(seed),
+            prev_hashes: Default::default(),
+            suspended: Default::default(),
+            proven: Default::default(),
+        }
+    }
+
+    /// Skill signal in (-1, 1): 0 for a fresh peer (mu=25), negative once
+    /// the persistent rating falls below the prior (repeatedly ranked last
+    /// in LossScore matches), positive for proven contributors.
+    fn skill(rating: crate::gauntlet::Rating) -> f64 {
+        ((rating.mu - 25.0) / 5.0).tanh()
+    }
+
+    /// Score a round of submissions and select contributors.
+    #[allow(clippy::too_many_arguments)]
+    pub fn score_round(
+        &mut self,
+        eng: &Engine,
+        base_params: &[f32],
+        subs: &[Submission],
+        round: usize,
+        deadline: f64,
+        alpha: f32,
+        max_contributors: usize,
+        data: &mut dyn EvalDataProvider,
+    ) -> Result<RoundVerdict> {
+        let man = eng.manifest();
+        let fast = run_fast_checks(
+            subs,
+            &FastCheckParams {
+                round,
+                deadline,
+                expect_chunks: man.n_chunks,
+                expect_k: man.config.topk,
+                expect_chunk: man.config.chunk,
+                max_norm_ratio: self.cfg.max_norm_ratio,
+            },
+            &self.prev_hashes,
+        );
+        self.prev_hashes = subs.iter().map(|s| s.payload.content_hash()).collect();
+        // ---- subset LossScore evaluation --------------------------------
+        let passing: Vec<usize> =
+            (0..subs.len()).filter(|&i| fast[i].passed()).collect();
+        let n_eval = ((passing.len() as f64 * self.cfg.loss_eval_fraction).ceil() as usize)
+            .min(passing.len());
+        let mut eval_ids = passing.clone();
+        self.rng.shuffle(&mut eval_ids);
+        eval_ids.truncate(n_eval);
+        // Suspended and unproven (probation) peers are always evaluated:
+        // both are excluded from selection until they test clean, so they
+        // must get the chance to test clean.
+        for &i in &passing {
+            let hk = &subs[i].hotkey;
+            if (self.suspended.contains(hk) || !self.proven.contains(hk))
+                && !eval_ids.contains(&i)
+            {
+                eval_ids.push(i);
+            }
+        }
+
+        let unassigned = data.unassigned_batches(self.cfg.eval_batches);
+        let base_unassigned = mean_loss(eng, base_params, &unassigned)?;
+        let mut loss_evals: Vec<Option<LossScoreResult>> = vec![None; subs.len()];
+        for &i in &eval_ids {
+            let assigned = data.assigned_batches(subs[i].uid, self.cfg.eval_batches);
+            let base_assigned = mean_loss(eng, base_params, &assigned)?;
+            let r = loss_score(
+                eng,
+                base_params,
+                &subs[i].payload,
+                alpha,
+                &assigned,
+                &unassigned,
+                base_assigned,
+                base_unassigned,
+                self.cfg.copy_margin,
+            )?;
+            loss_evals[i] = Some(r);
+        }
+        // ---- OpenSkill match over this round's evaluated peers ----------
+        let mut ranked: Vec<(usize, f64)> = eval_ids
+            .iter()
+            .map(|&i| (i, loss_evals[i].unwrap().score()))
+            .collect();
+        ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        if ranked.len() >= 2 {
+            let match_entries: Vec<(&str, usize)> = ranked
+                .iter()
+                .enumerate()
+                .map(|(rank, (i, _))| (subs[*i].hotkey.as_str(), rank))
+                .collect();
+            self.book.record_match(&match_entries);
+        }
+        // ---- update suspensions --------------------------------------------
+        for &i in &eval_ids {
+            let le = loss_evals[i].unwrap();
+            if le.suspected_copy || le.assigned_improvement < -5e-3 {
+                self.suspended.insert(subs[i].hotkey.clone());
+            } else {
+                self.suspended.remove(&subs[i].hotkey);
+                self.proven.insert(subs[i].hotkey.clone());
+            }
+        }
+        // ---- fuse scores -------------------------------------------------
+        let mut per_peer: Vec<PeerVerdict> = subs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                // The rating ORDERS healthy peers under the contributor
+                // cap (mapped into (0,1)); it never disqualifies by
+                // itself. Negative scores are reserved for misbehaviour:
+                // fast-check failures, copy suspicion, harmful updates,
+                // and unresolved suspensions.
+                let skill01 = (Self::skill(self.book.get(&s.hotkey)) + 1.0) / 2.0;
+                let score = if !fast[i].passed() {
+                    fast[i].score() // disqualifying negative
+                } else if let Some(le) = loss_evals[i] {
+                    if le.suspected_copy {
+                        -1.0
+                    } else if le.assigned_improvement < -5e-3 {
+                        // Clearly harmful contribution (the paper's
+                        // LossScore is the primary signal); near-zero
+                        // improvements fall through — eval noise must not
+                        // disqualify honest peers.
+                        le.assigned_improvement
+                    } else {
+                        0.05 + self.cfg.fast_weight * fast[i].score()
+                            + self.cfg.skill_weight * skill01
+                            + le.assigned_improvement.clamp(0.0, 1.0)
+                    }
+                } else if self.suspended.contains(&s.hotkey) {
+                    -0.5 // excluded until re-evaluated clean
+                } else {
+                    0.05 + self.cfg.fast_weight * fast[i].score()
+                        + self.cfg.skill_weight * skill01
+                };
+                PeerVerdict {
+                    hotkey: s.hotkey.clone(),
+                    uid: s.uid,
+                    fast: fast[i],
+                    loss_eval: loss_evals[i],
+                    score,
+                    selected: false,
+                }
+            })
+            .collect();
+        // ---- contributor selection (cap, positives only) -----------------
+        let mut order: Vec<usize> = (0..subs.len()).collect();
+        order.sort_by(|&a, &b| per_peer[b].score.partial_cmp(&per_peer[a].score).unwrap());
+        let selected: Vec<usize> = order
+            .into_iter()
+            .filter(|&i| per_peer[i].score > 0.0)
+            .filter(|&i| self.proven.contains(&subs[i].hotkey))
+            .take(max_contributors)
+            .collect();
+        for &i in &selected {
+            per_peer[i].selected = true;
+        }
+        // ---- chain weights ------------------------------------------------
+        let total: f64 = selected.iter().map(|&i| per_peer[i].score).sum();
+        let weights: Vec<(usize, f64)> = selected
+            .iter()
+            .map(|&i| (subs[i].uid, per_peer[i].score / total.max(1e-9)))
+            .collect();
+        Ok(RoundVerdict { per_peer, selected, weights })
+    }
+}

@@ -1,0 +1,24 @@
+//! # Covenant — permissionless distributed LLM pre-training
+//!
+//! Reproduction of "Covenant-72B: Pre-Training a 72B LLM with Trustless
+//! Peers Over-the-Internet" (CS.DC 2026): a SparseLoCo + Gauntlet training
+//! network. Layer 3 (this crate) is the coordinator — peers, validator,
+//! chain, object-store comms, round orchestration; Layers 2/1 (JAX model +
+//! Pallas kernels) are AOT-compiled to HLO artifacts executed via PJRT.
+//!
+//! See DESIGN.md for the module inventory and experiment index.
+
+pub mod chain;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod gauntlet;
+pub mod metrics;
+pub mod peer;
+pub mod train;
+pub mod config;
+pub mod netsim;
+pub mod runtime;
+pub mod sparseloco;
+pub mod storage;
+pub mod util;

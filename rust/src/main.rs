@@ -1,0 +1,121 @@
+//! `covenant` CLI — leader entrypoint.
+
+use anyhow::Result;
+use covenant::util::cli::Args;
+
+fn usage() -> ! {
+    eprintln!(
+        "covenant — permissionless distributed LLM pre-training (SparseLoCo + Gauntlet)
+
+USAGE:
+    covenant <COMMAND> [OPTIONS]
+
+COMMANDS:
+    smoke      Load + run every artifact of a config (--artifacts DIR)
+    config     Show a model preset and its parameter count (--name NAME)
+    help       Show this message
+"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    match args.command.as_deref() {
+        Some("smoke") => smoke(&args),
+        Some("config") => config_show(&args),
+        _ => usage(),
+    }
+}
+
+fn config_show(args: &Args) -> Result<()> {
+    use covenant::config::presets;
+    let name = args.get_or("name", "covenant-72b");
+    let cfg = presets::get(&name)?;
+    let lay = covenant::config::layout::Layout::build(&cfg);
+    println!("config: {}", cfg.name);
+    println!("  layers        {}", cfg.n_layers);
+    println!("  d_model       {}", cfg.d_model);
+    println!("  query heads   {}", cfg.n_heads);
+    println!("  kv heads      {}", cfg.n_kv_heads);
+    println!("  d_ff          {}", cfg.d_ff);
+    println!("  rope theta    {}", cfg.rope_theta);
+    println!("  vocab         {}", cfg.vocab_size);
+    println!("  seq len       {}", cfg.seq_len);
+    println!("  parameters    {}", lay.n_params);
+    println!("  flat alloc    {} ({} chunks)", lay.n_alloc, lay.n_chunks());
+    Ok(())
+}
+
+fn smoke(args: &Args) -> Result<()> {
+    use covenant::runtime::{literal, Engine};
+    let dir = args.get_or("artifacts", "artifacts/tiny");
+    let eng = Engine::new(&dir)?;
+    let m = eng.manifest().clone();
+    println!(
+        "config={} n_params={} n_alloc={} chunks={}",
+        m.config.name, m.n_params, m.n_alloc, m.n_chunks
+    );
+    // init_params
+    let outs = eng.run("init_params", &[literal::scalar_i32(0)])?;
+    let params = literal::to_f32(&outs[0])?;
+    println!(
+        "init_params ok: {} floats, params[0..4]={:?}",
+        params.len(),
+        &params[..4]
+    );
+    // eval_loss on pseudo-random tokens
+    let b = m.config.batch_size;
+    let t = m.config.seq_len;
+    let tokens: Vec<i32> = (0..b * (t + 1))
+        .map(|i| ((i as u64).wrapping_mul(2654435761) % m.config.vocab_size as u64) as i32)
+        .collect();
+    let mask = vec![1f32; b * t];
+    let loss = eng.run(
+        "eval_loss",
+        &[
+            outs[0].clone(),
+            literal::i32_tensor(&tokens, &[b, t + 1])?,
+            literal::f32_tensor(&mask, &[b, t])?,
+        ],
+    )?;
+    println!("eval_loss ok: {} (ln V = {:.3})", literal::to_scalar_f32(&loss[0])?, (m.config.vocab_size as f64).ln());
+    // compress round-trip
+    let na = m.n_alloc;
+    let delta: Vec<f32> = (0..na).map(|i| ((i as f32 * 0.618).sin()) * 1e-3).collect();
+    let ef = vec![0f32; na];
+    let c = eng.run(
+        "compress",
+        &[
+            literal::f32_vec(&delta),
+            literal::f32_vec(&ef),
+            literal::scalar_f32(0.95),
+        ],
+    )?;
+    println!("compress ok");
+    let d = eng.run("decompress", &[c[1].clone(), c[2].clone(), c[3].clone()])?;
+    let dense = literal::to_f32(&d[0])?;
+    let nnz = dense.iter().filter(|x| **x != 0.0).count();
+    println!("decompress ok: {} nonzeros of {}", nnz, dense.len());
+    // one train_step
+    let zeros = vec![0f32; na];
+    let ts = eng.run(
+        "train_step",
+        &[
+            outs[0].clone(),
+            literal::f32_vec(&zeros),
+            literal::f32_vec(&zeros),
+            literal::scalar_f32(1.0),
+            literal::i32_tensor(&tokens, &[b, t + 1])?,
+            literal::f32_tensor(&mask, &[b, t])?,
+            literal::scalar_f32(1e-3),
+            literal::scalar_f32(0.0),
+        ],
+    )?;
+    println!("train_step ok: loss={}", literal::to_scalar_f32(&ts[3])?);
+    for (name, (calls, secs)) in eng.exec_stats() {
+        println!("  perf {name}: {calls} calls, {:.3}s total", secs);
+    }
+    println!("smoke OK");
+    Ok(())
+}

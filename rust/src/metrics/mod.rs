@@ -1,0 +1,61 @@
+//! Metrics emitters: CSV series + ASCII timelines for every figure.
+
+pub mod timeline;
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Write a CSV file: header + rows.
+pub fn write_csv(path: impl AsRef<Path>, header: &str, rows: &[Vec<String>]) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    writeln!(f, "{header}")?;
+    for r in rows {
+        writeln!(f, "{}", r.join(","))?;
+    }
+    Ok(())
+}
+
+/// Simple inline ASCII sparkline for loss curves in reports.
+pub fn sparkline(values: &[f64]) -> String {
+    if values.is_empty() {
+        return String::new();
+    }
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let lo = values.iter().copied().fold(f64::INFINITY, f64::min);
+    let hi = values.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    values
+        .iter()
+        .map(|v| BARS[(((v - lo) / span) * 7.0).round() as usize])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparkline_monotone() {
+        let s = sparkline(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.chars().count(), 4);
+        assert!(s.starts_with('▁'));
+        assert!(s.ends_with('█'));
+    }
+
+    #[test]
+    fn csv_write() {
+        let dir = std::env::temp_dir().join("covenant-test-csv");
+        let path = dir.join("x.csv");
+        write_csv(&path, "a,b", &[vec!["1".into(), "2".into()]]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

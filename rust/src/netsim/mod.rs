@@ -1,0 +1,13 @@
+//! Network simulation substrate: virtual clock + per-peer token-bucket
+//! links (paper §4.3's 110 Mb/s uplink / 500 Mb/s downlink constraint).
+//!
+//! The paper's communication phase runs over real internet links to object
+//! storage; here transfers are scheduled on a deterministic virtual clock
+//! so Figure 3's compute/communication timelines are reproducible, with
+//! transfer durations computed from real payload byte-sizes.
+
+pub mod clock;
+pub mod link;
+
+pub use clock::VirtualClock;
+pub use link::{Link, LinkPair};

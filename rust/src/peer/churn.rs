@@ -1,0 +1,151 @@
+//! Churn model: peers join and leave freely (paper §4.4).
+//!
+//! The reward mechanism is calibrated so there are always slightly more
+//! active participants than aggregated contributors (App. A): when the
+//! active count drops below target, open slots fill quickly (emissions
+//! attract new registrations); a small per-round leave probability models
+//! voluntary exits and failures. Calibrated to reproduce Fig. 4/6's means
+//! (~24.4 active, ~16.9 contributing with cap 20) and Fig. 5's >=70
+//! unique participants over a long run.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct ChurnConfig {
+    /// Target active population (paper observes mean ~24.4).
+    pub target_active: usize,
+    /// Per-round probability each active peer leaves.
+    pub p_leave: f64,
+    /// Per-round cap on joins (registration rate limit).
+    pub max_joins_per_round: usize,
+    /// Probability a *new* join is an adversarial peer.
+    pub p_adversarial: f64,
+}
+
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        Self { target_active: 25, p_leave: 0.02, max_joins_per_round: 4, p_adversarial: 0.12 }
+    }
+}
+
+/// Events produced for one round.
+#[derive(Debug, Clone, Default)]
+pub struct ChurnEvents {
+    /// Hotkeys of peers that leave this round.
+    pub leaves: Vec<String>,
+    /// Number of fresh peers joining this round.
+    pub joins: usize,
+}
+
+/// Stateful churn process over rounds.
+#[derive(Debug)]
+pub struct ChurnModel {
+    pub cfg: ChurnConfig,
+    rng: Rng,
+    /// Monotone counter for fresh hotkey names.
+    next_id: usize,
+}
+
+impl ChurnModel {
+    pub fn new(cfg: ChurnConfig, seed: u64) -> Self {
+        Self { cfg, rng: Rng::new(seed), next_id: 0 }
+    }
+
+    /// Mint a fresh unique hotkey.
+    pub fn fresh_hotkey(&mut self) -> String {
+        let id = self.next_id;
+        self.next_id += 1;
+        format!("hk-{id:05}")
+    }
+
+    /// Whether a fresh join should be adversarial, and which kind (index
+    /// into the Behavior::adversarial_kinds table).
+    pub fn roll_adversarial(&mut self) -> Option<usize> {
+        if self.rng.bool(self.cfg.p_adversarial) {
+            Some(self.rng.below(4))
+        } else {
+            None
+        }
+    }
+
+    /// Compute this round's churn for the current active hotkeys.
+    pub fn step(&mut self, active: &[String]) -> ChurnEvents {
+        let mut ev = ChurnEvents::default();
+        for hk in active {
+            if self.rng.bool(self.cfg.p_leave) {
+                ev.leaves.push(hk.clone());
+            }
+        }
+        let after_leave = active.len() - ev.leaves.len();
+        if after_leave < self.cfg.target_active {
+            let deficit = self.cfg.target_active - after_leave;
+            // Incentive pressure: most of the deficit fills immediately.
+            let base = deficit.min(self.cfg.max_joins_per_round);
+            let noise = self.rng.poisson(0.3);
+            ev.joins = (base + noise).min(self.cfg.max_joins_per_round);
+        } else {
+            // At/above target: occasional speculative join.
+            ev.joins = usize::from(self.rng.bool(0.05));
+        }
+        ev
+    }
+
+    pub fn unique_peers_minted(&self) -> usize {
+        self.next_id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_population(rounds: usize, seed: u64) -> (f64, usize) {
+        let mut cm = ChurnModel::new(ChurnConfig::default(), seed);
+        let mut active: Vec<String> = (0..25).map(|_| cm.fresh_hotkey()).collect();
+        let mut sum = 0usize;
+        for _ in 0..rounds {
+            let ev = cm.step(&active);
+            active.retain(|hk| !ev.leaves.contains(hk));
+            for _ in 0..ev.joins {
+                active.push(cm.fresh_hotkey());
+            }
+            sum += active.len();
+        }
+        (sum as f64 / rounds as f64, cm.unique_peers_minted())
+    }
+
+    #[test]
+    fn population_hovers_near_target() {
+        let (mean, _) = run_population(500, 42);
+        assert!((mean - 25.0).abs() < 2.0, "mean active = {mean}");
+    }
+
+    #[test]
+    fn long_run_reaches_70_unique_peers() {
+        // Fig. 5: at least 70 unique participants over the run.
+        let (_, unique) = run_population(500, 7);
+        assert!(unique >= 70, "unique = {unique}");
+    }
+
+    #[test]
+    fn fresh_hotkeys_unique() {
+        let mut cm = ChurnModel::new(ChurnConfig::default(), 1);
+        let a = cm.fresh_hotkey();
+        let b = cm.fresh_hotkey();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(run_population(100, 9), run_population(100, 9));
+    }
+
+    #[test]
+    fn adversarial_rate() {
+        let mut cm = ChurnModel::new(ChurnConfig::default(), 3);
+        let n = 10_000;
+        let hits = (0..n).filter(|_| cm.roll_adversarial().is_some()).count();
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.12).abs() < 0.02, "rate={rate}");
+    }
+}

@@ -1,0 +1,8 @@
+//! Peers: replica state, honest + adversarial behaviours, and the churn
+//! model for dynamic permissionless participation (paper §4.4, App. A).
+
+pub mod churn;
+pub mod worker;
+
+pub use churn::{ChurnConfig, ChurnModel};
+pub use worker::{Behavior, PeerState};

@@ -1,0 +1,301 @@
+//! Peer worker: one participant's full replica state and per-round
+//! behaviour (honest SparseLoCo, or one of the adversarial strategies the
+//! Gauntlet mechanism must withstand in an open-participation setting).
+
+use anyhow::Result;
+
+use crate::gauntlet::Submission;
+use crate::runtime::{ops, Engine};
+use crate::sparseloco::{topk, Payload};
+use crate::util::rng::Rng;
+
+/// Peer behaviour. Adversarial variants exercise Gauntlet's defenses:
+/// copiers are caught by assigned-vs-unassigned LossScore, whales by
+/// median-norm checks, stale peers by the sync check, free-riders by the
+/// empty-payload check, and noise peers by LossScore itself.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Behavior {
+    /// Runs real inner steps on assigned data, compresses honestly.
+    Honest,
+    /// Re-submits another peer's previous payload (no compute).
+    Copier,
+    /// Fabricates a random payload with a plausible norm.
+    Noise,
+    /// Trains honestly but from a stale global model.
+    Stale,
+    /// Submits an all-zero payload (liveness without work).
+    FreeRider,
+    /// Submits an abnormally large-magnitude update (dominance attack).
+    Whale,
+}
+
+impl Behavior {
+    pub fn adversarial_kinds() -> [Behavior; 4] {
+        [Behavior::Copier, Behavior::Noise, Behavior::FreeRider, Behavior::Whale]
+    }
+
+    pub fn is_adversarial(&self) -> bool {
+        !matches!(self, Behavior::Honest | Behavior::Stale)
+    }
+}
+
+/// One peer's replica + protocol state.
+pub struct PeerState {
+    pub hotkey: String,
+    pub uid: usize,
+    pub behavior: Behavior,
+    /// Local replica (synchronized global params after each outer step).
+    pub params: Vec<f32>,
+    /// Inner AdamW moments (per-peer).
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// SparseLoCo error-feedback buffer (per-peer, Eq. 1).
+    pub ef: Vec<f32>,
+    /// Global inner-step counter.
+    pub inner_step: usize,
+    /// Round the local params correspond to.
+    pub base_round: usize,
+    /// Rounds participated (for liveness stats).
+    pub rounds_done: usize,
+    rng: Rng,
+}
+
+impl PeerState {
+    /// A peer joining at `round` with the current global params.
+    pub fn join(
+        hotkey: String,
+        uid: usize,
+        behavior: Behavior,
+        global_params: &[f32],
+        inner_step: usize,
+        round: usize,
+        seed: u64,
+    ) -> Self {
+        let n = global_params.len();
+        Self {
+            hotkey,
+            uid,
+            behavior,
+            params: global_params.to_vec(),
+            m: vec![0.0; n],
+            v: vec![0.0; n],
+            ef: vec![0.0; n],
+            inner_step,
+            base_round: round,
+            rounds_done: 0,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Compute phase: H inner steps on assigned data (honest path).
+    /// Returns per-step losses.
+    pub fn compute_phase(
+        &mut self,
+        eng: &Engine,
+        tokens: &[i32],
+        mask: &[f32],
+        lrs: &[f32],
+    ) -> Result<Vec<f32>> {
+        let (p, m, v, losses) = ops::train_round(
+            eng,
+            &self.params,
+            &self.m,
+            &self.v,
+            self.inner_step as f32,
+            tokens,
+            mask,
+            lrs,
+            0.0,
+        )?;
+        self.params = p;
+        self.m = m;
+        self.v = v;
+        self.inner_step += lrs.len();
+        Ok(losses)
+    }
+
+    /// Communication phase, peer side: pseudo-gradient delta = theta_global
+    /// - theta_local, then SparseLoCo compress with error feedback.
+    /// `use_rust_compress` selects the pure-Rust compressor instead of the
+    /// XLA/Pallas artifact. Both are bit-equivalent on selection/codes
+    /// (cross-checked by `xla_compress_matches_rust_reference`); the Rust
+    /// path is ~3x faster on this CPU testbed where the Pallas kernel
+    /// runs in interpret mode (see EXPERIMENTS.md §Perf).
+    pub fn compress_phase(
+        &mut self,
+        eng: &Engine,
+        global_params: &[f32],
+        beta: f32,
+        use_rust_compress: bool,
+    ) -> Result<Payload> {
+        let delta: Vec<f32> = global_params
+            .iter()
+            .zip(&self.params)
+            .map(|(g, l)| g - l)
+            .collect();
+        if use_rust_compress {
+            let man = eng.manifest();
+            let (payload, ef_new) = crate::sparseloco::topk::compress_with_ef(
+                &delta,
+                &self.ef,
+                beta,
+                man.config.chunk,
+                man.config.topk,
+            );
+            self.ef = ef_new;
+            Ok(payload)
+        } else {
+            let (ef_new, payload) = ops::compress(eng, &delta, &self.ef, beta)?;
+            self.ef = ef_new;
+            Ok(payload)
+        }
+    }
+
+    /// Produce this round's submission according to the behaviour.
+    ///
+    /// `honest_payload` is the payload computed by the honest path (None
+    /// for behaviours that skip compute); `copy_source` is some other
+    /// peer's payload (for Copier).
+    #[allow(clippy::too_many_arguments)]
+    pub fn fabricate_submission(
+        &mut self,
+        round: usize,
+        honest_payload: Option<Payload>,
+        copy_source: Option<&Payload>,
+        n_chunks: usize,
+        k: usize,
+        chunk: usize,
+        median_norm_hint: f32,
+        uploaded_at: f64,
+    ) -> Submission {
+        let payload = match self.behavior {
+            Behavior::Honest | Behavior::Stale => {
+                honest_payload.expect("honest peers computed a payload")
+            }
+            Behavior::Copier => match copy_source {
+                Some(p) => p.clone(),
+                None => self.noise_payload(n_chunks, k, chunk, median_norm_hint),
+            },
+            Behavior::Noise => self.noise_payload(n_chunks, k, chunk, median_norm_hint),
+            Behavior::FreeRider => Payload {
+                n_chunks,
+                k,
+                chunk,
+                idx: vec![0; n_chunks * k],
+                codes: vec![2; n_chunks * k],
+                scales: vec![0.0; n_chunks],
+            },
+            Behavior::Whale => {
+                let mut p = honest_payload
+                    .unwrap_or_else(|| self.noise_payload(n_chunks, k, chunk, median_norm_hint));
+                for s in &mut p.scales {
+                    *s *= 1000.0;
+                }
+                p
+            }
+        };
+        let base_round = if self.behavior == Behavior::Stale {
+            round.saturating_sub(2)
+        } else {
+            self.base_round
+        };
+        let wire = crate::sparseloco::codec::encode(&payload);
+        Submission {
+            hotkey: self.hotkey.clone(),
+            uid: self.uid,
+            round,
+            base_round,
+            wire_bytes: wire.len(),
+            payload,
+            uploaded_at,
+        }
+    }
+
+    /// Random payload with roughly the given norm (Noise behaviour).
+    fn noise_payload(&mut self, n_chunks: usize, k: usize, chunk: usize, norm: f32) -> Payload {
+        let n = n_chunks * chunk;
+        let per = (norm / (n as f32).sqrt()).max(1e-8);
+        let dense: Vec<f32> =
+            (0..n).map(|_| self.rng.normal() as f32 * per * 3.0).collect();
+        topk::compress_dense(&dense, chunk, k)
+    }
+
+    /// Outer sync: adopt the new global parameters (Eq. 2 applied by the
+    /// aggregation path; every peer converges to the same theta).
+    pub fn sync(&mut self, global_params: &[f32], round: usize) {
+        self.params.copy_from_slice(global_params);
+        self.base_round = round;
+        self.rounds_done += 1;
+    }
+
+    /// The validator did NOT select this round's payload: the transmitted
+    /// mass never reached the global model, so it returns to the
+    /// error-feedback buffer (ef := beta*ef_prev + delta = acc), exactly
+    /// as if nothing had been transmitted. Without this, unselected
+    /// honest compute is silently dropped from the EF recursion.
+    pub fn restore_unselected(&mut self, payload: &Payload) {
+        payload
+            .accumulate_into(&mut self.ef, 1.0)
+            .expect("own payload geometry");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_peer(b: Behavior) -> PeerState {
+        PeerState::join("hk".into(), 0, b, &vec![0.0; 256], 0, 3, 7)
+    }
+
+    #[test]
+    fn freerider_payload_is_empty() {
+        let mut p = mk_peer(Behavior::FreeRider);
+        let sub = p.fabricate_submission(3, None, None, 4, 8, 64, 1.0, 0.0);
+        assert_eq!(sub.payload.l2_norm(), 0.0);
+    }
+
+    #[test]
+    fn whale_scales_blown_up() {
+        let mut p = mk_peer(Behavior::Whale);
+        let honest = topk::compress_dense(&vec![0.01; 256], 64, 8);
+        let n0 = honest.l2_norm();
+        let sub = p.fabricate_submission(3, Some(honest), None, 4, 8, 64, 1.0, 0.0);
+        assert!(sub.payload.l2_norm() > 100.0 * n0);
+    }
+
+    #[test]
+    fn stale_reports_old_base_round() {
+        let mut p = mk_peer(Behavior::Stale);
+        let honest = topk::compress_dense(&vec![0.01; 256], 64, 8);
+        let sub = p.fabricate_submission(5, Some(honest), None, 4, 8, 64, 1.0, 0.0);
+        assert_eq!(sub.base_round, 3);
+    }
+
+    #[test]
+    fn copier_copies() {
+        let mut p = mk_peer(Behavior::Copier);
+        let src = topk::compress_dense(&vec![0.5; 256], 64, 8);
+        let sub = p.fabricate_submission(3, None, Some(&src), 4, 8, 64, 1.0, 0.0);
+        assert_eq!(sub.payload, src);
+    }
+
+    #[test]
+    fn noise_norm_plausible() {
+        let mut p = mk_peer(Behavior::Noise);
+        let sub = p.fabricate_submission(3, None, None, 4, 8, 64, 1.0, 0.0);
+        let n = sub.payload.l2_norm();
+        assert!(n > 0.0 && n < 100.0, "norm={n}");
+    }
+
+    #[test]
+    fn sync_adopts_global() {
+        let mut p = mk_peer(Behavior::Honest);
+        p.params[0] = 5.0;
+        let g = vec![1.0; 256];
+        p.sync(&g, 9);
+        assert_eq!(p.params[0], 1.0);
+        assert_eq!(p.base_round, 9);
+        assert_eq!(p.rounds_done, 1);
+    }
+}

@@ -1,0 +1,117 @@
+//! PJRT execution engine: loads AOT HLO-text artifacts, compiles them once
+//! on the CPU PJRT client, and executes them from the request path.
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` reassigns
+//! instruction ids, avoiding the 64-bit-id proto incompatibility between
+//! jax >= 0.5 and xla_extension 0.5.1.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{ensure, Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use super::manifest::Manifest;
+
+/// Compiled-executable cache keyed by artifact name.
+///
+/// `Engine` is deliberately **not** `Send`: PJRT wrapper types hold raw
+/// pointers, so all device compute stays on the coordinator thread. The
+/// simulation layers (netsim, storage, chain) are pure Rust and run on a
+/// virtual clock, so this costs nothing on the 1-core testbed.
+pub struct Engine {
+    client: PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
+    /// Cumulative wall time spent inside PJRT execute, per artifact.
+    exec_stats: RefCell<HashMap<String, (u64, f64)>>,
+}
+
+impl Engine {
+    /// Create a CPU engine for one artifact directory.
+    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(&artifact_dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            exec_stats: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) one artifact.
+    pub fn executable(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.manifest.hlo_path(name)?;
+        let t0 = Instant::now();
+        let proto = HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact '{name}'"))?,
+        );
+        let _ = t0; // compile time visible via `covenant smoke`
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (pay compile cost up front).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact with literal inputs; returns untupled outputs.
+    ///
+    /// All artifacts are lowered with `return_tuple=True`, so the single
+    /// result buffer is a tuple literal that we decompose here.
+    pub fn run(&self, name: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
+        let spec = self.manifest.artifact(name)?;
+        ensure!(
+            spec.inputs.len() == inputs.len(),
+            "artifact '{name}' expects {} inputs, got {}",
+            spec.inputs.len(),
+            inputs.len()
+        );
+        let exe = self.executable(name)?;
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<Literal>(inputs)
+            .with_context(|| format!("executing artifact '{name}'"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let outs = lit.to_tuple().context("decomposing result tuple")?;
+        let dt = t0.elapsed().as_secs_f64();
+        let mut stats = self.exec_stats.borrow_mut();
+        let e = stats.entry(name.to_string()).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += dt;
+        ensure!(
+            outs.len() == spec.outputs.len(),
+            "artifact '{name}' returned {} outputs, manifest says {}",
+            outs.len(),
+            spec.outputs.len()
+        );
+        Ok(outs)
+    }
+
+    /// (calls, total_seconds) per artifact, for the perf report.
+    pub fn exec_stats(&self) -> HashMap<String, (u64, f64)> {
+        self.exec_stats.borrow().clone()
+    }
+}

@@ -1,0 +1,45 @@
+//! Literal construction/extraction helpers around the `xla` crate.
+
+use anyhow::Result;
+use xla::Literal;
+
+/// 1-D f32 literal.
+pub fn f32_vec(data: &[f32]) -> Literal {
+    Literal::vec1(data)
+}
+
+/// f32 literal with an explicit shape.
+pub fn f32_tensor(data: &[f32], dims: &[usize]) -> Result<Literal> {
+    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+/// i32 literal with an explicit shape.
+pub fn i32_tensor(data: &[i32], dims: &[usize]) -> Result<Literal> {
+    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+/// Scalar literals.
+pub fn scalar_f32(x: f32) -> Literal {
+    Literal::scalar(x)
+}
+
+pub fn scalar_i32(x: i32) -> Literal {
+    Literal::scalar(x)
+}
+
+/// Extract an f32 vector (any shape, row-major).
+pub fn to_f32(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract an i32 vector (any shape, row-major).
+pub fn to_i32(lit: &Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+/// Extract a scalar f32.
+pub fn to_scalar_f32(lit: &Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}

@@ -1,0 +1,204 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Describes the model config, the flat parameter layout and
+//! every AOT-compiled HLO artifact's I/O signature.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Model/training configuration (mirrors `python/compile/configs.py`).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch_size: usize,
+    pub inner_steps: usize,
+    pub rope_theta: f64,
+    pub norm_eps: f64,
+    pub init_std: f64,
+    pub adam_b1: f64,
+    pub adam_b2: f64,
+    pub adam_eps: f64,
+    pub weight_decay: f64,
+    pub ef_beta: f64,
+    pub topk: usize,
+    pub chunk: usize,
+    pub untie_embeddings: bool,
+}
+
+impl ModelConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            name: j.get("name")?.as_str()?.to_string(),
+            vocab_size: j.get("vocab_size")?.as_usize()?,
+            d_model: j.get("d_model")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            n_kv_heads: j.get("n_kv_heads")?.as_usize()?,
+            d_head: j.get("d_head")?.as_usize()?,
+            d_ff: j.get("d_ff")?.as_usize()?,
+            seq_len: j.get("seq_len")?.as_usize()?,
+            batch_size: j.get("batch_size")?.as_usize()?,
+            inner_steps: j.get("inner_steps")?.as_usize()?,
+            rope_theta: j.get("rope_theta")?.as_f64()?,
+            norm_eps: j.get("norm_eps")?.as_f64()?,
+            init_std: j.get("init_std")?.as_f64()?,
+            adam_b1: j.get("adam_b1")?.as_f64()?,
+            adam_b2: j.get("adam_b2")?.as_f64()?,
+            adam_eps: j.get("adam_eps")?.as_f64()?,
+            weight_decay: j.get("weight_decay")?.as_f64()?,
+            ef_beta: j.get("ef_beta")?.as_f64()?,
+            topk: j.get("topk")?.as_usize()?,
+            chunk: j.get("chunk")?.as_usize()?,
+            untie_embeddings: j
+                .opt("untie_embeddings")
+                .map(|v| v.as_bool())
+                .transpose()?
+                .unwrap_or(false),
+        })
+    }
+}
+
+/// One named tensor inside the flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct TensorSlot {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+    pub size: usize,
+    pub slot: usize,
+    pub is_2d: bool,
+    pub decay: bool,
+}
+
+/// Shape+dtype of one artifact input/output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl IoSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            shape: j
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?,
+            dtype: j.get("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One AOT artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+/// The whole `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config: ModelConfig,
+    pub n_params: usize,
+    pub n_alloc: usize,
+    pub n_chunks: usize,
+    pub tensors: Vec<TensorSlot>,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+    /// Directory the manifest was loaded from.
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifact directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let tensors = j
+            .get("tensors")?
+            .as_arr()?
+            .iter()
+            .map(|t| {
+                Ok(TensorSlot {
+                    name: t.get("name")?.as_str()?.to_string(),
+                    shape: t
+                        .get("shape")?
+                        .as_arr()?
+                        .iter()
+                        .map(|v| v.as_usize())
+                        .collect::<Result<_>>()?,
+                    offset: t.get("offset")?.as_usize()?,
+                    size: t.get("size")?.as_usize()?,
+                    slot: t.get("slot")?.as_usize()?,
+                    is_2d: t.get("is_2d")?.as_bool()?,
+                    decay: t.get("decay")?.as_bool()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut artifacts = HashMap::new();
+        for (name, a) in j.get("artifacts")?.as_obj()? {
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: a.get("file")?.as_str()?.to_string(),
+                    inputs: a
+                        .get("inputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(IoSpec::from_json)
+                        .collect::<Result<_>>()?,
+                    outputs: a
+                        .get("outputs")?
+                        .as_arr()?
+                        .iter()
+                        .map(IoSpec::from_json)
+                        .collect::<Result<_>>()?,
+                },
+            );
+        }
+        Ok(Manifest {
+            config: ModelConfig::from_json(j.get("config")?)?,
+            n_params: j.get("n_params")?.as_usize()?,
+            n_alloc: j.get("n_alloc")?.as_usize()?,
+            n_chunks: j.get("n_chunks")?.as_usize()?,
+            tensors,
+            artifacts,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    pub fn tensor(&self, name: &str) -> Option<&TensorSlot> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+}

@@ -1,0 +1,14 @@
+//! Runtime layer: PJRT client wrapper + artifact manifest.
+//!
+//! Loads the HLO-text artifacts produced by `python/compile/aot.py`
+//! (`make artifacts`), compiles them once on the PJRT CPU client, and
+//! exposes `Engine::run(name, inputs)` to the coordinator. Python never
+//! runs on this path.
+
+pub mod engine;
+pub mod literal;
+pub mod manifest;
+pub mod ops;
+
+pub use engine::Engine;
+pub use manifest::{ArtifactSpec, IoSpec, Manifest, ModelConfig, TensorSlot};

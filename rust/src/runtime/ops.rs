@@ -1,0 +1,159 @@
+//! Typed wrappers over the AOT artifacts: each paper operation (init,
+//! inner round, compression, outer step, evaluation) as a plain Rust
+//! function over host vectors. This is the entire L3<->L2 surface.
+
+use anyhow::{ensure, Result};
+
+use super::engine::Engine;
+use super::literal::{f32_tensor, f32_vec, i32_tensor, scalar_f32, scalar_i32, to_f32, to_i32, to_scalar_f32};
+use crate::sparseloco::Payload;
+
+/// Initialize a flat parameter vector from a seed.
+pub fn init_params(eng: &Engine, seed: i32) -> Result<Vec<f32>> {
+    let outs = eng.run("init_params", &[scalar_i32(seed)])?;
+    to_f32(&outs[0])
+}
+
+/// One inner step. Returns (params', m', v', loss).
+#[allow(clippy::too_many_arguments)]
+pub fn train_step(
+    eng: &Engine,
+    params: &[f32],
+    m: &[f32],
+    v: &[f32],
+    step: f32,
+    tokens: &[i32],
+    mask: &[f32],
+    lr: f32,
+    clip: f32,
+) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f32)> {
+    let c = &eng.manifest().config;
+    let (b, t) = (c.batch_size, c.seq_len);
+    let outs = eng.run(
+        "train_step",
+        &[
+            f32_vec(params),
+            f32_vec(m),
+            f32_vec(v),
+            scalar_f32(step),
+            i32_tensor(tokens, &[b, t + 1])?,
+            f32_tensor(mask, &[b, t])?,
+            scalar_f32(lr),
+            scalar_f32(clip),
+        ],
+    )?;
+    Ok((to_f32(&outs[0])?, to_f32(&outs[1])?, to_f32(&outs[2])?, to_scalar_f32(&outs[3])?))
+}
+
+/// H fused inner steps (the compute phase). Returns (params', m', v',
+/// per-step losses).
+#[allow(clippy::too_many_arguments)]
+pub fn train_round(
+    eng: &Engine,
+    params: &[f32],
+    m: &[f32],
+    v: &[f32],
+    step0: f32,
+    tokens: &[i32],
+    mask: &[f32],
+    lrs: &[f32],
+    clip: f32,
+) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+    let c = &eng.manifest().config;
+    let (h, b, t) = (c.inner_steps, c.batch_size, c.seq_len);
+    ensure!(lrs.len() == h, "lrs must have H={h} entries");
+    ensure!(tokens.len() == h * b * (t + 1), "tokens shape mismatch");
+    let outs = eng.run(
+        "train_round",
+        &[
+            f32_vec(params),
+            f32_vec(m),
+            f32_vec(v),
+            scalar_f32(step0),
+            i32_tensor(tokens, &[h, b, t + 1])?,
+            f32_tensor(mask, &[h, b, t])?,
+            f32_tensor(lrs, &[h])?,
+            scalar_f32(clip),
+        ],
+    )?;
+    Ok((to_f32(&outs[0])?, to_f32(&outs[1])?, to_f32(&outs[2])?, to_f32(&outs[3])?))
+}
+
+/// SparseLoCo compression with error feedback (Eq. 1).
+/// Returns (new_ef, payload).
+pub fn compress(
+    eng: &Engine,
+    delta: &[f32],
+    ef: &[f32],
+    beta: f32,
+) -> Result<(Vec<f32>, Payload)> {
+    let man = eng.manifest();
+    let outs = eng.run(
+        "compress",
+        &[f32_vec(delta), f32_vec(ef), scalar_f32(beta)],
+    )?;
+    let ef_new = to_f32(&outs[0])?;
+    let idx = to_i32(&outs[1])?;
+    let codes = to_i32(&outs[2])?;
+    let scales = to_f32(&outs[3])?;
+    let payload =
+        Payload::from_parts(&idx, &codes, &scales, man.config.topk, man.config.chunk)?;
+    Ok((ef_new, payload))
+}
+
+/// Decompress a payload through the XLA artifact (validation path; the
+/// hot path uses `Payload::accumulate_into` in pure Rust).
+pub fn decompress_xla(eng: &Engine, p: &Payload) -> Result<Vec<f32>> {
+    let nc = p.n_chunks;
+    let k = p.k;
+    let idx: Vec<i32> = p.idx.iter().map(|&x| x as i32).collect();
+    let codes: Vec<i32> = p.codes.iter().map(|&x| x as i32).collect();
+    let outs = eng.run(
+        "decompress",
+        &[
+            i32_tensor(&idx, &[nc, k])?,
+            i32_tensor(&codes, &[nc, k])?,
+            f32_tensor(&p.scales, &[nc, 1])?,
+        ],
+    )?;
+    to_f32(&outs[0])
+}
+
+/// Outer step theta' = theta - alpha * delta (Eq. 2).
+pub fn outer_step(eng: &Engine, params: &[f32], delta: &[f32], alpha: f32) -> Result<Vec<f32>> {
+    let outs = eng.run(
+        "outer_step",
+        &[f32_vec(params), f32_vec(delta), scalar_f32(alpha)],
+    )?;
+    to_f32(&outs[0])
+}
+
+/// Mean masked loss on one batch.
+pub fn eval_loss(eng: &Engine, params: &[f32], tokens: &[i32], mask: &[f32]) -> Result<f32> {
+    let c = &eng.manifest().config;
+    let (b, t) = (c.batch_size, c.seq_len);
+    let outs = eng.run(
+        "eval_loss",
+        &[
+            f32_vec(params),
+            i32_tensor(tokens, &[b, t + 1])?,
+            f32_tensor(mask, &[b, t])?,
+        ],
+    )?;
+    to_scalar_f32(&outs[0])
+}
+
+/// Per-sequence masked loss (multiple-choice scoring).
+pub fn loss_per_seq(eng: &Engine, params: &[f32], tokens: &[i32], mask: &[f32]) -> Result<Vec<f32>> {
+    let c = &eng.manifest().config;
+    let (b, t) = (c.batch_size, c.seq_len);
+    let outs = eng.run(
+        "loss_per_seq",
+        &[
+            f32_vec(params),
+            i32_tensor(tokens, &[b, t + 1])?,
+            f32_tensor(mask, &[b, t])?,
+        ],
+    )?;
+    to_f32(&outs[0])
+}

@@ -1,0 +1,13 @@
+//! SparseLoCo on the Rust side: the wire codec for compressed
+//! pseudo-gradients (12-bit indices + 2-bit values + per-chunk scales,
+//! paper §2.1), a reference chunk-wise Top-k compressor (used by tests and
+//! by simulated adversarial peers that don't run the XLA path), and the
+//! dense scatter/aggregation hot path.
+
+pub mod codec;
+pub mod payload;
+pub mod quant;
+pub mod topk;
+
+pub use payload::Payload;
+pub use quant::{dequant_level, quantize_value};

@@ -1,0 +1,220 @@
+//! Compressed pseudo-gradient payload: the in-memory form peers exchange.
+//!
+//! One payload = per-chunk Top-k indices, 2-bit value codes, and f32
+//! max-abs scales for the whole flat parameter vector. Conversions:
+//! XLA artifact outputs -> `Payload` -> wire bytes (`codec`) -> dense
+//! scatter (aggregation hot path).
+
+use anyhow::{bail, ensure, Result};
+
+use super::quant::dequant_level;
+
+/// Compressed pseudo-gradient for one peer, one round.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Payload {
+    pub n_chunks: usize,
+    pub k: usize,
+    pub chunk: usize,
+    /// Chunk-local indices, row-major `[n_chunks * k]`, each `< chunk`.
+    pub idx: Vec<u16>,
+    /// 2-bit codes (stored unpacked, 1 byte each), `[n_chunks * k]`.
+    pub codes: Vec<u8>,
+    /// Per-chunk max-abs scales, `[n_chunks]`.
+    pub scales: Vec<f32>,
+}
+
+impl Payload {
+    /// Assemble from the raw i32/f32 buffers an XLA `compress` call returns.
+    pub fn from_parts(
+        idx_i32: &[i32],
+        codes_i32: &[i32],
+        scales_f32: &[f32],
+        k: usize,
+        chunk: usize,
+    ) -> Result<Self> {
+        ensure!(k > 0 && chunk > 0, "bad k/chunk");
+        ensure!(idx_i32.len() == codes_i32.len(), "idx/codes length mismatch");
+        ensure!(idx_i32.len() % k == 0, "idx length not a multiple of k");
+        let n_chunks = idx_i32.len() / k;
+        ensure!(scales_f32.len() == n_chunks, "scales length mismatch");
+        let mut idx = Vec::with_capacity(idx_i32.len());
+        for &i in idx_i32 {
+            ensure!(i >= 0 && (i as usize) < chunk, "index {i} out of chunk bound {chunk}");
+            idx.push(i as u16);
+        }
+        let mut codes = Vec::with_capacity(codes_i32.len());
+        for &c in codes_i32 {
+            ensure!((0..4).contains(&c), "code {c} out of 2-bit range");
+            codes.push(c as u8);
+        }
+        Ok(Payload { n_chunks, k, chunk, idx, codes, scales: scales_f32.to_vec() })
+    }
+
+    /// Number of values transmitted.
+    pub fn n_values(&self) -> usize {
+        self.n_chunks * self.k
+    }
+
+    /// Dense length this payload expands to.
+    pub fn dense_len(&self) -> usize {
+        self.n_chunks * self.chunk
+    }
+
+    /// Dequantized value at position `j` of chunk `r`.
+    #[inline]
+    pub fn value(&self, r: usize, j: usize) -> f32 {
+        dequant_level(self.codes[r * self.k + j]) * self.scales[r]
+    }
+
+    /// L2 norm of the decompressed update — used for the validator's
+    /// median-norm scaling (paper §2.2) without materializing the dense
+    /// vector. Note: within a chunk, Top-k indices are distinct, so the
+    /// norm is exact.
+    pub fn l2_norm(&self) -> f64 {
+        let mut acc = 0f64;
+        for r in 0..self.n_chunks {
+            let s = self.scales[r] as f64;
+            let mut unit = 0f64;
+            for j in 0..self.k {
+                let l = dequant_level(self.codes[r * self.k + j]) as f64;
+                unit += l * l;
+            }
+            acc += s * s * unit;
+        }
+        acc.sqrt()
+    }
+
+    /// Scatter `weight * value` into a dense accumulator (aggregation hot
+    /// path; see benches/hotpath.rs).
+    pub fn accumulate_into(&self, out: &mut [f32], weight: f32) -> Result<()> {
+        ensure!(out.len() == self.dense_len(), "dense length mismatch");
+        for r in 0..self.n_chunks {
+            let base = r * self.chunk;
+            let s = self.scales[r] * weight;
+            let row = r * self.k;
+            for j in 0..self.k {
+                let pos = base + self.idx[row + j] as usize;
+                out[pos] += dequant_level(self.codes[row + j]) * s;
+            }
+        }
+        Ok(())
+    }
+
+    /// Expand to a fresh dense vector.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0f32; self.dense_len()];
+        self.accumulate_into(&mut out, 1.0).expect("sized above");
+        out
+    }
+
+    /// Content hash (FNV-1a) — used by the Gauntlet duplicate-submission
+    /// fast check (§2.2: "prevent participants from copying others or
+    /// submitting duplicate behavior").
+    pub fn content_hash(&self) -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        let mut eat = |b: u8| {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        };
+        for &i in &self.idx {
+            eat(i as u8);
+            eat((i >> 8) as u8);
+        }
+        for &c in &self.codes {
+            eat(c);
+        }
+        for &s in &self.scales {
+            for b in s.to_le_bytes() {
+                eat(b);
+            }
+        }
+        h
+    }
+
+    /// Structural validation (used by Gauntlet fast checks).
+    pub fn validate(&self, expect_chunks: usize, expect_k: usize, expect_chunk: usize) -> Result<()> {
+        if self.n_chunks != expect_chunks || self.k != expect_k || self.chunk != expect_chunk {
+            bail!(
+                "payload geometry mismatch: ({}, {}, {}) vs expected ({}, {}, {})",
+                self.n_chunks, self.k, self.chunk, expect_chunks, expect_k, expect_chunk
+            );
+        }
+        ensure!(self.idx.len() == self.n_values(), "idx len");
+        ensure!(self.codes.len() == self.n_values(), "codes len");
+        ensure!(self.scales.len() == self.n_chunks, "scales len");
+        for &i in &self.idx {
+            ensure!((i as usize) < self.chunk, "index out of range");
+        }
+        for &c in &self.codes {
+            ensure!(c < 4, "code out of range");
+        }
+        for &s in &self.scales {
+            ensure!(s.is_finite() && s >= 0.0, "scale not finite/non-negative: {s}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Payload {
+        Payload {
+            n_chunks: 2,
+            k: 3,
+            chunk: 8,
+            idx: vec![0, 3, 7, 1, 2, 5],
+            codes: vec![3, 0, 2, 1, 3, 0],
+            scales: vec![1.5, 0.5],
+        }
+    }
+
+    #[test]
+    fn dense_scatter() {
+        let p = sample();
+        let d = p.to_dense();
+        assert_eq!(d.len(), 16);
+        assert_eq!(d[0], 1.5); // code 3 -> +1 * 1.5
+        assert_eq!(d[3], -1.5); // code 0 -> -1 * 1.5
+        assert!((d[7] - 0.5).abs() < 1e-6); // code 2 -> +1/3 * 1.5
+        assert_eq!(d[8 + 5], -0.5);
+        // untouched positions zero
+        assert_eq!(d[2], 0.0);
+    }
+
+    #[test]
+    fn l2_norm_matches_dense() {
+        let p = sample();
+        let d = p.to_dense();
+        let dense_norm: f64 = d.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt();
+        assert!((p.l2_norm() - dense_norm).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accumulate_weighted() {
+        let p = sample();
+        let mut acc = vec![0f32; 16];
+        p.accumulate_into(&mut acc, 2.0).unwrap();
+        assert_eq!(acc[0], 3.0);
+    }
+
+    #[test]
+    fn from_parts_validates() {
+        assert!(Payload::from_parts(&[0, 1], &[0, 4], &[1.0], 2, 8).is_err()); // bad code
+        assert!(Payload::from_parts(&[0, 9], &[0, 1], &[1.0], 2, 8).is_err()); // idx >= chunk
+        assert!(Payload::from_parts(&[0, 1], &[0, 1], &[1.0, 2.0], 2, 8).is_err()); // scales len
+        let p = Payload::from_parts(&[0, 1], &[0, 1], &[1.0], 2, 8).unwrap();
+        assert_eq!(p.n_chunks, 1);
+    }
+
+    #[test]
+    fn validate_geometry() {
+        let p = sample();
+        assert!(p.validate(2, 3, 8).is_ok());
+        assert!(p.validate(2, 3, 16).is_err());
+        let mut bad = sample();
+        bad.scales[0] = f32::NAN;
+        assert!(bad.validate(2, 3, 8).is_err());
+    }
+}

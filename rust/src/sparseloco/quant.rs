@@ -1,0 +1,78 @@
+//! 2-bit symmetric quantization (Rust mirror of
+//! `python/compile/kernels/quant2bit.py` — bit-for-bit identical math).
+//!
+//! Codebook: code c in {0,1,2,3} -> level (c * 2/3 - 1) in
+//! {-1, -1/3, +1/3, +1}, times the per-chunk max-abs scale. Decision
+//! thresholds at {-2/3, 0, +2/3}.
+
+/// Dequantized unit level for a 2-bit code (f32 arithmetic identical to
+/// the Pallas kernel: `c * (2/3) - 1`).
+#[inline]
+pub fn dequant_level(code: u8) -> f32 {
+    code as f32 * (2.0f32 / 3.0f32) - 1.0f32
+}
+
+/// Quantize one value given its chunk scale (max-abs).
+#[inline]
+pub fn quantize_value(v: f32, scale: f32) -> u8 {
+    let x = v / scale.max(1e-12);
+    if x < -2.0 / 3.0 {
+        0
+    } else if x < 0.0 {
+        1
+    } else if x < 2.0 / 3.0 {
+        2
+    } else {
+        3
+    }
+}
+
+/// Dequantize one value.
+#[inline]
+pub fn dequant_value(code: u8, scale: f32) -> f32 {
+    dequant_level(code) * scale
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels() {
+        assert_eq!(dequant_level(0), -1.0);
+        assert_eq!(dequant_level(3), 1.0);
+        assert!((dequant_level(1) + 1.0 / 3.0).abs() < 1e-6);
+        assert!((dequant_level(2) - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn thresholds() {
+        let s = 1.0;
+        assert_eq!(quantize_value(-1.0, s), 0);
+        assert_eq!(quantize_value(-0.67, s), 0);
+        assert_eq!(quantize_value(-0.5, s), 1);
+        assert_eq!(quantize_value(-0.01, s), 1);
+        assert_eq!(quantize_value(0.01, s), 2);
+        assert_eq!(quantize_value(0.5, s), 2);
+        assert_eq!(quantize_value(0.67, s), 3);
+        assert_eq!(quantize_value(1.0, s), 3);
+    }
+
+    #[test]
+    fn roundtrip_error_bound() {
+        // |dequant(quant(v)) - v| <= scale/3 for |v| <= scale.
+        let scale = 2.5f32;
+        let mut v = -scale;
+        while v <= scale {
+            let err = (dequant_value(quantize_value(v, scale), scale) - v).abs();
+            assert!(err <= scale / 3.0 + 1e-5, "v={v} err={err}");
+            v += 0.01;
+        }
+    }
+
+    #[test]
+    fn zero_scale_safe() {
+        assert_eq!(quantize_value(0.0, 0.0), 2); // 0/eps = 0 -> code 2
+        assert_eq!(dequant_value(2, 0.0), 0.0);
+    }
+}

@@ -1,0 +1,161 @@
+//! Reference chunk-wise Top-k compressor in Rust.
+//!
+//! Mirrors the Pallas kernel's semantics (argsort by |value| descending,
+//! per-chunk max-abs scale, 2-bit quantization). Used by:
+//! * integration tests cross-checking the XLA `compress` artifact,
+//! * simulated adversarial/byzantine peers that fabricate payloads
+//!   without running the model,
+//! * the INTELLECT-1-style dense-int8 baseline (via `compress_dense` with
+//!   k = chunk, for payload-size comparisons only).
+
+use super::payload::Payload;
+use super::quant::quantize_value;
+
+/// Compress a dense flat vector (len must be a multiple of `chunk`).
+pub fn compress_dense(acc: &[f32], chunk: usize, k: usize) -> Payload {
+    assert!(acc.len() % chunk == 0, "dense length not a multiple of chunk");
+    assert!(k <= chunk);
+    let n_chunks = acc.len() / chunk;
+    let mut idx = Vec::with_capacity(n_chunks * k);
+    let mut codes = Vec::with_capacity(n_chunks * k);
+    let mut scales = Vec::with_capacity(n_chunks);
+    let mut order: Vec<u32> = Vec::with_capacity(chunk);
+    for r in 0..n_chunks {
+        let row = &acc[r * chunk..(r + 1) * chunk];
+        order.clear();
+        order.extend(0..chunk as u32);
+        // Stable sort by descending |value| (ties -> lower index first),
+        // matching jnp.argsort(-|x|).
+        order.sort_by(|&a, &b| {
+            let va = row[a as usize].abs();
+            let vb = row[b as usize].abs();
+            vb.partial_cmp(&va).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
+        });
+        let sel = &order[..k];
+        let scale = sel
+            .iter()
+            .map(|&i| row[i as usize].abs())
+            .fold(0f32, f32::max);
+        scales.push(scale);
+        for &i in sel {
+            idx.push(i as u16);
+            codes.push(quantize_value(row[i as usize], scale));
+        }
+    }
+    Payload { n_chunks, k, chunk, idx, codes, scales }
+}
+
+/// Error-feedback compression step (SparseLoCo Eq. 1), all in Rust:
+/// acc = beta*ef + delta; payload = TopK+Q(acc); ef' = acc - dequant(payload).
+/// Returns (payload, new_ef).
+pub fn compress_with_ef(
+    delta: &[f32],
+    ef: &[f32],
+    beta: f32,
+    chunk: usize,
+    k: usize,
+) -> (Payload, Vec<f32>) {
+    assert_eq!(delta.len(), ef.len());
+    let acc: Vec<f32> = delta.iter().zip(ef).map(|(d, e)| beta * e + d).collect();
+    let payload = compress_dense(&acc, chunk, k);
+    let mut ef_new = acc;
+    // subtract transmitted
+    for r in 0..payload.n_chunks {
+        let base = r * chunk;
+        for j in 0..k {
+            let pos = base + payload.idx[r * k + j] as usize;
+            ef_new[pos] -= payload.value(r, j);
+        }
+    }
+    (payload, ef_new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn selects_largest_magnitudes() {
+        let mut row = vec![0.0f32; 16];
+        row[3] = -5.0;
+        row[7] = 4.0;
+        row[11] = 0.5;
+        let p = compress_dense(&row, 16, 2);
+        let mut sel: Vec<u16> = p.idx.clone();
+        sel.sort_unstable();
+        assert_eq!(sel, vec![3, 7]);
+        assert_eq!(p.scales[0], 5.0);
+        // -5 at full scale -> code 0 (-1); +4/5 = 0.8 -> code 3 (+1)
+        let d = p.to_dense();
+        assert_eq!(d[3], -5.0);
+        assert!((d[7] - 5.0).abs() < 1e-6); // quantization error: 4 -> 5
+    }
+
+    #[test]
+    fn ef_identity() {
+        let mut rng = Rng::new(10);
+        let n = 8 * 64;
+        let delta: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.01).collect();
+        let ef: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.001).collect();
+        let beta = 0.95f32;
+        let (payload, ef2) = compress_with_ef(&delta, &ef, beta, 64, 8);
+        let dense = payload.to_dense();
+        for i in 0..n {
+            let acc = beta * ef[i] + delta[i];
+            assert!((ef2[i] + dense[i] - acc).abs() < 1e-5, "at {i}");
+        }
+    }
+
+    #[test]
+    fn indices_distinct_per_chunk() {
+        check(
+            40,
+            |r| {
+                let chunk = 1usize << r.range(4, 9);
+                let k = r.range(1, chunk.min(16) + 1);
+                let n = r.range(1, 5) * chunk;
+                let dense: Vec<f32> = (0..n).map(|_| r.normal() as f32).collect();
+                (dense, chunk, k)
+            },
+            |(dense, chunk, k)| {
+                let p = compress_dense(dense, *chunk, *k);
+                (0..p.n_chunks).all(|r| {
+                    let mut s: Vec<u16> = p.idx[r * k..(r + 1) * k].to_vec();
+                    s.sort_unstable();
+                    s.dedup();
+                    s.len() == *k
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn quantization_error_bounded() {
+        check(
+            30,
+            |r| (0..256).map(|_| r.normal() as f32).collect::<Vec<f32>>(),
+            |dense| {
+                let p = compress_dense(dense, 256, 32);
+                let d = p.to_dense();
+                (0..p.n_values()).all(|j| {
+                    let pos = p.idx[j] as usize;
+                    (d[pos] - dense[pos]).abs() <= p.scales[0] / 3.0 + 1e-5
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn k_equals_chunk_is_dense() {
+        let mut rng = Rng::new(11);
+        let dense: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+        let p = compress_dense(&dense, 64, 64);
+        let d = p.to_dense();
+        // every position transmitted (within quantization error)
+        for i in 0..64 {
+            assert!((d[i] - dense[i]).abs() <= p.scales[0] / 3.0 + 1e-6);
+        }
+    }
+}

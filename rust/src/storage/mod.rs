@@ -1,0 +1,11 @@
+//! Object-storage substrate (Cloudflare-R2 stand-in, paper §3).
+//!
+//! Peers upload compressed pseudo-gradients to *their own* bucket and
+//! publish the location; the validator reads and scores them; every peer
+//! downloads the selected set directly. This module provides the store
+//! (buckets, keys, credentials, byte-accounted objects) — transfer *times*
+//! come from `netsim`, which models each peer's link.
+
+pub mod object_store;
+
+pub use object_store::{Bucket, ObjectStore};

@@ -1,0 +1,195 @@
+//! In-memory object store with buckets, access keys and byte accounting.
+//!
+//! Mirrors the R2 usage in the paper: per-peer buckets with read
+//! credentials shared over the network, read-after-write visibility, and
+//! no peer-to-peer connectivity requirement. The store itself is
+//! infinitely fast; link time is charged by `netsim`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Access credential for a bucket (the paper's peers publish read creds).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Credential(pub String);
+
+/// One bucket: a key-value object namespace owned by a peer.
+#[derive(Debug, Default)]
+pub struct Bucket {
+    objects: BTreeMap<String, Vec<u8>>,
+    pub read_cred: Option<Credential>,
+    pub bytes_stored: u64,
+    pub puts: u64,
+    pub gets: u64,
+}
+
+/// The whole store: bucket name -> bucket.
+#[derive(Debug, Default)]
+pub struct ObjectStore {
+    buckets: BTreeMap<String, Bucket>,
+}
+
+impl ObjectStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Create a bucket with a read credential; fails if it exists.
+    pub fn create_bucket(&mut self, name: &str, read_cred: &str) -> Result<()> {
+        if self.buckets.contains_key(name) {
+            bail!("bucket '{name}' already exists");
+        }
+        self.buckets.insert(
+            name.to_string(),
+            Bucket { read_cred: Some(Credential(read_cred.to_string())), ..Default::default() },
+        );
+        Ok(())
+    }
+
+    pub fn delete_bucket(&mut self, name: &str) -> Result<()> {
+        self.buckets
+            .remove(name)
+            .map(|_| ())
+            .ok_or_else(|| anyhow!("bucket '{name}' not found"))
+    }
+
+    pub fn bucket(&self, name: &str) -> Result<&Bucket> {
+        self.buckets.get(name).ok_or_else(|| anyhow!("bucket '{name}' not found"))
+    }
+
+    /// Owner-side put (no credential needed — owners write their bucket).
+    pub fn put(&mut self, bucket: &str, key: &str, data: Vec<u8>) -> Result<usize> {
+        let b = self
+            .buckets
+            .get_mut(bucket)
+            .ok_or_else(|| anyhow!("bucket '{bucket}' not found"))?;
+        let len = data.len();
+        if let Some(old) = b.objects.insert(key.to_string(), data) {
+            b.bytes_stored -= old.len() as u64;
+        }
+        b.bytes_stored += len as u64;
+        b.puts += 1;
+        Ok(len)
+    }
+
+    /// Credentialed read (any peer with the published credential).
+    pub fn get(&mut self, bucket: &str, key: &str, cred: &str) -> Result<Vec<u8>> {
+        let b = self
+            .buckets
+            .get_mut(bucket)
+            .ok_or_else(|| anyhow!("bucket '{bucket}' not found"))?;
+        match &b.read_cred {
+            Some(Credential(c)) if c == cred => {}
+            Some(_) => bail!("bad credential for bucket '{bucket}'"),
+            None => bail!("bucket '{bucket}' is not readable"),
+        }
+        b.gets += 1;
+        b.objects
+            .get(key)
+            .cloned()
+            .ok_or_else(|| anyhow!("object '{bucket}/{key}' not found"))
+    }
+
+    /// Object size without transferring it (HEAD).
+    pub fn head(&self, bucket: &str, key: &str) -> Result<usize> {
+        Ok(self
+            .bucket(bucket)?
+            .objects
+            .get(key)
+            .ok_or_else(|| anyhow!("object '{bucket}/{key}' not found"))?
+            .len())
+    }
+
+    /// List keys with a prefix.
+    pub fn list(&self, bucket: &str, prefix: &str) -> Result<Vec<String>> {
+        Ok(self
+            .bucket(bucket)?
+            .objects
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect())
+    }
+
+    pub fn delete(&mut self, bucket: &str, key: &str) -> Result<()> {
+        let b = self
+            .buckets
+            .get_mut(bucket)
+            .ok_or_else(|| anyhow!("bucket '{bucket}' not found"))?;
+        match b.objects.remove(key) {
+            Some(old) => {
+                b.bytes_stored -= old.len() as u64;
+                Ok(())
+            }
+            None => bail!("object '{bucket}/{key}' not found"),
+        }
+    }
+
+    /// Total bytes across all buckets.
+    pub fn total_bytes(&self) -> u64 {
+        self.buckets.values().map(|b| b.bytes_stored).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut s = ObjectStore::new();
+        s.create_bucket("peer-0", "cred0").unwrap();
+        s.put("peer-0", "round-1/grad.bin", vec![1, 2, 3]).unwrap();
+        assert_eq!(s.get("peer-0", "round-1/grad.bin", "cred0").unwrap(), vec![1, 2, 3]);
+        assert_eq!(s.head("peer-0", "round-1/grad.bin").unwrap(), 3);
+    }
+
+    #[test]
+    fn credential_enforced() {
+        let mut s = ObjectStore::new();
+        s.create_bucket("peer-0", "cred0").unwrap();
+        s.put("peer-0", "x", vec![0]).unwrap();
+        assert!(s.get("peer-0", "x", "wrong").is_err());
+    }
+
+    #[test]
+    fn overwrite_accounting() {
+        let mut s = ObjectStore::new();
+        s.create_bucket("b", "c").unwrap();
+        s.put("b", "k", vec![0; 100]).unwrap();
+        s.put("b", "k", vec![0; 40]).unwrap();
+        assert_eq!(s.bucket("b").unwrap().bytes_stored, 40);
+        assert_eq!(s.total_bytes(), 40);
+    }
+
+    #[test]
+    fn list_prefix() {
+        let mut s = ObjectStore::new();
+        s.create_bucket("b", "c").unwrap();
+        s.put("b", "r1/a", vec![]).unwrap();
+        s.put("b", "r1/b", vec![]).unwrap();
+        s.put("b", "r2/a", vec![]).unwrap();
+        assert_eq!(s.list("b", "r1/").unwrap().len(), 2);
+    }
+
+    #[test]
+    fn missing_errors() {
+        let mut s = ObjectStore::new();
+        assert!(s.get("nope", "k", "c").is_err());
+        s.create_bucket("b", "c").unwrap();
+        assert!(s.get("b", "nope", "c").is_err());
+        assert!(s.delete("b", "nope").is_err());
+        assert!(s.create_bucket("b", "c2").is_err());
+    }
+
+    #[test]
+    fn delete_bucket_and_object() {
+        let mut s = ObjectStore::new();
+        s.create_bucket("b", "c").unwrap();
+        s.put("b", "k", vec![9; 10]).unwrap();
+        s.delete("b", "k").unwrap();
+        assert_eq!(s.total_bytes(), 0);
+        s.delete_bucket("b").unwrap();
+        assert!(s.bucket("b").is_err());
+    }
+}

@@ -1,0 +1,73 @@
+//! Checkpoint I/O: flat parameter vectors as little-endian f32 files with
+//! a small header (the paper open-sources intermediate + final checkpoints;
+//! ours serve the anneal/SFT pipeline and the examples).
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+const MAGIC: &[u8; 8] = b"CVNTCKPT";
+
+/// Save a flat parameter vector.
+pub fn save(path: impl AsRef<Path>, params: &[f32]) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(MAGIC)?;
+    f.write_all(&(params.len() as u64).to_le_bytes())?;
+    // bulk write
+    let bytes: Vec<u8> = params.iter().flat_map(|x| x.to_le_bytes()).collect();
+    f.write_all(&bytes)?;
+    Ok(())
+}
+
+/// Load a flat parameter vector.
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<f32>> {
+    let path = path.as_ref();
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening checkpoint {}", path.display()))?;
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not a covenant checkpoint", path.display());
+    }
+    let mut lenb = [0u8; 8];
+    f.read_exact(&mut lenb)?;
+    let n = u64::from_le_bytes(lenb) as usize;
+    let mut bytes = Vec::new();
+    f.read_to_end(&mut bytes)?;
+    ensure!(bytes.len() == n * 4, "checkpoint truncated: {} != {}", bytes.len(), n * 4);
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("covenant-ckpt-test");
+        let path = dir.join("p.ckpt");
+        let params: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5 - 3.0).collect();
+        save(&path, &params).unwrap();
+        assert_eq!(load(&path).unwrap(), params);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("covenant-ckpt-test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ckpt");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,337 @@
+//! Learning-rate schedules — exact reproduction of the paper's Figure 2.
+//!
+//! Pre-training inner LR (§4.1): linear warmup of 1,500 inner steps to
+//! 1.2e-4, cosine decay toward 1.2e-5, *flattened* for 13,500 steps around
+//! the 80k mark (lower-than-planned participation required a longer
+//! horizon), then resumed decay; an annealing tail re-warms and rapidly
+//! decays on the high-quality mixture. The outer LR alpha is 1.0, dropped
+//! to 0.65 at 110k inner steps when metrics plateaued. SFT (§5) uses a 4k
+//! cosine stage then an 8k warmup/cosine-then-linear stage.
+//!
+//! `Schedule` is a piecewise combinator; every paper schedule is a
+//! constructor, and each can be *scaled* to our shorter runs while
+//! preserving the shape (same fractions of total).
+
+/// One schedule segment over `steps` inner steps.
+#[derive(Debug, Clone, Copy)]
+pub enum Segment {
+    /// Linear from `from` to `to`.
+    Linear { from: f64, to: f64, steps: usize },
+    /// Cosine from `from` to `to` (half period).
+    Cosine { from: f64, to: f64, steps: usize },
+    /// Constant hold.
+    Constant { lr: f64, steps: usize },
+}
+
+impl Segment {
+    pub fn steps(&self) -> usize {
+        match *self {
+            Segment::Linear { steps, .. }
+            | Segment::Cosine { steps, .. }
+            | Segment::Constant { steps, .. } => steps,
+        }
+    }
+
+    fn at(&self, i: usize) -> f64 {
+        match *self {
+            Segment::Linear { from, to, steps } => {
+                let t = i as f64 / steps.max(1) as f64;
+                from + (to - from) * t
+            }
+            Segment::Cosine { from, to, steps } => {
+                let t = i as f64 / steps.max(1) as f64;
+                to + (from - to) * 0.5 * (1.0 + (std::f64::consts::PI * t).cos())
+            }
+            Segment::Constant { lr, .. } => lr,
+        }
+    }
+
+    fn end(&self) -> f64 {
+        match *self {
+            Segment::Linear { to, .. } => to,
+            Segment::Cosine { to, .. } => to,
+            Segment::Constant { lr, .. } => lr,
+        }
+    }
+}
+
+/// Piecewise schedule.
+#[derive(Debug, Clone, Default)]
+pub struct Schedule {
+    pub segments: Vec<Segment>,
+}
+
+impl Schedule {
+    pub fn new(segments: Vec<Segment>) -> Self {
+        Self { segments }
+    }
+
+    pub fn total_steps(&self) -> usize {
+        self.segments.iter().map(|s| s.steps()).sum()
+    }
+
+    /// LR at inner step `step` (clamps to the final value afterwards).
+    pub fn lr(&self, step: usize) -> f64 {
+        let mut s = step;
+        for seg in &self.segments {
+            if s < seg.steps() {
+                return seg.at(s);
+            }
+            s -= seg.steps();
+        }
+        self.segments.last().map(|seg| seg.end()).unwrap_or(0.0)
+    }
+
+    /// LRs for a whole round starting at `step0` (input to train_round).
+    pub fn round_lrs(&self, step0: usize, h: usize) -> Vec<f32> {
+        (0..h).map(|i| self.lr(step0 + i) as f32).collect()
+    }
+
+    // --------------------------------------------------------------------
+    // Paper constructors (Figure 2)
+    // --------------------------------------------------------------------
+
+    /// Pre-training inner LR at full paper scale (inner steps).
+    ///
+    /// warmup 1,500 -> 1.2e-4; cosine toward 1.2e-5 with the decay split at
+    /// 80k by a 13,500-step flat window; resumed decay to ~1.2e-5 at the
+    /// pre-anneal point (~180.5k); anneal tail: re-warm to 4e-5 then decay
+    /// to ~0 over the final ~2.7k steps (90 outer steps of H=30).
+    pub fn covenant_pretrain() -> Self {
+        Self::covenant_pretrain_scaled(1.0)
+    }
+
+    /// Same shape compressed by `scale` (scale=1.0 is the paper's 183.3k
+    /// inner steps; scale=0.01 gives a 1.8k-step run with identical
+    /// fractions). LR magnitudes are preserved.
+    pub fn covenant_pretrain_scaled(scale: f64) -> Self {
+        let s = |x: f64| ((x * scale).round() as usize).max(1);
+        let peak = 1.2e-4;
+        let floor = 1.2e-5;
+        let warmup = s(1500.0);
+        // Cosine planned over the original horizon; flatten at 80k for
+        // 13.5k steps. We model it as: cosine part 1 (80k-1.5k steps of a
+        // 165k-step cosine), hold, cosine part 2 (remaining).
+        let cos_total = s(165_000.0);
+        let part1 = s(78_500.0);
+        let hold_steps = s(13_500.0);
+        let part2 = cos_total - part1;
+        // LR value where the flatten begins:
+        let frac1 = part1 as f64 / cos_total as f64;
+        let lr_at_flat =
+            floor + (peak - floor) * 0.5 * (1.0 + (std::f64::consts::PI * frac1).cos());
+        let anneal_warm = s(300.0);
+        let anneal_decay = s(2_400.0);
+        Schedule::new(vec![
+            Segment::Linear { from: 0.0, to: peak, steps: warmup },
+            Segment::Cosine { from: peak, to: lr_at_flat, steps: part1 },
+            Segment::Constant { lr: lr_at_flat, steps: hold_steps },
+            Segment::Cosine { from: lr_at_flat, to: floor, steps: part2 },
+            // Annealing phase (§4.1): warm up and rapidly decay on HQ data.
+            Segment::Linear { from: floor, to: 4e-5, steps: anneal_warm },
+            Segment::Cosine { from: 4e-5, to: 1e-6, steps: anneal_decay },
+        ])
+    }
+
+    /// SFT stage 1 (4k context): 3% warmup then cosine spanning 1.5 epochs
+    /// (stage stops at 36,500 of the 80,514-step cosine -> ends ~2.97e-6).
+    pub fn sft_stage1() -> Self {
+        Self::sft_stage1_scaled(1.0)
+    }
+
+    pub fn sft_stage1_scaled(scale: f64) -> Self {
+        let s = |x: f64| ((x * scale).round() as usize).max(1);
+        let peak = 5e-6;
+        let span = s(80_514.0); // 1.5 epochs
+        let warmup = (span as f64 * 0.03).round() as usize;
+        Schedule::new(vec![
+            Segment::Linear { from: 0.0, to: peak, steps: warmup },
+            Segment::Cosine { from: peak, to: 0.0, steps: span - warmup },
+        ])
+    }
+
+    /// Steps actually run in stage 1 (68% of one epoch = 36,500 at scale 1).
+    pub fn sft_stage1_run_steps(scale: f64) -> usize {
+        ((36_500.0 * scale).round() as usize).max(1)
+    }
+
+    /// SFT stage 2 (8k context + 20% replay): warmup 25 steps from the
+    /// stage-1 handoff (~2.97e-6) to 3.57e-6, cosine to step 10,100, then
+    /// linear to zero over the remaining 10,400 (20,500 total).
+    pub fn sft_stage2() -> Self {
+        Self::sft_stage2_scaled(1.0)
+    }
+
+    pub fn sft_stage2_scaled(scale: f64) -> Self {
+        let s = |x: f64| ((x * scale).round() as usize).max(1);
+        let handoff = 2.97e-6;
+        let peak = 3.57e-6;
+        let warmup = s(25.0);
+        let cos = s(10_100.0) - warmup;
+        let lin = s(10_400.0);
+        // cosine is cut at 10,100 of a notional longer horizon; model the
+        // value reached there as 60% of peak then linear to zero.
+        let cut = 0.6 * peak;
+        Schedule::new(vec![
+            Segment::Linear { from: handoff, to: peak, steps: warmup },
+            Segment::Cosine { from: peak, to: cut, steps: cos },
+            Segment::Linear { from: cut, to: 0.0, steps: lin },
+        ])
+    }
+
+    /// Emit a CSV series (step, lr) sampled every `stride` steps.
+    pub fn to_csv(&self, stride: usize) -> String {
+        let mut out = String::from("step,lr\n");
+        let total = self.total_steps();
+        let mut s = 0;
+        while s <= total {
+            out.push_str(&format!("{s},{:.6e}\n", self.lr(s)));
+            s += stride;
+        }
+        out
+    }
+}
+
+/// The outer (Nesterov-free SGD) LR alpha over *outer* rounds:
+/// 1.0, dropped to 0.65 at the plateau (110k inner steps = round 3,667 at
+/// H=30; paper §4.1).
+#[derive(Debug, Clone)]
+pub struct OuterAlphaSchedule {
+    pub initial: f64,
+    pub dropped: f64,
+    /// Inner-step index of the drop.
+    pub drop_at_inner_step: usize,
+    pub inner_steps_per_round: usize,
+}
+
+impl OuterAlphaSchedule {
+    pub fn paper(h: usize) -> Self {
+        Self { initial: 1.0, dropped: 0.65, drop_at_inner_step: 110_000, inner_steps_per_round: h }
+    }
+
+    pub fn scaled(scale: f64, h: usize) -> Self {
+        Self {
+            initial: 1.0,
+            dropped: 0.65,
+            drop_at_inner_step: ((110_000.0 * scale).round() as usize).max(1),
+            inner_steps_per_round: h,
+        }
+    }
+
+    pub fn alpha(&self, round: usize) -> f64 {
+        if round * self.inner_steps_per_round >= self.drop_at_inner_step {
+            self.dropped
+        } else {
+            self.initial
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_knot_values() {
+        let s = Schedule::covenant_pretrain();
+        // warmup endpoint
+        assert!((s.lr(1500) - 1.2e-4).abs() < 1e-9);
+        assert!(s.lr(0) < 1e-7);
+        // flatten window: constant between 80k and 93.5k
+        let a = s.lr(81_000);
+        let b = s.lr(92_000);
+        assert!((a - b).abs() < 1e-12, "flat window not flat: {a} vs {b}");
+        // near the floor just before anneal
+        let pre_anneal = 1500 + 78_500 + 13_500 + (165_000 - 78_500);
+        let v = s.lr(pre_anneal - 1);
+        assert!((v - 1.2e-5).abs() < 1e-6, "floor = {v}");
+        // anneal re-warms above floor then decays below it
+        let warm_peak = s.lr(pre_anneal + 300);
+        assert!(warm_peak > 3.9e-5);
+        let end = s.lr(s.total_steps());
+        assert!(end <= 1.1e-6);
+    }
+
+    #[test]
+    fn monotone_decay_outside_warmup_and_flat() {
+        let s = Schedule::covenant_pretrain();
+        // cosine part 1 strictly decreasing
+        assert!(s.lr(10_000) > s.lr(40_000));
+        assert!(s.lr(40_000) > s.lr(79_000));
+        // after flatten, resumes decreasing
+        assert!(s.lr(95_000) > s.lr(150_000));
+    }
+
+    #[test]
+    fn continuity_at_segment_joints() {
+        for sc in [Schedule::covenant_pretrain(), Schedule::sft_stage1(), Schedule::sft_stage2()] {
+            let mut boundary = 0usize;
+            for seg in &sc.segments[..sc.segments.len() - 1] {
+                boundary += seg.steps();
+                let before = sc.lr(boundary - 1);
+                let after = sc.lr(boundary);
+                // Allow the anneal re-warm jump only where slope changes
+                // smoothly; max step-to-step change bounded by warmup slope.
+                assert!(
+                    (after - before).abs() < 2e-7,
+                    "jump at {boundary}: {before} -> {after}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_preserves_shape() {
+        let full = Schedule::covenant_pretrain();
+        let small = Schedule::covenant_pretrain_scaled(0.01);
+        let ft = full.total_steps() as f64;
+        let st = small.total_steps() as f64;
+        for frac in [0.05, 0.3, 0.55, 0.85, 0.99] {
+            let a = full.lr((ft * frac) as usize);
+            let b = small.lr((st * frac) as usize);
+            assert!((a - b).abs() < 0.15 * a.max(1e-9), "shape drift at {frac}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn sft_stage1_handoff_matches_paper() {
+        // §5: stage-1 cosine leaves off at ~2.97e-6 after 36,500 steps.
+        let s = Schedule::sft_stage1();
+        let v = s.lr(Schedule::sft_stage1_run_steps(1.0));
+        assert!((v - 2.97e-6).abs() < 0.1e-6, "handoff = {v:e}");
+    }
+
+    #[test]
+    fn sft_stage2_ends_at_zero() {
+        let s = Schedule::sft_stage2();
+        assert_eq!(s.total_steps(), 20_500);
+        assert!(s.lr(20_500) < 1e-12);
+        // warmup peak
+        assert!((s.lr(25) - 3.57e-6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn outer_alpha_drop() {
+        let a = OuterAlphaSchedule::paper(30);
+        assert_eq!(a.alpha(0), 1.0);
+        assert_eq!(a.alpha(3_666), 1.0);
+        assert_eq!(a.alpha(3_667), 0.65); // 3667*30 = 110,010 >= 110k
+    }
+
+    #[test]
+    fn round_lrs_match_pointwise() {
+        let s = Schedule::covenant_pretrain();
+        let lrs = s.round_lrs(1000, 30);
+        for (i, &lr) in lrs.iter().enumerate() {
+            assert!((lr as f64 - s.lr(1000 + i)).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn csv_emission() {
+        let s = Schedule::sft_stage2();
+        let csv = s.to_csv(5000);
+        assert!(csv.starts_with("step,lr\n"));
+        assert!(csv.lines().count() >= 4);
+    }
+}

@@ -1,0 +1,9 @@
+//! Training layer: LR schedules (Fig. 2), the single-process trainer
+//! driver used by baselines/benches, and the anneal + SFT stages.
+
+pub mod checkpoint;
+pub mod lr_schedule;
+pub mod trainer;
+
+pub use lr_schedule::{OuterAlphaSchedule, Schedule, Segment};
+pub use trainer::Trainer;

@@ -1,0 +1,95 @@
+//! Single-replica trainer: owns one model replica's full state (params +
+//! inner AdamW moments) and drives inner steps/rounds through the engine.
+//!
+//! Used by every simulated peer, by the centralized AdamW baseline
+//! (Table 1), and by the anneal/SFT stages.
+
+use anyhow::Result;
+
+use crate::runtime::{ops, Engine};
+
+/// One replica's training state.
+pub struct Trainer<'e> {
+    pub eng: &'e Engine,
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Global inner-step counter (drives Adam bias correction + schedule).
+    pub inner_step: usize,
+    /// Gradient clip (0 disables; SFT uses 1.0 per §5).
+    pub clip: f32,
+}
+
+impl<'e> Trainer<'e> {
+    /// Fresh replica from the deterministic initializer.
+    pub fn new(eng: &'e Engine, seed: i32) -> Result<Self> {
+        let params = ops::init_params(eng, seed)?;
+        Ok(Self::from_params(eng, params))
+    }
+
+    /// Replica starting from existing parameters (peer join / SFT).
+    pub fn from_params(eng: &'e Engine, params: Vec<f32>) -> Self {
+        let n = params.len();
+        Trainer { eng, params, m: vec![0.0; n], v: vec![0.0; n], inner_step: 0, clip: 0.0 }
+    }
+
+    /// Reset optimizer state (fresh inner optimizer after a phase switch).
+    pub fn reset_optimizer(&mut self) {
+        self.m.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+        self.inner_step = 0;
+    }
+
+    /// Overwrite parameters (outer sync) keeping optimizer state — exactly
+    /// what SparseLoCo peers do after the outer step.
+    pub fn set_params(&mut self, params: Vec<f32>) {
+        assert_eq!(params.len(), self.params.len());
+        self.params = params;
+    }
+
+    /// One inner step. Returns the loss.
+    pub fn step(&mut self, tokens: &[i32], mask: &[f32], lr: f32) -> Result<f32> {
+        let (p, m, v, loss) = ops::train_step(
+            self.eng,
+            &self.params,
+            &self.m,
+            &self.v,
+            (self.inner_step + 1) as f32,
+            tokens,
+            mask,
+            lr,
+            self.clip,
+        )?;
+        self.params = p;
+        self.m = m;
+        self.v = v;
+        self.inner_step += 1;
+        Ok(loss)
+    }
+
+    /// One fused H-step round (the compute phase). Returns per-step losses.
+    pub fn round(&mut self, tokens: &[i32], mask: &[f32], lrs: &[f32]) -> Result<Vec<f32>> {
+        let h = lrs.len();
+        let (p, m, v, losses) = ops::train_round(
+            self.eng,
+            &self.params,
+            &self.m,
+            &self.v,
+            self.inner_step as f32,
+            tokens,
+            mask,
+            lrs,
+            self.clip,
+        )?;
+        self.params = p;
+        self.m = m;
+        self.v = v;
+        self.inner_step += h;
+        Ok(losses)
+    }
+
+    /// Evaluate mean loss on a batch without touching state.
+    pub fn eval(&self, tokens: &[i32], mask: &[f32]) -> Result<f32> {
+        ops::eval_loss(self.eng, &self.params, tokens, mask)
+    }
+}

@@ -1,0 +1,111 @@
+//! Minimal CLI argument parsing (offline environment; no clap).
+//!
+//! Supports `command --flag value --bool-flag positional` style:
+//! `Args::parse()` splits argv into a subcommand, `--key value` options
+//! and bare positionals.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from process argv (skipping argv[0]).
+    pub fn parse() -> Self {
+        Self::from_vec(std::env::args().skip(1).collect())
+    }
+
+    pub fn from_vec(argv: Vec<String>) -> Self {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(key) = tok.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    a.options.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    a.options.insert(key.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.push(key.to_string());
+                }
+            } else if a.command.is_none() && a.positional.is_empty() {
+                a.command = Some(tok.clone());
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow!("--{key} expects an integer, got '{s}'")),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow!("--{key} expects a number, got '{s}'")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| anyhow!("--{key} expects an integer, got '{s}'")),
+        }
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_options_flags() {
+        let a = Args::from_vec(v(&["train", "--rounds", "10", "--verbose", "--k=3", "pos1"]));
+        assert_eq!(a.command.as_deref(), Some("train"));
+        assert_eq!(a.get("rounds"), Some("10"));
+        assert_eq!(a.get("k"), Some("3"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1".to_string()]);
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = Args::from_vec(v(&["x", "--n", "5", "--f", "2.5"]));
+        assert_eq!(a.get_usize("n", 1).unwrap(), 5);
+        assert_eq!(a.get_f64("f", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+        assert!(Args::from_vec(v(&["x", "--n", "zzz", "--q", "1"]))
+            .get_usize("n", 1)
+            .is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! In-crate substrate utilities (this environment is offline, so these
+//! replace serde/clap/rand/criterion): JSON, deterministic RNG, CLI
+//! parsing, stats/bench harness, and a tiny property-test helper.
+
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,140 @@
+//! Ablation: error-feedback decay beta sweep on the manual SparseLoCo
+//! loop (DESIGN.md ablation hook). Run explicitly:
+//!   cargo test --release --test ef_sweep -- --ignored --nocapture
+
+use covenant::data::grammar::GrammarKind;
+use covenant::data::{BatchSampler, Grammar};
+use covenant::runtime::{ops, Engine};
+use covenant::sparseloco::Payload;
+use covenant::train::Trainer;
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts/tiny", env!("CARGO_MANIFEST_DIR"))
+}
+
+fn run_beta(eng: &Engine, beta: f32, rounds: usize, lr: f32) -> f32 {
+    let man = eng.manifest().clone();
+    let h = man.config.inner_steps;
+    let peers = 4;
+    let na = man.n_alloc;
+    let grammar = Grammar::new(man.config.vocab_size, 0x11 ^ 0xDA7A);
+    let mut global = ops::init_params(eng, 0x11).unwrap();
+    let lrs = vec![lr; h];
+    let mut states: Vec<(Trainer, BatchSampler, Vec<f32>)> = (0..peers)
+        .map(|i| {
+            let stream = grammar.stream(GrammarKind::Web, i as u64, 200_000);
+            let sampler =
+                BatchSampler::new(stream, man.config.seq_len, man.config.batch_size, i as u64);
+            (Trainer::from_params(eng, global.clone()), sampler, vec![0f32; na])
+        })
+        .collect();
+    for _ in 0..rounds {
+        let mut payloads: Vec<Payload> = Vec::new();
+        for (tr, sampler, ef) in states.iter_mut() {
+            let tokens = sampler.round_batch(h);
+            let mask = sampler.ones_round_mask(h);
+            tr.round(&tokens, &mask, &lrs).unwrap();
+            let delta: Vec<f32> = global.iter().zip(&tr.params).map(|(g, l)| g - l).collect();
+            let (ef2, payload) = ops::compress(eng, &delta, ef, beta).unwrap();
+            *ef = ef2;
+            payloads.push(payload);
+        }
+        let refs: Vec<&Payload> = payloads.iter().collect();
+        let delta = covenant::coordinator::aggregate(&refs, na).unwrap();
+        global = ops::outer_step(eng, &global, &delta, 1.0).unwrap();
+        for (tr, _, _) in states.iter_mut() {
+            tr.set_params(global.clone());
+        }
+    }
+    let stream = grammar.stream(GrammarKind::Web, 0xE0E0, 30_000);
+    let mut sampler =
+        BatchSampler::new(stream, man.config.seq_len, man.config.batch_size, 0x77);
+    ops::eval_loss(eng, &global, &sampler.batch(), &sampler.ones_mask()).unwrap()
+}
+
+fn net_loss(extra: usize, p_leave: f64, p_adv: f64, p_slow: f64, seed: u64) -> f32 {
+    use covenant::config::run::RunConfig;
+    use covenant::coordinator::network::{Network, NetworkParams};
+    use covenant::train::{OuterAlphaSchedule, Schedule, Segment};
+    let eng = Engine::new(artifacts_dir()).unwrap();
+    let man = eng.manifest().clone();
+    let h = man.config.inner_steps;
+    let rounds = 45;
+    let mut run = RunConfig::default();
+    run.artifacts = artifacts_dir();
+    run.max_contributors = 4;
+    run.target_active = 4 + extra;
+    run.seed = seed;
+    let mut p = NetworkParams::quick(run, h, rounds);
+    p.initial_peers = 4;
+    p.churn.p_adversarial = p_adv;
+    p.churn.p_leave = p_leave;
+    p.p_slow_upload = p_slow;
+    p.schedule = Schedule::new(vec![Segment::Constant { lr: 3e-3, steps: 1 << 20 }]);
+    p.alpha = OuterAlphaSchedule::scaled(1.0, h);
+    let mut net = Network::new(&eng, p).unwrap();
+    for _ in 0..rounds {
+        net.run_round().unwrap();
+    }
+    let grammar = Grammar::new(man.config.vocab_size, seed ^ 0xDA7A);
+    let stream = grammar.stream(GrammarKind::Web, 0xE0E0, 30_000);
+    let mut sampler =
+        BatchSampler::new(stream, man.config.seq_len, man.config.batch_size, 0x77);
+    ops::eval_loss(&eng, &net.global_params, &sampler.batch(), &sampler.ones_mask()).unwrap()
+}
+
+#[test]
+#[ignore = "env bisect; run with --ignored --nocapture"]
+fn env_bisect() {
+    println!("clean(4,0,0,0):      {:.4}", net_loss(0, 0.0, 0.0, 0.0, 0x7AB1));
+    println!("+extra2:             {:.4}", net_loss(2, 0.0, 0.0, 0.0, 0x7AB1));
+    println!("+churn 0.02:         {:.4}", net_loss(2, 0.02, 0.0, 0.0, 0x7AB1));
+    println!("+adv 0.15:           {:.4}", net_loss(2, 0.02, 0.15, 0.0, 0x7AB1));
+    println!("+slow 0.04 (=table1):{:.4}", net_loss(2, 0.02, 0.15, 0.04, 0x7AB1));
+}
+
+#[test]
+#[ignore = "env ablation; run with --ignored --nocapture"]
+fn clean_network_vs_manual_45() {
+    use covenant::config::run::RunConfig;
+    use covenant::coordinator::network::{Network, NetworkParams};
+    use covenant::train::{OuterAlphaSchedule, Schedule, Segment};
+    let eng = Engine::new(artifacts_dir()).unwrap();
+    let man = eng.manifest().clone();
+    let h = man.config.inner_steps;
+    let rounds = 45;
+    let mut run = RunConfig::default();
+    run.artifacts = artifacts_dir();
+    run.max_contributors = 4;
+    run.target_active = 4;
+    run.seed = 0x11;
+    let mut p = NetworkParams::quick(run, h, rounds);
+    p.initial_peers = 4;
+    p.churn.p_adversarial = 0.0;
+    p.churn.p_leave = 0.0;
+    p.p_slow_upload = 0.0;
+    p.schedule = Schedule::new(vec![Segment::Constant { lr: 3e-3, steps: 1 << 20 }]);
+    p.alpha = OuterAlphaSchedule::scaled(1.0, h);
+    let mut net = Network::new(&eng, p).unwrap();
+    for _ in 0..rounds {
+        net.run_round().unwrap();
+    }
+    let grammar = Grammar::new(man.config.vocab_size, 0x11 ^ 0xDA7A);
+    let stream = grammar.stream(GrammarKind::Web, 0xE0E0, 30_000);
+    let mut sampler =
+        BatchSampler::new(stream, man.config.seq_len, man.config.batch_size, 0x77);
+    let loss = ops::eval_loss(&eng, &net.global_params, &sampler.batch(), &sampler.ones_mask()).unwrap();
+    println!("clean network 45 rounds -> {loss:.4}");
+    let manual = run_beta(&eng, 0.95, 45, 3e-3);
+    println!("manual EF    45 rounds -> {manual:.4}");
+}
+
+#[test]
+#[ignore = "ablation sweep; run with --ignored --nocapture"]
+fn ef_beta_sweep() {
+    let eng = Engine::new(artifacts_dir()).unwrap();
+    for beta in [0.0f32, 0.5, 0.9, 0.95, 1.0] {
+        let loss = run_beta(&eng, beta, 20, 3e-3);
+        println!("beta={beta:<5} -> held-out loss {loss:.4}");
+    }
+}

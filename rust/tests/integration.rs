@@ -1,0 +1,228 @@
+//! Integration tests over the real AOT artifacts (tiny config).
+//! Requires `make artifacts` to have produced artifacts/tiny.
+
+use covenant::config::run::RunConfig;
+use covenant::coordinator::network::{Network, NetworkParams};
+use covenant::data::grammar::GrammarKind;
+use covenant::data::{Grammar, ShardStore};
+use covenant::eval::{EvalSuite, Scorer};
+use covenant::runtime::{ops, Engine};
+use covenant::sparseloco::{codec, topk};
+use covenant::storage::ObjectStore;
+use covenant::train::{OuterAlphaSchedule, Schedule, Trainer};
+use covenant::util::rng::Rng;
+
+fn artifacts_dir() -> String {
+    let root = env!("CARGO_MANIFEST_DIR");
+    format!("{root}/artifacts/tiny")
+}
+
+fn engine() -> Engine {
+    Engine::new(artifacts_dir()).expect("run `make artifacts` first")
+}
+
+#[test]
+fn manifest_matches_rust_layout() {
+    let eng = engine();
+    let man = eng.manifest();
+    let cfg = covenant::config::presets::get("tiny").unwrap();
+    let lay = covenant::config::Layout::build(&cfg);
+    assert_eq!(man.n_alloc, lay.n_alloc);
+    assert_eq!(man.n_params, lay.n_params);
+    assert_eq!(man.n_chunks, lay.n_chunks());
+    // tensor-by-tensor
+    assert_eq!(man.tensors.len(), lay.slots.len());
+    for (a, b) in man.tensors.iter().zip(&lay.slots) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.offset, b.offset);
+        assert_eq!(a.size, b.size);
+    }
+}
+
+#[test]
+fn xla_compress_matches_rust_reference() {
+    let eng = engine();
+    let man = eng.manifest();
+    let na = man.n_alloc;
+    let mut rng = Rng::new(42);
+    let delta: Vec<f32> = (0..na).map(|_| rng.normal() as f32 * 1e-3).collect();
+    let ef: Vec<f32> = (0..na).map(|_| rng.normal() as f32 * 1e-4).collect();
+    let beta = 0.95f32;
+    let (ef_xla, payload_xla) = ops::compress(&eng, &delta, &ef, beta).unwrap();
+    let (payload_rs, ef_rs) =
+        topk::compress_with_ef(&delta, &ef, beta, man.config.chunk, man.config.topk);
+    // identical selections + codes
+    assert_eq!(payload_xla.idx, payload_rs.idx);
+    assert_eq!(payload_xla.codes, payload_rs.codes);
+    for (a, b) in payload_xla.scales.iter().zip(&payload_rs.scales) {
+        assert!((a - b).abs() <= 1e-6 * a.abs().max(1e-6), "{a} vs {b}");
+    }
+    for i in 0..na {
+        assert!((ef_xla[i] - ef_rs[i]).abs() < 1e-5, "ef mismatch at {i}");
+    }
+    // decompress agreement: XLA path vs pure-Rust scatter
+    let dense_xla = ops::decompress_xla(&eng, &payload_xla).unwrap();
+    let dense_rs = payload_xla.to_dense();
+    for i in 0..na {
+        assert!((dense_xla[i] - dense_rs[i]).abs() < 1e-6);
+    }
+}
+
+#[test]
+fn wire_roundtrip_through_real_payload() {
+    let eng = engine();
+    let man = eng.manifest();
+    let na = man.n_alloc;
+    let mut rng = Rng::new(1);
+    let delta: Vec<f32> = (0..na).map(|_| rng.normal() as f32 * 1e-3).collect();
+    let (_, payload) = ops::compress(&eng, &delta, &vec![0.0; na], 0.95).unwrap();
+    let wire = codec::encode(&payload);
+    // paper geometry: ~14.5 bits/value incl. scales+header
+    let bpv = wire.len() as f64 * 8.0 / payload.n_values() as f64;
+    assert!(bpv < 15.0, "bits/value = {bpv}");
+    let decoded = codec::decode(&wire).unwrap();
+    assert_eq!(decoded, payload);
+}
+
+#[test]
+fn trainer_loss_decreases_on_fixed_batch() {
+    let eng = engine();
+    let man = eng.manifest().clone();
+    let mut t = Trainer::new(&eng, 0).unwrap();
+    let g = Grammar::new(man.config.vocab_size, 7);
+    let stream = g.stream(GrammarKind::Web, 0, 20_000);
+    let mut sampler = covenant::data::BatchSampler::new(
+        stream,
+        man.config.seq_len,
+        man.config.batch_size,
+        3,
+    );
+    let tokens = sampler.batch();
+    let mask = sampler.ones_mask();
+    let l0 = t.eval(&tokens, &mask).unwrap();
+    for _ in 0..8 {
+        t.step(&tokens, &mask, 3e-3).unwrap();
+    }
+    let l1 = t.eval(&tokens, &mask).unwrap();
+    assert!(
+        l1 < l0 - 0.3,
+        "loss did not decrease enough: {l0} -> {l1}"
+    );
+}
+
+#[test]
+fn sparseloco_two_replicas_agree_after_round() {
+    // Two peers starting from the same params, after exchanging compressed
+    // pseudo-gradients and applying the same outer step, hold identical
+    // models (the SparseLoCo synchronization invariant).
+    let eng = engine();
+    let man = eng.manifest().clone();
+    let g = Grammar::new(man.config.vocab_size, 11);
+    let params = ops::init_params(&eng, 5).unwrap();
+    let h = man.config.inner_steps;
+    let lrs = vec![2e-3f32; h];
+    let mut payloads = Vec::new();
+    let mut replicas = Vec::new();
+    for peer in 0..2 {
+        let mut tr = Trainer::from_params(&eng, params.clone());
+        let stream = g.stream(GrammarKind::Web, peer as u64, 20_000);
+        let mut sampler = covenant::data::BatchSampler::new(
+            stream,
+            man.config.seq_len,
+            man.config.batch_size,
+            peer as u64,
+        );
+        let tokens = sampler.round_batch(h);
+        let mask = sampler.ones_round_mask(h);
+        tr.round(&tokens, &mask, &lrs).unwrap();
+        let delta: Vec<f32> =
+            params.iter().zip(&tr.params).map(|(g, l)| g - l).collect();
+        let (_, payload) =
+            ops::compress(&eng, &delta, &vec![0.0; params.len()], 0.95).unwrap();
+        payloads.push(payload);
+        replicas.push(tr);
+    }
+    let refs: Vec<&covenant::sparseloco::Payload> = payloads.iter().collect();
+    let delta = covenant::coordinator::aggregate(&refs, params.len()).unwrap();
+    let new_global_a = ops::outer_step(&eng, &params, &delta, 1.0).unwrap();
+    let new_global_b = ops::outer_step(&eng, &params, &delta, 1.0).unwrap();
+    assert_eq!(new_global_a, new_global_b);
+    // and the outer step moved the model
+    let moved = new_global_a
+        .iter()
+        .zip(&params)
+        .filter(|(a, b)| a != b)
+        .count();
+    assert!(moved > params.len() / 100, "outer step barely moved: {moved}");
+}
+
+#[test]
+fn network_three_rounds_loss_falls_and_adversaries_filtered() {
+    let eng = engine();
+    let mut run = RunConfig::default();
+    run.artifacts = artifacts_dir();
+    run.rounds = 3;
+    run.max_contributors = 6;
+    run.target_active = 8;
+    run.seed = 99;
+    let h = eng.manifest().config.inner_steps;
+    let mut p = NetworkParams::quick(run, h, 50);
+    p.initial_peers = 8;
+    p.schedule = Schedule::new(vec![covenant::train::Segment::Constant {
+        lr: 2e-3,
+        steps: 100_000,
+    }]);
+    p.alpha = OuterAlphaSchedule::scaled(1.0, h);
+    p.churn.p_adversarial = 0.3;
+    let mut net = Network::new(&eng, p).unwrap();
+    let mut first_loss = None;
+    let mut last_loss = 0.0;
+    for _ in 0..3 {
+        let rep = net.run_round().unwrap();
+        assert!(rep.contributing <= 6);
+        assert!(rep.contributing > 0, "no contributors selected");
+        if first_loss.is_none() {
+            first_loss = Some(rep.mean_loss);
+        }
+        last_loss = rep.mean_loss;
+        // honest majority: adversaries that did get selected are rare
+        assert!(rep.adversarial_selected <= rep.contributing / 2);
+        // timeline sanity
+        assert!(rep.t_comm() >= 0.0);
+        assert!(rep.utilization() > 0.5);
+    }
+    assert!(
+        last_loss < first_loss.unwrap(),
+        "loss did not fall: {first_loss:?} -> {last_loss}"
+    );
+    assert!(net.unique_peers_ever() >= 8);
+}
+
+#[test]
+fn eval_scorer_runs_and_untrained_model_is_at_chance() {
+    let eng = engine();
+    let man = eng.manifest();
+    let g = Grammar::new(man.config.vocab_size, 42);
+    let params = ops::init_params(&eng, 0).unwrap();
+    let scorer = Scorer::new(&eng);
+    let res = scorer
+        .run_suite(&params, &g, EvalSuite::FactsEasy, 40, 1)
+        .unwrap();
+    assert_eq!(res.n, 40);
+    // untrained: near chance (25%), allow wide noise band
+    let acc = res.accuracy();
+    assert!(acc < 0.6, "untrained accuracy suspiciously high: {acc}");
+}
+
+#[test]
+fn shard_pipeline_through_object_store() {
+    let eng = engine();
+    let man = eng.manifest();
+    let g = Grammar::new(man.config.vocab_size, 3);
+    let ss = ShardStore::new(g, 8192, 8);
+    let mut store = ObjectStore::new();
+    ss.publish(&mut store, GrammarKind::Web).unwrap();
+    let toks = ss.fetch(&mut store, GrammarKind::Web, 2).unwrap();
+    assert_eq!(toks.len(), 8192);
+    assert!(toks.iter().all(|&t| (t as usize) < man.config.vocab_size));
+}

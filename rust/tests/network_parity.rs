@@ -1,0 +1,97 @@
+//! Parity experiment: the full Network path (Gauntlet + churn disabled /
+//! neutralized) must match a hand-rolled SparseLoCo loop with the same
+//! peers, data and schedule. Guards against coordinator-level training
+//! bugs that unit tests can't see.
+
+use covenant::config::run::RunConfig;
+use covenant::coordinator::network::{Network, NetworkParams};
+use covenant::data::grammar::GrammarKind;
+use covenant::data::{BatchSampler, Grammar};
+use covenant::runtime::{ops, Engine};
+use covenant::sparseloco::Payload;
+use covenant::train::{OuterAlphaSchedule, Schedule, Segment, Trainer};
+
+fn artifacts_dir() -> String {
+    format!("{}/artifacts/tiny", env!("CARGO_MANIFEST_DIR"))
+}
+
+#[test]
+fn network_matches_manual_sparseloco_quality() {
+    let eng = Engine::new(artifacts_dir()).expect("run `make artifacts`");
+    let man = eng.manifest().clone();
+    let h = man.config.inner_steps;
+    let peers = 4usize;
+    let rounds = 8usize;
+    let lr = 2e-3f32;
+
+    // ---- network path, adversary-free, churn-free --------------------------
+    let mut run = RunConfig::default();
+    run.artifacts = artifacts_dir();
+    run.max_contributors = peers;
+    run.target_active = peers;
+    run.seed = 0x11;
+    let mut p = NetworkParams::quick(run, h, rounds);
+    p.initial_peers = peers;
+    p.churn.p_adversarial = 0.0;
+    p.churn.p_leave = 0.0;
+    p.p_slow_upload = 0.0;
+    p.schedule = Schedule::new(vec![Segment::Constant { lr: lr as f64, steps: 1 << 20 }]);
+    p.alpha = OuterAlphaSchedule::scaled(1.0, h);
+    let mut net = Network::new(&eng, p).unwrap();
+    for _ in 0..rounds {
+        let rep = net.run_round().unwrap();
+        if rep.contributing != peers {
+            for r in &rep.rejections {
+                eprintln!("  rejection: {r}");
+            }
+        }
+        assert_eq!(rep.contributing, peers, "all honest peers must be selected");
+    }
+
+    // ---- manual SparseLoCo loop (same compression, with EF) -----------------
+    let grammar = Grammar::new(man.config.vocab_size, 0x11 ^ 0xDA7A);
+    let mut global = ops::init_params(&eng, 0x11).unwrap();
+    let na = man.n_alloc;
+    let lrs = vec![lr; h];
+    let mut states: Vec<(Trainer, BatchSampler, Vec<f32>)> = (0..peers)
+        .map(|i| {
+            let stream = grammar.stream(GrammarKind::Web, i as u64, 100_000);
+            let sampler =
+                BatchSampler::new(stream, man.config.seq_len, man.config.batch_size, i as u64);
+            (Trainer::from_params(&eng, global.clone()), sampler, vec![0f32; na])
+        })
+        .collect();
+    for _ in 0..rounds {
+        let mut payloads: Vec<Payload> = Vec::new();
+        for (tr, sampler, ef) in states.iter_mut() {
+            let tokens = sampler.round_batch(h);
+            let mask = sampler.ones_round_mask(h);
+            tr.round(&tokens, &mask, &lrs).unwrap();
+            let delta: Vec<f32> =
+                global.iter().zip(&tr.params).map(|(g, l)| g - l).collect();
+            let (ef2, payload) = ops::compress(&eng, &delta, ef, 0.95).unwrap();
+            *ef = ef2;
+            payloads.push(payload);
+        }
+        let refs: Vec<&Payload> = payloads.iter().collect();
+        let delta = covenant::coordinator::aggregate(&refs, na).unwrap();
+        global = ops::outer_step(&eng, &global, &delta, 1.0).unwrap();
+        for (tr, _, _) in states.iter_mut() {
+            tr.set_params(global.clone());
+        }
+    }
+
+    // ---- compare on a held-out batch ---------------------------------------
+    let stream = grammar.stream(GrammarKind::Web, 0xE0E0, 30_000);
+    let mut sampler =
+        BatchSampler::new(stream, man.config.seq_len, man.config.batch_size, 0x77);
+    let tokens = sampler.batch();
+    let mask = sampler.ones_mask();
+    let loss_net = ops::eval_loss(&eng, &net.global_params, &tokens, &mask).unwrap();
+    let loss_manual = ops::eval_loss(&eng, &global, &tokens, &mask).unwrap();
+    println!("network: {loss_net:.4}  manual: {loss_manual:.4}");
+    assert!(
+        (loss_net - loss_manual).abs() < 0.25,
+        "network path diverges from manual SparseLoCo: {loss_net:.4} vs {loss_manual:.4}"
+    );
+}
