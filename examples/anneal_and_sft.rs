@@ -13,6 +13,8 @@
 //! 4. *SFT stage 2*: continued with 20% pre-training replay,
 //! 5. evals after every phase.
 
+#![allow(clippy::field_reassign_with_default)]
+
 use anyhow::Result;
 use covenant::config::run::RunConfig;
 use covenant::coordinator::network::{Network, NetworkParams};

@@ -13,6 +13,8 @@
 //! `<out>/timeline.csv`, participation to `<out>/participation.csv`, and
 //! runs the benchmark suites before/after (recorded in EXPERIMENTS.md).
 
+#![allow(clippy::field_reassign_with_default)]
+
 use anyhow::Result;
 use covenant::config::run::RunConfig;
 use covenant::coordinator::network::{Network, NetworkParams};

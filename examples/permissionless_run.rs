@@ -10,6 +10,8 @@
 //! Prints per-round validator verdicts (who was selected, who was caught,
 //! and why) and the participation summary.
 
+#![allow(clippy::field_reassign_with_default)]
+
 use anyhow::Result;
 use covenant::config::run::RunConfig;
 use covenant::coordinator::network::{Network, NetworkParams};

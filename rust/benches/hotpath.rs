@@ -1,27 +1,71 @@
-//! Hot-path microbenchmarks (§Perf instrument): XLA artifact execution
-//! times, the pure-Rust aggregation path, and the wire codec — the
-//! components that bound per-round overhead outside the compute window.
+//! Hot-path microbenchmarks (§Perf instrument): native engine op
+//! timings, the pure-Rust comm-phase components (compress, wire codec,
+//! aggregation), and the headline number for this repo's perf
+//! trajectory — serial vs parallel round-engine throughput at 16
+//! simulated peers.
 //!
-//! Run: cargo bench --bench hotpath [-- --artifacts artifacts/tiny]
+//! Results are printed and written to `BENCH_hotpath.json` at the repo
+//! root, so successive PRs can track the trajectory.
+//!
+//! Run: cargo bench --bench hotpath [-- --artifacts artifacts/tiny --round-peers 16 --rounds 2]
+
+#![allow(clippy::field_reassign_with_default)]
+
+use std::time::Instant;
 
 use anyhow::Result;
+use serde_json::json;
+
+use covenant::config::run::RunConfig;
 use covenant::coordinator::aggregator;
+use covenant::coordinator::network::{Network, NetworkParams};
 use covenant::runtime::{ops, Engine};
 use covenant::sparseloco::{codec, topk, Payload};
+use covenant::train::{OuterAlphaSchedule, Schedule, Segment};
 use covenant::util::cli::Args;
 use covenant::util::rng::Rng;
 use covenant::util::stats::{bench, report};
 
+/// Wall-seconds for `rounds` full network rounds at `peers` peers.
+fn round_engine_secs(eng: &Engine, peers: usize, rounds: usize, parallel: bool) -> Result<f64> {
+    let h = eng.manifest().config.inner_steps;
+    let mut run = RunConfig::default();
+    run.artifacts = "bench".into();
+    run.max_contributors = peers;
+    run.target_active = peers;
+    run.seed = 0xBE7C;
+    let mut p = NetworkParams::quick(run, h, rounds);
+    p.initial_peers = peers;
+    p.churn.p_leave = 0.0;
+    p.churn.p_adversarial = 0.15;
+    p.p_slow_upload = 0.0;
+    p.schedule = Schedule::new(vec![Segment::Constant { lr: 2e-3, steps: 1 << 20 }]);
+    p.alpha = OuterAlphaSchedule::scaled(1.0, h);
+    p.rust_compress = true;
+    p.parallel = parallel;
+    let mut net = Network::new(eng, p)?;
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        net.run_round()?;
+    }
+    Ok(t0.elapsed().as_secs_f64())
+}
+
 fn main() -> Result<()> {
     let args = Args::parse();
     let artifacts = args.get_or("artifacts", "artifacts/tiny");
+    let round_peers = args.get_usize("round-peers", 16)?;
+    let round_rounds = args.get_usize("rounds", 2)?;
     let eng = Engine::new(&artifacts)?;
     let man = eng.manifest().clone();
     let na = man.n_alloc;
     let (b, t, h) = (man.config.batch_size, man.config.seq_len, man.config.inner_steps);
     println!(
-        "hotpath: config={} ({} params, {} chunks), B={b} T={t} H={h}\n",
-        man.config.name, man.n_params, man.n_chunks
+        "hotpath: config={} ({} params, {} chunks), B={b} T={t} H={h}, {} rayon threads\n",
+        man.config.name,
+        man.n_params,
+        man.n_chunks,
+        rayon::current_num_threads()
     );
 
     let mut rng = Rng::new(7);
@@ -36,38 +80,34 @@ fn main() -> Result<()> {
     let round_mask = vec![1f32; h * b * t];
     let lrs = vec![1e-3f32; h];
 
-    // ---- XLA artifact timings ---------------------------------------------
-    println!("== XLA artifacts (PJRT CPU, includes host<->literal transfer) ==");
-    let s = bench(1, 5, || {
+    // ---- native engine ops ------------------------------------------------
+    println!("== native engine ops (single replica, serial) ==");
+    let s_step = bench(1, 5, || {
         ops::train_step(&eng, &params, &m, &v, 1.0, &tokens, &mask, 1e-3, 0.0).unwrap();
     });
-    report("train_step (1 inner step)", &s, None);
+    report("train_step (1 inner step)", &s_step, None);
     let per_round = bench(1, 3, || {
         ops::train_round(&eng, &params, &m, &v, 0.0, &round_tokens, &round_mask, &lrs, 0.0)
             .unwrap();
     });
     report(&format!("train_round (H={h} fused steps)"), &per_round, None);
-    println!(
-        "  -> fused round vs {h} x single-step: {:.2}x faster\n",
-        s.mean * h as f64 / per_round.mean
-    );
 
     let delta: Vec<f32> = (0..na).map(|_| rng.normal() as f32 * 1e-3).collect();
     let ef = vec![0f32; na];
-    let s = bench(1, 5, || {
+    let s_compress = bench(1, 5, || {
         ops::compress(&eng, &delta, &ef, 0.95).unwrap();
     });
-    report("compress (XLA: Top-k + 2-bit + EF)", &s, Some((na * 4) as f64));
+    report("compress (Top-k + 2-bit + EF)", &s_compress, Some((na * 4) as f64));
     let s = bench(1, 5, || {
         ops::outer_step(&eng, &params, &delta, 1.0).unwrap();
     });
-    report("outer_step (XLA)", &s, Some((na * 4) as f64));
-    let s = bench(1, 5, || {
+    report("outer_step", &s, Some((na * 4) as f64));
+    let s_eval = bench(1, 5, || {
         ops::eval_loss(&eng, &params, &tokens, &mask).unwrap();
     });
-    report("eval_loss (XLA fwd)", &s, None);
+    report("eval_loss (fwd only)", &s_eval, None);
 
-    // ---- pure-Rust aggregation path -----------------------------------------
+    // ---- pure-Rust comm-phase components -----------------------------------
     println!("\n== pure-Rust comm-phase components ==");
     let payloads: Vec<Payload> = (0..20)
         .map(|i| {
@@ -78,37 +118,89 @@ fn main() -> Result<()> {
         })
         .collect();
     let refs: Vec<&Payload> = payloads.iter().collect();
-    let s = bench(2, 20, || {
+    let s_agg = bench(2, 20, || {
         std::hint::black_box(aggregator::aggregate(&refs, na).unwrap());
     });
-    report("aggregate 20 payloads (median-norm + scatter)", &s, Some((20 * payloads[0].n_values() * 6) as f64));
+    report(
+        "aggregate 20 payloads (median-norm + scatter)",
+        &s_agg,
+        Some((20 * payloads[0].n_values() * 6) as f64),
+    );
     let s = bench(2, 50, || {
         std::hint::black_box(aggregator::median_norm_weights(&refs));
     });
     report("median-norm weights (20 payloads)", &s, None);
     let wire = codec::encode(&payloads[0]);
-    let s = bench(2, 50, || {
-        std::hint::black_box(codec::encode(&payloads[0]));
+    let mut wire_buf = Vec::new();
+    let s_enc = bench(2, 50, || {
+        codec::encode_into(&payloads[0], &mut wire_buf);
+        std::hint::black_box(&wire_buf);
     });
-    report("wire encode", &s, Some(wire.len() as f64));
-    let s = bench(2, 50, || {
+    report("wire encode (reused buffer)", &s_enc, Some(wire.len() as f64));
+    let s_dec = bench(2, 50, || {
         std::hint::black_box(codec::decode(&wire).unwrap());
     });
-    report("wire decode", &s, Some(wire.len() as f64));
-    let rust_compress = bench(1, 10, || {
+    report("wire decode", &s_dec, Some(wire.len() as f64));
+    let s_rc = bench(1, 10, || {
         std::hint::black_box(topk::compress_dense(&delta, man.config.chunk, man.config.topk));
     });
-    report("rust reference compress", &rust_compress, Some((na * 4) as f64));
+    report("chunk-parallel compress_dense", &s_rc, Some((na * 4) as f64));
 
-    // ---- summary ratio -------------------------------------------------------
-    let comm_overhead = s.mean; // decode dominates per-payload work
+    // ---- round engine: serial vs parallel ----------------------------------
     println!(
-        "\ncomm-phase CPU work per round (~20 decodes + 1 aggregate) ≈ {:.1} ms \
-         vs compute window {:.1} ms: L3 overhead {:.2}%",
-        (20.0 * comm_overhead + 0.02) * 1e3,
-        per_round.mean * 1e3,
-        100.0 * (20.0 * comm_overhead) / per_round.mean
+        "\n== round engine throughput ({round_peers} peers x {round_rounds} rounds) =="
     );
+    let serial_s = round_engine_secs(&eng, round_peers, round_rounds, false)?;
+    let parallel_s = round_engine_secs(&eng, round_peers, round_rounds, true)?;
+    let peer_rounds = (round_peers * round_rounds) as f64;
+    let speedup = serial_s / parallel_s;
+    println!(
+        "serial:   {serial_s:>8.2}s  ({:>6.2} peer-rounds/s)",
+        peer_rounds / serial_s
+    );
+    println!(
+        "parallel: {parallel_s:>8.2}s  ({:>6.2} peer-rounds/s)",
+        peer_rounds / parallel_s
+    );
+    println!(
+        "speedup:  {speedup:.2}x on {} rayon threads",
+        rayon::current_num_threads()
+    );
+
+    // ---- perf trajectory record --------------------------------------------
+    let out = json!({
+        "bench": "hotpath",
+        "note": "Perf-trajectory record; regenerate with `cargo bench --bench hotpath` (run from rust/). Numbers are host-specific.",
+        "config": man.config.name,
+        "rayon_threads": rayon::current_num_threads(),
+        "n_params": man.n_params,
+        "n_chunks": man.n_chunks,
+        "round_engine": {
+            "peers": round_peers,
+            "rounds": round_rounds,
+            "serial_s": serial_s,
+            "parallel_s": parallel_s,
+            "speedup": speedup,
+            "serial_peer_rounds_per_s": peer_rounds / serial_s,
+            "parallel_peer_rounds_per_s": peer_rounds / parallel_s,
+        },
+        "ops": {
+            "train_step_s": s_step.mean,
+            "train_round_s": per_round.mean,
+            "compress_s": s_compress.mean,
+            "eval_loss_s": s_eval.mean,
+        },
+        "comm": {
+            "wire_bytes": wire.len(),
+            "encode_mb_per_s": wire.len() as f64 / s_enc.mean / 1e6,
+            "decode_mb_per_s": wire.len() as f64 / s_dec.mean / 1e6,
+            "aggregate_20_payloads_ms": s_agg.mean * 1e3,
+            "compress_dense_mb_per_s": (na * 4) as f64 / s_rc.mean / 1e6,
+        },
+    });
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");
+    std::fs::write(path, serde_json::to_string_pretty(&out)? + "\n")?;
+    println!("\nwrote {path}");
     println!("hotpath OK");
     Ok(())
 }

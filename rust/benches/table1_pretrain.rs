@@ -16,6 +16,8 @@
 //!
 //! Run: cargo bench --bench table1_pretrain [-- --artifacts artifacts/tiny --rounds 15]
 
+#![allow(clippy::field_reassign_with_default)]
+
 use anyhow::Result;
 use covenant::config::run::RunConfig;
 use covenant::coordinator::aggregator;
@@ -107,6 +109,8 @@ fn main() -> Result<()> {
     let run_diloco = |compress_mode: &str| -> Result<(Vec<f32>, f64)> {
         let mut global = ops::init_params(&eng, 0x7AB1 as i32)?;
         let lrs = vec![lr; h];
+        let zeros_na = vec![0f32; na];
+        let ones = vec![1.0f32; peers];
         let mut states: Vec<(Trainer, BatchSampler, Vec<f32>)> = (0..peers)
             .map(|i| {
                 let stream = grammar.stream(GrammarKind::Web, 0x100 + i as u64, 120_000);
@@ -138,7 +142,7 @@ fn main() -> Result<()> {
                     "topk-noef" => {
                         // DeMo-like: Top-k+quant but the residual is DISCARDED
                         let (_, payload) =
-                            ops::compress(&eng, &delta, &vec![0f32; na], 0.0)?;
+                            ops::compress(&eng, &delta, &zeros_na, 0.0)?;
                         bytes_per_peer_round += codec::encode(&payload).len() as f64;
                         payloads.push(payload);
                     }
@@ -156,7 +160,7 @@ fn main() -> Result<()> {
                 acc
             } else {
                 let refs: Vec<&Payload> = payloads.iter().collect();
-                aggregator::aggregate_weighted(&refs, &vec![1.0; refs.len()], na)?
+                aggregator::aggregate_weighted(&refs, &ones, na)?
             };
             global = ops::outer_step(&eng, &global, &delta_mean, 1.0)?;
             for (tr, _, _) in states.iter_mut() {

@@ -7,6 +7,8 @@
 //!
 //! Run: cargo bench --bench table3_anneal [-- --rounds 15 --anneal-steps 40]
 
+#![allow(clippy::field_reassign_with_default)]
+
 use anyhow::Result;
 use covenant::config::run::RunConfig;
 use covenant::coordinator::network::{Network, NetworkParams};

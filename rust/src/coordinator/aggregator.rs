@@ -2,11 +2,26 @@
 //! median-norm normalization): contributions are scaled relative to the
 //! *median* norm so no single participant can dominate due to an
 //! abnormally large-magnitude update, then averaged into a dense delta.
+//!
+//! The dense scatter is the coordinator-side hot path (every peer runs it
+//! each round at 72B scale). It is parallelized over *chunk ranges* of
+//! the output accumulator: payload chunks map to disjoint dense ranges,
+//! and within each range payloads are accumulated in submission order —
+//! so every output position sees the same additions in the same order as
+//! the serial loop, and the result is bit-identical regardless of thread
+//! count. That invariant is what lets the parallel and serial round
+//! engines be compared exactly (see `tests/parallel_determinism.rs`).
+
+use rayon::prelude::*;
 
 use anyhow::{ensure, Result};
 
 use crate::sparseloco::Payload;
 use crate::util::stats::median;
+
+/// Below this many (chunks x payloads) scatter units the serial path is
+/// used.
+const PAR_MIN_UNITS: usize = 256;
 
 /// Per-payload weights implementing median-norm scaling: payloads whose
 /// norm exceeds the median are scaled *down* to the median (dampening
@@ -26,9 +41,6 @@ pub fn median_norm_weights(payloads: &[&Payload]) -> Vec<f32> {
 
 /// Aggregate selected payloads into a dense mean delta:
 /// delta = (1/R) * sum_r w_r * decompress(payload_r).
-///
-/// This is the L3 hot path (every peer runs it each round); the scatter
-/// kernel lives in `Payload::accumulate_into`.
 pub fn aggregate(payloads: &[&Payload], dense_len: usize) -> Result<Vec<f32>> {
     ensure!(!payloads.is_empty(), "no payloads to aggregate");
     let weights = median_norm_weights(payloads);
@@ -43,11 +55,37 @@ pub fn aggregate_weighted(
     dense_len: usize,
 ) -> Result<Vec<f32>> {
     ensure!(payloads.len() == weights.len(), "weights length mismatch");
-    let mut acc = vec![0f32; dense_len];
-    let inv_r = 1.0 / payloads.len() as f32;
-    for (p, &w) in payloads.iter().zip(weights) {
+    ensure!(!payloads.is_empty(), "no payloads to aggregate");
+    let chunk = payloads[0].chunk;
+    let n_chunks = payloads[0].n_chunks;
+    for p in payloads {
         ensure!(p.dense_len() == dense_len, "payload dense length mismatch");
-        p.accumulate_into(&mut acc, w * inv_r)?;
+        ensure!(
+            p.chunk == chunk && p.n_chunks == n_chunks,
+            "payload chunk geometry mismatch"
+        );
+    }
+    let inv_r = 1.0 / payloads.len() as f32;
+    let scaled: Vec<f32> = weights.iter().map(|&w| w * inv_r).collect();
+    let mut acc = vec![0f32; dense_len];
+    // Chunk-range parallel reduction; payload order fixed inside each
+    // range (see module docs for why this is bit-deterministic).
+    let scatter_range = |acc_range: &mut [f32], chunk0: usize| {
+        for (ci, out) in acc_range.chunks_mut(chunk).enumerate() {
+            let r = chunk0 + ci;
+            for (p, &w) in payloads.iter().zip(&scaled) {
+                p.accumulate_chunk_into(r, out, w);
+            }
+        }
+    };
+    if n_chunks * payloads.len() >= PAR_MIN_UNITS {
+        // Whole chunks per task: task size is a multiple of `chunk`.
+        let chunks_per_task = (n_chunks / (rayon::current_num_threads() * 4)).max(1);
+        acc.par_chunks_mut(chunks_per_task * chunk)
+            .enumerate()
+            .for_each(|(ti, acc_range)| scatter_range(acc_range, ti * chunks_per_task));
+    } else {
+        scatter_range(&mut acc, 0);
     }
     Ok(acc)
 }
@@ -65,6 +103,12 @@ mod tests {
         compress_dense(&dense, 64, 8)
     }
 
+    fn big_payload(seed: u64) -> Payload {
+        let mut rng = Rng::new(seed);
+        let dense: Vec<f32> = (0..200 * 64).map(|_| rng.normal() as f32 * 0.01).collect();
+        compress_dense(&dense, 64, 8)
+    }
+
     #[test]
     fn whale_cannot_dominate() {
         let normal: Vec<Payload> = (0..6).map(|i| payload(i, 0.01)).collect();
@@ -77,7 +121,10 @@ mod tests {
         let med: Vec<f64> = normal.iter().map(|p| p.l2_norm()).collect();
         let med = crate::util::stats::median(&med);
         // f32 weight rounding: agreement to ~0.2%
-        assert!((whale_effective - med).abs() / med < 5e-3, "effective={whale_effective} med={med}");
+        assert!(
+            (whale_effective - med).abs() / med < 5e-3,
+            "effective={whale_effective} med={med}"
+        );
         // normal peers untouched
         assert!(w[..6].iter().filter(|&&x| x == 1.0).count() >= 3);
     }
@@ -92,6 +139,27 @@ mod tests {
         for i in 0..agg.len() {
             assert!((agg[i] - 0.5 * (da[i] + db[i])).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn parallel_reduction_matches_serial_reference() {
+        // Above the parallel threshold, the rayon path must be bitwise
+        // identical to a plain payload-by-payload serial scatter.
+        let ps: Vec<Payload> = (0..8).map(big_payload).collect();
+        let refs: Vec<&Payload> = ps.iter().collect();
+        let n = ps[0].dense_len();
+        let weights = vec![1.0f32; ps.len()];
+        let par = aggregate_weighted(&refs, &weights, n).unwrap();
+        let inv_r = 1.0 / ps.len() as f32;
+        let mut serial = vec![0f32; n];
+        // serial reference: chunk-major, payload-minor — the documented
+        // accumulation order
+        for r in 0..ps[0].n_chunks {
+            for p in &ps {
+                p.accumulate_chunk_into(r, &mut serial[r * p.chunk..(r + 1) * p.chunk], inv_r);
+            }
+        }
+        assert_eq!(par, serial);
     }
 
     #[test]
@@ -116,6 +184,16 @@ mod tests {
     #[test]
     fn empty_payloads_rejected() {
         assert!(aggregate(&[], 10).is_err());
+    }
+
+    #[test]
+    fn geometry_mismatch_rejected() {
+        let a = payload(1, 0.01); // 4 chunks of 64
+        let mut rng = Rng::new(2);
+        let dense: Vec<f32> = (0..2 * 128).map(|_| rng.normal() as f32 * 0.01).collect();
+        let b = compress_dense(&dense, 128, 8); // 2 chunks of 128, same dense_len
+        assert_eq!(a.dense_len(), b.dense_len());
+        assert!(aggregate_weighted(&[&a, &b], &[1.0, 1.0], a.dense_len()).is_err());
     }
 
     #[test]

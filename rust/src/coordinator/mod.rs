@@ -1,7 +1,9 @@
 //! The coordinator — the paper's systems contribution, wired together:
-//! round orchestration over simulated peers, object-store comms and the
-//! chain; aggregation with median-norm scaling (§2.2); and the
-//! phase-dependent optimizer-state offload protocol of Figure 1.
+//! the parallel round engine orchestrating simulated peers over the
+//! object store and chain (`network`); aggregation with median-norm
+//! scaling, §2.2, as a deterministic chunk-parallel reduction
+//! (`aggregator`); and the phase-dependent optimizer-state offload
+//! protocol of Figure 1 (`offload`).
 
 pub mod aggregator;
 pub mod network;

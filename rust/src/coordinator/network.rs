@@ -5,13 +5,34 @@
 //!
 //! 1. churn (joins register on-chain, download the current model; leaves
 //!    deregister),
-//! 2. compute phase — every active peer runs H inner steps (real XLA
+//! 2. compute phase — every active peer runs H inner steps (real model
 //!    compute through the engine),
 //! 3. compress phase — SparseLoCo Top-k + 2-bit quant + EF (Eq. 1),
 //! 4. upload to per-peer buckets under uplink constraints,
 //! 5. Gauntlet scoring + contributor selection + chain weights,
 //! 6. every peer downloads the selected payloads, median-norm-scaled
 //!    aggregation, outer step (Eq. 2), sync.
+//!
+//! ## Parallel round engine
+//!
+//! Steps 2–4 are independent per peer, mirroring reality: participants
+//! compute concurrently on their own hardware. `run_round` therefore fans
+//! the compute -> compress -> wire-encode pipeline out across the rayon
+//! pool ([`NetworkParams::parallel`]; the serial path is kept for
+//! comparison and debugging). Determinism is preserved exactly:
+//!
+//! * each peer's round RNG is reseeded from (run seed, hotkey, round)
+//!   (`round_seed`), so behaviour never depends on scheduling order;
+//! * results are merged back in peer-slot order (which equals hotkey
+//!   mint order — stable across runs), so the validator and aggregator
+//!   see the identical submission sequence either way;
+//! * aggregation accumulates payloads in submission order within each
+//!   chunk range (bit-deterministic; see `coordinator::aggregator`).
+//!
+//! The `parallel_determinism` integration test asserts serial and
+//! parallel rounds produce byte-identical global parameters.
+
+use rayon::prelude::*;
 
 use anyhow::Result;
 
@@ -24,7 +45,7 @@ use crate::gauntlet::validator::{EvalDataProvider, Validator};
 use crate::gauntlet::Submission;
 use crate::netsim::{LinkPair, VirtualClock};
 use crate::peer::{Behavior, ChurnConfig, ChurnModel, PeerState};
-use crate::runtime::{ops, Engine};
+use crate::runtime::{ops, Engine, Manifest};
 use crate::sparseloco::{codec, Payload};
 use crate::storage::ObjectStore;
 use crate::train::{OuterAlphaSchedule, Schedule};
@@ -52,9 +73,13 @@ pub struct NetworkParams {
     /// Seed of the synthetic-corpus world (fact table + Markov chains).
     /// MUST match the world used for evaluation.
     pub world_seed: u64,
-    /// Use the verified-equivalent pure-Rust compressor instead of the
-    /// XLA/Pallas artifact (3x faster on CPU; see EXPERIMENTS.md §Perf).
+    /// Use the fused in-place compressor on the peer hot path (~zero
+    /// allocations; bit-identical to the engine-tracked path).
     pub rust_compress: bool,
+    /// Fan peer compute/compress/encode out across the rayon pool. The
+    /// serial path produces byte-identical results (kept for debugging
+    /// and the determinism tests).
+    pub parallel: bool,
 }
 
 impl NetworkParams {
@@ -73,6 +98,7 @@ impl NetworkParams {
             kind: GrammarKind::Web,
             world_seed: run.seed ^ 0xDA7A,
             rust_compress: false,
+            parallel: true,
             run,
         }
     }
@@ -116,6 +142,109 @@ struct PeerSlot {
     state: PeerState,
     link: LinkPair,
     joined_round: usize,
+}
+
+/// Deterministic per-peer round seed: a pure function of (run seed,
+/// hotkey, round), so peer behaviour is independent of scheduling order
+/// and of how many other peers exist.
+fn round_seed(run_seed: u64, hotkey: &str, round: usize) -> u64 {
+    let mut h = 0xcbf29ce484222325u64 ^ run_seed.wrapping_mul(0x9E3779B97F4A7C15);
+    for b in hotkey.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h ^= (round as u64).wrapping_mul(0xD1B54A32D192ED03);
+    h ^= h >> 29;
+    h = h.wrapping_mul(0xBF58476D1CE4E5B9);
+    h ^ (h >> 31)
+}
+
+/// Read-only context shared by every peer's round work (Sync; borrowed
+/// into the rayon fan-out).
+struct RoundCtx<'a> {
+    eng: &'a Engine,
+    man: &'a Manifest,
+    global: &'a [f32],
+    lrs: &'a [f32],
+    prev_payloads: &'a [Payload],
+    round: usize,
+    compute_end: f64,
+    comm_deadline_s: f64,
+    p_slow_upload: f64,
+    ef_beta: f32,
+    rust_compress: bool,
+    median_hint: f32,
+}
+
+/// What one peer's round work produces (merged serially afterwards).
+struct PeerOutcome {
+    sub: Submission,
+    wire: Vec<u8>,
+    /// Last-inner-step training loss (honest peers only).
+    loss: Option<f64>,
+    adversarial: bool,
+}
+
+/// One peer's full round: compute phase -> compress phase -> submission
+/// fabrication -> uplink charge -> wire encode. Pure per-peer: touches
+/// only the slot and the shared read-only context.
+fn peer_round(
+    slot: &mut PeerSlot,
+    batch: Option<(Vec<i32>, Vec<f32>)>,
+    ctx: &RoundCtx<'_>,
+) -> Result<Option<PeerOutcome>> {
+    if slot.joined_round > ctx.round {
+        return Ok(None); // still syncing; participates next round
+    }
+    let behavior = slot.state.behavior;
+    let mut loss = None;
+    // Honest-path compute (Honest, Stale, Whale run real steps).
+    let honest_payload = match batch {
+        Some((tokens, mask)) => {
+            let ls = slot.state.compute_phase(ctx.eng, &tokens, &mask, ctx.lrs)?;
+            if behavior == Behavior::Honest {
+                loss = Some(*ls.last().unwrap() as f64);
+            }
+            Some(slot.state.compress_phase(
+                ctx.eng,
+                ctx.global,
+                ctx.ef_beta,
+                ctx.rust_compress,
+            )?)
+        }
+        None => None,
+    };
+    // Upload at compute end (+ occasional pathological slowness).
+    let slow = slot.state.roll_bool(ctx.p_slow_upload);
+    let copy_src = if ctx.prev_payloads.is_empty() {
+        None
+    } else {
+        Some(&ctx.prev_payloads[slot.state.roll_below(ctx.prev_payloads.len())])
+    };
+    let mut sub = slot.state.fabricate_submission(
+        ctx.round,
+        honest_payload,
+        copy_src,
+        ctx.man.n_chunks,
+        ctx.man.config.topk,
+        ctx.man.config.chunk,
+        ctx.median_hint,
+        0.0,
+    );
+    // Charge the uplink from compute end.
+    slot.link.up.release_at(ctx.compute_end);
+    let mut done = slot.link.up.transfer(ctx.compute_end, sub.wire_bytes);
+    if slow {
+        done += ctx.comm_deadline_s; // stalled connection
+    }
+    sub.uploaded_at = done;
+    let wire = codec::encode(&sub.payload);
+    Ok(Some(PeerOutcome {
+        sub,
+        wire,
+        loss,
+        adversarial: behavior.is_adversarial() || behavior == Behavior::Stale,
+    }))
 }
 
 /// The whole simulated network.
@@ -246,6 +375,8 @@ impl<'e> Network<'e> {
     }
 
     /// Run one full outer round.
+    // The prefetch loop must index (`sampler_for` needs `&mut self`).
+    #[allow(clippy::needless_range_loop)]
     pub fn run_round(&mut self) -> Result<RoundReport> {
         let man = self.eng.manifest().clone();
         let h = man.config.inner_steps;
@@ -267,85 +398,86 @@ impl<'e> Network<'e> {
             self.add_peer(None)?;
         }
 
-        // ---- 2+3. compute + compress (virtual window; real XLA work) -----
-        let mut losses = Vec::new();
-        let mut submissions: Vec<Submission> = Vec::new();
+        // ---- 2+3+4. compute + compress + upload (peer fan-out) -----------
         let inner_step0 = round * h;
         let lrs = self.p.schedule.round_lrs(inner_step0, h);
         let global_snapshot = self.global_params.clone();
         let median_hint = 0.05f32; // noise peers' norm guess
         let compute_end = t_start + self.p.run.network.compute_window_s;
-
         let n_peers = self.peers.len();
-        let mut adversarial_submitted = 0;
+
+        // Serial prologue: data prefetch (object-store access) and
+        // deterministic per-peer round seeding.
+        let mut batches: Vec<Option<(Vec<i32>, Vec<f32>)>> = Vec::with_capacity(n_peers);
         for i in 0..n_peers {
             let (uid, behavior, joined) = {
                 let s = &self.peers[i];
                 (s.state.uid, s.state.behavior, s.joined_round)
             };
-            if joined > round {
-                continue; // still syncing; participates next round
-            }
-            // Honest-path compute (Honest, Stale, Whale run real steps).
-            let honest_payload = if matches!(
-                behavior,
-                Behavior::Honest | Behavior::Stale | Behavior::Whale
-            ) {
+            if joined <= round && behavior.computes() {
                 let mut sampler = self.sampler_for(uid, 0)?;
                 let tokens = sampler.round_batch(h);
                 let mask = sampler.ones_round_mask(h);
-                let slot = &mut self.peers[i];
-                let ls = slot.state.compute_phase(self.eng, &tokens, &mask, &lrs)?;
-                if behavior == Behavior::Honest {
-                    losses.push(*ls.last().unwrap() as f64);
-                }
-                let payload =
-                    self.peers[i].state.compress_phase(
-                    self.eng,
-                    &global_snapshot,
-                    self.p.run.ef_beta as f32,
-                    self.p.rust_compress,
-                )?;
-                Some(payload)
+                batches.push(Some((tokens, mask)));
             } else {
-                None
-            };
-            // Upload at compute end (+ occasional pathological slowness).
-            let slow = self.rng.bool(self.p.p_slow_upload);
-            let copy_src = if self.prev_payloads.is_empty() {
-                None
-            } else {
-                Some(&self.prev_payloads[self.rng.below(self.prev_payloads.len())])
-            };
-            let copy_src_cloned = copy_src.cloned();
-            let slot = &mut self.peers[i];
-            let mut sub = slot.state.fabricate_submission(
-                round,
-                honest_payload,
-                copy_src_cloned.as_ref(),
-                man.n_chunks,
-                man.config.topk,
-                man.config.chunk,
-                median_hint,
-                0.0,
-            );
-            if behavior.is_adversarial() || behavior == Behavior::Stale {
-                adversarial_submitted += 1;
+                batches.push(None);
             }
-            // Charge the uplink from compute end.
-            slot.link.up.release_at(compute_end);
-            let mut done = slot.link.up.transfer(compute_end, sub.wire_bytes);
-            if slow {
-                done += self.p.comm_deadline_s; // stalled connection
-            }
-            sub.uploaded_at = done;
-            // Store in the peer's bucket (the validator reads from here).
-            let wire = codec::encode(&sub.payload);
-            self.store.put(&slot.state.hotkey, &format!("round-{round}/grad.bin"), wire)?;
-            submissions.push(sub);
+        }
+        let run_seed = self.p.run.seed;
+        for slot in &mut self.peers {
+            slot.state.begin_round(round_seed(run_seed, &slot.state.hotkey, round));
         }
 
-        // ---- 4. Gauntlet scoring ------------------------------------------
+        let ctx = RoundCtx {
+            eng: self.eng,
+            man: &man,
+            global: &global_snapshot,
+            lrs: &lrs,
+            prev_payloads: &self.prev_payloads,
+            round,
+            compute_end,
+            comm_deadline_s: self.p.comm_deadline_s,
+            p_slow_upload: self.p.p_slow_upload,
+            ef_beta: self.p.run.ef_beta as f32,
+            rust_compress: self.p.rust_compress,
+            median_hint,
+        };
+        let outcomes: Vec<Option<PeerOutcome>> = if self.p.parallel {
+            self.peers
+                .par_iter_mut()
+                .zip(batches.into_par_iter())
+                .map(|(slot, batch)| peer_round(slot, batch, &ctx))
+                .collect::<Result<_>>()?
+        } else {
+            self.peers
+                .iter_mut()
+                .zip(batches)
+                .map(|(slot, batch)| peer_round(slot, batch, &ctx))
+                .collect::<Result<_>>()?
+        };
+
+        // Serial merge, in peer-slot (= hotkey mint) order: losses,
+        // adversary accounting, bucket uploads, submission list.
+        let mut losses = Vec::new();
+        let mut submissions: Vec<Submission> = Vec::new();
+        let mut adversarial_submitted = 0;
+        for outcome in outcomes.into_iter().flatten() {
+            if let Some(l) = outcome.loss {
+                losses.push(l);
+            }
+            if outcome.adversarial {
+                adversarial_submitted += 1;
+            }
+            // Store in the peer's bucket (the validator reads from here).
+            self.store.put(
+                &outcome.sub.hotkey,
+                &format!("round-{round}/grad.bin"),
+                outcome.wire,
+            )?;
+            submissions.push(outcome.sub);
+        }
+
+        // ---- 5. Gauntlet scoring ------------------------------------------
         let deadline = compute_end + self.p.comm_deadline_s;
         let apply_scale =
             (self.p.alpha.alpha(round) / self.p.run.max_contributors as f64) as f32;
@@ -371,7 +503,7 @@ impl<'e> Network<'e> {
         )?;
         self.chain.set_weights(&verdict.weights)?;
 
-        // ---- 5. aggregation + outer step ----------------------------------
+        // ---- 6. aggregation + outer step ----------------------------------
         let selected_payloads: Vec<&Payload> =
             verdict.selected.iter().map(|&i| &submissions[i].payload).collect();
         let alpha = self.p.alpha.alpha(round);
@@ -417,7 +549,7 @@ impl<'e> Network<'e> {
             .map(|&i| submissions[i].payload.clone())
             .collect();
 
-        // ---- 6. EF restore for unselected honest contributions + sync ------
+        // ---- 7. EF restore for unselected honest contributions + sync -----
         let selected_uids: std::collections::HashSet<usize> =
             verdict.selected.iter().map(|&i| submissions[i].uid).collect();
         for sub in &submissions {
@@ -436,8 +568,17 @@ impl<'e> Network<'e> {
                 }
             }
         }
-        for slot in &mut self.peers {
-            slot.state.sync(&self.global_params, round + 1);
+        // Outer sync: every replica adopts the new global params (the
+        // copies are independent, so fan them out too).
+        let global_ref = &self.global_params;
+        if self.p.parallel {
+            self.peers
+                .par_iter_mut()
+                .for_each(|slot| slot.state.sync(global_ref, round + 1));
+        } else {
+            for slot in &mut self.peers {
+                slot.state.sync(global_ref, round + 1);
+            }
         }
         self.clock.advance_to(t_comm_end);
         self.chain.sync_to_time(self.clock.now());
@@ -447,11 +588,10 @@ impl<'e> Network<'e> {
             .iter()
             .filter(|v| !v.selected)
             .map(|v| {
-                format!(
-                    "{} fast={:?} score={:.4} eval={:?}",
-                    v.hotkey, v.fast, v.score,
-                    v.loss_eval.map(|l| (l.assigned_improvement, l.unassigned_improvement, l.suspected_copy))
-                )
+                let eval = v.loss_eval.map(|l| {
+                    (l.assigned_improvement, l.unassigned_improvement, l.suspected_copy)
+                });
+                format!("{} fast={:?} score={:.4} eval={eval:?}", v.hotkey, v.fast, v.score)
             })
             .collect();
         let adversarial_selected = verdict
@@ -462,7 +602,9 @@ impl<'e> Network<'e> {
                 self.peers
                     .iter()
                     .find(|s| &s.state.hotkey == hk)
-                    .map(|s| s.state.behavior.is_adversarial() || s.state.behavior == Behavior::Stale)
+                    .map(|s| {
+                        s.state.behavior.is_adversarial() || s.state.behavior == Behavior::Stale
+                    })
                     .unwrap_or(false)
             })
             .count();
@@ -530,5 +672,19 @@ impl EvalDataProvider for NetworkDataProvider<'_> {
         let mut sampler =
             BatchSampler::new(tokens, self.cfg_seq, self.cfg_batch, self.seed ^ 0xBEEF);
         (0..n).map(|_| (sampler.batch(), sampler.ones_mask())).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_seed_is_stable_and_distinct() {
+        let a = round_seed(1, "hk-00001", 5);
+        assert_eq!(a, round_seed(1, "hk-00001", 5));
+        assert_ne!(a, round_seed(1, "hk-00002", 5));
+        assert_ne!(a, round_seed(1, "hk-00001", 6));
+        assert_ne!(a, round_seed(2, "hk-00001", 5));
     }
 }

@@ -121,7 +121,7 @@ impl SuiteResult {
     }
 }
 
-/// Scores tasks through the `loss_per_seq` artifact.
+/// Scores tasks through the `loss_per_seq` op.
 pub struct Scorer<'e> {
     pub eng: &'e Engine,
 }
@@ -151,7 +151,7 @@ impl<'e> Scorer<'e> {
     }
 
     /// Mean continuation loss for each (prompt, choice) pair, batched
-    /// through the fixed [B, T+1] eval artifact.
+    /// through the fixed `[B, T+1]` eval op.
     pub fn choice_losses(&self, params: &[f32], tasks: &[McTask]) -> Result<Vec<Vec<f32>>> {
         let c = &self.eng.manifest().config;
         let b = c.batch_size;

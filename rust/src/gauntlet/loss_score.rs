@@ -87,7 +87,7 @@ mod tests {
     #[test]
     fn apply_single_subtracts_scaled() {
         let base = vec![1.0f32; 128];
-        let payload = crate::sparseloco::topk::compress_dense(&vec![0.5f32; 128], 64, 2);
+        let payload = crate::sparseloco::topk::compress_dense(&[0.5f32; 128], 64, 2);
         let cand = apply_single(&base, &payload, 2.0);
         // exactly 2 positions per chunk changed by -2*0.5
         let changed: Vec<f32> = cand.iter().copied().filter(|&x| x != 1.0).collect();

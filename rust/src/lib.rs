@@ -1,24 +1,36 @@
 //! # Covenant — permissionless distributed LLM pre-training
 //!
 //! Reproduction of "Covenant-72B: Pre-Training a 72B LLM with Trustless
-//! Peers Over-the-Internet" (CS.DC 2026): a SparseLoCo + Gauntlet training
-//! network. Layer 3 (this crate) is the coordinator — peers, validator,
-//! chain, object-store comms, round orchestration; Layers 2/1 (JAX model +
-//! Pallas kernels) are AOT-compiled to HLO artifacts executed via PJRT.
+//! Peers Over-the-Internet" (cs.DC 2026): a SparseLoCo + Gauntlet
+//! training network with open participation. This crate is the whole
+//! system at CPU scale — the coordinator (peers, validator, chain,
+//! object-store comms, round orchestration), the SparseLoCo compression
+//! stack (chunk-wise Top-k, 2-bit quantization, error feedback, the
+//! 14-bit/value wire codec), and a native execution backend implementing
+//! the model math (transformer forward/backward + AdamW over a flat
+//! chunk-aligned parameter layout) in pure Rust.
 //!
-//! See DESIGN.md for the module inventory and experiment index.
+//! The round engine is parallel: one [`coordinator::Network::run_round`]
+//! fans every peer's compute → compress → encode pipeline across the
+//! rayon pool, then merges deterministically — parallel and serial
+//! rounds produce byte-identical global models (per-peer RNGs are seeded
+//! from (run seed, hotkey, round); aggregation accumulates in submission
+//! order within disjoint chunk ranges).
+//!
+//! Start at the `README.md` module map; `examples/quickstart.rs` walks
+//! the protocol by hand.
 
 pub mod chain;
+pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod gauntlet;
 pub mod metrics;
-pub mod peer;
-pub mod train;
-pub mod config;
 pub mod netsim;
+pub mod peer;
 pub mod runtime;
 pub mod sparseloco;
 pub mod storage;
+pub mod train;
 pub mod util;

@@ -11,7 +11,7 @@ USAGE:
     covenant <COMMAND> [OPTIONS]
 
 COMMANDS:
-    smoke      Load + run every artifact of a config (--artifacts DIR)
+    smoke      Run every model op of a config end-to-end (--artifacts DIR|PRESET)
     config     Show a model preset and its parameter count (--name NAME)
     help       Show this message
 "
@@ -48,7 +48,7 @@ fn config_show(args: &Args) -> Result<()> {
 }
 
 fn smoke(args: &Args) -> Result<()> {
-    use covenant::runtime::{literal, Engine};
+    use covenant::runtime::{ops, Engine};
     let dir = args.get_or("artifacts", "artifacts/tiny");
     let eng = Engine::new(&dir)?;
     let m = eng.manifest().clone();
@@ -57,8 +57,7 @@ fn smoke(args: &Args) -> Result<()> {
         m.config.name, m.n_params, m.n_alloc, m.n_chunks
     );
     // init_params
-    let outs = eng.run("init_params", &[literal::scalar_i32(0)])?;
-    let params = literal::to_f32(&outs[0])?;
+    let params = ops::init_params(&eng, 0)?;
     println!(
         "init_params ok: {} floats, params[0..4]={:?}",
         params.len(),
@@ -71,50 +70,28 @@ fn smoke(args: &Args) -> Result<()> {
         .map(|i| ((i as u64).wrapping_mul(2654435761) % m.config.vocab_size as u64) as i32)
         .collect();
     let mask = vec![1f32; b * t];
-    let loss = eng.run(
-        "eval_loss",
-        &[
-            outs[0].clone(),
-            literal::i32_tensor(&tokens, &[b, t + 1])?,
-            literal::f32_tensor(&mask, &[b, t])?,
-        ],
-    )?;
-    println!("eval_loss ok: {} (ln V = {:.3})", literal::to_scalar_f32(&loss[0])?, (m.config.vocab_size as f64).ln());
+    let loss = ops::eval_loss(&eng, &params, &tokens, &mask)?;
+    println!(
+        "eval_loss ok: {} (ln V = {:.3})",
+        loss,
+        (m.config.vocab_size as f64).ln()
+    );
     // compress round-trip
     let na = m.n_alloc;
     let delta: Vec<f32> = (0..na).map(|i| ((i as f32 * 0.618).sin()) * 1e-3).collect();
     let ef = vec![0f32; na];
-    let c = eng.run(
-        "compress",
-        &[
-            literal::f32_vec(&delta),
-            literal::f32_vec(&ef),
-            literal::scalar_f32(0.95),
-        ],
-    )?;
-    println!("compress ok");
-    let d = eng.run("decompress", &[c[1].clone(), c[2].clone(), c[3].clone()])?;
-    let dense = literal::to_f32(&d[0])?;
+    let (_ef_new, payload) = ops::compress(&eng, &delta, &ef, 0.95)?;
+    println!("compress ok: {} values in {} chunks", payload.n_values(), payload.n_chunks);
+    let dense = ops::decompress(&eng, &payload)?;
     let nnz = dense.iter().filter(|x| **x != 0.0).count();
     println!("decompress ok: {} nonzeros of {}", nnz, dense.len());
     // one train_step
     let zeros = vec![0f32; na];
-    let ts = eng.run(
-        "train_step",
-        &[
-            outs[0].clone(),
-            literal::f32_vec(&zeros),
-            literal::f32_vec(&zeros),
-            literal::scalar_f32(1.0),
-            literal::i32_tensor(&tokens, &[b, t + 1])?,
-            literal::f32_tensor(&mask, &[b, t])?,
-            literal::scalar_f32(1e-3),
-            literal::scalar_f32(0.0),
-        ],
-    )?;
-    println!("train_step ok: loss={}", literal::to_scalar_f32(&ts[3])?);
+    let (_p, _m2, _v2, step_loss) =
+        ops::train_step(&eng, &params, &zeros, &zeros, 1.0, &tokens, &mask, 1e-3, 0.0)?;
+    println!("train_step ok: loss={step_loss}");
     for (name, (calls, secs)) in eng.exec_stats() {
-        println!("  perf {name}: {calls} calls, {:.3}s total", secs);
+        println!("  perf {name}: {calls} calls, {secs:.3}s total");
     }
     println!("smoke OK");
     Ok(())

@@ -1,5 +1,6 @@
-//! Network simulation substrate: virtual clock + per-peer token-bucket
-//! links (paper §4.3's 110 Mb/s uplink / 500 Mb/s downlink constraint).
+//! Network simulation substrate: virtual clock + per-peer
+//! bandwidth-constrained FIFO links (paper §4.3's 110 Mb/s uplink /
+//! 500 Mb/s downlink constraint).
 //!
 //! The paper's communication phase runs over real internet links to object
 //! storage; here transfers are scheduled on a deterministic virtual clock

@@ -1,12 +1,21 @@
 //! Peer worker: one participant's full replica state and per-round
 //! behaviour (honest SparseLoCo, or one of the adversarial strategies the
 //! Gauntlet mechanism must withstand in an open-participation setting).
+//!
+//! Peers are designed to run concurrently: all round-local randomness
+//! draws from a per-peer RNG reseeded from (run seed, hotkey, round) via
+//! [`PeerState::begin_round`], so a peer's behaviour is a pure function
+//! of its identity and the round — independent of scheduling order. The
+//! compress phase fuses the EF accumulator into a per-peer scratch
+//! buffer and shares the Eq. 1 residual update
+//! (`topk::compress_acc_update_ef`), so steady-state rounds allocate
+//! nothing on the EF hot path.
 
 use anyhow::Result;
 
 use crate::gauntlet::Submission;
 use crate::runtime::{ops, Engine};
-use crate::sparseloco::{topk, Payload};
+use crate::sparseloco::{codec, topk, Payload};
 use crate::util::rng::Rng;
 
 /// Peer behaviour. Adversarial variants exercise Gauntlet's defenses:
@@ -37,6 +46,12 @@ impl Behavior {
     pub fn is_adversarial(&self) -> bool {
         !matches!(self, Behavior::Honest | Behavior::Stale)
     }
+
+    /// Whether this behaviour runs the honest compute path (real inner
+    /// steps on assigned data).
+    pub fn computes(&self) -> bool {
+        matches!(self, Behavior::Honest | Behavior::Stale | Behavior::Whale)
+    }
 }
 
 /// One peer's replica + protocol state.
@@ -58,6 +73,8 @@ pub struct PeerState {
     /// Rounds participated (for liveness stats).
     pub rounds_done: usize,
     rng: Rng,
+    /// Reusable EF accumulator (compress phase scratch).
+    scratch_acc: Vec<f32>,
 }
 
 impl PeerState {
@@ -84,7 +101,26 @@ impl PeerState {
             base_round: round,
             rounds_done: 0,
             rng: Rng::new(seed),
+            scratch_acc: Vec::new(),
         }
+    }
+
+    /// Reseed the per-round RNG. The round engine calls this with a seed
+    /// derived from (run seed, hotkey, round) before fanning peers out, so
+    /// round behaviour is identical whether peers run serially or across
+    /// a thread pool.
+    pub fn begin_round(&mut self, seed: u64) {
+        self.rng = Rng::new(seed);
+    }
+
+    /// Draw a bernoulli from the peer's round RNG (upload-slowness rolls).
+    pub fn roll_bool(&mut self, p: f64) -> bool {
+        self.rng.bool(p)
+    }
+
+    /// Draw a uniform index from the peer's round RNG (copy-source pick).
+    pub fn roll_below(&mut self, n: usize) -> usize {
+        self.rng.below(n)
     }
 
     /// Compute phase: H inner steps on assigned data (honest path).
@@ -116,35 +152,39 @@ impl PeerState {
 
     /// Communication phase, peer side: pseudo-gradient delta = theta_global
     /// - theta_local, then SparseLoCo compress with error feedback.
-    /// `use_rust_compress` selects the pure-Rust compressor instead of the
-    /// XLA/Pallas artifact. Both are bit-equivalent on selection/codes
-    /// (cross-checked by `xla_compress_matches_rust_reference`); the Rust
-    /// path is ~3x faster on this CPU testbed where the Pallas kernel
-    /// runs in interpret mode (see EXPERIMENTS.md §Perf).
+    ///
+    /// `fast_path` selects the fused in-place compressor (delta never
+    /// materialized; the EF accumulator is a reusable per-peer scratch
+    /// buffer — zero allocations beyond the payload itself). The
+    /// engine-tracked path computes the identical result through
+    /// `ops::compress` and shows up in `Engine::exec_stats`.
     pub fn compress_phase(
         &mut self,
         eng: &Engine,
         global_params: &[f32],
         beta: f32,
-        use_rust_compress: bool,
+        fast_path: bool,
     ) -> Result<Payload> {
-        let delta: Vec<f32> = global_params
-            .iter()
-            .zip(&self.params)
-            .map(|(g, l)| g - l)
-            .collect();
-        if use_rust_compress {
-            let man = eng.manifest();
-            let (payload, ef_new) = crate::sparseloco::topk::compress_with_ef(
-                &delta,
-                &self.ef,
-                beta,
+        let man = eng.manifest();
+        if fast_path {
+            let n = self.params.len();
+            self.scratch_acc.resize(n, 0.0);
+            // acc = beta*ef + (theta_global - theta_local), fused
+            for i in 0..n {
+                self.scratch_acc[i] = beta * self.ef[i] + (global_params[i] - self.params[i]);
+            }
+            Ok(topk::compress_acc_update_ef(
+                &self.scratch_acc,
+                &mut self.ef,
                 man.config.chunk,
                 man.config.topk,
-            );
-            self.ef = ef_new;
-            Ok(payload)
+            ))
         } else {
+            let delta: Vec<f32> = global_params
+                .iter()
+                .zip(&self.params)
+                .map(|(g, l)| g - l)
+                .collect();
             let (ef_new, payload) = ops::compress(eng, &delta, &self.ef, beta)?;
             self.ef = ef_new;
             Ok(payload)
@@ -199,13 +239,14 @@ impl PeerState {
         } else {
             self.base_round
         };
-        let wire = crate::sparseloco::codec::encode(&payload);
         Submission {
             hotkey: self.hotkey.clone(),
             uid: self.uid,
             round,
             base_round,
-            wire_bytes: wire.len(),
+            // Exact wire length without serializing (the store path
+            // encodes once, outside this call).
+            wire_bytes: codec::wire_size(payload.n_chunks, payload.k),
             payload,
             uploaded_at,
         }
@@ -245,7 +286,7 @@ mod tests {
     use super::*;
 
     fn mk_peer(b: Behavior) -> PeerState {
-        PeerState::join("hk".into(), 0, b, &vec![0.0; 256], 0, 3, 7)
+        PeerState::join("hk".into(), 0, b, &[0.0; 256], 0, 3, 7)
     }
 
     #[test]
@@ -256,9 +297,16 @@ mod tests {
     }
 
     #[test]
+    fn wire_bytes_matches_encoded_length() {
+        let mut p = mk_peer(Behavior::Noise);
+        let sub = p.fabricate_submission(3, None, None, 4, 8, 64, 1.0, 0.0);
+        assert_eq!(sub.wire_bytes, codec::encode(&sub.payload).len());
+    }
+
+    #[test]
     fn whale_scales_blown_up() {
         let mut p = mk_peer(Behavior::Whale);
-        let honest = topk::compress_dense(&vec![0.01; 256], 64, 8);
+        let honest = topk::compress_dense(&[0.01; 256], 64, 8);
         let n0 = honest.l2_norm();
         let sub = p.fabricate_submission(3, Some(honest), None, 4, 8, 64, 1.0, 0.0);
         assert!(sub.payload.l2_norm() > 100.0 * n0);
@@ -267,7 +315,7 @@ mod tests {
     #[test]
     fn stale_reports_old_base_round() {
         let mut p = mk_peer(Behavior::Stale);
-        let honest = topk::compress_dense(&vec![0.01; 256], 64, 8);
+        let honest = topk::compress_dense(&[0.01; 256], 64, 8);
         let sub = p.fabricate_submission(5, Some(honest), None, 4, 8, 64, 1.0, 0.0);
         assert_eq!(sub.base_round, 3);
     }
@@ -275,7 +323,7 @@ mod tests {
     #[test]
     fn copier_copies() {
         let mut p = mk_peer(Behavior::Copier);
-        let src = topk::compress_dense(&vec![0.5; 256], 64, 8);
+        let src = topk::compress_dense(&[0.5; 256], 64, 8);
         let sub = p.fabricate_submission(3, None, Some(&src), 4, 8, 64, 1.0, 0.0);
         assert_eq!(sub.payload, src);
     }
@@ -286,6 +334,24 @@ mod tests {
         let sub = p.fabricate_submission(3, None, None, 4, 8, 64, 1.0, 0.0);
         let n = sub.payload.l2_norm();
         assert!(n > 0.0 && n < 100.0, "norm={n}");
+    }
+
+    #[test]
+    fn begin_round_makes_rolls_deterministic() {
+        let mut a = mk_peer(Behavior::Noise);
+        let mut b = mk_peer(Behavior::Noise);
+        a.begin_round(1234);
+        b.begin_round(1234);
+        for _ in 0..20 {
+            assert_eq!(a.roll_bool(0.3), b.roll_bool(0.3));
+            assert_eq!(a.roll_below(17), b.roll_below(17));
+        }
+        // same seed -> identical fabricated noise payloads
+        a.begin_round(99);
+        b.begin_round(99);
+        let sa = a.fabricate_submission(3, None, None, 4, 8, 64, 1.0, 0.0);
+        let sb = b.fabricate_submission(3, None, None, 4, 8, 64, 1.0, 0.0);
+        assert_eq!(sa.payload, sb.payload);
     }
 
     #[test]

@@ -1,117 +1,128 @@
-//! PJRT execution engine: loads AOT HLO-text artifacts, compiles them once
-//! on the CPU PJRT client, and executes them from the request path.
+//! Execution engine: resolves a model (artifact directory or preset name)
+//! to a [`Manifest`] and dispatches every operation to the native CPU
+//! backend ([`super::native`]).
 //!
-//! Interchange is HLO *text* (see `python/compile/aot.py` and
-//! /opt/xla-example/README.md): `HloModuleProto::from_text_file` reassigns
-//! instruction ids, avoiding the 64-bit-id proto incompatibility between
-//! jax >= 0.5 and xla_extension 0.5.1.
+//! Historically this wrapped a PJRT CPU client executing AOT HLO-text
+//! artifacts produced by `python/compile/aot.py`; that path required the
+//! external `xla` crate and on-disk artifacts, neither of which this
+//! offline environment provides. The native backend implements the same
+//! ops (validated against finite differences and the Python semantics) in
+//! pure Rust, which also makes `Engine` `Send + Sync` — the coordinator
+//! fans peer compute out across a rayon pool sharing one engine.
+//! Re-introducing an accelerator backend is a ROADMAP item; the seam is
+//! exactly this type plus `runtime::ops`.
+//!
+//! Model resolution order for [`Engine::new`]:
+//! 1. `<dir>/manifest.json` exists — load it (an AOT artifact directory);
+//! 2. otherwise the final path component names a preset (`tiny`, `small`,
+//!    ...) — synthesize the manifest from `config::presets`. This keeps
+//!    every historical call site (`Engine::new("artifacts/tiny")`) working
+//!    hermetically.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
-use std::rc::Rc;
+use std::sync::Mutex;
 use std::time::Instant;
 
-use anyhow::{ensure, Context, Result};
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+use anyhow::{anyhow, Context, Result};
 
 use super::manifest::Manifest;
+use crate::config::layout::Layout;
+use crate::config::presets;
 
-/// Compiled-executable cache keyed by artifact name.
-///
-/// `Engine` is deliberately **not** `Send`: PJRT wrapper types hold raw
-/// pointers, so all device compute stays on the coordinator thread. The
-/// simulation layers (netsim, storage, chain) are pure Rust and run on a
-/// virtual clock, so this costs nothing on the 1-core testbed.
+/// Shared, thread-safe execution engine (one per model/config).
 pub struct Engine {
-    client: PjRtClient,
     manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<PjRtLoadedExecutable>>>,
-    /// Cumulative wall time spent inside PJRT execute, per artifact.
-    exec_stats: RefCell<HashMap<String, (u64, f64)>>,
+    /// Flat parameter layout, built once (ops on the validator hot loop
+    /// would otherwise recompute it per call).
+    layout: Layout,
+    /// Cumulative wall time inside each op: name -> (calls, seconds).
+    exec_stats: Mutex<HashMap<String, (u64, f64)>>,
 }
 
 impl Engine {
-    /// Create a CPU engine for one artifact directory.
-    pub fn new(artifact_dir: impl AsRef<std::path::Path>) -> Result<Self> {
-        let manifest = Manifest::load(&artifact_dir)?;
-        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Self {
-            client,
-            manifest,
-            cache: RefCell::new(HashMap::new()),
-            exec_stats: RefCell::new(HashMap::new()),
-        })
+    /// Engine for an artifact directory *or* a preset-named path
+    /// (`artifacts/tiny` resolves to the `tiny` preset when no
+    /// `manifest.json` is present).
+    pub fn new(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let manifest = if dir.join("manifest.json").is_file() {
+            Manifest::load(dir).with_context(|| format!("loading {}", dir.display()))?
+        } else {
+            let name = dir.file_name().and_then(|s| s.to_str()).ok_or_else(|| {
+                anyhow!("artifact path '{}' has no final component", dir.display())
+            })?;
+            let cfg = presets::get(name).with_context(|| {
+                format!(
+                    "no manifest.json under '{}' and its basename is not a preset",
+                    dir.display()
+                )
+            })?;
+            Manifest::synthesize(cfg, dir.to_path_buf())
+        };
+        let layout = Layout::build(&manifest.config);
+        Ok(Self { manifest, layout, exec_stats: Mutex::new(HashMap::new()) })
+    }
+
+    /// Engine directly from a preset name (`tiny`, `small`, `base`, ...).
+    pub fn from_preset(name: &str) -> Result<Self> {
+        let cfg = presets::get(name)?;
+        let manifest = Manifest::synthesize(cfg, format!("native://{name}").into());
+        let layout = Layout::build(&manifest.config);
+        Ok(Self { manifest, layout, exec_stats: Mutex::new(HashMap::new()) })
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
-    /// Compile (or fetch from cache) one artifact.
-    pub fn executable(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.borrow().get(name) {
-            return Ok(exe.clone());
-        }
-        let path = self.manifest.hlo_path(name)?;
-        let t0 = Instant::now();
-        let proto = HloModuleProto::from_text_file(path.to_str().unwrap())
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
-            self.client
-                .compile(&comp)
-                .with_context(|| format!("compiling artifact '{name}'"))?,
-        );
-        let _ = t0; // compile time visible via `covenant smoke`
-        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
-        Ok(exe)
+    /// The flat parameter layout (cached; identical to
+    /// `Layout::build(&self.manifest().config)`).
+    pub fn layout(&self) -> &Layout {
+        &self.layout
     }
 
-    /// Pre-compile a set of artifacts (pay compile cost up front).
-    pub fn warmup(&self, names: &[&str]) -> Result<()> {
-        for n in names {
-            self.executable(n)?;
-        }
-        Ok(())
-    }
-
-    /// Execute an artifact with literal inputs; returns untupled outputs.
-    ///
-    /// All artifacts are lowered with `return_tuple=True`, so the single
-    /// result buffer is a tuple literal that we decompose here.
-    pub fn run(&self, name: &str, inputs: &[Literal]) -> Result<Vec<Literal>> {
-        let spec = self.manifest.artifact(name)?;
-        ensure!(
-            spec.inputs.len() == inputs.len(),
-            "artifact '{name}' expects {} inputs, got {}",
-            spec.inputs.len(),
-            inputs.len()
-        );
-        let exe = self.executable(name)?;
-        let t0 = Instant::now();
-        let result = exe
-            .execute::<Literal>(inputs)
-            .with_context(|| format!("executing artifact '{name}'"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        let outs = lit.to_tuple().context("decomposing result tuple")?;
+    /// Record one op execution (called by `runtime::ops`).
+    pub(crate) fn note(&self, name: &str, t0: Instant) {
         let dt = t0.elapsed().as_secs_f64();
-        let mut stats = self.exec_stats.borrow_mut();
+        let mut stats = self.exec_stats.lock().expect("stats lock");
         let e = stats.entry(name.to_string()).or_insert((0, 0.0));
         e.0 += 1;
         e.1 += dt;
-        ensure!(
-            outs.len() == spec.outputs.len(),
-            "artifact '{name}' returned {} outputs, manifest says {}",
-            outs.len(),
-            spec.outputs.len()
-        );
-        Ok(outs)
     }
 
-    /// (calls, total_seconds) per artifact, for the perf report.
+    /// (calls, total_seconds) per op, for the perf report.
     pub fn exec_stats(&self) -> HashMap<String, (u64, f64)> {
-        self.exec_stats.borrow().clone()
+        self.exec_stats.lock().expect("stats lock").clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preset_fallback_resolves_tiny() {
+        let eng = Engine::new("artifacts/tiny").unwrap();
+        assert_eq!(eng.manifest().config.name, "tiny");
+        assert_eq!(eng.manifest().n_alloc, 430_080);
+    }
+
+    #[test]
+    fn unknown_preset_errors() {
+        assert!(Engine::new("artifacts/no-such-model").is_err());
+    }
+
+    #[test]
+    fn from_preset_and_stats() {
+        let eng = Engine::from_preset("tiny").unwrap();
+        assert!(eng.exec_stats().is_empty());
+        eng.note("x", Instant::now());
+        assert_eq!(eng.exec_stats()["x"].0, 1);
+    }
+
+    #[test]
+    fn engine_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Engine>();
     }
 }

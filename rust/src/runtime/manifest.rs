@@ -1,6 +1,13 @@
-//! Artifact manifest: the contract between `python/compile/aot.py` and the
-//! Rust runtime. Describes the model config, the flat parameter layout and
-//! every AOT-compiled HLO artifact's I/O signature.
+//! Model manifest: config + flat parameter layout + op signatures.
+//!
+//! Two provenances:
+//! * **Loaded** — `manifest.json` written by `python/compile/aot.py`
+//!   alongside AOT-compiled HLO artifacts (the contract between the
+//!   Python compile pipeline and this runtime);
+//! * **Synthesized** — built directly from a `config::presets` entry via
+//!   [`Manifest::synthesize`] when no artifact directory exists. The
+//!   native backend needs only the config and layout, so a synthesized
+//!   manifest is fully equivalent for execution.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -186,6 +193,25 @@ impl Manifest {
             artifacts,
             dir: dir.to_path_buf(),
         })
+    }
+
+    /// Build a manifest straight from a model config (no artifact files).
+    ///
+    /// Layout fields are produced by the same `config::layout::Layout` the
+    /// Python side mirrors, so a synthesized manifest is indistinguishable
+    /// from a loaded one as far as the native backend is concerned. The
+    /// `artifacts` table is left empty — there are no HLO files.
+    pub fn synthesize(config: ModelConfig, dir: PathBuf) -> Manifest {
+        let lay = crate::config::layout::Layout::build(&config);
+        Manifest {
+            n_params: lay.n_params,
+            n_alloc: lay.n_alloc,
+            n_chunks: lay.n_chunks(),
+            tensors: lay.slots,
+            artifacts: HashMap::new(),
+            config,
+            dir,
+        }
     }
 
     pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {

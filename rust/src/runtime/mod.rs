@@ -1,13 +1,16 @@
-//! Runtime layer: PJRT client wrapper + artifact manifest.
+//! Runtime layer: model resolution + the native CPU execution backend.
 //!
-//! Loads the HLO-text artifacts produced by `python/compile/aot.py`
-//! (`make artifacts`), compiles them once on the PJRT CPU client, and
-//! exposes `Engine::run(name, inputs)` to the coordinator. Python never
-//! runs on this path.
+//! [`Engine`] resolves an artifact directory or preset name to a
+//! [`Manifest`] and tracks per-op timing; [`ops`] exposes each paper
+//! operation (init, fused inner rounds, compression, outer step,
+//! evaluation) as a typed function over host vectors; [`native`] holds
+//! the model math (transformer forward/backward + AdamW over the flat
+//! block-major layout). The engine is `Send + Sync`, so the coordinator
+//! can fan peer compute out across threads against one shared engine.
 
 pub mod engine;
-pub mod literal;
 pub mod manifest;
+pub mod native;
 pub mod ops;
 
 pub use engine::Engine;

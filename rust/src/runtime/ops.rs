@@ -1,20 +1,31 @@
-//! Typed wrappers over the AOT artifacts: each paper operation (init,
-//! inner round, compression, outer step, evaluation) as a plain Rust
-//! function over host vectors. This is the entire L3<->L2 surface.
+//! Typed model operations: each paper operation (init, inner round,
+//! compression, outer step, evaluation) as a plain Rust function over host
+//! vectors. This is the entire coordinator <-> model surface; everything
+//! below it is the native backend in [`super::native`].
+//!
+//! All functions validate shapes against the engine's manifest, time
+//! themselves into `Engine::exec_stats`, and are deterministic — the
+//! parallel round engine depends on byte-identical results regardless of
+//! which thread runs an op.
+
+use std::time::Instant;
 
 use anyhow::{ensure, Result};
 
 use super::engine::Engine;
-use super::literal::{f32_tensor, f32_vec, i32_tensor, scalar_f32, scalar_i32, to_f32, to_i32, to_scalar_f32};
-use crate::sparseloco::Payload;
+use super::native;
+use crate::sparseloco::{topk, Payload};
 
 /// Initialize a flat parameter vector from a seed.
 pub fn init_params(eng: &Engine, seed: i32) -> Result<Vec<f32>> {
-    let outs = eng.run("init_params", &[scalar_i32(seed)])?;
-    to_f32(&outs[0])
+    let t0 = Instant::now();
+    let out = native::init_params(eng.manifest(), eng.layout(), seed);
+    eng.note("init_params", t0);
+    Ok(out)
 }
 
-/// One inner step. Returns (params', m', v', loss).
+/// One inner step. `step` is the 1-based step index (drives Adam bias
+/// correction). Returns (params', m', v', loss).
 #[allow(clippy::too_many_arguments)]
 pub fn train_step(
     eng: &Engine,
@@ -29,23 +40,27 @@ pub fn train_step(
 ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f32)> {
     let c = &eng.manifest().config;
     let (b, t) = (c.batch_size, c.seq_len);
-    let outs = eng.run(
-        "train_step",
-        &[
-            f32_vec(params),
-            f32_vec(m),
-            f32_vec(v),
-            scalar_f32(step),
-            i32_tensor(tokens, &[b, t + 1])?,
-            f32_tensor(mask, &[b, t])?,
-            scalar_f32(lr),
-            scalar_f32(clip),
-        ],
+    ensure!(tokens.len() == b * (t + 1), "tokens shape mismatch");
+    ensure!(mask.len() == b * t, "mask shape mismatch");
+    let t0 = Instant::now();
+    let out = native::train_step(
+        eng.manifest(),
+        eng.layout(),
+        params,
+        m,
+        v,
+        step,
+        tokens,
+        mask,
+        lr,
+        clip,
     )?;
-    Ok((to_f32(&outs[0])?, to_f32(&outs[1])?, to_f32(&outs[2])?, to_scalar_f32(&outs[3])?))
+    eng.note("train_step", t0);
+    Ok(out)
 }
 
-/// H fused inner steps (the compute phase). Returns (params', m', v',
+/// H fused inner steps (the compute phase). `step0` is the 0-based global
+/// inner-step count before this round. Returns (params', m', v',
 /// per-step losses).
 #[allow(clippy::too_many_arguments)]
 pub fn train_round(
@@ -63,23 +78,26 @@ pub fn train_round(
     let (h, b, t) = (c.inner_steps, c.batch_size, c.seq_len);
     ensure!(lrs.len() == h, "lrs must have H={h} entries");
     ensure!(tokens.len() == h * b * (t + 1), "tokens shape mismatch");
-    let outs = eng.run(
-        "train_round",
-        &[
-            f32_vec(params),
-            f32_vec(m),
-            f32_vec(v),
-            scalar_f32(step0),
-            i32_tensor(tokens, &[h, b, t + 1])?,
-            f32_tensor(mask, &[h, b, t])?,
-            f32_tensor(lrs, &[h])?,
-            scalar_f32(clip),
-        ],
+    ensure!(mask.len() == h * b * t, "mask shape mismatch");
+    let t0 = Instant::now();
+    let out = native::train_round(
+        eng.manifest(),
+        eng.layout(),
+        params,
+        m,
+        v,
+        step0,
+        tokens,
+        mask,
+        lrs,
+        clip,
     )?;
-    Ok((to_f32(&outs[0])?, to_f32(&outs[1])?, to_f32(&outs[2])?, to_f32(&outs[3])?))
+    eng.note("train_round", t0);
+    Ok(out)
 }
 
-/// SparseLoCo compression with error feedback (Eq. 1).
+/// SparseLoCo compression with error feedback (Eq. 1):
+/// acc = beta*ef + delta; payload = TopK+Q(acc); ef' = acc - dequant.
 /// Returns (new_ef, payload).
 pub fn compress(
     eng: &Engine,
@@ -88,72 +106,57 @@ pub fn compress(
     beta: f32,
 ) -> Result<(Vec<f32>, Payload)> {
     let man = eng.manifest();
-    let outs = eng.run(
-        "compress",
-        &[f32_vec(delta), f32_vec(ef), scalar_f32(beta)],
-    )?;
-    let ef_new = to_f32(&outs[0])?;
-    let idx = to_i32(&outs[1])?;
-    let codes = to_i32(&outs[2])?;
-    let scales = to_f32(&outs[3])?;
-    let payload =
-        Payload::from_parts(&idx, &codes, &scales, man.config.topk, man.config.chunk)?;
+    ensure!(delta.len() == man.n_alloc, "delta length mismatch");
+    ensure!(ef.len() == man.n_alloc, "ef length mismatch");
+    let t0 = Instant::now();
+    let (payload, ef_new) =
+        topk::compress_with_ef(delta, ef, beta, man.config.chunk, man.config.topk);
+    eng.note("compress", t0);
     Ok((ef_new, payload))
 }
 
-/// Decompress a payload through the XLA artifact (validation path; the
-/// hot path uses `Payload::accumulate_into` in pure Rust).
-pub fn decompress_xla(eng: &Engine, p: &Payload) -> Result<Vec<f32>> {
-    let nc = p.n_chunks;
-    let k = p.k;
-    let idx: Vec<i32> = p.idx.iter().map(|&x| x as i32).collect();
-    let codes: Vec<i32> = p.codes.iter().map(|&x| x as i32).collect();
-    let outs = eng.run(
-        "decompress",
-        &[
-            i32_tensor(&idx, &[nc, k])?,
-            i32_tensor(&codes, &[nc, k])?,
-            f32_tensor(&p.scales, &[nc, 1])?,
-        ],
-    )?;
-    to_f32(&outs[0])
+/// Decompress a payload to its dense vector (validation path; the hot
+/// path uses `Payload::accumulate_into` directly).
+pub fn decompress(eng: &Engine, p: &Payload) -> Result<Vec<f32>> {
+    let t0 = Instant::now();
+    let out = p.to_dense();
+    eng.note("decompress", t0);
+    Ok(out)
 }
 
 /// Outer step theta' = theta - alpha * delta (Eq. 2).
 pub fn outer_step(eng: &Engine, params: &[f32], delta: &[f32], alpha: f32) -> Result<Vec<f32>> {
-    let outs = eng.run(
-        "outer_step",
-        &[f32_vec(params), f32_vec(delta), scalar_f32(alpha)],
-    )?;
-    to_f32(&outs[0])
+    let t0 = Instant::now();
+    let out = native::outer_step(params, delta, alpha)?;
+    eng.note("outer_step", t0);
+    Ok(out)
 }
 
 /// Mean masked loss on one batch.
 pub fn eval_loss(eng: &Engine, params: &[f32], tokens: &[i32], mask: &[f32]) -> Result<f32> {
     let c = &eng.manifest().config;
     let (b, t) = (c.batch_size, c.seq_len);
-    let outs = eng.run(
-        "eval_loss",
-        &[
-            f32_vec(params),
-            i32_tensor(tokens, &[b, t + 1])?,
-            f32_tensor(mask, &[b, t])?,
-        ],
-    )?;
-    to_scalar_f32(&outs[0])
+    ensure!(tokens.len() == b * (t + 1), "tokens shape mismatch");
+    ensure!(mask.len() == b * t, "mask shape mismatch");
+    let t0 = Instant::now();
+    let out = native::eval_loss(eng.manifest(), eng.layout(), params, tokens, mask)?;
+    eng.note("eval_loss", t0);
+    Ok(out)
 }
 
 /// Per-sequence masked loss (multiple-choice scoring).
-pub fn loss_per_seq(eng: &Engine, params: &[f32], tokens: &[i32], mask: &[f32]) -> Result<Vec<f32>> {
+pub fn loss_per_seq(
+    eng: &Engine,
+    params: &[f32],
+    tokens: &[i32],
+    mask: &[f32],
+) -> Result<Vec<f32>> {
     let c = &eng.manifest().config;
     let (b, t) = (c.batch_size, c.seq_len);
-    let outs = eng.run(
-        "loss_per_seq",
-        &[
-            f32_vec(params),
-            i32_tensor(tokens, &[b, t + 1])?,
-            f32_tensor(mask, &[b, t])?,
-        ],
-    )?;
-    to_f32(&outs[0])
+    ensure!(tokens.len() == b * (t + 1), "tokens shape mismatch");
+    ensure!(mask.len() == b * t, "mask shape mismatch");
+    let t0 = Instant::now();
+    let out = native::loss_per_seq(eng.manifest(), eng.layout(), params, tokens, mask)?;
+    eng.note("loss_per_seq", t0);
+    Ok(out)
 }

@@ -6,14 +6,29 @@
 //! while staying within 2x of the 7.36-bit/value information-theoretic
 //! index bound without any entropy coder.
 //!
-//! Wire layout (little-endian):
-//!   magic  "CVPG"        4 B
-//!   version u16          2 B
-//!   k, log2(chunk) u8    2 B
-//!   n_chunks u32         4 B
-//!   scales   n_chunks * f32
-//!   codes    ceil(n_chunks*k/4)  (2 bits each, packed 4/byte)
-//!   indices  ceil(n_chunks*k*12/8)  (12 bits each, packed)
+//! Wire layout (little-endian), verified byte-for-byte by the encode/
+//! decode round-trip tests below (including the `nv % 4 != 0` partial
+//! code byte and the `nv % 2 == 1` 2-byte index tail):
+//!
+//! | section | bytes                                       |
+//! |---------|---------------------------------------------|
+//! | magic `"CVPG"` | 4                                    |
+//! | version u16    | 2                                    |
+//! | k u8, log2(chunk) u8 | 2                              |
+//! | n_chunks u32   | 4                                    |
+//! | scales         | n_chunks * 4 (f32)                   |
+//! | codes          | ceil(nv/4) — 2 bits each, 4 per byte, value j at bits (j%4)*2 |
+//! | indices        | (nv/2)*3 + (2 if nv odd) = ceil(nv*12/8) — index pairs packed a \| b<<12 into 3 bytes |
+//!
+//! where `nv = n_chunks * k`. Encoding and decoding are
+//! embarrassingly parallel per output byte/value; both fan out over the
+//! rayon pool above [`PAR_MIN_VALUES`] and produce bytes identical to the
+//! serial path. [`encode_into`] serializes into a caller-owned reusable
+//! buffer for callers that keep the bytes (the round engine itself uses
+//! the allocating [`encode`], since the wire bytes are moved into the
+//! object store and must be owned).
+
+use rayon::prelude::*;
 
 use anyhow::{bail, ensure, Result};
 
@@ -27,52 +42,90 @@ pub const INDEX_BITS: usize = 12;
 /// Bits per transmitted value for the quantized magnitude.
 pub const VALUE_BITS: usize = 2;
 
+/// Below this many transmitted values the serial path is used.
+pub const PAR_MIN_VALUES: usize = 1 << 14;
+
+/// Work-unit granularity for parallel section fills (output elements).
+const PAR_TASK: usize = 1 << 13;
+
+const HEADER_BYTES: usize = 12;
+
 /// Serialize a payload to wire bytes.
 pub fn encode(p: &Payload) -> Vec<u8> {
-    let nv = p.n_values();
-    let mut out = Vec::with_capacity(wire_size(p.n_chunks, p.k));
-    out.extend_from_slice(MAGIC);
-    out.extend_from_slice(&VERSION.to_le_bytes());
-    out.push(p.k as u8);
-    out.push(p.chunk.trailing_zeros() as u8);
-    out.extend_from_slice(&(p.n_chunks as u32).to_le_bytes());
-    for &s in &p.scales {
-        out.extend_from_slice(&s.to_le_bytes());
-    }
-    // 2-bit codes, 4 per byte.
-    let mut byte = 0u8;
-    for (i, &c) in p.codes.iter().enumerate() {
-        byte |= (c & 3) << ((i % 4) * 2);
-        if i % 4 == 3 {
-            out.push(byte);
-            byte = 0;
-        }
-    }
-    if nv % 4 != 0 {
-        out.push(byte);
-    }
-    // 12-bit indices: pack pairs into 3 bytes.
-    let mut i = 0;
-    while i + 1 < nv {
-        let a = p.idx[i] as u32;
-        let b = p.idx[i + 1] as u32;
-        let packed = a | (b << 12); // 24 bits
-        out.push((packed & 0xFF) as u8);
-        out.push(((packed >> 8) & 0xFF) as u8);
-        out.push(((packed >> 16) & 0xFF) as u8);
-        i += 2;
-    }
-    if i < nv {
-        let a = p.idx[i] as u32;
-        out.push((a & 0xFF) as u8);
-        out.push(((a >> 8) & 0xFF) as u8);
-    }
+    let mut out = Vec::new();
+    encode_into(p, &mut out);
     out
+}
+
+/// Serialize into a reusable buffer (cleared and resized; the capacity
+/// survives across rounds).
+pub fn encode_into(p: &Payload, out: &mut Vec<u8>) {
+    let nv = p.n_values();
+    let total = wire_size(p.n_chunks, p.k);
+    out.clear();
+    out.resize(total, 0);
+    // ---- header ---------------------------------------------------------
+    out[0..4].copy_from_slice(MAGIC);
+    out[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    out[6] = p.k as u8;
+    out[7] = p.chunk.trailing_zeros() as u8;
+    out[8..12].copy_from_slice(&(p.n_chunks as u32).to_le_bytes());
+    let (_, rest) = out.split_at_mut(HEADER_BYTES);
+    let (scales_sec, rest) = rest.split_at_mut(p.n_chunks * 4);
+    let (codes_sec, idx_sec) = rest.split_at_mut(nv.div_ceil(4));
+    // ---- scales ---------------------------------------------------------
+    for (dst, &s) in scales_sec.chunks_exact_mut(4).zip(&p.scales) {
+        dst.copy_from_slice(&s.to_le_bytes());
+    }
+    // ---- codes: 2 bits each, 4 per byte --------------------------------
+    let codes = &p.codes;
+    let fill_codes = |sec: &mut [u8], byte_base: usize| {
+        for (j, b) in sec.iter_mut().enumerate() {
+            let lo = (byte_base + j) * 4;
+            let hi = (lo + 4).min(nv);
+            let mut byte = 0u8;
+            for (sh, &c) in codes[lo..hi].iter().enumerate() {
+                byte |= (c & 3) << (sh * 2);
+            }
+            *b = byte;
+        }
+    };
+    // ---- indices: pairs packed a | b<<12 into 3 bytes -------------------
+    let idx = &p.idx;
+    let pairs = nv / 2;
+    let fill_idx = |sec: &mut [u8], pair_base: usize| {
+        for (g, dst) in sec.chunks_exact_mut(3).enumerate() {
+            let i = (pair_base + g) * 2;
+            let packed = idx[i] as u32 | ((idx[i + 1] as u32) << 12);
+            dst[0] = (packed & 0xFF) as u8;
+            dst[1] = ((packed >> 8) & 0xFF) as u8;
+            dst[2] = ((packed >> 16) & 0xFF) as u8;
+        }
+    };
+    let (idx_pairs_sec, idx_tail_sec) = idx_sec.split_at_mut(pairs * 3);
+    if nv >= PAR_MIN_VALUES {
+        codes_sec
+            .par_chunks_mut(PAR_TASK)
+            .enumerate()
+            .for_each(|(ci, sec)| fill_codes(sec, ci * PAR_TASK));
+        idx_pairs_sec
+            .par_chunks_mut(3 * PAR_TASK)
+            .enumerate()
+            .for_each(|(ci, sec)| fill_idx(sec, ci * PAR_TASK));
+    } else {
+        fill_codes(codes_sec, 0);
+        fill_idx(idx_pairs_sec, 0);
+    }
+    if nv % 2 == 1 {
+        let a = idx[nv - 1] as u32;
+        idx_tail_sec[0] = (a & 0xFF) as u8;
+        idx_tail_sec[1] = ((a >> 8) & 0xFF) as u8;
+    }
 }
 
 /// Deserialize wire bytes.
 pub fn decode(bytes: &[u8]) -> Result<Payload> {
-    ensure!(bytes.len() >= 12, "wire payload too short");
+    ensure!(bytes.len() >= HEADER_BYTES, "wire payload too short");
     ensure!(&bytes[0..4] == MAGIC, "bad magic");
     let version = u16::from_le_bytes([bytes[4], bytes[5]]);
     ensure!(version == VERSION, "unsupported wire version {version}");
@@ -83,38 +136,57 @@ pub fn decode(bytes: &[u8]) -> Result<Payload> {
     ensure!(k >= 1 && k <= chunk, "bad k {k}");
     let n_chunks = u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize;
     let nv = n_chunks * k;
-    let scales_end = 12 + n_chunks * 4;
-    let codes_len = nv.div_ceil(4);
-    let codes_end = scales_end + codes_len;
-    let idx_len = (nv / 2) * 3 + if nv % 2 == 1 { 2 } else { 0 };
-    let total = codes_end + idx_len;
+    let total = wire_size(n_chunks, k);
     if bytes.len() != total {
         bail!("wire payload length {} != expected {}", bytes.len(), total);
     }
-    let mut scales = Vec::with_capacity(n_chunks);
-    for c in 0..n_chunks {
-        let o = 12 + c * 4;
-        scales.push(f32::from_le_bytes([bytes[o], bytes[o + 1], bytes[o + 2], bytes[o + 3]]));
+    let scales_sec = &bytes[HEADER_BYTES..HEADER_BYTES + n_chunks * 4];
+    let codes_end = HEADER_BYTES + n_chunks * 4 + nv.div_ceil(4);
+    let codes_sec = &bytes[HEADER_BYTES + n_chunks * 4..codes_end];
+    let idx_sec = &bytes[codes_end..];
+
+    let scales: Vec<f32> = scales_sec
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+
+    let mut codes = vec![0u8; nv];
+    let fill_codes = |out: &mut [u8], base: usize| {
+        for (j, c) in out.iter_mut().enumerate() {
+            let i = base + j;
+            *c = (codes_sec[i / 4] >> ((i % 4) * 2)) & 3;
+        }
+    };
+    let mut idx = vec![0u16; nv];
+    let pairs = nv / 2;
+    let fill_idx = |out: &mut [u16], pair_base: usize| {
+        for (g, dst) in out.chunks_exact_mut(2).enumerate() {
+            let o = (pair_base + g) * 3;
+            let packed =
+                idx_sec[o] as u32 | ((idx_sec[o + 1] as u32) << 8) | ((idx_sec[o + 2] as u32) << 16);
+            dst[0] = (packed & 0xFFF) as u16;
+            dst[1] = ((packed >> 12) & 0xFFF) as u16;
+        }
+    };
+    let (idx_pairs, idx_tail) = idx.split_at_mut(pairs * 2);
+    if nv >= PAR_MIN_VALUES {
+        // PAR_TASK is a multiple of 4, so every task starts byte-aligned.
+        codes
+            .par_chunks_mut(PAR_TASK)
+            .enumerate()
+            .for_each(|(ci, out)| fill_codes(out, ci * PAR_TASK));
+        idx_pairs
+            .par_chunks_mut(2 * PAR_TASK)
+            .enumerate()
+            .for_each(|(ci, out)| fill_idx(out, ci * PAR_TASK));
+    } else {
+        fill_codes(&mut codes, 0);
+        fill_idx(idx_pairs, 0);
     }
-    let mut codes = Vec::with_capacity(nv);
-    for i in 0..nv {
-        let b = bytes[scales_end + i / 4];
-        codes.push((b >> ((i % 4) * 2)) & 3);
-    }
-    let mut idx = Vec::with_capacity(nv);
-    let mut i = 0;
-    let mut o = codes_end;
-    while i + 1 < nv {
-        let packed =
-            bytes[o] as u32 | ((bytes[o + 1] as u32) << 8) | ((bytes[o + 2] as u32) << 16);
-        idx.push((packed & 0xFFF) as u16);
-        idx.push(((packed >> 12) & 0xFFF) as u16);
-        o += 3;
-        i += 2;
-    }
-    if i < nv {
-        let a = bytes[o] as u32 | ((bytes[o + 1] as u32) << 8);
-        idx.push((a & 0xFFF) as u16);
+    if nv % 2 == 1 {
+        let o = pairs * 3;
+        let a = idx_sec[o] as u32 | ((idx_sec[o + 1] as u32) << 8);
+        idx_tail[0] = (a & 0xFFF) as u16;
     }
     let p = Payload { n_chunks, k, chunk, idx, codes, scales };
     p.validate(n_chunks, k, chunk)?;
@@ -124,7 +196,7 @@ pub fn decode(bytes: &[u8]) -> Result<Payload> {
 /// Exact wire size in bytes for a payload geometry.
 pub fn wire_size(n_chunks: usize, k: usize) -> usize {
     let nv = n_chunks * k;
-    12 + n_chunks * 4 + nv.div_ceil(4) + (nv / 2) * 3 + if nv % 2 == 1 { 2 } else { 0 }
+    HEADER_BYTES + n_chunks * 4 + nv.div_ceil(4) + (nv / 2) * 3 + if nv % 2 == 1 { 2 } else { 0 }
 }
 
 /// Wire bits per transmitted value (paper's 12 + 2 = 14 plus amortized
@@ -220,6 +292,33 @@ mod tests {
     }
 
     #[test]
+    fn roundtrip_above_parallel_threshold() {
+        // nv >= PAR_MIN_VALUES exercises the rayon fill paths; bytes and
+        // round-trip must be identical to the serial reference.
+        let mut rng = Rng::new(9);
+        let n_chunks = PAR_MIN_VALUES / 32 + 3; // k=33 -> nv > threshold, odd tails
+        let p = random_payload(&mut rng, n_chunks, 33, 4096);
+        assert!(p.n_values() >= PAR_MIN_VALUES);
+        let bytes = encode(&p);
+        assert_eq!(bytes.len(), wire_size(n_chunks, 33));
+        assert_eq!(decode(&bytes).unwrap(), p);
+    }
+
+    #[test]
+    fn encode_into_reuses_buffer_and_matches() {
+        let mut rng = Rng::new(4);
+        let a = random_payload(&mut rng, 12, 7, 128);
+        let b = random_payload(&mut rng, 30, 3, 64);
+        let mut buf = Vec::new();
+        encode_into(&a, &mut buf);
+        assert_eq!(buf, encode(&a));
+        // reuse with a different (smaller) payload: content must match a
+        // fresh encode exactly, stale capacity notwithstanding
+        encode_into(&b, &mut buf);
+        assert_eq!(buf, encode(&b));
+    }
+
+    #[test]
     fn paper_geometry_bits_per_value() {
         // C=4096, k=64: 14 bits/value + 32/64 scale bits + header.
         let bpv = bits_per_value(3080, 64); // ~12.6M-param model
@@ -260,6 +359,21 @@ mod tests {
         let mut rng = Rng::new(3);
         let p = random_payload(&mut rng, 3, 3, 32); // 9 values (odd)
         assert_eq!(decode(&encode(&p)).unwrap(), p);
+    }
+
+    #[test]
+    fn tail_bytes_all_small_nv_residues() {
+        // nv % 4 in {1,2,3} exercises the partial code byte; nv % 2 == 1
+        // the 2-byte index tail. Cover every residue class exhaustively.
+        let mut rng = Rng::new(6);
+        for k in 1..=9usize {
+            for n_chunks in 1..=5usize {
+                let p = random_payload(&mut rng, n_chunks, k, 16);
+                let bytes = encode(&p);
+                assert_eq!(bytes.len(), wire_size(n_chunks, k), "k={k} nc={n_chunks}");
+                assert_eq!(decode(&bytes).unwrap(), p, "k={k} nc={n_chunks}");
+            }
+        }
     }
 
     #[test]

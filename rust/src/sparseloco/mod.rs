@@ -1,8 +1,9 @@
 //! SparseLoCo on the Rust side: the wire codec for compressed
 //! pseudo-gradients (12-bit indices + 2-bit values + per-chunk scales,
-//! paper §2.1), a reference chunk-wise Top-k compressor (used by tests and
-//! by simulated adversarial peers that don't run the XLA path), and the
-//! dense scatter/aggregation hot path.
+//! paper §2.1), the chunk-parallel Top-k compressor with fused error
+//! feedback, and the dense scatter hot path the aggregator builds on.
+//! Compression, encode and decode all fan out across the rayon pool for
+//! large payloads while staying bit-identical to their serial paths.
 
 pub mod codec;
 pub mod payload;

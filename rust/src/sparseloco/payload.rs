@@ -89,15 +89,24 @@ impl Payload {
     pub fn accumulate_into(&self, out: &mut [f32], weight: f32) -> Result<()> {
         ensure!(out.len() == self.dense_len(), "dense length mismatch");
         for r in 0..self.n_chunks {
-            let base = r * self.chunk;
-            let s = self.scales[r] * weight;
-            let row = r * self.k;
-            for j in 0..self.k {
-                let pos = base + self.idx[row + j] as usize;
-                out[pos] += dequant_level(self.codes[row + j]) * s;
-            }
+            self.accumulate_chunk_into(r, &mut out[r * self.chunk..(r + 1) * self.chunk], weight);
         }
         Ok(())
+    }
+
+    /// Scatter one chunk's values into that chunk's dense slice
+    /// (`out.len() == self.chunk`). Lets the aggregator parallelize over
+    /// disjoint chunk ranges while keeping per-position accumulation
+    /// order identical to the serial path.
+    #[inline]
+    pub fn accumulate_chunk_into(&self, r: usize, out: &mut [f32], weight: f32) {
+        debug_assert_eq!(out.len(), self.chunk);
+        let s = self.scales[r] * weight;
+        let row = r * self.k;
+        for j in 0..self.k {
+            let pos = self.idx[row + j] as usize;
+            out[pos] += dequant_level(self.codes[row + j]) * s;
+        }
     }
 
     /// Expand to a fresh dense vector.
@@ -132,7 +141,12 @@ impl Payload {
     }
 
     /// Structural validation (used by Gauntlet fast checks).
-    pub fn validate(&self, expect_chunks: usize, expect_k: usize, expect_chunk: usize) -> Result<()> {
+    pub fn validate(
+        &self,
+        expect_chunks: usize,
+        expect_k: usize,
+        expect_chunk: usize,
+    ) -> Result<()> {
         if self.n_chunks != expect_chunks || self.k != expect_k || self.chunk != expect_chunk {
             bail!(
                 "payload geometry mismatch: ({}, {}, {}) vs expected ({}, {}, {})",

@@ -1,7 +1,8 @@
-//! Minimal JSON parser/serializer (this environment is offline; serde is
-//! unavailable). Supports the full JSON grammar minus `\u` surrogate pairs
-//! beyond the BMP; numbers are f64 (integers round-trip exactly to 2^53,
-//! far beyond anything in our manifests).
+//! Minimal JSON parser/serializer backing the manifest/config loaders
+//! (predates the crate's serde_json dependency, which the benches use
+//! for report emission). Supports the full JSON grammar minus `\u`
+//! surrogate pairs beyond the BMP; numbers are f64 (integers round-trip
+//! exactly to 2^53, far beyond anything in our manifests).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;

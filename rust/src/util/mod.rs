@@ -1,6 +1,8 @@
-//! In-crate substrate utilities (this environment is offline, so these
-//! replace serde/clap/rand/criterion): JSON, deterministic RNG, CLI
-//! parsing, stats/bench harness, and a tiny property-test helper.
+//! In-crate substrate utilities: JSON, deterministic RNG, CLI parsing,
+//! stats/bench harness, and a tiny property-test helper. These replace
+//! clap/rand/proptest/criterion (the crate keeps its dependency set to
+//! anyhow + rayon + serde); the hand-rolled `json` module predates the
+//! serde dependency and still backs the manifest/config loaders.
 
 pub mod cli;
 pub mod json;

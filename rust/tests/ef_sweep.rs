@@ -2,6 +2,8 @@
 //! loop (DESIGN.md ablation hook). Run explicitly:
 //!   cargo test --release --test ef_sweep -- --ignored --nocapture
 
+#![allow(clippy::field_reassign_with_default)]
+
 use covenant::data::grammar::GrammarKind;
 use covenant::data::{BatchSampler, Grammar};
 use covenant::runtime::{ops, Engine};

@@ -3,6 +3,8 @@
 //! peers, data and schedule. Guards against coordinator-level training
 //! bugs that unit tests can't see.
 
+#![allow(clippy::field_reassign_with_default)]
+
 use covenant::config::run::RunConfig;
 use covenant::coordinator::network::{Network, NetworkParams};
 use covenant::data::grammar::GrammarKind;
@@ -17,7 +19,7 @@ fn artifacts_dir() -> String {
 
 #[test]
 fn network_matches_manual_sparseloco_quality() {
-    let eng = Engine::new(artifacts_dir()).expect("run `make artifacts`");
+    let eng = Engine::new(artifacts_dir()).expect("tiny preset resolves without artifacts");
     let man = eng.manifest().clone();
     let h = man.config.inner_steps;
     let peers = 4usize;

@@ -1,0 +1,89 @@
+//! Parallel-vs-serial round-engine determinism.
+//!
+//! The round engine fans peer compute/compress/encode out across a rayon
+//! pool; correctness of the whole refactor rests on the invariant that
+//! the parallel and serial paths are *byte-identical*: per-peer RNGs are
+//! seeded from (run seed, hotkey, round), submissions merge in stable
+//! hotkey order, and aggregation accumulates payloads in submission order
+//! within disjoint chunk ranges. This test drives full rounds — churn,
+//! adversaries, Gauntlet scoring, aggregation, outer step — both ways and
+//! demands bit-equality of the resulting global model and round reports.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use covenant::config::run::RunConfig;
+use covenant::coordinator::network::{Network, NetworkParams, RoundReport};
+use covenant::runtime::Engine;
+use covenant::train::{OuterAlphaSchedule, Schedule, Segment};
+use covenant::util::proptest::check;
+
+fn build_params(seed: u64, peers: usize, adversarial: f64, parallel: bool) -> NetworkParams {
+    let mut run = RunConfig::default();
+    run.artifacts = "artifacts/tiny".into();
+    run.max_contributors = peers;
+    run.target_active = peers;
+    run.seed = seed;
+    let mut p = NetworkParams::quick(run, 4, 10);
+    p.initial_peers = peers;
+    p.churn.p_adversarial = adversarial;
+    p.schedule = Schedule::new(vec![Segment::Constant { lr: 2e-3, steps: 1 << 20 }]);
+    p.alpha = OuterAlphaSchedule::scaled(1.0, 4);
+    p.rust_compress = true; // fused compressor on the fan-out path
+    p.parallel = parallel;
+    p
+}
+
+fn run_rounds(eng: &Engine, p: NetworkParams, rounds: usize) -> (Vec<f32>, Vec<RoundReport>) {
+    let mut net = Network::new(eng, p).unwrap();
+    for _ in 0..rounds {
+        net.run_round().unwrap();
+    }
+    (net.global_params.clone(), net.reports.clone())
+}
+
+#[test]
+fn parallel_and_serial_rounds_bit_identical() {
+    let eng = Engine::new("artifacts/tiny").unwrap();
+    check(
+        3,
+        |r| (r.next_u64(), 3 + r.below(2), [0.0, 0.25][r.below(2)]),
+        |&(seed, peers, adversarial)| {
+            let rounds = 2;
+            let (g_par, rep_par) =
+                run_rounds(&eng, build_params(seed, peers, adversarial, true), rounds);
+            let (g_ser, rep_ser) =
+                run_rounds(&eng, build_params(seed, peers, adversarial, false), rounds);
+            // aggregated gradients fed the outer step: global params must
+            // agree bit for bit
+            if g_par != g_ser {
+                return false;
+            }
+            rep_par.len() == rep_ser.len()
+                && rep_par.iter().zip(&rep_ser).all(|(a, b)| {
+                    a.round == b.round
+                        && a.submitted == b.submitted
+                        && a.contributing == b.contributing
+                        && a.adversarial_submitted == b.adversarial_submitted
+                        && a.adversarial_selected == b.adversarial_selected
+                        && a.mean_loss.to_bits() == b.mean_loss.to_bits()
+                        && a.bytes_up == b.bytes_up
+                        && a.bytes_down == b.bytes_down
+                })
+        },
+    );
+}
+
+#[test]
+fn fused_and_engine_compress_paths_agree() {
+    // rust_compress toggles between the fused in-place EF compressor and
+    // the engine-tracked ops::compress; the round trajectories must match
+    // exactly.
+    let eng = Engine::new("artifacts/tiny").unwrap();
+    let mut fast = build_params(0xAB, 3, 0.0, true);
+    fast.rust_compress = true;
+    let mut slow = build_params(0xAB, 3, 0.0, true);
+    slow.rust_compress = false;
+    let (g_fast, _) = run_rounds(&eng, fast, 2);
+    let (g_slow, _) = run_rounds(&eng, slow, 2);
+    assert_eq!(g_fast, g_slow);
+}
