@@ -1,13 +1,16 @@
 //! Hot-path microbenchmarks (§Perf instrument): native engine op
-//! timings, the pure-Rust comm-phase components (compress, wire codec,
-//! aggregation), and the headline number for this repo's perf
-//! trajectory — serial vs parallel round-engine throughput at 16
-//! simulated peers.
+//! timings — blocked/parallel kernels vs the naive serial baseline
+//! (`kernels::force_naive`, bit-identical, so both run in one process on
+//! one host) — the pure-Rust comm-phase components (compress, wire codec,
+//! aggregation), Gauntlet `score_round` serial vs rayon fan-out, and the
+//! headline number for this repo's perf trajectory: serial vs parallel
+//! round-engine throughput at 16 simulated peers.
 //!
 //! Results are printed and written to `BENCH_hotpath.json` at the repo
 //! root, so successive PRs can track the trajectory.
 //!
 //! Run: cargo bench --bench hotpath [-- --artifacts artifacts/tiny --round-peers 16 --rounds 2]
+//! CI:  cargo bench --bench hotpath -- --smoke   (tiny budget, no JSON write)
 
 #![allow(clippy::field_reassign_with_default)]
 
@@ -16,10 +19,13 @@ use std::time::Instant;
 use anyhow::Result;
 use serde_json::json;
 
-use covenant::config::run::RunConfig;
+use covenant::config::run::{GauntletConfig, RunConfig};
 use covenant::coordinator::aggregator;
 use covenant::coordinator::network::{Network, NetworkParams};
-use covenant::runtime::{ops, Engine};
+use covenant::gauntlet::testkit::{synthetic_submission, SyntheticEvalData};
+use covenant::gauntlet::validator::Validator;
+use covenant::gauntlet::Submission;
+use covenant::runtime::{kernels, ops, Engine};
 use covenant::sparseloco::{codec, topk, Payload};
 use covenant::train::{OuterAlphaSchedule, Schedule, Segment};
 use covenant::util::cli::Args;
@@ -51,17 +57,53 @@ fn round_engine_secs(eng: &Engine, peers: usize, rounds: usize, parallel: bool) 
     Ok(t0.elapsed().as_secs_f64())
 }
 
+/// Clean synthetic submissions via the shared Gauntlet fixture
+/// (`gauntlet::testkit`, also driving `tests/gauntlet_churn.rs`): tiny
+/// payload norms, distinct hashes.
+fn bench_submissions(eng: &Engine, peers: usize) -> Vec<Submission> {
+    (0..peers)
+        .map(|i| {
+            synthetic_submission(eng, &format!("bench-{i}"), i, 0, 0x5AB + i as u64, 1e-5)
+        })
+        .collect()
+}
+
+/// One full `score_round` (fresh validator each call: every submission is
+/// unproven, so all of them get LossScore evaluations — the worst case).
+fn score_round_once(
+    eng: &Engine,
+    base: &[f32],
+    subs: &[Submission],
+    eval_batches_n: usize,
+    parallel: bool,
+) {
+    let cfg = GauntletConfig {
+        loss_eval_fraction: 1.0,
+        eval_batches: eval_batches_n,
+        parallel_eval: parallel,
+        ..Default::default()
+    };
+    let mut val = Validator::new(cfg, 0x5EED);
+    let mut provider = SyntheticEvalData::for_engine(eng);
+    val.score_round(eng, base, subs, 0, 1e9, 0.05, subs.len(), &mut provider).unwrap();
+}
+
 fn main() -> Result<()> {
     let args = Args::parse();
+    let smoke = args.has_flag("smoke");
     let artifacts = args.get_or("artifacts", "artifacts/tiny");
-    let round_peers = args.get_usize("round-peers", 16)?;
-    let round_rounds = args.get_usize("rounds", 2)?;
+    let round_peers = args.get_usize("round-peers", if smoke { 3 } else { 16 })?;
+    let round_rounds = args.get_usize("rounds", if smoke { 1 } else { 2 })?;
+    // iteration budgets collapse to 1 in smoke mode (CI bit-rot guard)
+    let it = |n: usize| if smoke { 1 } else { n };
+    let wu = usize::from(!smoke);
     let eng = Engine::new(&artifacts)?;
     let man = eng.manifest().clone();
     let na = man.n_alloc;
     let (b, t, h) = (man.config.batch_size, man.config.seq_len, man.config.inner_steps);
     println!(
-        "hotpath: config={} ({} params, {} chunks), B={b} T={t} H={h}, {} rayon threads\n",
+        "hotpath{}: config={} ({} params, {} chunks), B={b} T={t} H={h}, {} rayon threads\n",
+        if smoke { " [smoke]" } else { "" },
         man.config.name,
         man.n_params,
         man.n_chunks,
@@ -80,32 +122,50 @@ fn main() -> Result<()> {
     let round_mask = vec![1f32; h * b * t];
     let lrs = vec![1e-3f32; h];
 
-    // ---- native engine ops ------------------------------------------------
-    println!("== native engine ops (single replica, serial) ==");
-    let s_step = bench(1, 5, || {
+    // ---- native engine ops: blocked/parallel kernels vs naive baseline ----
+    println!("== native engine ops (blocked/parallel kernels + workspace) ==");
+    let s_step = bench(wu, it(5), || {
         ops::train_step(&eng, &params, &m, &v, 1.0, &tokens, &mask, 1e-3, 0.0).unwrap();
     });
     report("train_step (1 inner step)", &s_step, None);
-    let per_round = bench(1, 3, || {
+    let per_round = bench(wu, it(3), || {
         ops::train_round(&eng, &params, &m, &v, 0.0, &round_tokens, &round_mask, &lrs, 0.0)
             .unwrap();
     });
     report(&format!("train_round (H={h} fused steps)"), &per_round, None);
-
-    let delta: Vec<f32> = (0..na).map(|_| rng.normal() as f32 * 1e-3).collect();
-    let ef = vec![0f32; na];
-    let s_compress = bench(1, 5, || {
-        ops::compress(&eng, &delta, &ef, 0.95).unwrap();
-    });
-    report("compress (Top-k + 2-bit + EF)", &s_compress, Some((na * 4) as f64));
-    let s = bench(1, 5, || {
-        ops::outer_step(&eng, &params, &delta, 1.0).unwrap();
-    });
-    report("outer_step", &s, Some((na * 4) as f64));
-    let s_eval = bench(1, 5, || {
+    let s_eval = bench(wu, it(5), || {
         ops::eval_loss(&eng, &params, &tokens, &mask).unwrap();
     });
     report("eval_loss (fwd only)", &s_eval, None);
+
+    // Pre-PR baseline on the same host: naive serial kernels
+    // (bit-identical results, so the comparison is pure speed).
+    kernels::force_naive(true);
+    let s_step_naive = bench(wu, it(3), || {
+        ops::train_step(&eng, &params, &m, &v, 1.0, &tokens, &mask, 1e-3, 0.0).unwrap();
+    });
+    report("train_step (naive serial baseline)", &s_step_naive, None);
+    let s_eval_naive = bench(wu, it(3), || {
+        ops::eval_loss(&eng, &params, &tokens, &mask).unwrap();
+    });
+    report("eval_loss  (naive serial baseline)", &s_eval_naive, None);
+    kernels::force_naive(false);
+    println!(
+        "kernel speedup: train_step {:.2}x, eval_loss {:.2}x\n",
+        s_step_naive.mean / s_step.mean,
+        s_eval_naive.mean / s_eval.mean
+    );
+
+    let delta: Vec<f32> = (0..na).map(|_| rng.normal() as f32 * 1e-3).collect();
+    let ef = vec![0f32; na];
+    let s_compress = bench(wu, it(5), || {
+        ops::compress(&eng, &delta, &ef, 0.95).unwrap();
+    });
+    report("compress (Top-k + 2-bit + EF)", &s_compress, Some((na * 4) as f64));
+    let s = bench(wu, it(5), || {
+        ops::outer_step(&eng, &params, &delta, 1.0).unwrap();
+    });
+    report("outer_step", &s, Some((na * 4) as f64));
 
     // ---- pure-Rust comm-phase components -----------------------------------
     println!("\n== pure-Rust comm-phase components ==");
@@ -118,7 +178,7 @@ fn main() -> Result<()> {
         })
         .collect();
     let refs: Vec<&Payload> = payloads.iter().collect();
-    let s_agg = bench(2, 20, || {
+    let s_agg = bench(wu * 2, it(20), || {
         std::hint::black_box(aggregator::aggregate(&refs, na).unwrap());
     });
     report(
@@ -126,25 +186,46 @@ fn main() -> Result<()> {
         &s_agg,
         Some((20 * payloads[0].n_values() * 6) as f64),
     );
-    let s = bench(2, 50, || {
+    let s = bench(wu * 2, it(50), || {
         std::hint::black_box(aggregator::median_norm_weights(&refs));
     });
     report("median-norm weights (20 payloads)", &s, None);
     let wire = codec::encode(&payloads[0]);
     let mut wire_buf = Vec::new();
-    let s_enc = bench(2, 50, || {
+    let s_enc = bench(wu * 2, it(50), || {
         codec::encode_into(&payloads[0], &mut wire_buf);
         std::hint::black_box(&wire_buf);
     });
     report("wire encode (reused buffer)", &s_enc, Some(wire.len() as f64));
-    let s_dec = bench(2, 50, || {
+    let s_dec = bench(wu * 2, it(50), || {
         std::hint::black_box(codec::decode(&wire).unwrap());
     });
     report("wire decode", &s_dec, Some(wire.len() as f64));
-    let s_rc = bench(1, 10, || {
+    let s_rc = bench(wu, it(10), || {
         std::hint::black_box(topk::compress_dense(&delta, man.config.chunk, man.config.topk));
     });
     report("chunk-parallel compress_dense", &s_rc, Some((na * 4) as f64));
+
+    // ---- Gauntlet scoring: serial vs rayon fan-out -------------------------
+    let v_peers = if smoke { 3 } else { 8 };
+    let v_batches = 2;
+    println!(
+        "\n== Gauntlet score_round ({v_peers} unproven peers, {v_batches} eval batches, full LossScore) =="
+    );
+    let subs = bench_submissions(&eng, v_peers);
+    let s_score_ser = bench(wu, it(3), || {
+        score_round_once(&eng, &params, &subs, v_batches, false);
+    });
+    report("score_round (serial)", &s_score_ser, None);
+    let s_score_par = bench(wu, it(3), || {
+        score_round_once(&eng, &params, &subs, v_batches, true);
+    });
+    report("score_round (rayon fan-out)", &s_score_par, None);
+    println!(
+        "score_round speedup: {:.2}x on {} rayon threads",
+        s_score_ser.mean / s_score_par.mean,
+        rayon::current_num_threads()
+    );
 
     // ---- round engine: serial vs parallel ----------------------------------
     println!(
@@ -167,10 +248,16 @@ fn main() -> Result<()> {
         rayon::current_num_threads()
     );
 
+    if smoke {
+        println!("\nsmoke mode: skipping BENCH_hotpath.json write");
+        println!("hotpath smoke OK");
+        return Ok(());
+    }
+
     // ---- perf trajectory record --------------------------------------------
     let out = json!({
         "bench": "hotpath",
-        "note": "Perf-trajectory record; regenerate with `cargo bench --bench hotpath` (run from rust/). Numbers are host-specific.",
+        "note": "Perf-trajectory record; regenerate with `cargo bench --bench hotpath` (run from rust/). Numbers are host-specific. The *_naive_serial_s entries are the pre-optimization kernel baseline measured in the same process on the same host (bit-identical math, kernels::force_naive).",
         "config": man.config.name,
         "rayon_threads": rayon::current_num_threads(),
         "n_params": man.n_params,
@@ -186,9 +273,21 @@ fn main() -> Result<()> {
         },
         "ops": {
             "train_step_s": s_step.mean,
+            "train_step_naive_serial_s": s_step_naive.mean,
+            "train_step_speedup_vs_naive": s_step_naive.mean / s_step.mean,
             "train_round_s": per_round.mean,
             "compress_s": s_compress.mean,
             "eval_loss_s": s_eval.mean,
+            "eval_loss_naive_serial_s": s_eval_naive.mean,
+            "eval_loss_speedup_vs_naive": s_eval_naive.mean / s_eval.mean,
+        },
+        "validator": {
+            "peers": v_peers,
+            "eval_batches": v_batches,
+            "loss_eval_fraction": 1.0,
+            "score_round_serial_s": s_score_ser.mean,
+            "score_round_parallel_s": s_score_par.mean,
+            "speedup": s_score_ser.mean / s_score_par.mean,
         },
         "comm": {
             "wire_bytes": wire.len(),

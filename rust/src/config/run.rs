@@ -89,6 +89,10 @@ pub struct GauntletConfig {
     pub copy_margin: f64,
     /// Sync-check: max relative L2 distance of claimed base params hash.
     pub max_norm_ratio: f64,
+    /// Fan LossScore evaluations across the rayon pool (per-submission
+    /// evaluations are independent; verdicts merge in submission order,
+    /// so results are bit-identical to the serial path either way).
+    pub parallel_eval: bool,
 }
 
 impl Default for GauntletConfig {
@@ -104,6 +108,7 @@ impl Default for GauntletConfig {
             // duplicate-payload fast check.
             copy_margin: 0.05,
             max_norm_ratio: 10.0,
+            parallel_eval: true,
         }
     }
 }
@@ -171,6 +176,9 @@ impl RunConfig {
             }
             if let Some(v) = g.opt("max_norm_ratio") {
                 c.gauntlet.max_norm_ratio = v.as_f64()?;
+            }
+            if let Some(v) = g.opt("parallel_eval") {
+                c.gauntlet.parallel_eval = v.as_bool()?;
             }
         }
         Ok(c)

@@ -19,7 +19,12 @@
 //! compute concurrently on their own hardware. `run_round` therefore fans
 //! the compute -> compress -> wire-encode pipeline out across the rayon
 //! pool ([`NetworkParams::parallel`]; the serial path is kept for
-//! comparison and debugging). Determinism is preserved exactly:
+//! comparison and debugging). Step 5's LossScore evaluations fan out
+//! across the *same* pool (`GauntletConfig::parallel_eval`, forced off
+//! when `parallel` is off), and the dense kernels underneath
+//! (`runtime::kernels`) fan row panels out across it too — rayon's work
+//! stealing balances all three levels without oversubscription.
+//! Determinism is preserved exactly:
 //!
 //! * each peer's round RNG is reseeded from (run seed, hotkey, round)
 //!   (`round_seed`), so behaviour never depends on scheduling order;
@@ -278,7 +283,11 @@ impl<'e> Network<'e> {
         shards.publish(&mut store, p.kind)?;
         let churn = ChurnModel::new(p.churn, p.run.seed ^ 0xC0DE);
         let global_params = ops::init_params(eng, p.run.seed as i32)?;
-        let validator = Validator::new(p.run.gauntlet.clone(), p.run.seed ^ 0x5C0);
+        let mut validator = Validator::new(p.run.gauntlet.clone(), p.run.seed ^ 0x5C0);
+        // The validator shares the round engine's rayon pool; a serial
+        // run (`parallel: false`) keeps Gauntlet scoring serial too.
+        // Either way the verdicts are bit-identical.
+        validator.cfg.parallel_eval &= p.parallel;
 
         let mut net = Network {
             eng,

@@ -44,13 +44,14 @@ pub fn apply_single(base: &[f32], payload: &Payload, alpha: f32) -> Vec<f32> {
     candidate
 }
 
-/// Mean loss across batches.
+/// Mean loss across batches. One workspace checkout for the whole set
+/// (`ops::eval_loss_many`), so the candidate's weights unpack once no
+/// matter how many batches — or how many concurrent evaluations share
+/// the engine's workspace pool.
 pub fn mean_loss(eng: &Engine, params: &[f32], batches: &[EvalBatch]) -> Result<f64> {
-    let mut acc = 0f64;
-    for (tokens, mask) in batches {
-        acc += ops::eval_loss(eng, params, tokens, mask)? as f64;
-    }
-    Ok(acc / batches.len().max(1) as f64)
+    let losses = ops::eval_loss_many(eng, params, batches)?;
+    let acc: f64 = losses.iter().map(|&l| l as f64).sum();
+    Ok(acc / losses.len().max(1) as f64)
 }
 
 /// Full LossScore for one submission.

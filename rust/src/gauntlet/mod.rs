@@ -12,6 +12,7 @@
 pub mod fast_checks;
 pub mod loss_score;
 pub mod openskill;
+pub mod testkit;
 pub mod validator;
 
 use crate::sparseloco::Payload;

@@ -1,0 +1,83 @@
+//! Deterministic synthetic fixtures for Gauntlet benches and tests.
+//!
+//! `benches/hotpath.rs` (score_round serial-vs-fan-out timing) and
+//! `tests/gauntlet_churn.rs` (churn/probation/determinism assertions)
+//! must drive the validator with the *same* workload, or the bench
+//! measures something the tests never validated. Keeping the fixture
+//! here — like `util::proptest`, a small always-compiled test substrate
+//! — makes that a property of the code rather than of a pair of
+//! copy-pasted helpers.
+
+use crate::gauntlet::loss_score::EvalBatch;
+use crate::gauntlet::validator::EvalDataProvider;
+use crate::gauntlet::Submission;
+use crate::runtime::Engine;
+use crate::sparseloco::{codec, topk};
+use crate::util::rng::Rng;
+
+/// Deterministic full-mask eval batches from a seed.
+pub fn eval_batches(seed: u64, b: usize, t: usize, vocab: usize, n: usize) -> Vec<EvalBatch> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let toks: Vec<i32> =
+                (0..b * (t + 1)).map(|_| rng.below(vocab) as i32).collect();
+            (toks, vec![1f32; b * t])
+        })
+        .collect()
+}
+
+/// Deterministic eval-data provider keyed by uid — recycled UIDs get
+/// their predecessor's shards, like the real shard assignment would.
+pub struct SyntheticEvalData {
+    pub b: usize,
+    pub t: usize,
+    pub vocab: usize,
+}
+
+impl SyntheticEvalData {
+    /// Provider shaped for the engine's config.
+    pub fn for_engine(eng: &Engine) -> SyntheticEvalData {
+        let c = &eng.manifest().config;
+        SyntheticEvalData { b: c.batch_size, t: c.seq_len, vocab: c.vocab_size }
+    }
+}
+
+impl EvalDataProvider for SyntheticEvalData {
+    fn assigned_batches(&mut self, uid: usize, n: usize) -> Vec<EvalBatch> {
+        eval_batches(0xA551 ^ ((uid as u64) << 8), self.b, self.t, self.vocab, n)
+    }
+
+    fn unassigned_batches(&mut self, n: usize) -> Vec<EvalBatch> {
+        eval_batches(0xBEEF, self.b, self.t, self.vocab, n)
+    }
+}
+
+/// Synthetic submission: Top-k compression of a dense N(0, scale)
+/// vector, correct geometry for the engine's manifest, uploaded well
+/// before any reasonable deadline. Distinct seeds give distinct payload
+/// hashes (duplicate fast-check stays quiet); `scale` sets the payload
+/// norm — tiny values (~1e-5) test clean under LossScore, large ones
+/// trip the abnormal-norm check.
+pub fn synthetic_submission(
+    eng: &Engine,
+    hotkey: &str,
+    uid: usize,
+    round: usize,
+    seed: u64,
+    scale: f32,
+) -> Submission {
+    let man = eng.manifest();
+    let mut rng = Rng::new(seed);
+    let dense: Vec<f32> = (0..man.n_alloc).map(|_| rng.normal() as f32 * scale).collect();
+    let payload = topk::compress_dense(&dense, man.config.chunk, man.config.topk);
+    Submission {
+        hotkey: hotkey.into(),
+        uid,
+        round,
+        base_round: round,
+        wire_bytes: codec::wire_size(payload.n_chunks, payload.k),
+        payload,
+        uploaded_at: 10.0,
+    }
+}

@@ -2,8 +2,19 @@
 //! and the persistent OpenSkill ranking into a final per-peer score, then
 //! selects the round's contributors (paper §2.2) and the weights written
 //! to the chain.
+//!
+//! LossScore evaluations dominate validator wall time and are independent
+//! per submission, so `score_round` fans them across the rayon pool
+//! (shared with the round engine; see `coordinator::network`) when
+//! `GauntletConfig::parallel_eval` is set: eval data is prefetched
+//! serially (the provider is `&mut`), the forward passes run in parallel
+//! against the `Send + Sync` engine, and results merge back in stable
+//! submission order. Each evaluation is a pure deterministic function of
+//! its inputs, so the parallel path is bit-identical to the serial one —
+//! asserted by the `gauntlet_churn` integration test.
 
 use anyhow::Result;
+use rayon::prelude::*;
 
 use crate::config::run::GauntletConfig;
 use crate::gauntlet::fast_checks::{run_fast_checks, FastCheck, FastCheckParams};
@@ -129,21 +140,48 @@ impl Validator {
 
         let unassigned = data.unassigned_batches(self.cfg.eval_batches);
         let base_unassigned = mean_loss(eng, base_params, &unassigned)?;
+        // Serial prologue: the data provider is `&mut`, so assigned
+        // batches are prefetched in eval order before the fan-out (same
+        // provider call sequence as the serial path).
+        let assigned: Vec<Vec<EvalBatch>> = eval_ids
+            .iter()
+            .map(|&i| data.assigned_batches(subs[i].uid, self.cfg.eval_batches))
+            .collect();
+        // Per-submission evaluations are independent and deterministic;
+        // fanning them across the pool and merging in eval order is
+        // bit-identical to evaluating serially.
+        let copy_margin = self.cfg.copy_margin;
+        let eval_one =
+            |(&i, batches): (&usize, &Vec<EvalBatch>)| -> Result<(usize, LossScoreResult)> {
+                let base_assigned = mean_loss(eng, base_params, batches)?;
+                let r = loss_score(
+                    eng,
+                    base_params,
+                    &subs[i].payload,
+                    alpha,
+                    batches,
+                    &unassigned,
+                    base_assigned,
+                    base_unassigned,
+                    copy_margin,
+                )?;
+                Ok((i, r))
+            };
+        let evals: Vec<(usize, LossScoreResult)> = if self.cfg.parallel_eval {
+            eval_ids
+                .par_iter()
+                .zip(assigned.par_iter())
+                .map(eval_one)
+                .collect::<Result<_>>()?
+        } else {
+            eval_ids
+                .iter()
+                .zip(assigned.iter())
+                .map(eval_one)
+                .collect::<Result<_>>()?
+        };
         let mut loss_evals: Vec<Option<LossScoreResult>> = vec![None; subs.len()];
-        for &i in &eval_ids {
-            let assigned = data.assigned_batches(subs[i].uid, self.cfg.eval_batches);
-            let base_assigned = mean_loss(eng, base_params, &assigned)?;
-            let r = loss_score(
-                eng,
-                base_params,
-                &subs[i].payload,
-                alpha,
-                &assigned,
-                &unassigned,
-                base_assigned,
-                base_unassigned,
-                self.cfg.copy_margin,
-            )?;
+        for (i, r) in evals {
             loss_evals[i] = Some(r);
         }
         // ---- OpenSkill match over this round's evaluated peers ----------

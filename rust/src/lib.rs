@@ -15,7 +15,12 @@
 //! rayon pool, then merges deterministically — parallel and serial
 //! rounds produce byte-identical global models (per-peer RNGs are seeded
 //! from (run seed, hotkey, round); aggregation accumulates in submission
-//! order within disjoint chunk ranges).
+//! order within disjoint chunk ranges). The compute hot path underneath
+//! is built the same way: [`runtime::kernels`] are cache-blocked and
+//! rayon-parallel yet bit-identical to their serial references (fixed
+//! per-element accumulation order), ops run allocation-free over pooled
+//! [`runtime::workspace::Workspace`]s, and the Gauntlet validator fans
+//! LossScore evaluations across the same pool.
 //!
 //! Start at the `README.md` module map; `examples/quickstart.rs` walks
 //! the protocol by hand.

@@ -123,8 +123,9 @@ impl PeerState {
         self.rng.below(n)
     }
 
-    /// Compute phase: H inner steps on assigned data (honest path).
-    /// Returns per-step losses.
+    /// Compute phase: H inner steps on assigned data (honest path),
+    /// updating the replica (params/m/v) in place — no cloning of the
+    /// full state per round. Returns per-step losses.
     pub fn compute_phase(
         &mut self,
         eng: &Engine,
@@ -132,20 +133,17 @@ impl PeerState {
         mask: &[f32],
         lrs: &[f32],
     ) -> Result<Vec<f32>> {
-        let (p, m, v, losses) = ops::train_round(
+        let losses = ops::train_round_in_place(
             eng,
-            &self.params,
-            &self.m,
-            &self.v,
+            &mut self.params,
+            &mut self.m,
+            &mut self.v,
             self.inner_step as f32,
             tokens,
             mask,
             lrs,
             0.0,
         )?;
-        self.params = p;
-        self.m = m;
-        self.v = v;
         self.inner_step += lrs.len();
         Ok(losses)
     }

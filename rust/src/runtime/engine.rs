@@ -26,6 +26,7 @@ use std::time::Instant;
 use anyhow::{anyhow, Context, Result};
 
 use super::manifest::Manifest;
+use super::workspace::Workspace;
 use crate::config::layout::Layout;
 use crate::config::presets;
 
@@ -37,6 +38,11 @@ pub struct Engine {
     layout: Layout,
     /// Cumulative wall time inside each op: name -> (calls, seconds).
     exec_stats: Mutex<HashMap<String, (u64, f64)>>,
+    /// Pool of reusable [`Workspace`]s (unpacked weights, grads, scratch).
+    /// Each in-flight op checks one out, so concurrent ops never share
+    /// buffers and steady-state traffic allocates nothing; the pool grows
+    /// to the peak op concurrency and is then stable.
+    workspaces: Mutex<Vec<Workspace>>,
 }
 
 impl Engine {
@@ -60,7 +66,12 @@ impl Engine {
             Manifest::synthesize(cfg, dir.to_path_buf())
         };
         let layout = Layout::build(&manifest.config);
-        Ok(Self { manifest, layout, exec_stats: Mutex::new(HashMap::new()) })
+        Ok(Self {
+            manifest,
+            layout,
+            exec_stats: Mutex::new(HashMap::new()),
+            workspaces: Mutex::new(Vec::new()),
+        })
     }
 
     /// Engine directly from a preset name (`tiny`, `small`, `base`, ...).
@@ -68,7 +79,12 @@ impl Engine {
         let cfg = presets::get(name)?;
         let manifest = Manifest::synthesize(cfg, format!("native://{name}").into());
         let layout = Layout::build(&manifest.config);
-        Ok(Self { manifest, layout, exec_stats: Mutex::new(HashMap::new()) })
+        Ok(Self {
+            manifest,
+            layout,
+            exec_stats: Mutex::new(HashMap::new()),
+            workspaces: Mutex::new(Vec::new()),
+        })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -79,6 +95,20 @@ impl Engine {
     /// `Layout::build(&self.manifest().config)`).
     pub fn layout(&self) -> &Layout {
         &self.layout
+    }
+
+    /// Run `f` with a workspace checked out of the pool (allocating a
+    /// fresh one only when every pooled workspace is in use). The
+    /// workspace returns to the pool afterwards, packed-weights cache
+    /// intact — repeated evals against the same params hit the cache
+    /// across calls.
+    pub fn with_workspace<R>(&self, f: impl FnOnce(&mut Workspace) -> R) -> R {
+        let ws = self.workspaces.lock().expect("workspace pool lock").pop();
+        let mut ws =
+            ws.unwrap_or_else(|| Workspace::new(&self.manifest.config, &self.layout));
+        let out = f(&mut ws);
+        self.workspaces.lock().expect("workspace pool lock").push(ws);
+        out
     }
 
     /// Record one op execution (called by `runtime::ops`).

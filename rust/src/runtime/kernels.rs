@@ -1,0 +1,341 @@
+//! Dense CPU kernels for the native backend: cache-blocked, rayon-parallel
+//! matrix products that are **bit-identical** to the naive serial
+//! references they replace.
+//!
+//! ## Determinism contract
+//!
+//! Every kernel in this module computes each output element with the exact
+//! floating-point operation sequence of its `*_ref` sibling: one
+//! multiply-add per k index, accumulated in strictly increasing k order
+//! into a single accumulation chain. Blocking only reorders *which*
+//! element is computed when (row panels across the rayon pool, k/column
+//! panels for cache reuse inside a panel) — never the order of additions
+//! within an element. Rust never licenses float reassociation, so the
+//! optimized kernels produce byte-identical results to the references on
+//! every input, regardless of thread count or scheduling. The
+//! `kernel_equivalence` integration test and the unit tests below assert
+//! this on odd shapes and panel-boundary sizes.
+//!
+//! Panel sizes: row panels of `m / (4 * threads)` rows fan out across
+//! rayon (disjoint `&mut` output slices, so scheduling cannot race); the
+//! k dimension is processed in panels of [`KC`] so the shared `b` panel
+//! stays cache-resident across a task's rows; `matmul_bt` tiles columns by
+//! [`JT`] so a small group of `b` rows is reused across the panel's rows.
+//!
+//! [`force_naive`] routes every call through the serial references — used
+//! by `benches/hotpath.rs` to measure the blocked/parallel speedup against
+//! the pre-optimization baseline on the same host, inside one process.
+//! Because both paths are bit-identical, toggling it is always safe.
+
+#![allow(clippy::needless_range_loop)]
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use rayon::prelude::*;
+
+/// k-panel size: `KC` rows of `b` (each `n` floats) are streamed against a
+/// task's row panel before moving to the next k range.
+pub const KC: usize = 256;
+
+/// Column tile for [`matmul_bt`]: rows of the transposed operand reused
+/// across a panel's rows.
+pub const JT: usize = 8;
+
+/// Below this many multiply-adds a matmul stays on the current thread —
+/// rayon task overhead would dominate (covers the tiny norm/head shapes).
+const PAR_MIN_MADDS: usize = 1 << 15;
+
+static FORCE_NAIVE: AtomicBool = AtomicBool::new(false);
+
+/// Route all kernels through the serial naive references (benchmark
+/// baseline). Safe to toggle at any time: both paths are bit-identical.
+pub fn force_naive(on: bool) {
+    FORCE_NAIVE.store(on, Ordering::SeqCst);
+}
+
+/// Whether [`force_naive`] is currently set.
+pub fn naive_forced() -> bool {
+    FORCE_NAIVE.load(Ordering::SeqCst)
+}
+
+/// Serial dot product: single accumulation chain in increasing index
+/// order (the per-element order every kernel here preserves).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0f32;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// y += alpha * x (autovectorizes; lanes are independent elements, so
+/// vectorization never reorders an accumulation chain).
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// Rows per rayon task: aim for ~4 tasks per thread so work-stealing can
+/// balance panels of uneven cost without creating per-row task overhead.
+fn rows_per_task(rows: usize) -> usize {
+    let tasks = rayon::current_num_threads().max(1) * 4;
+    rows.div_ceil(tasks).max(1)
+}
+
+// ==========================================================================
+// Naive serial references (the former `runtime::native` kernels, kept as
+// the semantics oracle for equivalence tests and the benchmark baseline)
+// ==========================================================================
+
+/// Reference: out[m,n] = a[m,p] @ b[p,n] (row-major, serial triple loop).
+pub fn matmul_ref(a: &[f32], b: &[f32], m: usize, p: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * p);
+    debug_assert_eq!(b.len(), p * n);
+    debug_assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for i in 0..m {
+        let ar = &a[i * p..(i + 1) * p];
+        let or = &mut out[i * n..(i + 1) * n];
+        for (kk, &av) in ar.iter().enumerate() {
+            axpy(av, &b[kk * n..(kk + 1) * n], or);
+        }
+    }
+}
+
+/// Reference: out[m,n] = a[m,p] @ b[n,p]^T (serial).
+pub fn matmul_bt_ref(a: &[f32], b: &[f32], m: usize, p: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * p);
+    debug_assert_eq!(b.len(), n * p);
+    debug_assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let ar = &a[i * p..(i + 1) * p];
+        let or = &mut out[i * n..(i + 1) * n];
+        for j in 0..n {
+            or[j] = dot(ar, &b[j * p..(j + 1) * p]);
+        }
+    }
+}
+
+/// Reference: out[p,n] += a[m,p]^T @ b[m,n] (serial).
+pub fn matmul_at_add_ref(a: &[f32], b: &[f32], m: usize, p: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * p);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), p * n);
+    for i in 0..m {
+        let ar = &a[i * p..(i + 1) * p];
+        let br = &b[i * n..(i + 1) * n];
+        for (kk, &av) in ar.iter().enumerate() {
+            axpy(av, br, &mut out[kk * n..(kk + 1) * n]);
+        }
+    }
+}
+
+// ==========================================================================
+// Blocked / parallel kernels (bit-identical to the references)
+// ==========================================================================
+
+/// One row panel of `matmul`: k-blocked so the `b` panel (`kc * n`
+/// floats) is reused across the panel's rows. Per output element the
+/// additions still run in strictly increasing k order (panels are visited
+/// in order, and in order within a panel) — bit-identical to
+/// [`matmul_ref`].
+fn matmul_rows(a: &[f32], b: &[f32], p: usize, n: usize, out: &mut [f32]) {
+    let rows = out.len() / n;
+    out.fill(0.0);
+    let mut k0 = 0;
+    while k0 < p {
+        let kc = KC.min(p - k0);
+        for i in 0..rows {
+            let ar = &a[i * p + k0..i * p + k0 + kc];
+            let or = &mut out[i * n..(i + 1) * n];
+            for (kk, &av) in ar.iter().enumerate() {
+                axpy(av, &b[(k0 + kk) * n..(k0 + kk + 1) * n], or);
+            }
+        }
+        k0 += kc;
+    }
+}
+
+/// out[m,n] = a[m,p] @ b[p,n] (row-major) — cache-blocked, parallel over
+/// row panels, bit-identical to [`matmul_ref`].
+pub fn matmul(a: &[f32], b: &[f32], m: usize, p: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * p);
+    debug_assert_eq!(b.len(), p * n);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if naive_forced() {
+        return matmul_ref(a, b, m, p, n, out);
+    }
+    if m * p * n < PAR_MIN_MADDS {
+        return matmul_rows(a, b, p, n, out);
+    }
+    let rpt = rows_per_task(m);
+    out.par_chunks_mut(rpt * n)
+        .zip(a.par_chunks(rpt * p))
+        .for_each(|(oc, ac)| matmul_rows(ac, b, p, n, oc));
+}
+
+/// One row panel of `matmul_bt`: columns tiled by [`JT`] so a small group
+/// of `b` rows stays hot across the panel's rows. Each output element is
+/// one serial [`dot`] — identical chain to [`matmul_bt_ref`].
+fn matmul_bt_rows(a: &[f32], b: &[f32], p: usize, n: usize, out: &mut [f32]) {
+    let rows = out.len() / n;
+    let mut j0 = 0;
+    while j0 < n {
+        let jt = JT.min(n - j0);
+        for i in 0..rows {
+            let ar = &a[i * p..(i + 1) * p];
+            let or = &mut out[i * n + j0..i * n + j0 + jt];
+            for (dj, o) in or.iter_mut().enumerate() {
+                *o = dot(ar, &b[(j0 + dj) * p..(j0 + dj + 1) * p]);
+            }
+        }
+        j0 += jt;
+    }
+}
+
+/// out[m,n] = a[m,p] @ b[n,p]^T — `b` row-major [n,p] (logits through the
+/// tied embedding, `dx` through transposed weights). Parallel over row
+/// panels, bit-identical to [`matmul_bt_ref`].
+pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, p: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * p);
+    debug_assert_eq!(b.len(), n * p);
+    debug_assert_eq!(out.len(), m * n);
+    if m == 0 || n == 0 {
+        return;
+    }
+    if naive_forced() {
+        return matmul_bt_ref(a, b, m, p, n, out);
+    }
+    if m * p * n < PAR_MIN_MADDS {
+        return matmul_bt_rows(a, b, p, n, out);
+    }
+    let rpt = rows_per_task(m);
+    out.par_chunks_mut(rpt * n)
+        .zip(a.par_chunks(rpt * p))
+        .for_each(|(oc, ac)| matmul_bt_rows(ac, b, p, n, oc));
+}
+
+/// out[p,n] += a[m,p]^T @ b[m,n] (weight gradients). Parallelized over
+/// *output* row panels (the p dimension): each task owns a disjoint
+/// `out[kk0..kk0+krows]` range and walks all m rows of `a`/`b` in order,
+/// so per output element the additions run in increasing i order exactly
+/// as in [`matmul_at_add_ref`].
+pub fn matmul_at_add(a: &[f32], b: &[f32], m: usize, p: usize, n: usize, out: &mut [f32]) {
+    debug_assert_eq!(a.len(), m * p);
+    debug_assert_eq!(b.len(), m * n);
+    debug_assert_eq!(out.len(), p * n);
+    if m == 0 || p == 0 || n == 0 {
+        return;
+    }
+    if naive_forced() || m * p * n < PAR_MIN_MADDS {
+        return matmul_at_add_ref(a, b, m, p, n, out);
+    }
+    let rpt = rows_per_task(p);
+    out.par_chunks_mut(rpt * n).enumerate().for_each(|(ci, oc)| {
+        let kk0 = ci * rpt;
+        let krows = oc.len() / n;
+        for i in 0..m {
+            let br = &b[i * n..(i + 1) * n];
+            let ar = &a[i * p + kk0..i * p + kk0 + krows];
+            for (kk, &av) in ar.iter().enumerate() {
+                axpy(av, br, &mut oc[kk * n..(kk + 1) * n]);
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    /// Odd shapes plus sizes straddling the KC / JT / row-panel
+    /// boundaries.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (3, 5, 7),
+        (4, 64, 8),
+        (5, 255, 9),
+        (8, 256, 16),
+        (9, 257, 7),
+        (17, 96, 33),
+        (2, 512, 65),
+        (33, 320, 128),
+    ];
+
+    #[test]
+    fn matmul_matches_reference_bitwise() {
+        let mut rng = Rng::new(11);
+        for &(m, p, n) in SHAPES {
+            let a = randv(&mut rng, m * p);
+            let b = randv(&mut rng, p * n);
+            let mut want = vec![0f32; m * n];
+            matmul_ref(&a, &b, m, p, n, &mut want);
+            let mut got = vec![7f32; m * n]; // must be fully overwritten
+            matmul(&a, &b, m, p, n, &mut got);
+            assert!(bits_eq(&want, &got), "matmul mismatch at {m}x{p}x{n}");
+        }
+    }
+
+    #[test]
+    fn matmul_bt_matches_reference_bitwise() {
+        let mut rng = Rng::new(12);
+        for &(m, p, n) in SHAPES {
+            let a = randv(&mut rng, m * p);
+            let b = randv(&mut rng, n * p);
+            let mut want = vec![0f32; m * n];
+            matmul_bt_ref(&a, &b, m, p, n, &mut want);
+            let mut got = vec![7f32; m * n];
+            matmul_bt(&a, &b, m, p, n, &mut got);
+            assert!(bits_eq(&want, &got), "matmul_bt mismatch at {m}x{p}x{n}");
+        }
+    }
+
+    #[test]
+    fn matmul_at_add_matches_reference_bitwise() {
+        let mut rng = Rng::new(13);
+        for &(m, p, n) in SHAPES {
+            let a = randv(&mut rng, m * p);
+            let b = randv(&mut rng, m * n);
+            // nonzero initial accumulator: the += semantics must agree too
+            let init = randv(&mut rng, p * n);
+            let mut want = init.clone();
+            matmul_at_add_ref(&a, &b, m, p, n, &mut want);
+            let mut got = init;
+            matmul_at_add(&a, &b, m, p, n, &mut got);
+            assert!(bits_eq(&want, &got), "matmul_at_add mismatch at {m}x{p}x{n}");
+        }
+    }
+
+    #[test]
+    fn repeated_runs_are_deterministic() {
+        // Same inputs, many runs across the pool: identical bits each time.
+        let mut rng = Rng::new(14);
+        let (m, p, n) = (33, 320, 65);
+        let a = randv(&mut rng, m * p);
+        let b = randv(&mut rng, p * n);
+        let mut first = vec![0f32; m * n];
+        matmul(&a, &b, m, p, n, &mut first);
+        for _ in 0..5 {
+            let mut again = vec![0f32; m * n];
+            matmul(&a, &b, m, p, n, &mut again);
+            assert!(bits_eq(&first, &again));
+        }
+    }
+}

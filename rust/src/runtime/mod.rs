@@ -1,17 +1,25 @@
 //! Runtime layer: model resolution + the native CPU execution backend.
 //!
 //! [`Engine`] resolves an artifact directory or preset name to a
-//! [`Manifest`] and tracks per-op timing; [`ops`] exposes each paper
-//! operation (init, fused inner rounds, compression, outer step,
-//! evaluation) as a typed function over host vectors; [`native`] holds
-//! the model math (transformer forward/backward + AdamW over the flat
-//! block-major layout). The engine is `Send + Sync`, so the coordinator
-//! can fan peer compute out across threads against one shared engine.
+//! [`Manifest`], tracks per-op timing and pools reusable [`Workspace`]s;
+//! [`ops`] exposes each paper operation (init, fused inner rounds,
+//! compression, outer step, evaluation) as a typed function over host
+//! vectors; [`native`] holds the model math (transformer
+//! forward/backward + AdamW over the flat block-major layout) on top of
+//! the cache-blocked, rayon-parallel — and bit-deterministic — dense
+//! kernels in [`kernels`]. The engine is `Send + Sync`, so the
+//! coordinator fans peer compute out across threads against one shared
+//! engine, and the Gauntlet validator fans LossScore evaluations across
+//! the same pool.
+//!
+//! [`Workspace`]: workspace::Workspace
 
 pub mod engine;
+pub mod kernels;
 pub mod manifest;
 pub mod native;
 pub mod ops;
+pub mod workspace;
 
 pub use engine::Engine;
 pub use manifest::{ArtifactSpec, IoSpec, Manifest, ModelConfig, TensorSlot};

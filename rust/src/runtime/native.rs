@@ -20,238 +20,29 @@
 //! `python/compile/optim.py`: bias-corrected AdamW, decoupled weight
 //! decay masked to 2-D tensors, optional global-norm clipping.
 //!
-//! Numerics are deterministic: same inputs, same outputs, bit for bit —
-//! every reduction runs in a fixed serial order. Parallelism lives a
-//! level up (the coordinator fans whole peers out; see
-//! `coordinator::network`).
+//! ## Hot-path structure (see also [`super::kernels`], [`super::workspace`])
+//!
+//! The dense products run on the cache-blocked, rayon-parallel kernels in
+//! `runtime::kernels`; those are **bit-identical** to their serial naive
+//! references by construction (fixed per-element accumulation order), so
+//! numerics stay deterministic: same inputs, same outputs, bit for bit,
+//! at any thread count. All per-call state — unpacked weights, forward
+//! residuals, backward scratch, the flat gradient — lives in a reusable
+//! [`Workspace`], so steady-state `train_step`/`eval_loss` calls allocate
+//! nothing beyond trivial per-sequence outputs. Coordinator-level
+//! parallelism (whole peers fanned across the pool) composes with the
+//! kernel-level parallelism through rayon's work stealing.
 
 #![allow(clippy::too_many_arguments)]
 #![allow(clippy::needless_range_loop)]
 
 use anyhow::{ensure, Result};
 
-use crate::config::layout::{Layout, BLOCK};
+use crate::config::layout::Layout;
+use crate::runtime::kernels::{axpy, dot, matmul, matmul_at_add, matmul_bt};
 use crate::runtime::manifest::{Manifest, ModelConfig};
+use crate::runtime::workspace::{pack_2d, FwdCache, Scratch, Weights, Workspace};
 use crate::util::rng::Rng;
-
-// ==========================================================================
-// Small dense kernels (serial; autovectorized at opt-level >= 2)
-// ==========================================================================
-
-#[inline]
-fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = 0f32;
-    for i in 0..a.len() {
-        acc += a[i] * b[i];
-    }
-    acc
-}
-
-#[inline]
-fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for i in 0..x.len() {
-        y[i] += alpha * x[i];
-    }
-}
-
-/// out[m,n] = a[m,p] @ b[p,n] (all row-major).
-fn matmul(a: &[f32], b: &[f32], m: usize, p: usize, n: usize, out: &mut [f32]) {
-    debug_assert_eq!(a.len(), m * p);
-    debug_assert_eq!(b.len(), p * n);
-    debug_assert_eq!(out.len(), m * n);
-    out.fill(0.0);
-    for i in 0..m {
-        let ar = &a[i * p..(i + 1) * p];
-        let or = &mut out[i * n..(i + 1) * n];
-        for (kk, &av) in ar.iter().enumerate() {
-            axpy(av, &b[kk * n..(kk + 1) * n], or);
-        }
-    }
-}
-
-/// out[m,n] = a[m,p] @ b[n,p]^T — `b` row-major [n,p] (e.g. logits via the
-/// tied embedding).
-fn matmul_bt(a: &[f32], b: &[f32], m: usize, p: usize, n: usize, out: &mut [f32]) {
-    debug_assert_eq!(out.len(), m * n);
-    for i in 0..m {
-        let ar = &a[i * p..(i + 1) * p];
-        let or = &mut out[i * n..(i + 1) * n];
-        for j in 0..n {
-            or[j] = dot(ar, &b[j * p..(j + 1) * p]);
-        }
-    }
-}
-
-/// out[p,n] += a[m,p]^T @ b[m,n] (weight gradients).
-fn matmul_at_add(a: &[f32], b: &[f32], m: usize, p: usize, n: usize, out: &mut [f32]) {
-    debug_assert_eq!(out.len(), p * n);
-    for i in 0..m {
-        let ar = &a[i * p..(i + 1) * p];
-        let br = &b[i * n..(i + 1) * n];
-        for (kk, &av) in ar.iter().enumerate() {
-            axpy(av, br, &mut out[kk * n..(kk + 1) * n]);
-        }
-    }
-}
-
-// ==========================================================================
-// Flat-vector <-> row-major tensors (block-major layout)
-// ==========================================================================
-
-/// Read a 2-D tensor out of the flat vector (undoing 64x64-block-major).
-fn unpack_2d(flat: &[f32], offset: usize, r: usize, c: usize) -> Vec<f32> {
-    assert!(r % BLOCK == 0 && c % BLOCK == 0, "dims must be block multiples");
-    let mut out = vec![0f32; r * c];
-    let bc = c / BLOCK;
-    for br in 0..r / BLOCK {
-        for bj in 0..bc {
-            let base = offset + (br * bc + bj) * BLOCK * BLOCK;
-            for rr in 0..BLOCK {
-                let src = &flat[base + rr * BLOCK..base + (rr + 1) * BLOCK];
-                let d0 = (br * BLOCK + rr) * c + bj * BLOCK;
-                out[d0..d0 + BLOCK].copy_from_slice(src);
-            }
-        }
-    }
-    out
-}
-
-/// Write a row-major 2-D tensor into the flat vector (block-major).
-fn pack_2d(rm: &[f32], offset: usize, r: usize, c: usize, flat: &mut [f32]) {
-    let bc = c / BLOCK;
-    for br in 0..r / BLOCK {
-        for bj in 0..bc {
-            let base = offset + (br * bc + bj) * BLOCK * BLOCK;
-            for rr in 0..BLOCK {
-                let s0 = (br * BLOCK + rr) * c + bj * BLOCK;
-                flat[base + rr * BLOCK..base + (rr + 1) * BLOCK]
-                    .copy_from_slice(&rm[s0..s0 + BLOCK]);
-            }
-        }
-    }
-}
-
-/// Row-major weights of one transformer layer.
-struct LayerW {
-    attn_norm: Vec<f32>,
-    wq: Vec<f32>,
-    wk: Vec<f32>,
-    wv: Vec<f32>,
-    wo: Vec<f32>,
-    mlp_norm: Vec<f32>,
-    w_gate: Vec<f32>,
-    w_up: Vec<f32>,
-    w_down: Vec<f32>,
-}
-
-/// All weights unpacked to row-major (per inner step; tiny vs. the
-/// matmuls it feeds).
-struct Weights {
-    embed: Vec<f32>,
-    layers: Vec<LayerW>,
-    final_norm: Vec<f32>,
-    lm_head: Option<Vec<f32>>,
-}
-
-/// Slot order produced by `Layout::build`: embed, then 9 tensors per
-/// layer, final_norm, optional lm_head.
-fn unpack_weights(cfg: &ModelConfig, lay: &Layout, flat: &[f32]) -> Weights {
-    let s = &lay.slots;
-    let g1 = |i: usize| flat[s[i].offset..s[i].offset + s[i].size].to_vec();
-    let g2 = |i: usize| unpack_2d(flat, s[i].offset, s[i].shape[0], s[i].shape[1]);
-    let mut layers = Vec::with_capacity(cfg.n_layers);
-    for li in 0..cfg.n_layers {
-        let b = 1 + li * 9;
-        layers.push(LayerW {
-            attn_norm: g1(b),
-            wq: g2(b + 1),
-            wk: g2(b + 2),
-            wv: g2(b + 3),
-            wo: g2(b + 4),
-            mlp_norm: g1(b + 5),
-            w_gate: g2(b + 6),
-            w_up: g2(b + 7),
-            w_down: g2(b + 8),
-        });
-    }
-    let fnorm_i = 1 + cfg.n_layers * 9;
-    Weights {
-        embed: g2(0),
-        layers,
-        final_norm: g1(fnorm_i),
-        lm_head: cfg.untie_embeddings.then(|| g2(fnorm_i + 1)),
-    }
-}
-
-/// Row-major gradient accumulators, packed to flat at the end of backward.
-struct Grads {
-    embed: Vec<f32>,
-    layers: Vec<LayerW>,
-    final_norm: Vec<f32>,
-    lm_head: Option<Vec<f32>>,
-}
-
-impl Grads {
-    fn zeros_like(cfg: &ModelConfig, lay: &Layout) -> Grads {
-        let s = &lay.slots;
-        let z1 = |i: usize| vec![0f32; s[i].size];
-        let mut layers = Vec::with_capacity(cfg.n_layers);
-        for li in 0..cfg.n_layers {
-            let b = 1 + li * 9;
-            layers.push(LayerW {
-                attn_norm: z1(b),
-                wq: z1(b + 1),
-                wk: z1(b + 2),
-                wv: z1(b + 3),
-                wo: z1(b + 4),
-                mlp_norm: z1(b + 5),
-                w_gate: z1(b + 6),
-                w_up: z1(b + 7),
-                w_down: z1(b + 8),
-            });
-        }
-        let fnorm_i = 1 + cfg.n_layers * 9;
-        Grads {
-            embed: z1(0),
-            layers,
-            final_norm: z1(fnorm_i),
-            lm_head: cfg.untie_embeddings.then(|| z1(fnorm_i + 1)),
-        }
-    }
-
-    /// Pack into the flat (block-major, chunk-padded) gradient vector.
-    fn to_flat(&self, cfg: &ModelConfig, lay: &Layout) -> Vec<f32> {
-        let s = &lay.slots;
-        let mut flat = vec![0f32; lay.n_alloc];
-        let p2 = |rm: &[f32], i: usize, flat: &mut [f32]| {
-            pack_2d(rm, s[i].offset, s[i].shape[0], s[i].shape[1], flat)
-        };
-        let p1 = |rm: &[f32], i: usize, flat: &mut [f32]| {
-            flat[s[i].offset..s[i].offset + s[i].size].copy_from_slice(rm)
-        };
-        p2(&self.embed, 0, &mut flat);
-        for (li, l) in self.layers.iter().enumerate() {
-            let b = 1 + li * 9;
-            p1(&l.attn_norm, b, &mut flat);
-            p2(&l.wq, b + 1, &mut flat);
-            p2(&l.wk, b + 2, &mut flat);
-            p2(&l.wv, b + 3, &mut flat);
-            p2(&l.wo, b + 4, &mut flat);
-            p1(&l.mlp_norm, b + 5, &mut flat);
-            p2(&l.w_gate, b + 6, &mut flat);
-            p2(&l.w_up, b + 7, &mut flat);
-            p2(&l.w_down, b + 8, &mut flat);
-        }
-        let fnorm_i = 1 + cfg.n_layers * 9;
-        p1(&self.final_norm, fnorm_i, &mut flat);
-        if let Some(h) = &self.lm_head {
-            p2(h, fnorm_i + 1, &mut flat);
-        }
-        flat
-    }
-}
 
 // ==========================================================================
 // Model blocks
@@ -302,24 +93,9 @@ fn rmsnorm_bwd(
     }
 }
 
-/// cos/sin tables [T, dh/2].
-fn rope_tables(t: usize, dh: usize, theta: f64) -> (Vec<f32>, Vec<f32>) {
-    let half = dh / 2;
-    let mut cos = vec![0f32; t * half];
-    let mut sin = vec![0f32; t * half];
-    for pos in 0..t {
-        for e in 0..half {
-            let inv = 1.0 / theta.powf((2 * e) as f64 / dh as f64);
-            let ang = pos as f64 * inv;
-            cos[pos * half + e] = ang.cos() as f32;
-            sin[pos * half + e] = ang.sin() as f32;
-        }
-    }
-    (cos, sin)
-}
-
 /// In-place RoPE over [B, H, T, dh]; `dir` = +1 forward, -1 backward
-/// (rotation by the negated angle).
+/// (rotation by the negated angle). `cos`/`sin` are the workspace's
+/// cached [T, dh/2] tables.
 fn rope_apply(
     x: &mut [f32],
     b: usize,
@@ -372,32 +148,17 @@ fn merge_heads(src: &[f32], b: usize, t: usize, h: usize, dh: usize, dst: &mut [
     }
 }
 
-/// Per-layer forward residuals kept for the backward pass.
-struct LayerCache {
-    x_in: Vec<f32>,    // [N, D]
-    rinv1: Vec<f32>,   // [N]
-    h: Vec<f32>,       // [N, D]
-    q: Vec<f32>,       // [B, Hq, T, dh] (post-RoPE)
-    k: Vec<f32>,       // [B, Hkv, T, dh] (post-RoPE)
-    v: Vec<f32>,       // [B, Hkv, T, dh]
-    att: Vec<f32>,     // [B, Hq, T, T] (zeros above the diagonal)
-    aflat: Vec<f32>,   // [N, Hq*dh]
-    x_mid: Vec<f32>,   // [N, D]
-    rinv2: Vec<f32>,   // [N]
-    h2: Vec<f32>,      // [N, D]
-    gpre: Vec<f32>,    // [N, F]
-    upre: Vec<f32>,    // [N, F]
-}
-
-struct FwdCache {
-    layers: Vec<LayerCache>,
-    x_pre_final: Vec<f32>,
-    rinv_f: Vec<f32>,
-    xf: Vec<f32>,
-}
-
-/// Full forward: tokens [B*T] -> logits [N, V] plus residual cache.
-fn forward(cfg: &ModelConfig, w: &Weights, tokens: &[i32]) -> (Vec<f32>, FwdCache) {
+/// Full forward over the workspace buffers: reads `s.inp` ([B*T] input
+/// tokens), fills `s.x` (final activations), `s.logits`, and the residual
+/// cache. All buffers are overwritten (accumulating ones zeroed here).
+fn forward(
+    cfg: &ModelConfig,
+    w: &Weights,
+    cache: &mut FwdCache,
+    s: &mut Scratch,
+    cos: &[f32],
+    sin: &[f32],
+) {
     let (b, t, d, v) = (cfg.batch_size, cfg.seq_len, cfg.d_model, cfg.vocab_size);
     let (hq, hkv, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.d_head);
     let (qd, kvd, f) = (hq * dh, hkv * dh, cfg.d_ff);
@@ -405,54 +166,47 @@ fn forward(cfg: &ModelConfig, w: &Weights, tokens: &[i32]) -> (Vec<f32>, FwdCach
     let group = hq / hkv;
     let scale = 1.0 / (dh as f32).sqrt();
     let eps = cfg.norm_eps as f32;
-    let (cos, sin) = rope_tables(t, dh, cfg.rope_theta);
 
     // token embedding gather
-    let mut x = vec![0f32; n * d];
     for i in 0..n {
-        let tok = tokens[i] as usize;
-        x[i * d..(i + 1) * d].copy_from_slice(&w.embed[tok * d..(tok + 1) * d]);
+        let tok = s.inp[i] as usize;
+        s.x[i * d..(i + 1) * d].copy_from_slice(&w.embed[tok * d..(tok + 1) * d]);
     }
 
-    let mut layers = Vec::with_capacity(cfg.n_layers);
-    let mut proj = vec![0f32; n * qd.max(d)]; // projection / residual scratch
-    for lw in &w.layers {
-        let x_in = x.clone();
-        let mut h = vec![0f32; n * d];
-        let mut rinv1 = vec![0f32; n];
-        rmsnorm_fwd(&x, &lw.attn_norm, eps, d, &mut h, &mut rinv1);
+    for (li, lw) in w.layers.iter().enumerate() {
+        let lc = &mut cache.layers[li];
+        lc.x_in.copy_from_slice(&s.x);
+        rmsnorm_fwd(&s.x, &lw.attn_norm, eps, d, &mut lc.h, &mut lc.rinv1);
 
-        let mut q = vec![0f32; b * hq * t * dh];
-        let mut k = vec![0f32; b * hkv * t * dh];
-        let mut v_t = vec![0f32; b * hkv * t * dh];
-        matmul(&h, &lw.wq, n, d, qd, &mut proj[..n * qd]);
-        split_heads(&proj[..n * qd], b, t, hq, dh, &mut q);
-        matmul(&h, &lw.wk, n, d, kvd, &mut proj[..n * kvd]);
-        split_heads(&proj[..n * kvd], b, t, hkv, dh, &mut k);
-        matmul(&h, &lw.wv, n, d, kvd, &mut proj[..n * kvd]);
-        split_heads(&proj[..n * kvd], b, t, hkv, dh, &mut v_t);
-        rope_apply(&mut q, b, hq, t, dh, &cos, &sin, 1.0);
-        rope_apply(&mut k, b, hkv, t, dh, &cos, &sin, 1.0);
+        matmul(&lc.h, &lw.wq, n, d, qd, &mut s.proj[..n * qd]);
+        split_heads(&s.proj[..n * qd], b, t, hq, dh, &mut lc.q);
+        matmul(&lc.h, &lw.wk, n, d, kvd, &mut s.proj[..n * kvd]);
+        split_heads(&s.proj[..n * kvd], b, t, hkv, dh, &mut lc.k);
+        matmul(&lc.h, &lw.wv, n, d, kvd, &mut s.proj[..n * kvd]);
+        split_heads(&s.proj[..n * kvd], b, t, hkv, dh, &mut lc.v);
+        rope_apply(&mut lc.q, b, hq, t, dh, cos, sin, 1.0);
+        rope_apply(&mut lc.k, b, hkv, t, dh, cos, sin, 1.0);
 
-        // causal GQA attention
-        let mut att = vec![0f32; b * hq * t * t];
-        let mut a = vec![0f32; b * hq * t * dh];
+        // causal GQA attention (s.attn_out accumulates; zero it first)
+        s.attn_out.fill(0.0);
         for bi in 0..b {
             for hi in 0..hq {
                 let kv = hi / group;
-                let qb = &q[((bi * hq + hi) * t) * dh..((bi * hq + hi + 1) * t) * dh];
-                let kb = &k[((bi * hkv + kv) * t) * dh..((bi * hkv + kv + 1) * t) * dh];
-                let vb = &v_t[((bi * hkv + kv) * t) * dh..((bi * hkv + kv + 1) * t) * dh];
-                let attb = &mut att[((bi * hq + hi) * t) * t..((bi * hq + hi + 1) * t) * t];
-                let ab = &mut a[((bi * hq + hi) * t) * dh..((bi * hq + hi + 1) * t) * dh];
+                let qb = &lc.q[((bi * hq + hi) * t) * dh..((bi * hq + hi + 1) * t) * dh];
+                let kb = &lc.k[((bi * hkv + kv) * t) * dh..((bi * hkv + kv + 1) * t) * dh];
+                let vb = &lc.v[((bi * hkv + kv) * t) * dh..((bi * hkv + kv + 1) * t) * dh];
+                let attb =
+                    &mut lc.att[((bi * hq + hi) * t) * t..((bi * hq + hi + 1) * t) * t];
+                let ab =
+                    &mut s.attn_out[((bi * hq + hi) * t) * dh..((bi * hq + hi + 1) * t) * dh];
                 for i in 0..t {
                     let qr = &qb[i * dh..(i + 1) * dh];
                     let row = &mut attb[i * t..i * t + i + 1];
                     let mut mx = f32::NEG_INFINITY;
                     for j in 0..=i {
-                        let s = dot(qr, &kb[j * dh..(j + 1) * dh]) * scale;
-                        row[j] = s;
-                        mx = mx.max(s);
+                        let sc = dot(qr, &kb[j * dh..(j + 1) * dh]) * scale;
+                        row[j] = sc;
+                        mx = mx.max(sc);
                     }
                     let mut z = 0f32;
                     for j in 0..=i {
@@ -467,66 +221,38 @@ fn forward(cfg: &ModelConfig, w: &Weights, tokens: &[i32]) -> (Vec<f32>, FwdCach
                 }
             }
         }
-        let mut aflat = vec![0f32; n * qd];
-        merge_heads(&a, b, t, hq, dh, &mut aflat);
+        merge_heads(&s.attn_out, b, t, hq, dh, &mut lc.aflat);
         // x = x + aflat @ wo
-        matmul(&aflat, &lw.wo, n, qd, d, &mut proj[..n * d]);
+        matmul(&lc.aflat, &lw.wo, n, qd, d, &mut s.proj[..n * d]);
         for i in 0..n * d {
-            x[i] += proj[i];
+            s.x[i] += s.proj[i];
         }
-        let x_mid = x.clone();
+        lc.x_mid.copy_from_slice(&s.x);
 
-        let mut h2 = vec![0f32; n * d];
-        let mut rinv2 = vec![0f32; n];
-        rmsnorm_fwd(&x, &lw.mlp_norm, eps, d, &mut h2, &mut rinv2);
-        let mut gpre = vec![0f32; n * f];
-        let mut upre = vec![0f32; n * f];
-        matmul(&h2, &lw.w_gate, n, d, f, &mut gpre);
-        matmul(&h2, &lw.w_up, n, d, f, &mut upre);
-        // gate = silu(gpre) * upre, reusing a scratch buffer
-        let mut gate = vec![0f32; n * f];
+        rmsnorm_fwd(&s.x, &lw.mlp_norm, eps, d, &mut lc.h2, &mut lc.rinv2);
+        matmul(&lc.h2, &lw.w_gate, n, d, f, &mut lc.gpre);
+        matmul(&lc.h2, &lw.w_up, n, d, f, &mut lc.upre);
+        // gate = silu(gpre) * upre
         for i in 0..n * f {
-            let z = gpre[i];
+            let z = lc.gpre[i];
             let sg = 1.0 / (1.0 + (-z).exp());
-            gate[i] = z * sg * upre[i];
+            s.gate[i] = z * sg * lc.upre[i];
         }
-        matmul(&gate, &lw.w_down, n, f, d, &mut proj[..n * d]);
+        matmul(&s.gate, &lw.w_down, n, f, d, &mut s.proj[..n * d]);
         for i in 0..n * d {
-            x[i] += proj[i];
+            s.x[i] += s.proj[i];
         }
-
-        layers.push(LayerCache {
-            x_in,
-            rinv1,
-            h,
-            q,
-            k,
-            v: v_t,
-            att,
-            aflat,
-            x_mid,
-            rinv2,
-            h2,
-            gpre,
-            upre,
-        });
     }
 
-    let x_pre_final = x.clone();
-    let mut xf = vec![0f32; n * d];
-    let mut rinv_f = vec![0f32; n];
-    rmsnorm_fwd(&x, &w.final_norm, eps, d, &mut xf, &mut rinv_f);
-    let head = w.lm_head.as_ref().unwrap_or(&w.embed);
-    let mut logits = vec![0f32; n * v];
-    matmul_bt(&xf, head, n, d, v, &mut logits);
-    (logits, FwdCache { layers, x_pre_final, rinv_f, xf })
+    cache.x_pre_final.copy_from_slice(&s.x);
+    rmsnorm_fwd(&s.x, &w.final_norm, eps, d, &mut cache.xf, &mut cache.rinv_f);
+    let head: &[f32] = w.lm_head.as_deref().unwrap_or(&w.embed);
+    matmul_bt(&cache.xf, head, n, d, v, &mut s.logits);
 }
 
-/// Per-position CE pieces from logits: (log-sum-exp, target logit).
-fn ce_terms(logits: &[f32], tgt: &[i32], v: usize) -> (Vec<f32>, Vec<f32>) {
+/// Per-position CE pieces from logits into `lse`/`tl` buffers.
+fn ce_terms(logits: &[f32], tgt: &[i32], v: usize, lse: &mut [f32], tl: &mut [f32]) {
     let n = tgt.len();
-    let mut lse = vec![0f32; n];
-    let mut tl = vec![0f32; n];
     for i in 0..n {
         let row = &logits[i * v..(i + 1) * v];
         let mx = row.iter().copied().fold(f32::NEG_INFINITY, f32::max);
@@ -537,22 +263,22 @@ fn ce_terms(logits: &[f32], tgt: &[i32], v: usize) -> (Vec<f32>, Vec<f32>) {
         lse[i] = z.ln() + mx;
         tl[i] = row[tgt[i] as usize];
     }
-    (lse, tl)
 }
 
-/// Shared forward(+backward) entry.
+/// Shared forward(+backward) entry over a checked-out [`Workspace`].
 ///
 /// `tokens`: [B, T+1] row-major; `mask`: [B, T] over target positions.
-/// Returns (mean masked loss, per-sequence losses, flat grads of the mean
-/// loss if requested).
+/// Returns (mean masked loss, per-sequence losses); when `want_grads`,
+/// the flat gradient of the mean loss is left in `ws.grads_flat`.
 fn loss_fwd_bwd(
     cfg: &ModelConfig,
     lay: &Layout,
+    ws: &mut Workspace,
     flat_params: &[f32],
     tokens: &[i32],
     mask: &[f32],
     want_grads: bool,
-) -> (f32, Vec<f32>, Option<Vec<f32>>) {
+) -> (f32, Vec<f32>) {
     let (b, t, d, v) = (cfg.batch_size, cfg.seq_len, cfg.d_model, cfg.vocab_size);
     let (hq, hkv, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.d_head);
     let (qd, kvd, f) = (hq * dh, hkv * dh, cfg.d_ff);
@@ -560,18 +286,34 @@ fn loss_fwd_bwd(
     let group = hq / hkv;
     let scale = 1.0 / (dh as f32).sqrt();
 
+    if want_grads {
+        // Training callers mutate the params right after this pass, so
+        // skip populating the params cache (it would be dead weight).
+        ws.ensure_weights_uncached(cfg, lay, flat_params);
+        ws.ensure_grads(cfg, lay);
+    } else {
+        ws.ensure_weights(cfg, lay, flat_params);
+    }
+    let Workspace {
+        weights: w,
+        grads,
+        grads_flat,
+        fwd: cache,
+        scratch: s,
+        rope_cos: cos,
+        rope_sin: sin,
+        ..
+    } = ws;
+
     // split [B, T+1] into inputs and targets
-    let mut inp = vec![0i32; n];
-    let mut tgt = vec![0i32; n];
     for bi in 0..b {
         for ti in 0..t {
-            inp[bi * t + ti] = tokens[bi * (t + 1) + ti];
-            tgt[bi * t + ti] = tokens[bi * (t + 1) + ti + 1];
+            s.inp[bi * t + ti] = tokens[bi * (t + 1) + ti];
+            s.tgt[bi * t + ti] = tokens[bi * (t + 1) + ti + 1];
         }
     }
-    let w = unpack_weights(cfg, lay, flat_params);
-    let (logits, cache) = forward(cfg, &w, &inp);
-    let (lse, tl) = ce_terms(&logits, &tgt, v);
+    forward(cfg, w, cache, s, cos, sin);
+    ce_terms(&s.logits, &s.tgt, v, &mut s.lse, &mut s.tl);
 
     let msum: f64 = mask.iter().map(|&x| x as f64).sum();
     let msum = msum.max(1e-6);
@@ -582,7 +324,7 @@ fn loss_fwd_bwd(
         let mut den = 0f64;
         for ti in 0..t {
             let i = bi * t + ti;
-            let ce = (lse[i] - tl[i]) as f64;
+            let ce = (s.lse[i] - s.tl[i]) as f64;
             acc += ce * mask[i] as f64;
             den += mask[i] as f64;
         }
@@ -591,48 +333,43 @@ fn loss_fwd_bwd(
     }
     let loss = (total / msum) as f32;
     if !want_grads {
-        return (loss, per_seq, None);
+        return (loss, per_seq);
     }
 
     // ---- backward -------------------------------------------------------
-    // dlogits of the mean masked loss: mask/msum * (softmax - onehot)
-    let mut dlogits = logits; // reuse: overwritten in place
+    // dlogits of the mean masked loss: mask/msum * (softmax - onehot),
+    // computed in place over s.logits.
     for i in 0..n {
         let wgt = (mask[i] as f64 / msum) as f32;
-        let row = &mut dlogits[i * v..(i + 1) * v];
-        let l = lse[i];
+        let row = &mut s.logits[i * v..(i + 1) * v];
+        let l = s.lse[i];
         for j in 0..v {
             row[j] = (row[j] - l).exp() * wgt;
         }
-        row[tgt[i] as usize] -= wgt;
+        row[s.tgt[i] as usize] -= wgt;
     }
 
-    let mut g = Grads::zeros_like(cfg, lay);
-    let head = w.lm_head.as_ref().unwrap_or(&w.embed);
+    let g = grads.as_mut().expect("ensure_grads ran above");
+    g.zero();
+    let head: &[f32] = w.lm_head.as_deref().unwrap_or(&w.embed);
     let ghead_is_embed = w.lm_head.is_none();
     // dxf = dlogits @ head ; ghead += dlogits^T @ xf
-    let mut dxf = vec![0f32; n * d];
-    matmul(&dlogits, head, n, v, d, &mut dxf);
+    matmul(&s.logits, head, n, v, d, &mut s.dxf);
     {
         let ghead = if ghead_is_embed { &mut g.embed } else { g.lm_head.as_mut().unwrap() };
-        matmul_at_add(&dlogits, &cache.xf, n, v, d, ghead);
+        matmul_at_add(&s.logits, &cache.xf, n, v, d, ghead);
     }
-    drop(dlogits);
-    let mut dx = vec![0f32; n * d];
+    s.dx.fill(0.0);
     rmsnorm_bwd(
         &cache.x_pre_final,
         &w.final_norm,
         &cache.rinv_f,
-        &dxf,
+        &s.dxf,
         d,
-        &mut dx,
+        &mut s.dx,
         &mut g.final_norm,
     );
-    drop(dxf);
 
-    let (cos, sin) = rope_tables(t, dh, cfg.rope_theta);
-    let mut scratch_nf = vec![0f32; n * f];
-    let mut scratch_nf2 = vec![0f32; n * f];
     for li in (0..cfg.n_layers).rev() {
         let lw = &w.layers[li];
         let lc = &cache.layers[li];
@@ -640,65 +377,51 @@ fn loss_fwd_bwd(
 
         // ---- MLP block: x = x_mid + (silu(gpre) * upre) @ w_down --------
         // recompute gate activations from cached pre-activations
-        let mut gate = vec![0f32; n * f];
-        let mut sg = vec![0f32; n * f];
         for i in 0..n * f {
             let z = lc.gpre[i];
-            let s = 1.0 / (1.0 + (-z).exp());
-            sg[i] = s;
-            gate[i] = z * s * lc.upre[i];
+            let sg = 1.0 / (1.0 + (-z).exp());
+            s.sg[i] = sg;
+            s.gate[i] = z * sg * lc.upre[i];
         }
         // dgate = dx @ w_down^T ; g.w_down += gate^T @ dx
-        let dgate = &mut scratch_nf;
-        matmul_bt(&dx, &lw.w_down, n, d, f, dgate);
-        matmul_at_add(&gate, &dx, n, f, d, &mut gl.w_down);
-        drop(gate);
+        matmul_bt(&s.dx, &lw.w_down, n, d, f, &mut s.nf1);
+        matmul_at_add(&s.gate, &s.dx, n, f, d, &mut gl.w_down);
         // dgpre = dgate*upre * sg*(1 + z*(1-sg)) ; dupre = dgate*silu
-        let dupre = &mut scratch_nf2;
         for i in 0..n * f {
             let z = lc.gpre[i];
-            let s = sg[i];
-            let dg_i = dgate[i];
-            dupre[i] = dg_i * z * s;
-            dgate[i] = dg_i * lc.upre[i] * s * (1.0 + z * (1.0 - s));
+            let sg = s.sg[i];
+            let dg_i = s.nf1[i];
+            s.nf2[i] = dg_i * z * sg;
+            s.nf1[i] = dg_i * lc.upre[i] * sg * (1.0 + z * (1.0 - sg));
         }
-        let dgpre = dgate;
-        // weight grads + dh2
-        matmul_at_add(&lc.h2, dgpre, n, d, f, &mut gl.w_gate);
-        matmul_at_add(&lc.h2, dupre, n, d, f, &mut gl.w_up);
-        let mut dh2 = vec![0f32; n * d];
-        matmul_bt(dgpre, &lw.w_gate, n, f, d, &mut dh2);
-        let mut dh2b = vec![0f32; n * d];
-        matmul_bt(dupre, &lw.w_up, n, f, d, &mut dh2b);
+        // weight grads + dh2 (nf1 = dgpre, nf2 = dupre)
+        matmul_at_add(&lc.h2, &s.nf1, n, d, f, &mut gl.w_gate);
+        matmul_at_add(&lc.h2, &s.nf2, n, d, f, &mut gl.w_up);
+        matmul_bt(&s.nf1, &lw.w_gate, n, f, d, &mut s.dh2);
+        matmul_bt(&s.nf2, &lw.w_up, n, f, d, &mut s.dh2b);
         for i in 0..n * d {
-            dh2[i] += dh2b[i];
+            s.dh2[i] += s.dh2b[i];
         }
-        drop(dh2b);
         // residual: dx (of x_mid) = dx + rmsnorm_bwd(dh2)
-        rmsnorm_bwd(&lc.x_mid, &lw.mlp_norm, &lc.rinv2, &dh2, d, &mut dx, &mut gl.mlp_norm);
-        drop(dh2);
+        rmsnorm_bwd(&lc.x_mid, &lw.mlp_norm, &lc.rinv2, &s.dh2, d, &mut s.dx, &mut gl.mlp_norm);
 
         // ---- attention block: x_mid = x_in + aflat @ wo ------------------
-        let mut daflat = vec![0f32; n * qd];
-        matmul_bt(&dx, &lw.wo, n, d, qd, &mut daflat);
-        matmul_at_add(&lc.aflat, &dx, n, qd, d, &mut gl.wo);
-        let mut da = vec![0f32; b * hq * t * dh];
-        split_heads(&daflat, b, t, hq, dh, &mut da);
-        drop(daflat);
+        matmul_bt(&s.dx, &lw.wo, n, d, qd, &mut s.daflat);
+        matmul_at_add(&lc.aflat, &s.dx, n, qd, d, &mut gl.wo);
+        split_heads(&s.daflat, b, t, hq, dh, &mut s.da);
 
-        let mut dq = vec![0f32; b * hq * t * dh];
-        let mut dk = vec![0f32; b * hkv * t * dh];
-        let mut dv = vec![0f32; b * hkv * t * dh];
-        let mut ds_row = vec![0f32; t];
+        s.dq.fill(0.0);
+        s.dk.fill(0.0);
+        s.dv.fill(0.0);
         for bi in 0..b {
             for hi in 0..hq {
                 let kv = hi / group;
                 let attb = &lc.att[((bi * hq + hi) * t) * t..((bi * hq + hi + 1) * t) * t];
-                let dab = &da[((bi * hq + hi) * t) * dh..((bi * hq + hi + 1) * t) * dh];
+                let dab = &s.da[((bi * hq + hi) * t) * dh..((bi * hq + hi + 1) * t) * dh];
                 let qb = &lc.q[((bi * hq + hi) * t) * dh..((bi * hq + hi + 1) * t) * dh];
                 let kb = &lc.k[((bi * hkv + kv) * t) * dh..((bi * hkv + kv + 1) * t) * dh];
                 let vb = &lc.v[((bi * hkv + kv) * t) * dh..((bi * hkv + kv + 1) * t) * dh];
-                let dqb = &mut dq[((bi * hq + hi) * t) * dh..((bi * hq + hi + 1) * t) * dh];
+                let dqb = &mut s.dq[((bi * hq + hi) * t) * dh..((bi * hq + hi + 1) * t) * dh];
                 for i in 0..t {
                     let dar = &dab[i * dh..(i + 1) * dh];
                     let attr = &attb[i * t..i * t + i + 1];
@@ -706,76 +429,65 @@ fn loss_fwd_bwd(
                     let mut dsum = 0f32;
                     for j in 0..=i {
                         let datt = dot(dar, &vb[j * dh..(j + 1) * dh]);
-                        ds_row[j] = datt;
+                        s.ds_row[j] = datt;
                         dsum += datt * attr[j];
                     }
-                    let dvb = &mut dv[((bi * hkv + kv) * t) * dh..((bi * hkv + kv + 1) * t) * dh];
+                    let dvb =
+                        &mut s.dv[((bi * hkv + kv) * t) * dh..((bi * hkv + kv + 1) * t) * dh];
                     let dqr = &mut dqb[i * dh..(i + 1) * dh];
                     for j in 0..=i {
                         let a_ij = attr[j];
                         axpy(a_ij, dar, &mut dvb[j * dh..(j + 1) * dh]);
-                        let ds = a_ij * (ds_row[j] - dsum) * scale;
+                        let ds = a_ij * (s.ds_row[j] - dsum) * scale;
                         axpy(ds, &kb[j * dh..(j + 1) * dh], dqr);
                         let dk0 = ((bi * hkv + kv) * t + j) * dh;
-                        axpy(ds, &qb[i * dh..(i + 1) * dh], &mut dk[dk0..dk0 + dh]);
+                        axpy(ds, &qb[i * dh..(i + 1) * dh], &mut s.dk[dk0..dk0 + dh]);
                     }
                 }
             }
         }
-        drop(da);
-        rope_apply(&mut dq, b, hq, t, dh, &cos, &sin, -1.0);
-        rope_apply(&mut dk, b, hkv, t, dh, &cos, &sin, -1.0);
-        let mut dqf = vec![0f32; n * qd];
-        let mut dkf = vec![0f32; n * kvd];
-        let mut dvf = vec![0f32; n * kvd];
-        merge_heads(&dq, b, t, hq, dh, &mut dqf);
-        merge_heads(&dk, b, t, hkv, dh, &mut dkf);
-        merge_heads(&dv, b, t, hkv, dh, &mut dvf);
-        drop(dq);
-        drop(dk);
-        drop(dv);
-        matmul_at_add(&lc.h, &dqf, n, d, qd, &mut gl.wq);
-        matmul_at_add(&lc.h, &dkf, n, d, kvd, &mut gl.wk);
-        matmul_at_add(&lc.h, &dvf, n, d, kvd, &mut gl.wv);
-        let mut dh_sum = vec![0f32; n * d];
-        let mut tmp = vec![0f32; n * d];
-        matmul_bt(&dqf, &lw.wq, n, qd, d, &mut dh_sum);
-        matmul_bt(&dkf, &lw.wk, n, kvd, d, &mut tmp);
+        rope_apply(&mut s.dq, b, hq, t, dh, cos, sin, -1.0);
+        rope_apply(&mut s.dk, b, hkv, t, dh, cos, sin, -1.0);
+        merge_heads(&s.dq, b, t, hq, dh, &mut s.dqf);
+        merge_heads(&s.dk, b, t, hkv, dh, &mut s.dkf);
+        merge_heads(&s.dv, b, t, hkv, dh, &mut s.dvf);
+        matmul_at_add(&lc.h, &s.dqf, n, d, qd, &mut gl.wq);
+        matmul_at_add(&lc.h, &s.dkf, n, d, kvd, &mut gl.wk);
+        matmul_at_add(&lc.h, &s.dvf, n, d, kvd, &mut gl.wv);
+        matmul_bt(&s.dqf, &lw.wq, n, qd, d, &mut s.dh_sum);
+        matmul_bt(&s.dkf, &lw.wk, n, kvd, d, &mut s.tmp);
         for i in 0..n * d {
-            dh_sum[i] += tmp[i];
+            s.dh_sum[i] += s.tmp[i];
         }
-        matmul_bt(&dvf, &lw.wv, n, kvd, d, &mut tmp);
+        matmul_bt(&s.dvf, &lw.wv, n, kvd, d, &mut s.tmp);
         for i in 0..n * d {
-            dh_sum[i] += tmp[i];
+            s.dh_sum[i] += s.tmp[i];
         }
         // residual: dx (of x_in) = dx + rmsnorm_bwd(dh_sum)
-        rmsnorm_bwd(&lc.x_in, &lw.attn_norm, &lc.rinv1, &dh_sum, d, &mut dx, &mut gl.attn_norm);
+        rmsnorm_bwd(
+            &lc.x_in,
+            &lw.attn_norm,
+            &lc.rinv1,
+            &s.dh_sum,
+            d,
+            &mut s.dx,
+            &mut gl.attn_norm,
+        );
     }
 
     // embedding gather backward
     for i in 0..n {
-        let tok = inp[i] as usize;
-        axpy(1.0, &dx[i * d..(i + 1) * d], &mut g.embed[tok * d..(tok + 1) * d]);
+        let tok = s.inp[i] as usize;
+        axpy(1.0, &s.dx[i * d..(i + 1) * d], &mut g.embed[tok * d..(tok + 1) * d]);
     }
 
-    (loss, per_seq, Some(g.to_flat(cfg, lay)))
+    g.to_flat_into(cfg, lay, grads_flat);
+    (loss, per_seq)
 }
 
 // ==========================================================================
 // Optimizer (mirrors python/compile/optim.py)
 // ==========================================================================
-
-/// 1.0 where weight decay applies (2-D tensor positions), 0.0 elsewhere
-/// (norm gains and slot padding).
-fn decay_mask(lay: &Layout) -> Vec<f32> {
-    let mut mask = vec![0f32; lay.n_alloc];
-    for s in &lay.slots {
-        if s.decay {
-            mask[s.offset..s.offset + s.size].fill(1.0);
-        }
-    }
-    mask
-}
 
 /// One bias-corrected AdamW step in place. `step` is 1-based.
 fn adamw(
@@ -813,7 +525,7 @@ fn adamw(
 }
 
 // ==========================================================================
-// Public ops (called through runtime::ops)
+// Public ops (called through runtime::ops with an engine workspace)
 // ==========================================================================
 
 /// Deterministic init from a seed: N(0, init_std) for 2-D tensors with the
@@ -841,10 +553,38 @@ pub fn init_params(man: &Manifest, lay: &Layout, seed: i32) -> Vec<f32> {
     flat
 }
 
+/// One inner step, in place: fwd/bwd + AdamW over caller-owned state.
+/// `step` is the 1-based step index. Returns the step loss.
+pub fn train_step_in_place(
+    man: &Manifest,
+    lay: &Layout,
+    ws: &mut Workspace,
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    step: f32,
+    tokens: &[i32],
+    mask: &[f32],
+    lr: f32,
+    clip: f32,
+) -> Result<f32> {
+    let cfg = &man.config;
+    ensure!(p.len() == lay.n_alloc, "params length mismatch");
+    ensure!(m.len() == lay.n_alloc, "m length mismatch");
+    ensure!(v.len() == lay.n_alloc, "v length mismatch");
+    let (loss, _) = loss_fwd_bwd(cfg, lay, ws, p, tokens, mask, true);
+    adamw(cfg, &ws.decay_mask, p, &ws.grads_flat, m, v, step, lr, clip);
+    // p changed in place under the cached unpack; drop the cached copy
+    // rather than paying an always-miss comparison next call.
+    ws.invalidate_weights();
+    Ok(loss)
+}
+
 /// One inner step: fwd/bwd + AdamW. `step` is the 1-based step index.
 pub fn train_step(
     man: &Manifest,
     lay: &Layout,
+    ws: &mut Workspace,
     params: &[f32],
     m: &[f32],
     v: &[f32],
@@ -854,17 +594,57 @@ pub fn train_step(
     lr: f32,
     clip: f32,
 ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f32)> {
-    let cfg = &man.config;
-    ensure!(params.len() == lay.n_alloc, "params length mismatch");
-    ensure!(m.len() == lay.n_alloc, "m length mismatch");
-    ensure!(v.len() == lay.n_alloc, "v length mismatch");
-    let wd_mask = decay_mask(lay);
-    let (loss, _, grads) = loss_fwd_bwd(cfg, lay, params, tokens, mask, true);
     let mut p = params.to_vec();
     let mut m2 = m.to_vec();
     let mut v2 = v.to_vec();
-    adamw(cfg, &wd_mask, &mut p, &grads.unwrap(), &mut m2, &mut v2, step, lr, clip);
+    let loss =
+        train_step_in_place(man, lay, ws, &mut p, &mut m2, &mut v2, step, tokens, mask, lr, clip)?;
     Ok((p, m2, v2, loss))
+}
+
+/// H fused inner steps (the compute phase), in place over caller-owned
+/// replica state — the peer hot path; steady-state rounds allocate
+/// nothing beyond the per-step loss vector. `step0` is the 0-based global
+/// inner-step count before this round.
+pub fn train_round_in_place(
+    man: &Manifest,
+    lay: &Layout,
+    ws: &mut Workspace,
+    p: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    step0: f32,
+    tokens: &[i32],
+    mask: &[f32],
+    lrs: &[f32],
+    clip: f32,
+) -> Result<Vec<f32>> {
+    let cfg = &man.config;
+    ensure!(p.len() == lay.n_alloc, "params length mismatch");
+    ensure!(m.len() == lay.n_alloc, "m length mismatch");
+    ensure!(v.len() == lay.n_alloc, "v length mismatch");
+    let (b, t) = (cfg.batch_size, cfg.seq_len);
+    let h = lrs.len();
+    let mut losses = Vec::with_capacity(h);
+    for hs in 0..h {
+        let toks = &tokens[hs * b * (t + 1)..(hs + 1) * b * (t + 1)];
+        let msk = &mask[hs * b * t..(hs + 1) * b * t];
+        let (loss, _) = loss_fwd_bwd(cfg, lay, ws, p, toks, msk, true);
+        adamw(
+            cfg,
+            &ws.decay_mask,
+            p,
+            &ws.grads_flat,
+            m,
+            v,
+            step0 + hs as f32 + 1.0,
+            lrs[hs],
+            clip,
+        );
+        ws.invalidate_weights();
+        losses.push(loss);
+    }
+    Ok(losses)
 }
 
 /// H fused inner steps (the compute phase). `step0` is the 0-based global
@@ -872,6 +652,7 @@ pub fn train_step(
 pub fn train_round(
     man: &Manifest,
     lay: &Layout,
+    ws: &mut Workspace,
     params: &[f32],
     m: &[f32],
     v: &[f32],
@@ -881,34 +662,12 @@ pub fn train_round(
     lrs: &[f32],
     clip: f32,
 ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
-    let cfg = &man.config;
-    ensure!(params.len() == lay.n_alloc, "params length mismatch");
-    ensure!(m.len() == lay.n_alloc, "m length mismatch");
-    ensure!(v.len() == lay.n_alloc, "v length mismatch");
-    let (b, t) = (cfg.batch_size, cfg.seq_len);
-    let h = lrs.len();
-    let wd_mask = decay_mask(lay);
     let mut p = params.to_vec();
     let mut m2 = m.to_vec();
     let mut v2 = v.to_vec();
-    let mut losses = Vec::with_capacity(h);
-    for hs in 0..h {
-        let toks = &tokens[hs * b * (t + 1)..(hs + 1) * b * (t + 1)];
-        let msk = &mask[hs * b * t..(hs + 1) * b * t];
-        let (loss, _, grads) = loss_fwd_bwd(cfg, lay, &p, toks, msk, true);
-        adamw(
-            cfg,
-            &wd_mask,
-            &mut p,
-            &grads.unwrap(),
-            &mut m2,
-            &mut v2,
-            step0 + hs as f32 + 1.0,
-            lrs[hs],
-            clip,
-        );
-        losses.push(loss);
-    }
+    let losses = train_round_in_place(
+        man, lay, ws, &mut p, &mut m2, &mut v2, step0, tokens, mask, lrs, clip,
+    )?;
     Ok((p, m2, v2, losses))
 }
 
@@ -916,13 +675,14 @@ pub fn train_round(
 pub fn eval_loss(
     man: &Manifest,
     lay: &Layout,
+    ws: &mut Workspace,
     params: &[f32],
     tokens: &[i32],
     mask: &[f32],
 ) -> Result<f32> {
     let cfg = &man.config;
     ensure!(params.len() == lay.n_alloc, "params length mismatch");
-    let (loss, _, _) = loss_fwd_bwd(cfg, lay, params, tokens, mask, false);
+    let (loss, _) = loss_fwd_bwd(cfg, lay, ws, params, tokens, mask, false);
     Ok(loss)
 }
 
@@ -930,13 +690,14 @@ pub fn eval_loss(
 pub fn loss_per_seq(
     man: &Manifest,
     lay: &Layout,
+    ws: &mut Workspace,
     params: &[f32],
     tokens: &[i32],
     mask: &[f32],
 ) -> Result<Vec<f32>> {
     let cfg = &man.config;
     ensure!(params.len() == lay.n_alloc, "params length mismatch");
-    let (_, per_seq, _) = loss_fwd_bwd(cfg, lay, params, tokens, mask, false);
+    let (_, per_seq) = loss_fwd_bwd(cfg, lay, ws, params, tokens, mask, false);
     Ok(per_seq)
 }
 
@@ -955,6 +716,10 @@ mod tests {
         let man = Manifest::synthesize(presets::get("tiny").unwrap(), "native://tiny".into());
         let lay = Layout::build(&man.config);
         (man, lay)
+    }
+
+    fn ws_for(cfg: &ModelConfig, lay: &Layout) -> Workspace {
+        Workspace::new(cfg, lay)
     }
 
     /// Smallest config whose 2-D dims are all BLOCK multiples, with a
@@ -1002,6 +767,7 @@ mod tests {
         let cfg = micro_config();
         let lay = Layout::build(&cfg);
         let man = Manifest::synthesize(cfg.clone(), "native://micro".into());
+        let mut ws = ws_for(&cfg, &lay);
         let params = init_params(&man, &lay, 7);
         let mut rng = Rng::new(5);
         let tokens: Vec<i32> = (0..cfg.batch_size * (cfg.seq_len + 1))
@@ -1011,14 +777,14 @@ mod tests {
         let mask: Vec<f32> = (0..cfg.batch_size * cfg.seq_len)
             .map(|i| if i % 3 == 0 { 0.0 } else { 1.0 })
             .collect();
-        let (_, _, grads) = loss_fwd_bwd(&cfg, &lay, &params, &tokens, &mask, true);
-        let g = grads.unwrap();
+        let (_, _) = loss_fwd_bwd(&cfg, &lay, &mut ws, &params, &tokens, &mask, true);
+        let g = ws.grads_flat.clone();
 
-        let loss_at = |p: &[f32]| -> f64 {
-            let (l, _, _) = loss_fwd_bwd(&cfg, &lay, p, &tokens, &mask, false);
+        let loss_at = |ws: &mut Workspace, p: &[f32]| -> f64 {
+            let (l, _) = loss_fwd_bwd(&cfg, &lay, ws, p, &tokens, &mask, false);
             l as f64
         };
-        let check_direction = |d: &[f32], label: &str| {
+        let check_direction = |ws: &mut Workspace, d: &[f32], label: &str| {
             let norm = d.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
             assert!(norm > 1e-6, "degenerate direction {label}");
             let eps = 5e-3;
@@ -1027,7 +793,7 @@ mod tests {
                 params.iter().zip(&step).map(|(p, s)| p + eps as f32 * s).collect();
             let minus: Vec<f32> =
                 params.iter().zip(&step).map(|(p, s)| p - eps as f32 * s).collect();
-            let numeric = (loss_at(&plus) - loss_at(&minus)) / (2.0 * eps);
+            let numeric = (loss_at(ws, &plus) - loss_at(ws, &minus)) / (2.0 * eps);
             let analytic =
                 g.iter().zip(&step).map(|(&gi, &si)| gi as f64 * si as f64).sum::<f64>();
             let err = (numeric - analytic).abs();
@@ -1039,7 +805,7 @@ mod tests {
         };
 
         // full-gradient direction
-        check_direction(&g, "full gradient");
+        check_direction(&mut ws, &g, "full gradient");
         // per-tensor masked directions (structural coverage)
         for suffix in ["embed", "wq", "wk", "wv", "wo", "attn_norm", "w_gate", "w_down"] {
             let mut d = vec![0f32; g.len()];
@@ -1052,7 +818,7 @@ mod tests {
                 }
             }
             assert!(hit, "no slot matches {suffix}");
-            check_direction(&d, suffix);
+            check_direction(&mut ws, &d, suffix);
         }
     }
 
@@ -1074,35 +840,56 @@ mod tests {
     }
 
     #[test]
-    fn block_major_roundtrip() {
-        let (r, c) = (128, 192);
-        let rm: Vec<f32> = (0..r * c).map(|i| i as f32).collect();
-        let mut flat = vec![0f32; r * c + 64];
-        pack_2d(&rm, 64, r, c, &mut flat);
-        let back = unpack_2d(&flat, 64, r, c);
-        assert_eq!(back, rm);
-    }
-
-    #[test]
     fn eval_loss_near_ln_v_at_init() {
         let (man, lay) = tiny_manifest();
-        let cfg = &man.config;
+        let cfg = man.config.clone();
+        let mut ws = ws_for(&cfg, &lay);
         let params = init_params(&man, &lay, 0);
         let mut rng = Rng::new(7);
         let tokens: Vec<i32> = (0..cfg.batch_size * (cfg.seq_len + 1))
             .map(|_| rng.below(cfg.vocab_size) as i32)
             .collect();
         let mask = vec![1f32; cfg.batch_size * cfg.seq_len];
-        let loss = eval_loss(&man, &lay, &params, &tokens, &mask).unwrap();
+        let loss = eval_loss(&man, &lay, &mut ws, &params, &tokens, &mask).unwrap();
         let ln_v = (cfg.vocab_size as f32).ln();
         assert!((loss - ln_v).abs() < 0.5, "init loss {loss} vs ln V {ln_v}");
     }
 
     #[test]
+    fn workspace_reuse_is_bit_identical_to_fresh() {
+        // The packed-weights cache and scratch reuse must never change
+        // results: evaluating twice through one workspace, and through a
+        // fresh one, yields identical bits — also after the params change.
+        let (man, lay) = tiny_manifest();
+        let cfg = man.config.clone();
+        let mut ws = ws_for(&cfg, &lay);
+        let p1 = init_params(&man, &lay, 1);
+        let p2 = init_params(&man, &lay, 2);
+        let mut rng = Rng::new(13);
+        let tokens: Vec<i32> = (0..cfg.batch_size * (cfg.seq_len + 1))
+            .map(|_| rng.below(cfg.vocab_size) as i32)
+            .collect();
+        let mask = vec![1f32; cfg.batch_size * cfg.seq_len];
+        let a1 = eval_loss(&man, &lay, &mut ws, &p1, &tokens, &mask).unwrap();
+        let a1_again = eval_loss(&man, &lay, &mut ws, &p1, &tokens, &mask).unwrap();
+        let a2 = eval_loss(&man, &lay, &mut ws, &p2, &tokens, &mask).unwrap();
+        let a1_back = eval_loss(&man, &lay, &mut ws, &p1, &tokens, &mask).unwrap();
+        let mut fresh = ws_for(&cfg, &lay);
+        let b1 = eval_loss(&man, &lay, &mut fresh, &p1, &tokens, &mask).unwrap();
+        let mut fresh2 = ws_for(&cfg, &lay);
+        let b2 = eval_loss(&man, &lay, &mut fresh2, &p2, &tokens, &mask).unwrap();
+        assert_eq!(a1.to_bits(), b1.to_bits());
+        assert_eq!(a1_again.to_bits(), b1.to_bits());
+        assert_eq!(a1_back.to_bits(), b1.to_bits());
+        assert_eq!(a2.to_bits(), b2.to_bits());
+    }
+
+    #[test]
     fn train_step_reduces_loss_on_fixed_batch() {
         let (man, lay) = tiny_manifest();
-        let cfg = &man.config;
+        let cfg = man.config.clone();
         let n = man.n_alloc;
+        let mut ws = ws_for(&cfg, &lay);
         let mut params = init_params(&man, &lay, 1);
         let mut m = vec![0f32; n];
         let mut v = vec![0f32; n];
@@ -1111,25 +898,25 @@ mod tests {
             .map(|_| rng.below(cfg.vocab_size) as i32)
             .collect();
         let mask = vec![1f32; cfg.batch_size * cfg.seq_len];
-        let l0 = eval_loss(&man, &lay, &params, &tokens, &mask).unwrap();
+        let l0 = eval_loss(&man, &lay, &mut ws, &params, &tokens, &mask).unwrap();
         for step in 1..=8 {
-            let (p, m2, v2, _) =
-                train_step(&man, &lay, &params, &m, &v, step as f32, &tokens, &mask, 3e-3, 0.0)
-                    .unwrap();
-            params = p;
-            m = m2;
-            v = v2;
+            train_step_in_place(
+                &man, &lay, &mut ws, &mut params, &mut m, &mut v, step as f32, &tokens, &mask,
+                3e-3, 0.0,
+            )
+            .unwrap();
         }
-        let l1 = eval_loss(&man, &lay, &params, &tokens, &mask).unwrap();
+        let l1 = eval_loss(&man, &lay, &mut ws, &params, &tokens, &mask).unwrap();
         assert!(l1 < l0 - 0.3, "loss did not memorize: {l0} -> {l1}");
     }
 
     #[test]
     fn train_round_matches_stepwise() {
         let (man, lay) = tiny_manifest();
-        let cfg = &man.config;
+        let cfg = man.config.clone();
         let n = man.n_alloc;
         let h = 3;
+        let mut ws = ws_for(&cfg, &lay);
         let params = init_params(&man, &lay, 2);
         let mut rng = Rng::new(9);
         let tokens: Vec<i32> = (0..h * cfg.batch_size * (cfg.seq_len + 1))
@@ -1138,11 +925,13 @@ mod tests {
         let mask = vec![1f32; h * cfg.batch_size * cfg.seq_len];
         let lrs = vec![1e-3f32; h];
         let zeros = vec![0f32; n];
-        let (pr, mr, vr, losses) =
-            train_round(&man, &lay, &params, &zeros, &zeros, 0.0, &tokens, &mask, &lrs, 0.0)
-                .unwrap();
+        let (pr, mr, vr, losses) = train_round(
+            &man, &lay, &mut ws, &params, &zeros, &zeros, 0.0, &tokens, &mask, &lrs, 0.0,
+        )
+        .unwrap();
         assert_eq!(losses.len(), h);
-        // stepwise replay must be bit-identical
+        // stepwise replay must be bit-identical (through the same
+        // workspace and through the out-of-place wrapper alike)
         let (mut p, mut m, mut v) = (params, vec![0f32; n], vec![0f32; n]);
         let bt = cfg.batch_size * (cfg.seq_len + 1);
         let bm = cfg.batch_size * cfg.seq_len;
@@ -1150,6 +939,7 @@ mod tests {
             let (p2, m2, v2, loss) = train_step(
                 &man,
                 &lay,
+                &mut ws,
                 &p,
                 &m,
                 &v,
@@ -1173,16 +963,17 @@ mod tests {
     #[test]
     fn loss_per_seq_consistent_with_mean() {
         let (man, lay) = tiny_manifest();
-        let cfg = &man.config;
+        let cfg = man.config.clone();
+        let mut ws = ws_for(&cfg, &lay);
         let params = init_params(&man, &lay, 5);
         let mut rng = Rng::new(11);
         let tokens: Vec<i32> = (0..cfg.batch_size * (cfg.seq_len + 1))
             .map(|_| rng.below(cfg.vocab_size) as i32)
             .collect();
         let mask = vec![1f32; cfg.batch_size * cfg.seq_len];
-        let per = loss_per_seq(&man, &lay, &params, &tokens, &mask).unwrap();
+        let per = loss_per_seq(&man, &lay, &mut ws, &params, &tokens, &mask).unwrap();
         assert_eq!(per.len(), cfg.batch_size);
-        let mean = eval_loss(&man, &lay, &params, &tokens, &mask).unwrap();
+        let mean = eval_loss(&man, &lay, &mut ws, &params, &tokens, &mask).unwrap();
         let per_mean: f32 = per.iter().sum::<f32>() / per.len() as f32;
         // all-ones mask: mean of per-seq means equals the global mean
         assert!((mean - per_mean).abs() < 1e-4, "{mean} vs {per_mean}");
@@ -1191,8 +982,9 @@ mod tests {
     #[test]
     fn clip_bounds_update_norm() {
         let (man, lay) = tiny_manifest();
-        let cfg = &man.config;
+        let cfg = man.config.clone();
         let n = man.n_alloc;
+        let mut ws = ws_for(&cfg, &lay);
         let params = init_params(&man, &lay, 1);
         let mut rng = Rng::new(3);
         let tokens: Vec<i32> = (0..cfg.batch_size * (cfg.seq_len + 1))
@@ -1201,12 +993,14 @@ mod tests {
         let mask = vec![1f32; cfg.batch_size * cfg.seq_len];
         let zeros = vec![0f32; n];
         let tiny_clip = 1e-4f32;
-        let (p_clip, ..) =
-            train_step(&man, &lay, &params, &zeros, &zeros, 1.0, &tokens, &mask, 1e-3, tiny_clip)
-                .unwrap();
-        let (p_free, ..) =
-            train_step(&man, &lay, &params, &zeros, &zeros, 1.0, &tokens, &mask, 1e-3, 0.0)
-                .unwrap();
+        let (p_clip, ..) = train_step(
+            &man, &lay, &mut ws, &params, &zeros, &zeros, 1.0, &tokens, &mask, 1e-3, tiny_clip,
+        )
+        .unwrap();
+        let (p_free, ..) = train_step(
+            &man, &lay, &mut ws, &params, &zeros, &zeros, 1.0, &tokens, &mask, 1e-3, 0.0,
+        )
+        .unwrap();
         let d_clip: f64 = p_clip
             .iter()
             .zip(&params)

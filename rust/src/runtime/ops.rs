@@ -5,8 +5,15 @@
 //!
 //! All functions validate shapes against the engine's manifest, time
 //! themselves into `Engine::exec_stats`, and are deterministic — the
-//! parallel round engine depends on byte-identical results regardless of
-//! which thread runs an op.
+//! parallel round engine and the fan-out Gauntlet validator depend on
+//! byte-identical results regardless of which thread runs an op. Every
+//! model op checks a [`Workspace`] out of the engine's pool
+//! (`Engine::with_workspace`), so token/mask splitting, weight unpacking
+//! and gradient packing reuse long-lived buffers instead of allocating
+//! per call; the in-place variants ([`train_round_in_place`]) additionally
+//! update caller-owned replica state without cloning it.
+//!
+//! [`Workspace`]: super::workspace::Workspace
 
 use std::time::Instant;
 
@@ -43,18 +50,59 @@ pub fn train_step(
     ensure!(tokens.len() == b * (t + 1), "tokens shape mismatch");
     ensure!(mask.len() == b * t, "mask shape mismatch");
     let t0 = Instant::now();
-    let out = native::train_step(
-        eng.manifest(),
-        eng.layout(),
-        params,
-        m,
-        v,
-        step,
-        tokens,
-        mask,
-        lr,
-        clip,
-    )?;
+    let out = eng.with_workspace(|ws| {
+        native::train_step(
+            eng.manifest(),
+            eng.layout(),
+            ws,
+            params,
+            m,
+            v,
+            step,
+            tokens,
+            mask,
+            lr,
+            clip,
+        )
+    })?;
+    eng.note("train_step", t0);
+    Ok(out)
+}
+
+/// One inner step updating caller-owned state in place (no params/m/v
+/// cloning). Bit-identical to [`train_step`]. Returns the loss.
+#[allow(clippy::too_many_arguments)]
+pub fn train_step_in_place(
+    eng: &Engine,
+    params: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    step: f32,
+    tokens: &[i32],
+    mask: &[f32],
+    lr: f32,
+    clip: f32,
+) -> Result<f32> {
+    let c = &eng.manifest().config;
+    let (b, t) = (c.batch_size, c.seq_len);
+    ensure!(tokens.len() == b * (t + 1), "tokens shape mismatch");
+    ensure!(mask.len() == b * t, "mask shape mismatch");
+    let t0 = Instant::now();
+    let out = eng.with_workspace(|ws| {
+        native::train_step_in_place(
+            eng.manifest(),
+            eng.layout(),
+            ws,
+            params,
+            m,
+            v,
+            step,
+            tokens,
+            mask,
+            lr,
+            clip,
+        )
+    })?;
     eng.note("train_step", t0);
     Ok(out)
 }
@@ -80,18 +128,61 @@ pub fn train_round(
     ensure!(tokens.len() == h * b * (t + 1), "tokens shape mismatch");
     ensure!(mask.len() == h * b * t, "mask shape mismatch");
     let t0 = Instant::now();
-    let out = native::train_round(
-        eng.manifest(),
-        eng.layout(),
-        params,
-        m,
-        v,
-        step0,
-        tokens,
-        mask,
-        lrs,
-        clip,
-    )?;
+    let out = eng.with_workspace(|ws| {
+        native::train_round(
+            eng.manifest(),
+            eng.layout(),
+            ws,
+            params,
+            m,
+            v,
+            step0,
+            tokens,
+            mask,
+            lrs,
+            clip,
+        )
+    })?;
+    eng.note("train_round", t0);
+    Ok(out)
+}
+
+/// H fused inner steps updating caller-owned replica state in place (the
+/// peer hot path: no params/m/v cloning). Bit-identical to
+/// [`train_round`]. Returns per-step losses.
+#[allow(clippy::too_many_arguments)]
+pub fn train_round_in_place(
+    eng: &Engine,
+    params: &mut [f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    step0: f32,
+    tokens: &[i32],
+    mask: &[f32],
+    lrs: &[f32],
+    clip: f32,
+) -> Result<Vec<f32>> {
+    let c = &eng.manifest().config;
+    let (h, b, t) = (c.inner_steps, c.batch_size, c.seq_len);
+    ensure!(lrs.len() == h, "lrs must have H={h} entries");
+    ensure!(tokens.len() == h * b * (t + 1), "tokens shape mismatch");
+    ensure!(mask.len() == h * b * t, "mask shape mismatch");
+    let t0 = Instant::now();
+    let out = eng.with_workspace(|ws| {
+        native::train_round_in_place(
+            eng.manifest(),
+            eng.layout(),
+            ws,
+            params,
+            m,
+            v,
+            step0,
+            tokens,
+            mask,
+            lrs,
+            clip,
+        )
+    })?;
     eng.note("train_round", t0);
     Ok(out)
 }
@@ -139,7 +230,40 @@ pub fn eval_loss(eng: &Engine, params: &[f32], tokens: &[i32], mask: &[f32]) -> 
     ensure!(tokens.len() == b * (t + 1), "tokens shape mismatch");
     ensure!(mask.len() == b * t, "mask shape mismatch");
     let t0 = Instant::now();
-    let out = native::eval_loss(eng.manifest(), eng.layout(), params, tokens, mask)?;
+    let out = eng.with_workspace(|ws| {
+        native::eval_loss(eng.manifest(), eng.layout(), ws, params, tokens, mask)
+    })?;
+    eng.note("eval_loss", t0);
+    Ok(out)
+}
+
+/// Mean masked loss for several batches against one parameter vector,
+/// through a **single** workspace checkout: the packed-weights unpack
+/// happens once for the whole set, however many batches there are and
+/// however many other candidates are being evaluated concurrently on
+/// the shared pool (per-batch checkouts would let interleaved pops hand
+/// each batch a workspace caching a different candidate). This is the
+/// validator's `mean_loss` hot path.
+pub fn eval_loss_many(
+    eng: &Engine,
+    params: &[f32],
+    batches: &[(Vec<i32>, Vec<f32>)],
+) -> Result<Vec<f32>> {
+    let c = &eng.manifest().config;
+    let (b, t) = (c.batch_size, c.seq_len);
+    for (tokens, mask) in batches {
+        ensure!(tokens.len() == b * (t + 1), "tokens shape mismatch");
+        ensure!(mask.len() == b * t, "mask shape mismatch");
+    }
+    let t0 = Instant::now();
+    let out = eng.with_workspace(|ws| {
+        batches
+            .iter()
+            .map(|(tokens, mask)| {
+                native::eval_loss(eng.manifest(), eng.layout(), ws, params, tokens, mask)
+            })
+            .collect::<Result<Vec<f32>>>()
+    })?;
     eng.note("eval_loss", t0);
     Ok(out)
 }
@@ -156,7 +280,9 @@ pub fn loss_per_seq(
     ensure!(tokens.len() == b * (t + 1), "tokens shape mismatch");
     ensure!(mask.len() == b * t, "mask shape mismatch");
     let t0 = Instant::now();
-    let out = native::loss_per_seq(eng.manifest(), eng.layout(), params, tokens, mask)?;
+    let out = eng.with_workspace(|ws| {
+        native::loss_per_seq(eng.manifest(), eng.layout(), ws, params, tokens, mask)
+    })?;
     eng.note("loss_per_seq", t0);
     Ok(out)
 }

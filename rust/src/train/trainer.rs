@@ -47,43 +47,38 @@ impl<'e> Trainer<'e> {
         self.params = params;
     }
 
-    /// One inner step. Returns the loss.
+    /// One inner step (in place — no state cloning). Returns the loss.
     pub fn step(&mut self, tokens: &[i32], mask: &[f32], lr: f32) -> Result<f32> {
-        let (p, m, v, loss) = ops::train_step(
+        let loss = ops::train_step_in_place(
             self.eng,
-            &self.params,
-            &self.m,
-            &self.v,
+            &mut self.params,
+            &mut self.m,
+            &mut self.v,
             (self.inner_step + 1) as f32,
             tokens,
             mask,
             lr,
             self.clip,
         )?;
-        self.params = p;
-        self.m = m;
-        self.v = v;
         self.inner_step += 1;
         Ok(loss)
     }
 
-    /// One fused H-step round (the compute phase). Returns per-step losses.
+    /// One fused H-step round (the compute phase, in place). Returns
+    /// per-step losses.
     pub fn round(&mut self, tokens: &[i32], mask: &[f32], lrs: &[f32]) -> Result<Vec<f32>> {
         let h = lrs.len();
-        let (p, m, v, losses) = ops::train_round(
+        let losses = ops::train_round_in_place(
             self.eng,
-            &self.params,
-            &self.m,
-            &self.v,
+            &mut self.params,
+            &mut self.m,
+            &mut self.v,
             self.inner_step as f32,
             tokens,
             mask,
             lrs,
             self.clip,
         )?;
-        self.params = p;
-        self.m = m;
-        self.v = v;
         self.inner_step += h;
         Ok(losses)
     }

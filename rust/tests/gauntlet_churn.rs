@@ -1,0 +1,253 @@
+//! Gauntlet scoring under churn: peers leaving mid-round, rejoining with
+//! recycled UIDs, and the probation invariant (no unproven peer ever
+//! enters the selected set), plus bit-equality of the serial and
+//! rayon-fan-out `score_round` paths.
+//!
+//! These tests drive `Validator::score_round` directly with synthetic
+//! submissions so churn events land exactly where we want them: "left
+//! mid-round" is a submission whose upload never beats the deadline;
+//! "rejoined with a recycled UID" is a fresh hotkey reusing a departed
+//! peer's UID. Proven/suspended state is keyed by hotkey (the on-chain
+//! identity), so a recycled UID must never inherit its predecessor's
+//! probation clearance.
+
+use std::collections::HashSet;
+
+use covenant::config::run::GauntletConfig;
+use covenant::gauntlet::testkit::{synthetic_submission as sub, SyntheticEvalData};
+use covenant::gauntlet::validator::{RoundVerdict, Validator};
+use covenant::runtime::{ops, Engine};
+
+/// Tiny honest-looking payload scale: improvements land well inside the
+/// harmful threshold (|dloss| << 5e-3), so these peers always test clean.
+const CLEAN_SCALE: f32 = 1e-5;
+
+/// Shared deterministic fixture (`gauntlet::testkit`): the hotpath bench
+/// drives `score_round` with the same provider and submission shapes, so
+/// it measures exactly the workload these tests validate.
+fn provider_for(eng: &Engine) -> SyntheticEvalData {
+    SyntheticEvalData::for_engine(eng)
+}
+
+const DEADLINE: f64 = 1e9;
+const ALPHA: f32 = 0.05;
+
+/// Three rounds of churn: honest trio; one peer's upload dies mid-round;
+/// that peer is replaced by a fresh hotkey on the recycled UID.
+fn churn_scenario(parallel: bool) -> Vec<RoundVerdict> {
+    let eng = Engine::from_preset("tiny").unwrap();
+    let base = ops::init_params(&eng, 11).unwrap();
+    let cfg = GauntletConfig {
+        loss_eval_fraction: 1.0,
+        eval_batches: 1,
+        parallel_eval: parallel,
+        ..Default::default()
+    };
+    let mut val = Validator::new(cfg, 0x5EED);
+    let mut provider = provider_for(&eng);
+    let mut out = Vec::new();
+    // round 0: alice(0), bob(1), carol(2)
+    let subs0 = vec![
+        sub(&eng, "alice", 0, 0, 1, CLEAN_SCALE),
+        sub(&eng, "bob", 1, 0, 2, CLEAN_SCALE),
+        sub(&eng, "carol", 2, 0, 3, CLEAN_SCALE),
+    ];
+    out.push(
+        val.score_round(&eng, &base, &subs0, 0, DEADLINE, ALPHA, 2, &mut provider).unwrap(),
+    );
+    // round 1: bob leaves mid-round — his upload never completes in time
+    let mut bob1 = sub(&eng, "bob", 1, 1, 5, CLEAN_SCALE);
+    bob1.uploaded_at = DEADLINE + 1.0;
+    let subs1 = vec![
+        sub(&eng, "alice", 0, 1, 4, CLEAN_SCALE),
+        bob1,
+        sub(&eng, "carol", 2, 1, 6, CLEAN_SCALE),
+    ];
+    out.push(
+        val.score_round(&eng, &base, &subs1, 1, DEADLINE, ALPHA, 2, &mut provider).unwrap(),
+    );
+    // round 2: bob is gone; dave joined on bob's recycled uid 1
+    let subs2 = vec![
+        sub(&eng, "alice", 0, 2, 7, CLEAN_SCALE),
+        sub(&eng, "carol", 2, 2, 8, CLEAN_SCALE),
+        sub(&eng, "dave", 1, 2, 9, CLEAN_SCALE),
+    ];
+    out.push(
+        val.score_round(&eng, &base, &subs2, 2, DEADLINE, ALPHA, 2, &mut provider).unwrap(),
+    );
+    out
+}
+
+fn assert_verdicts_identical(a: &[RoundVerdict], b: &[RoundVerdict]) {
+    assert_eq!(a.len(), b.len());
+    for (va, vb) in a.iter().zip(b) {
+        assert_eq!(va.selected, vb.selected);
+        assert_eq!(va.weights.len(), vb.weights.len());
+        for ((ua, wa), (ub, wb)) in va.weights.iter().zip(&vb.weights) {
+            assert_eq!(ua, ub);
+            assert_eq!(wa.to_bits(), wb.to_bits());
+        }
+        assert_eq!(va.per_peer.len(), vb.per_peer.len());
+        for (pa, pb) in va.per_peer.iter().zip(&vb.per_peer) {
+            assert_eq!(pa.hotkey, pb.hotkey);
+            assert_eq!(pa.uid, pb.uid);
+            assert_eq!(pa.selected, pb.selected);
+            assert_eq!(pa.score.to_bits(), pb.score.to_bits());
+            assert_eq!(pa.loss_eval.is_some(), pb.loss_eval.is_some());
+            if let (Some(la), Some(lb)) = (pa.loss_eval, pb.loss_eval) {
+                assert_eq!(
+                    la.assigned_improvement.to_bits(),
+                    lb.assigned_improvement.to_bits()
+                );
+                assert_eq!(
+                    la.unassigned_improvement.to_bits(),
+                    lb.unassigned_improvement.to_bits()
+                );
+                assert_eq!(la.suspected_copy, lb.suspected_copy);
+            }
+        }
+    }
+}
+
+#[test]
+fn scoring_is_deterministic_under_churn_and_recycled_uids() {
+    let a = churn_scenario(true);
+    let b = churn_scenario(true);
+    assert_verdicts_identical(&a, &b);
+    // sanity on the scenario itself: the mid-round leaver is rejected,
+    // everyone else lands
+    assert!(!a[1].per_peer[1].selected, "late leaver must not be selected");
+    assert!(a[1].per_peer[1].score < 0.0);
+    assert_eq!(a[0].selected.len(), 2); // contributor cap holds
+}
+
+#[test]
+fn parallel_and_serial_score_round_bit_identical() {
+    let par = churn_scenario(true);
+    let ser = churn_scenario(false);
+    assert_verdicts_identical(&par, &ser);
+}
+
+#[test]
+fn unproven_peers_never_selected() {
+    // Reconstruct the probation set from the verdicts alone: a peer is
+    // proven once it has a clean LossScore eval (no copy suspicion, no
+    // harmful improvement). Every selected peer must be proven by its
+    // selection round — in particular dave, on bob's recycled uid, cannot
+    // ride on bob's clearance.
+    let verdicts = churn_scenario(true);
+    let mut proven: HashSet<String> = HashSet::new();
+    for v in &verdicts {
+        let clean: HashSet<String> = v
+            .per_peer
+            .iter()
+            .filter(|p| {
+                p.loss_eval
+                    .map(|le| !le.suspected_copy && le.assigned_improvement >= -5e-3)
+                    .unwrap_or(false)
+            })
+            .map(|p| p.hotkey.clone())
+            .collect();
+        for p in v.per_peer.iter().filter(|p| p.selected) {
+            assert!(
+                proven.contains(&p.hotkey) || clean.contains(&p.hotkey),
+                "unproven peer {} entered the selected set",
+                p.hotkey
+            );
+        }
+        proven.extend(clean);
+    }
+    // dave was evaluated on arrival (unproven peers are always evaluated)
+    let dave = verdicts[2].per_peer.iter().find(|p| p.hotkey == "dave").unwrap();
+    assert!(dave.loss_eval.is_some(), "fresh peer on a recycled uid must be evaluated");
+}
+
+#[test]
+fn whale_excluded_until_clean_then_rehabilitated() {
+    // A peer submitting abnormal-norm payloads fails fast checks every
+    // round (never evaluated, never proven, never selected) — and once it
+    // submits a clean payload it is force-evaluated (unproven) and only
+    // then becomes selectable.
+    let eng = Engine::from_preset("tiny").unwrap();
+    let base = ops::init_params(&eng, 12).unwrap();
+    let cfg = GauntletConfig {
+        loss_eval_fraction: 1.0,
+        eval_batches: 1,
+        ..Default::default()
+    };
+    let mut val = Validator::new(cfg, 0xF00D);
+    let mut provider = provider_for(&eng);
+    let honest = |round: usize, seed_base: u64| {
+        vec![
+            sub(&eng, "alice", 0, round, seed_base, CLEAN_SCALE),
+            sub(&eng, "bob", 1, round, seed_base + 1, CLEAN_SCALE),
+            sub(&eng, "carol", 2, round, seed_base + 2, CLEAN_SCALE),
+        ]
+    };
+    for round in 0..2 {
+        let mut subs = honest(round, 10 * (round as u64 + 1));
+        // 1000x the honest scale: > max_norm_ratio * median
+        subs.push(sub(&eng, "whale", 3, round, 99 + round as u64, CLEAN_SCALE * 1000.0));
+        let v = val
+            .score_round(&eng, &base, &subs, round, DEADLINE, ALPHA, 8, &mut provider)
+            .unwrap();
+        let w = v.per_peer.iter().find(|p| p.hotkey == "whale").unwrap();
+        assert!(!w.selected, "whale selected in round {round}");
+        assert!(w.score < 0.0);
+        assert!(w.loss_eval.is_none(), "fast-check failures are not evaluated");
+    }
+    // round 2: the whale reforms and submits a clean payload
+    let mut subs = honest(2, 30);
+    subs.push(sub(&eng, "whale", 3, 2, 101, CLEAN_SCALE));
+    let v = val.score_round(&eng, &base, &subs, 2, DEADLINE, ALPHA, 8, &mut provider).unwrap();
+    let w = v.per_peer.iter().find(|p| p.hotkey == "whale").unwrap();
+    assert!(w.loss_eval.is_some(), "unproven peer must be force-evaluated");
+    assert!(w.selected, "clean-tested peer becomes selectable");
+}
+
+#[test]
+fn unproven_peers_forced_into_eval_even_at_zero_fraction() {
+    // With loss_eval_fraction = 0 nothing would be evaluated by sampling
+    // alone; probation must still force first-round peers through
+    // LossScore, and proven peers must remain selectable without
+    // re-evaluation.
+    let eng = Engine::from_preset("tiny").unwrap();
+    let base = ops::init_params(&eng, 13).unwrap();
+    let cfg = GauntletConfig {
+        loss_eval_fraction: 0.0,
+        eval_batches: 1,
+        ..Default::default()
+    };
+    let mut val = Validator::new(cfg, 0xABCD);
+    let mut provider = provider_for(&eng);
+    let subs0 = vec![
+        sub(&eng, "alice", 0, 0, 50, CLEAN_SCALE),
+        sub(&eng, "bob", 1, 0, 51, CLEAN_SCALE),
+    ];
+    let v0 = val.score_round(&eng, &base, &subs0, 0, DEADLINE, ALPHA, 8, &mut provider).unwrap();
+    for p in &v0.per_peer {
+        assert!(p.loss_eval.is_some(), "unproven {} skipped eval", p.hotkey);
+        assert!(p.selected, "clean first-rounder {} not selected", p.hotkey);
+    }
+    // round 1: both proven; fraction 0 means no evals at all now
+    let subs1 = vec![
+        sub(&eng, "alice", 0, 1, 52, CLEAN_SCALE),
+        sub(&eng, "bob", 1, 1, 53, CLEAN_SCALE),
+    ];
+    let v1 = val.score_round(&eng, &base, &subs1, 1, DEADLINE, ALPHA, 8, &mut provider).unwrap();
+    for p in &v1.per_peer {
+        assert!(p.loss_eval.is_none(), "proven {} re-evaluated at fraction 0", p.hotkey);
+        assert!(p.selected, "proven {} lost selection", p.hotkey);
+    }
+    // round 2: a newcomer on a fresh uid is still forced through eval
+    let subs2 = vec![
+        sub(&eng, "alice", 0, 2, 54, CLEAN_SCALE),
+        sub(&eng, "bob", 1, 2, 55, CLEAN_SCALE),
+        sub(&eng, "dave", 5, 2, 56, CLEAN_SCALE),
+    ];
+    let v2 = val.score_round(&eng, &base, &subs2, 2, DEADLINE, ALPHA, 8, &mut provider).unwrap();
+    let dave = v2.per_peer.iter().find(|p| p.hotkey == "dave").unwrap();
+    assert!(dave.loss_eval.is_some(), "newcomer skipped probation eval");
+    let alice = v2.per_peer.iter().find(|p| p.hotkey == "alice").unwrap();
+    assert!(alice.loss_eval.is_none());
+}

@@ -1,0 +1,126 @@
+//! End-to-end bit-equivalence of the blocked/parallel kernels against the
+//! naive serial references.
+//!
+//! The unit tests in `runtime::kernels` cover the raw kernels on odd and
+//! panel-boundary shapes; this file asserts the property where it
+//! matters: a full `train_step` / `train_round` / `eval_loss` through the
+//! optimized path produces byte-identical params, moments and losses to
+//! the same ops with every kernel forced onto the naive serial reference
+//! (`kernels::force_naive`).
+//!
+//! The switch is process-global and `cargo test` runs tests on multiple
+//! threads, so the two toggling tests serialize on a mutex: otherwise one
+//! test's naive window could overlap another's "optimized" pass and the
+//! comparison would silently become naive-vs-naive — passing even if the
+//! optimized kernels regressed.
+
+use std::sync::Mutex;
+
+use covenant::runtime::{kernels, ops, Engine};
+use covenant::util::rng::Rng;
+
+/// Serializes every test that flips `force_naive` (an assert failure
+/// poisons the mutex; later tests just take the poisoned guard).
+static NAIVE_TOGGLE: Mutex<()> = Mutex::new(());
+
+fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn train_step_blocked_parallel_bit_identical_to_naive_serial() {
+    let _guard = NAIVE_TOGGLE.lock().unwrap_or_else(|e| e.into_inner());
+    let eng = Engine::from_preset("tiny").unwrap();
+    let cfg = eng.manifest().config.clone();
+    let n = eng.manifest().n_alloc;
+    let params = ops::init_params(&eng, 3).unwrap();
+    let m = vec![0f32; n];
+    let v = vec![0f32; n];
+    let mut rng = Rng::new(21);
+    let tokens: Vec<i32> = (0..cfg.batch_size * (cfg.seq_len + 1))
+        .map(|_| rng.below(cfg.vocab_size) as i32)
+        .collect();
+    let mask = vec![1f32; cfg.batch_size * cfg.seq_len];
+
+    let (p_f, m_f, v_f, loss_f) =
+        ops::train_step(&eng, &params, &m, &v, 1.0, &tokens, &mask, 2e-3, 0.5).unwrap();
+    kernels::force_naive(true);
+    let (p_n, m_n, v_n, loss_n) =
+        ops::train_step(&eng, &params, &m, &v, 1.0, &tokens, &mask, 2e-3, 0.5).unwrap();
+    kernels::force_naive(false);
+
+    assert_eq!(loss_f.to_bits(), loss_n.to_bits());
+    assert!(bits_eq(&p_f, &p_n), "params diverged");
+    assert!(bits_eq(&m_f, &m_n), "first moments diverged");
+    assert!(bits_eq(&v_f, &v_n), "second moments diverged");
+}
+
+#[test]
+fn train_round_and_eval_loss_bit_identical_to_naive_serial() {
+    let _guard = NAIVE_TOGGLE.lock().unwrap_or_else(|e| e.into_inner());
+    let eng = Engine::from_preset("tiny").unwrap();
+    let cfg = eng.manifest().config.clone();
+    let n = eng.manifest().n_alloc;
+    let h = cfg.inner_steps;
+    let params = ops::init_params(&eng, 8).unwrap();
+    let m = vec![0f32; n];
+    let v = vec![0f32; n];
+    let mut rng = Rng::new(33);
+    let round_tokens: Vec<i32> = (0..h * cfg.batch_size * (cfg.seq_len + 1))
+        .map(|_| rng.below(cfg.vocab_size) as i32)
+        .collect();
+    let round_mask = vec![1f32; h * cfg.batch_size * cfg.seq_len];
+    let lrs = vec![1e-3f32; h];
+    let tokens: Vec<i32> = (0..cfg.batch_size * (cfg.seq_len + 1))
+        .map(|_| rng.below(cfg.vocab_size) as i32)
+        .collect();
+    let mask = vec![1f32; cfg.batch_size * cfg.seq_len];
+
+    let (p_f, _, _, losses_f) =
+        ops::train_round(&eng, &params, &m, &v, 0.0, &round_tokens, &round_mask, &lrs, 0.0)
+            .unwrap();
+    let eval_f = ops::eval_loss(&eng, &p_f, &tokens, &mask).unwrap();
+    kernels::force_naive(true);
+    let (p_n, _, _, losses_n) =
+        ops::train_round(&eng, &params, &m, &v, 0.0, &round_tokens, &round_mask, &lrs, 0.0)
+            .unwrap();
+    let eval_n = ops::eval_loss(&eng, &p_n, &tokens, &mask).unwrap();
+    kernels::force_naive(false);
+
+    assert!(bits_eq(&p_f, &p_n), "round params diverged");
+    assert!(bits_eq(&losses_f, &losses_n), "per-step losses diverged");
+    assert_eq!(eval_f.to_bits(), eval_n.to_bits());
+}
+
+#[test]
+fn in_place_round_matches_out_of_place() {
+    // No toggle guard needed: whichever kernel path is active, both runs
+    // here use the same one, and both paths are bit-identical anyway.
+    let eng = Engine::from_preset("tiny").unwrap();
+    let cfg = eng.manifest().config.clone();
+    let n = eng.manifest().n_alloc;
+    let h = cfg.inner_steps;
+    let params = ops::init_params(&eng, 5).unwrap();
+    let mut rng = Rng::new(44);
+    let round_tokens: Vec<i32> = (0..h * cfg.batch_size * (cfg.seq_len + 1))
+        .map(|_| rng.below(cfg.vocab_size) as i32)
+        .collect();
+    let round_mask = vec![1f32; h * cfg.batch_size * cfg.seq_len];
+    let lrs = vec![2e-3f32; h];
+
+    let zeros = vec![0f32; n];
+    let (p_out, m_out, v_out, losses_out) =
+        ops::train_round(&eng, &params, &zeros, &zeros, 0.0, &round_tokens, &round_mask, &lrs, 0.0)
+            .unwrap();
+    let mut p = params;
+    let mut m = vec![0f32; n];
+    let mut v = vec![0f32; n];
+    let losses_in = ops::train_round_in_place(
+        &eng, &mut p, &mut m, &mut v, 0.0, &round_tokens, &round_mask, &lrs, 0.0,
+    )
+    .unwrap();
+    assert!(bits_eq(&p_out, &p), "in-place params diverged");
+    assert!(bits_eq(&m_out, &m), "in-place m diverged");
+    assert!(bits_eq(&v_out, &v), "in-place v diverged");
+    assert!(bits_eq(&losses_out, &losses_in));
+}
