@@ -10,6 +10,7 @@
 
 use anyhow::{Context, Result};
 
+use crate::netsim::HeterogeneityConfig;
 use crate::util::json::Json;
 
 /// Top-level run configuration.
@@ -58,8 +59,21 @@ pub struct NetworkConfig {
     pub downlink_bps: f64,
     /// Per-transfer latency floor, seconds (object-store RTT).
     pub latency_s: f64,
-    /// Fixed compute window per round, seconds (paper: 20 min at 72B).
+    /// Nominal compute window per round, seconds (paper: 20 min at 72B).
+    /// With heterogeneity enabled this is the *median* tier's duration;
+    /// the upload deadline is anchored to it either way.
     pub compute_window_s: f64,
+    /// Overlap comm with the next round's compute (paper Fig. 1): the
+    /// next round begins once the selected uploads have landed, while
+    /// downloads (and straggling uploads) continue in the background;
+    /// each peer starts its next compute as soon as its own download
+    /// finishes. Off = barrier semantics (the round ends only when every
+    /// peer has finished downloading).
+    pub overlap: bool,
+    /// Per-peer compute heterogeneity (tiers, jitter, stalls); disabled
+    /// by default, which makes the timing model degenerate and bit-equal
+    /// to the historical barrier timings.
+    pub heterogeneity: HeterogeneityConfig,
 }
 
 impl Default for NetworkConfig {
@@ -69,6 +83,8 @@ impl Default for NetworkConfig {
             downlink_bps: 500e6,
             latency_s: 0.2,
             compute_window_s: 20.0 * 60.0,
+            overlap: false,
+            heterogeneity: HeterogeneityConfig::default(),
         }
     }
 }
@@ -157,6 +173,36 @@ impl RunConfig {
             if let Some(v) = n.opt("compute_window_s") {
                 c.network.compute_window_s = v.as_f64()?;
             }
+            if let Some(v) = n.opt("overlap") {
+                c.network.overlap = v.as_bool()?;
+            }
+            if let Some(h) = n.opt("heterogeneity") {
+                let het = &mut c.network.heterogeneity;
+                if let Some(v) = h.opt("enabled") {
+                    het.enabled = v.as_bool()?;
+                }
+                if let Some(v) = h.opt("fast_frac") {
+                    het.fast_frac = v.as_f64()?;
+                }
+                if let Some(v) = h.opt("straggler_frac") {
+                    het.straggler_frac = v.as_f64()?;
+                }
+                if let Some(v) = h.opt("fast_mult") {
+                    het.fast_mult = v.as_f64()?;
+                }
+                if let Some(v) = h.opt("straggler_mult") {
+                    het.straggler_mult = v.as_f64()?;
+                }
+                if let Some(v) = h.opt("jitter_frac") {
+                    het.jitter_frac = v.as_f64()?;
+                }
+                if let Some(v) = h.opt("p_stall") {
+                    het.p_stall = v.as_f64()?;
+                }
+                if let Some(v) = h.opt("stall_mult") {
+                    het.stall_mult = v.as_f64()?;
+                }
+            }
         }
         if let Some(g) = j.opt("gauntlet") {
             if let Some(v) = g.opt("loss_eval_fraction") {
@@ -214,5 +260,33 @@ mod tests {
         assert_eq!(c.gauntlet.eval_batches, 7);
         // untouched fields keep defaults
         assert_eq!(c.max_contributors, 20);
+    }
+
+    #[test]
+    fn heterogeneity_defaults_degenerate() {
+        // The degenerate timing model (barrier-equivalent) must be the
+        // default so existing runs and tests keep bit-identical timings.
+        let c = RunConfig::default();
+        assert!(!c.network.overlap);
+        assert!(!c.network.heterogeneity.enabled);
+    }
+
+    #[test]
+    fn json_heterogeneity_overrides() {
+        let j = Json::parse(
+            r#"{"network": {"overlap": true,
+                "heterogeneity": {"enabled": true, "straggler_frac": 0.4,
+                                  "straggler_mult": 1.8, "p_stall": 0.0}}}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert!(c.network.overlap);
+        let h = &c.network.heterogeneity;
+        assert!(h.enabled);
+        assert_eq!(h.straggler_frac, 0.4);
+        assert_eq!(h.straggler_mult, 1.8);
+        assert_eq!(h.p_stall, 0.0);
+        // untouched heterogeneity fields keep defaults
+        assert_eq!(h.fast_frac, 0.25);
     }
 }

@@ -1,14 +1,15 @@
 //! The coordinator — the paper's systems contribution, wired together:
 //! the parallel round engine orchestrating simulated peers over the
-//! object store and chain (`network`); aggregation with median-norm
-//! scaling, §2.2, as a deterministic chunk-parallel reduction
-//! (`aggregator`); and the phase-dependent optimizer-state offload
-//! protocol of Figure 1 (`offload`).
+//! object store and chain on an event-driven timing spine (`network`);
+//! aggregation with median-norm scaling, §2.2, as a deterministic
+//! chunk-parallel reduction (`aggregator`); and the phase-dependent
+//! optimizer-state offload protocol of Figure 1 (`offload`), driven by
+//! the netsim scheduler's events.
 
 pub mod aggregator;
 pub mod network;
 pub mod offload;
 
 pub use aggregator::{aggregate, median_norm_weights};
-pub use network::{Network, NetworkParams, RoundReport};
+pub use network::{Network, NetworkParams, PeerLane, RoundReport};
 pub use offload::{OffloadManager, Phase, StateKind};

@@ -15,7 +15,7 @@
 //!
 //! ## Parallel round engine
 //!
-//! Steps 2–4 are independent per peer, mirroring reality: participants
+//! Steps 2–3 are independent per peer, mirroring reality: participants
 //! compute concurrently on their own hardware. `run_round` therefore fans
 //! the compute -> compress -> wire-encode pipeline out across the rayon
 //! pool ([`NetworkParams::parallel`]; the serial path is kept for
@@ -36,6 +36,36 @@
 //!
 //! The `parallel_determinism` integration test asserts serial and
 //! parallel rounds produce byte-identical global parameters.
+//!
+//! ## Event-driven timing spine
+//!
+//! Steps 4 and 6 — everything that takes simulated *time* — run on the
+//! discrete-event scheduler ([`crate::netsim::sched`]) instead of a
+//! single compute-window barrier. Each submitting peer's compute
+//! completion is an event at `start + duration`, where the duration comes
+//! from the per-peer [`ComputeModel`] (hardware tiers, jitter, stalls);
+//! `ComputeDone` schedules the peer's FIFO uplink transfer and
+//! `UploadDone` stamps the submission's arrival time, so `fast_checks`
+//! deadline verdicts come from *simulated arrival times*, not an assumed
+//! barrier. A `DeadlineHit` event at `compute_end + comm_deadline_s` cuts
+//! off stalled uploads (arrival = +inf, verdict `LateUpload`). After
+//! scoring, download completions and chain blocks are events too, and
+//! each pop drives the per-peer Fig.-1 offload phase machine
+//! ([`super::offload::OffloadManager::apply_event`]).
+//!
+//! With `NetworkConfig::overlap` **off** (default) the round is
+//! barrier-synchronous: it stays open until every expected upload has
+//! landed or the deadline passes, then until the slowest download — so
+//! one straggler stretches everyone's round to the timeout. With the
+//! degenerate compute model all uploads coincide and the timings are
+//! *bit-identical* to the historical barrier implementation (pinned by
+//! `tests/netsim_events.rs`). With overlap **on**, the next round begins
+//! once the selected uploads have landed (`max(compute_end, t_agg)`):
+//! downloads and straggling uploads continue in the background, each
+//! peer starts its next compute at `max(round start, own download
+//! completion, own compute completion)`, and its uplink may still be
+//! draining the previous payload — the paper's Fig.-1 overlap phase,
+//! hiding communication behind compute.
 
 use rayon::prelude::*;
 
@@ -43,12 +73,15 @@ use anyhow::Result;
 
 use crate::chain::Subnet;
 use crate::config::run::RunConfig;
+use crate::coordinator::offload::{OffloadManager, Phase};
 use crate::data::grammar::GrammarKind;
 use crate::data::shards::{BatchSampler, ShardStore};
+use crate::gauntlet::fast_checks::FastCheck;
 use crate::gauntlet::loss_score::EvalBatch;
 use crate::gauntlet::validator::{EvalDataProvider, Validator};
 use crate::gauntlet::Submission;
-use crate::netsim::{LinkPair, VirtualClock};
+use crate::netsim::sched::{Event, Scheduler};
+use crate::netsim::{ComputeModel, ComputeTier, LinkPair, VirtualClock};
 use crate::peer::{Behavior, ChurnConfig, ChurnModel, PeerState};
 use crate::runtime::{ops, Engine, Manifest};
 use crate::sparseloco::{codec, Payload};
@@ -67,9 +100,10 @@ pub struct NetworkParams {
     pub n_shards: usize,
     /// Shards assigned per peer per round.
     pub assigned_per_peer: usize,
-    /// Upload deadline after compute end (seconds).
+    /// Upload deadline after the *nominal* compute end (seconds).
     pub comm_deadline_s: f64,
-    /// Probability a peer's upload is pathologically slow this round.
+    /// Probability a peer's upload is pathologically slow this round
+    /// (stalls and is cut off by the deadline event).
     pub p_slow_upload: f64,
     /// Initial peer count.
     pub initial_peers: usize,
@@ -109,19 +143,48 @@ impl NetworkParams {
     }
 }
 
+/// One peer's simulated round timeline (a Fig.-3 lane): compute, upload
+/// and download segments in virtual seconds. With overlap enabled,
+/// segments routinely cross the round boundary — that's the point.
+#[derive(Debug, Clone)]
+pub struct PeerLane {
+    pub uid: usize,
+    pub hotkey: String,
+    pub tier: ComputeTier,
+    /// [start, end) of this round's compute window, if the peer submitted.
+    pub compute: Option<(f64, f64)>,
+    /// [start, end) of the payload upload; end is +inf when the upload
+    /// stalled and was cut off by the deadline event.
+    pub upload: Option<(f64, f64)>,
+    /// [start, end) of the selected-payload download, if any payloads
+    /// were selected this round.
+    pub download: Option<(f64, f64)>,
+    /// Whether the Gauntlet flagged this peer's submission Late/LateUpload.
+    pub late: bool,
+}
+
 /// Per-round observability (feeds Figures 3/4/5/6 + EXPERIMENTS.md).
 #[derive(Debug, Clone)]
 pub struct RoundReport {
     pub round: usize,
-    /// Virtual times: round start, compute end, comm end.
+    /// Virtual times: round start, *nominal* compute end (the deadline
+    /// anchor; per-peer actuals live in `lanes`), round end.
     pub t_start: f64,
     pub t_compute_end: f64,
+    /// Time the round handed over to the next one. Barrier mode: every
+    /// expected upload landed or the deadline passed, and the slowest
+    /// download finished. Overlap mode: the selected uploads landed
+    /// (remaining comm continues in the background — see `lanes`).
     pub t_comm_end: f64,
+    /// Upload deadline (`t_compute_end + comm_deadline_s`).
+    pub deadline: f64,
     pub active: usize,
     pub submitted: usize,
     pub contributing: usize,
     pub adversarial_submitted: usize,
     pub adversarial_selected: usize,
+    /// Submissions flagged `Late` or `LateUpload` by the fast checks.
+    pub late_submissions: usize,
     /// Mean training loss across honest peers (last inner step).
     pub mean_loss: f64,
     pub bytes_up: u64,
@@ -130,11 +193,18 @@ pub struct RoundReport {
     /// Human-readable reasons for non-selected submissions (debugging +
     /// observability): "hotkey fast=... score=...".
     pub rejections: Vec<String>,
+    /// Per-peer timing lanes (one per active peer slot).
+    pub lanes: Vec<PeerLane>,
 }
 
 impl RoundReport {
     pub fn t_comm(&self) -> f64 {
         self.t_comm_end - self.t_compute_end
+    }
+
+    /// Round wall-clock in virtual seconds.
+    pub fn wall_clock(&self) -> f64 {
+        self.t_comm_end - self.t_start
     }
 
     pub fn utilization(&self) -> f64 {
@@ -147,6 +217,17 @@ struct PeerSlot {
     state: PeerState,
     link: LinkPair,
     joined_round: usize,
+    /// Earliest virtual time this peer can begin its next compute phase:
+    /// max of its latest compute completion and download completion
+    /// (join sync for fresh peers). One machine never computes two rounds
+    /// at once: a straggler whose compute overran the previous round
+    /// starts the next one late even under barrier semantics. In the
+    /// degenerate model this never exceeds the round barrier, preserving
+    /// barrier-timing equivalence.
+    ready_at: f64,
+    /// Fig.-1 phase-dependent offload state machine, driven by this
+    /// peer's scheduler events.
+    offload: OffloadManager,
 }
 
 /// Deterministic per-peer round seed: a pure function of (run seed,
@@ -165,7 +246,8 @@ fn round_seed(run_seed: u64, hotkey: &str, round: usize) -> u64 {
 }
 
 /// Read-only context shared by every peer's round work (Sync; borrowed
-/// into the rayon fan-out).
+/// into the rayon fan-out). Timing-free: simulated time is handled by the
+/// event spine after the fan-out joins.
 struct RoundCtx<'a> {
     eng: &'a Engine,
     man: &'a Manifest,
@@ -173,8 +255,6 @@ struct RoundCtx<'a> {
     lrs: &'a [f32],
     prev_payloads: &'a [Payload],
     round: usize,
-    compute_end: f64,
-    comm_deadline_s: f64,
     p_slow_upload: f64,
     ef_beta: f32,
     rust_compress: bool,
@@ -188,11 +268,15 @@ struct PeerOutcome {
     /// Last-inner-step training loss (honest peers only).
     loss: Option<f64>,
     adversarial: bool,
+    /// This round's upload stalls (rolled here so the RNG draw order is
+    /// identical to the historical path; acted on by the event spine).
+    slow: bool,
 }
 
 /// One peer's full round: compute phase -> compress phase -> submission
-/// fabrication -> uplink charge -> wire encode. Pure per-peer: touches
-/// only the slot and the shared read-only context.
+/// fabrication -> wire encode. Pure per-peer: touches only the slot and
+/// the shared read-only context. Upload timing is *not* charged here —
+/// the event spine stamps `uploaded_at` when the UploadDone event pops.
 fn peer_round(
     slot: &mut PeerSlot,
     batch: Option<(Vec<i32>, Vec<f32>)>,
@@ -219,14 +303,15 @@ fn peer_round(
         }
         None => None,
     };
-    // Upload at compute end (+ occasional pathological slowness).
+    // Occasional pathological upload slowness (stall), rolled first to
+    // keep the per-peer RNG stream identical to the pre-event-spine code.
     let slow = slot.state.roll_bool(ctx.p_slow_upload);
     let copy_src = if ctx.prev_payloads.is_empty() {
         None
     } else {
         Some(&ctx.prev_payloads[slot.state.roll_below(ctx.prev_payloads.len())])
     };
-    let mut sub = slot.state.fabricate_submission(
+    let sub = slot.state.fabricate_submission(
         ctx.round,
         honest_payload,
         copy_src,
@@ -234,21 +319,15 @@ fn peer_round(
         ctx.man.config.topk,
         ctx.man.config.chunk,
         ctx.median_hint,
-        0.0,
+        0.0, // uploaded_at stamped by the event spine
     );
-    // Charge the uplink from compute end.
-    slot.link.up.release_at(ctx.compute_end);
-    let mut done = slot.link.up.transfer(ctx.compute_end, sub.wire_bytes);
-    if slow {
-        done += ctx.comm_deadline_s; // stalled connection
-    }
-    sub.uploaded_at = done;
     let wire = codec::encode(&sub.payload);
     Ok(Some(PeerOutcome {
         sub,
         wire,
         loss,
         adversarial: behavior.is_adversarial() || behavior == Behavior::Stale,
+        slow,
     }))
 }
 
@@ -262,10 +341,15 @@ pub struct Network<'e> {
     pub validator: Validator,
     pub churn: ChurnModel,
     pub shards: ShardStore,
+    /// Per-peer compute-duration model (tiers assigned per hotkey).
+    pub compute_model: ComputeModel,
     peers: Vec<PeerSlot>,
     pub global_params: Vec<f32>,
     pub round: usize,
     pub reports: Vec<RoundReport>,
+    /// The most recent round's full event trace, in pop order
+    /// (observability + tests; cleared at each round start).
+    pub event_log: Vec<(f64, Event)>,
     rng: Rng,
     /// Previous round's selected payloads (copier source material).
     prev_payloads: Vec<Payload>,
@@ -288,6 +372,8 @@ impl<'e> Network<'e> {
         // run (`parallel: false`) keeps Gauntlet scoring serial too.
         // Either way the verdicts are bit-identical.
         validator.cfg.parallel_eval &= p.parallel;
+        let compute_model =
+            ComputeModel::new(p.run.seed, p.run.network.heterogeneity.clone());
 
         let mut net = Network {
             eng,
@@ -296,10 +382,12 @@ impl<'e> Network<'e> {
             chain,
             validator,
             shards,
+            compute_model,
             peers: Vec::new(),
             global_params,
             round: 0,
             reports: Vec::new(),
+            event_log: Vec::new(),
             rng: rng.fork(1),
             prev_payloads: Vec::new(),
             churn,
@@ -311,6 +399,7 @@ impl<'e> Network<'e> {
         // initial cohort is ready at round 0 (no join lag)
         for s in &mut net.peers {
             s.joined_round = 0;
+            s.ready_at = 0.0;
         }
         Ok(net)
     }
@@ -332,19 +421,29 @@ impl<'e> Network<'e> {
             self.p.run.network.latency_s,
         );
         // Joining peers download the dense model (and shards) in the
-        // background; charge the downlink.
+        // background; charge the downlink. The completion gates their
+        // first compute start in overlap mode.
         let dense = self.global_params.len() * 4;
-        link.download(&self.clock, dense + self.p.assigned_per_peer * self.shards.shard_bytes());
+        let synced_at = link
+            .download(&self.clock, dense + self.p.assigned_per_peer * self.shards.shard_bytes());
+        let tier = self.compute_model.tier(&hotkey);
         let state = PeerState::join(
             hotkey,
             uid,
             behavior,
+            tier,
             &self.global_params,
             self.round * self.eng.manifest().config.inner_steps,
             self.round,
             self.rng.next_u64(),
         );
-        self.peers.push(PeerSlot { state, link, joined_round: self.round + 1 });
+        self.peers.push(PeerSlot {
+            state,
+            link,
+            joined_round: self.round + 1,
+            ready_at: synced_at,
+            offload: OffloadManager::new(self.global_params.len(), 8),
+        });
         Ok(())
     }
 
@@ -391,6 +490,7 @@ impl<'e> Network<'e> {
         let h = man.config.inner_steps;
         let t_start = self.clock.now();
         let round = self.round;
+        self.event_log.clear();
 
         // ---- 1. churn ----------------------------------------------------
         let active_hotkeys: Vec<String> =
@@ -407,12 +507,11 @@ impl<'e> Network<'e> {
             self.add_peer(None)?;
         }
 
-        // ---- 2+3+4. compute + compress + upload (peer fan-out) -----------
+        // ---- 2+3. compute + compress (peer fan-out; timing-free) ---------
         let inner_step0 = round * h;
         let lrs = self.p.schedule.round_lrs(inner_step0, h);
         let global_snapshot = self.global_params.clone();
         let median_hint = 0.05f32; // noise peers' norm guess
-        let compute_end = t_start + self.p.run.network.compute_window_s;
         let n_peers = self.peers.len();
 
         // Serial prologue: data prefetch (object-store access) and
@@ -444,14 +543,12 @@ impl<'e> Network<'e> {
             lrs: &lrs,
             prev_payloads: &self.prev_payloads,
             round,
-            compute_end,
-            comm_deadline_s: self.p.comm_deadline_s,
             p_slow_upload: self.p.p_slow_upload,
             ef_beta: self.p.run.ef_beta as f32,
             rust_compress: self.p.rust_compress,
             median_hint,
         };
-        let outcomes: Vec<Option<PeerOutcome>> = if self.p.parallel {
+        let mut outcomes: Vec<Option<PeerOutcome>> = if self.p.parallel {
             self.peers
                 .par_iter_mut()
                 .zip(batches.into_par_iter())
@@ -465,12 +562,95 @@ impl<'e> Network<'e> {
                 .collect::<Result<_>>()?
         };
 
+        // ---- 4. event spine, wave 1: compute -> upload -> deadline -------
+        // Timing is simulated here, serially, on a detached scheduler
+        // cursor: compute completions (per-peer durations from the compute
+        // model), FIFO uplink transfers, and the deadline cut for stalled
+        // connections. With the degenerate model + overlap off this
+        // reproduces the historical barrier arithmetic bit-for-bit.
+        let overlap = self.p.run.network.overlap;
+        let window = self.p.run.network.compute_window_s;
+        let compute_end = t_start + window;
+        let deadline = compute_end + self.p.comm_deadline_s;
+
+        let mut lanes: Vec<PeerLane> = self
+            .peers
+            .iter()
+            .map(|s| PeerLane {
+                uid: s.state.uid,
+                hotkey: s.state.hotkey.clone(),
+                tier: s.state.tier,
+                compute: None,
+                upload: None,
+                download: None,
+                late: false,
+            })
+            .collect();
+
+        let mut sched = Scheduler::new(VirtualClock::at(t_start));
+        let mut stalled = vec![false; n_peers];
+        for (i, (slot, outcome)) in
+            self.peers.iter_mut().zip(outcomes.iter()).enumerate()
+        {
+            if let Some(o) = outcome {
+                // The peer starts when the round opens *and* its own
+                // hardware is free (its previous compute/download may
+                // still be running — unconditionally, so a barrier-mode
+                // straggler can't double-book its machine; degenerate
+                // runs always have ready_at <= t_start).
+                let start = t_start.max(slot.ready_at);
+                let dur =
+                    self.compute_model.duration(&slot.state.hotkey, round, window);
+                sched.schedule_at(start + dur, Event::ComputeDone { peer: i });
+                lanes[i].compute = Some((start, start + dur));
+                stalled[i] = o.slow;
+                if slot.offload.phase != Phase::Compute {
+                    slot.offload.enter_compute()?;
+                }
+            }
+        }
+        sched.schedule_at(deadline, Event::DeadlineHit);
+        while let Some((t, evt)) = sched.pop() {
+            match evt {
+                Event::ComputeDone { peer } => {
+                    let slot = &mut self.peers[peer];
+                    slot.offload.apply_event(&evt)?;
+                    slot.ready_at = slot.ready_at.max(t);
+                    let o = outcomes[peer].as_mut().expect("scheduled for submitters");
+                    if stalled[peer] {
+                        // Stalled connection: the transfer never finishes;
+                        // the DeadlineHit event is where it is cut off.
+                        // The uplink stays occupied until then and the
+                        // submission's arrival time is +inf -> LateUpload.
+                        slot.link.up.release_at(deadline.max(t));
+                        o.sub.uploaded_at = f64::INFINITY;
+                        lanes[peer].upload = Some((t, f64::INFINITY));
+                    } else {
+                        let begin = t.max(slot.link.up.busy_until());
+                        let done = slot.link.up.transfer(t, o.sub.wire_bytes);
+                        lanes[peer].upload = Some((begin, done));
+                        sched.schedule_at(done, Event::UploadDone { peer });
+                    }
+                }
+                Event::UploadDone { peer } => {
+                    let o = outcomes[peer].as_mut().expect("upload implies outcome");
+                    o.sub.uploaded_at = t;
+                }
+                // Marker for the trace; stalled uploads were cut above.
+                Event::DeadlineHit => {}
+                _ => {}
+            }
+            self.event_log.push((t, evt));
+        }
+
         // Serial merge, in peer-slot (= hotkey mint) order: losses,
         // adversary accounting, bucket uploads, submission list.
         let mut losses = Vec::new();
         let mut submissions: Vec<Submission> = Vec::new();
+        let mut lane_of_submission: Vec<usize> = Vec::new();
         let mut adversarial_submitted = 0;
-        for outcome in outcomes.into_iter().flatten() {
+        for (i, outcome) in outcomes.into_iter().enumerate() {
+            let Some(outcome) = outcome else { continue };
             if let Some(l) = outcome.loss {
                 losses.push(l);
             }
@@ -483,11 +663,11 @@ impl<'e> Network<'e> {
                 &format!("round-{round}/grad.bin"),
                 outcome.wire,
             )?;
+            lane_of_submission.push(i);
             submissions.push(outcome.sub);
         }
 
         // ---- 5. Gauntlet scoring ------------------------------------------
-        let deadline = compute_end + self.p.comm_deadline_s;
         let apply_scale =
             (self.p.alpha.alpha(round) / self.p.run.max_contributors as f64) as f32;
         let mut provider = NetworkDataProvider {
@@ -511,14 +691,25 @@ impl<'e> Network<'e> {
             &mut provider,
         )?;
         self.chain.set_weights(&verdict.weights)?;
+        let mut late_submissions = 0usize;
+        for (j, v) in verdict.per_peer.iter().enumerate() {
+            if matches!(v.fast, FastCheck::Late | FastCheck::LateUpload) {
+                late_submissions += 1;
+                lanes[lane_of_submission[j]].late = true;
+            }
+        }
 
-        // ---- 6. aggregation + outer step ----------------------------------
+        // ---- 6. event spine, wave 2: downloads + chain blocks -------------
+        // Selection is known only after scoring, so download completions
+        // (and the round's chain blocks, which must be emitted under the
+        // weights just written) run on a second scheduler cursor.
         let selected_payloads: Vec<&Payload> =
             verdict.selected.iter().map(|&i| &submissions[i].payload).collect();
         let alpha = self.p.alpha.alpha(round);
         let mut t_comm_end = compute_end;
         let mut bytes_up = 0u64;
         let mut bytes_down = 0u64;
+        let mut sched2 = Scheduler::new(VirtualClock::at(t_start));
         if !selected_payloads.is_empty() {
             let delta = crate::coordinator::aggregator::aggregate(
                 &selected_payloads,
@@ -526,10 +717,23 @@ impl<'e> Network<'e> {
             )?;
             self.global_params =
                 ops::outer_step(self.eng, &global_snapshot, &delta, alpha as f32)?;
-            // Downloads: every peer pulls every selected payload but its own.
             let selected_bytes: Vec<usize> =
                 verdict.selected.iter().map(|&i| submissions[i].wire_bytes).collect();
             let total_sel: usize = selected_bytes.iter().sum();
+            // Barrier mode treats selection as instantaneous at the
+            // nominal compute end (the historical model, pinned by the
+            // equivalence test); overlap mode publishes the aggregate
+            // once the slowest *selected* upload has landed.
+            let download_start = if overlap {
+                verdict
+                    .selected
+                    .iter()
+                    .map(|&i| submissions[i].uploaded_at)
+                    .fold(compute_end, f64::max)
+            } else {
+                compute_end
+            };
+            // Downloads: every peer pulls every selected payload but its own.
             for (si, slot) in self.peers.iter_mut().enumerate() {
                 let own: usize = verdict
                     .selected
@@ -538,12 +742,15 @@ impl<'e> Network<'e> {
                     .filter(|s| s.uid == slot.state.uid)
                     .map(|s| s.wire_bytes)
                     .sum();
-                slot.link.down.release_at(compute_end);
-                let done = slot.link.down.transfer(compute_end, total_sel - own);
+                let begin = download_start.max(slot.link.down.busy_until());
+                let done = slot.link.down.transfer(download_start, total_sel - own);
+                lanes[si].download = Some((begin, done));
+                sched2.schedule_at(done, Event::DownloadDone { peer: si });
                 bytes_down += (total_sel - own) as u64;
-                // comm ends when the slowest *selected contributor* has
-                // uploaded and everyone downloaded
-                if si < submissions.len() {
+                // Barrier: comm ends when the slowest submitter has
+                // downloaded; overlap hides downloads behind the next
+                // round's compute (they land in `ready_at` instead).
+                if !overlap && si < submissions.len() {
                     t_comm_end = t_comm_end.max(done);
                 }
             }
@@ -551,6 +758,40 @@ impl<'e> Network<'e> {
                 t_comm_end = t_comm_end.max(submissions[i].uploaded_at);
                 bytes_up += submissions[i].wire_bytes as u64;
             }
+        }
+        if !overlap {
+            // Barrier-synchronous collection: the round stays open until
+            // every expected upload has landed or the deadline passes —
+            // one straggling (or stalled) peer stretches *everyone's*
+            // round to the timeout. This is the cost overlap mode hides:
+            // it turns the round over at the selected uploads and lets
+            // late tails drain in the background. In the degenerate
+            // no-straggler case all uploads coincide with the selected
+            // ones, so this term is a no-op (barrier equivalence).
+            for sub in &submissions {
+                t_comm_end = t_comm_end.max(sub.uploaded_at.min(deadline));
+            }
+        }
+        // Chain blocks inside the round window, as events; emitted under
+        // the weights set above, exactly like the historical single
+        // catch-up sync (block emission is per-block incremental).
+        let bt = self.chain.block_time_s;
+        let target_block = (t_comm_end / bt) as u64;
+        for b in (self.chain.block + 1)..=target_block {
+            let t_block = (b as f64 * bt).min(t_comm_end);
+            sched2.schedule_at(t_block, Event::ChainBlock { height: b });
+        }
+        while let Some((t, evt)) = sched2.pop() {
+            match evt {
+                Event::DownloadDone { peer } => {
+                    let slot = &mut self.peers[peer];
+                    slot.offload.apply_event(&evt)?;
+                    slot.ready_at = slot.ready_at.max(t);
+                }
+                Event::ChainBlock { .. } => self.chain.sync_to_time(t),
+                _ => {}
+            }
+            self.event_log.push((t, evt));
         }
         self.prev_payloads = verdict
             .selected
@@ -590,6 +831,8 @@ impl<'e> Network<'e> {
             }
         }
         self.clock.advance_to(t_comm_end);
+        // Catch-up safety net: the block events above already synced the
+        // chain to the round end, so this is normally a no-op.
         self.chain.sync_to_time(self.clock.now());
 
         let rejections: Vec<String> = verdict
@@ -622,16 +865,19 @@ impl<'e> Network<'e> {
             t_start,
             t_compute_end: compute_end,
             t_comm_end,
+            deadline,
             active: n_peers,
             submitted: submissions.len(),
             contributing: verdict.selected.len(),
             adversarial_submitted,
             adversarial_selected,
+            late_submissions,
             mean_loss: losses.iter().sum::<f64>() / losses.len().max(1) as f64,
             bytes_up,
             bytes_down,
             outer_alpha: alpha,
             rejections,
+            lanes,
         };
         self.reports.push(report.clone());
         self.round += 1;

@@ -16,6 +16,8 @@
 
 use anyhow::{bail, Result};
 
+use crate::netsim::sched::Event;
+
 /// Which round phase the replica is in.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
@@ -135,6 +137,38 @@ impl OffloadManager {
         self.check_invariants()
     }
 
+    /// Drive the Fig.-1 phase machine from netsim scheduler events
+    /// instead of explicit phase barriers. The round engine calls this
+    /// per peer as the corresponding events pop:
+    ///
+    /// * `ComputeDone` — the H inner steps finished: swap to the
+    ///   communicate phase (EF in, InnerOpt out) for the pseudo-gradient
+    ///   + EF update, then immediately to overlap (InnerOpt prefetches
+    ///   back while the payload upload is in flight).
+    /// * `DownloadDone` — the peer has the new global model: the next
+    ///   compute phase begins. Peers that skipped compute this round
+    ///   (fresh joiners) are already in the compute phase; that is a
+    ///   no-op, not an error.
+    ///
+    /// Other events (uploads, deadline, chain blocks) don't move state
+    /// between GPU and host.
+    pub fn apply_event(&mut self, ev: &Event) -> Result<()> {
+        match ev {
+            Event::ComputeDone { .. } => {
+                self.enter_communicate()?;
+                self.enter_overlap()
+            }
+            Event::DownloadDone { .. } => {
+                if self.phase == Phase::Compute {
+                    Ok(())
+                } else {
+                    self.enter_compute()
+                }
+            }
+            _ => Ok(()),
+        }
+    }
+
     /// Invariant (Fig. 1): InnerOpt and EF are never both resident, and
     /// params always are.
     pub fn check_invariants(&self) -> Result<()> {
@@ -227,5 +261,46 @@ mod tests {
     fn sharding_divides() {
         let m = OffloadManager::new(430_080, 8);
         assert_eq!(m.shard_param_bytes, 430_080 * 4 / 8);
+    }
+
+    #[test]
+    fn event_driven_cycle_legal() {
+        // The scheduler event stream drives the same legal phase cycle as
+        // the explicit barrier calls: compute start -> ComputeDone ->
+        // DownloadDone -> next compute.
+        let mut m = OffloadManager::new(1 << 20, 8);
+        for _ in 0..4 {
+            if m.phase != Phase::Compute {
+                m.enter_compute().unwrap();
+            }
+            m.apply_event(&Event::ComputeDone { peer: 0 }).unwrap();
+            assert_eq!(m.phase, Phase::Overlap);
+            assert!(m.is_resident(StateKind::InnerOpt));
+            // timing-only events are no-ops for residency
+            m.apply_event(&Event::UploadDone { peer: 0 }).unwrap();
+            m.apply_event(&Event::DeadlineHit).unwrap();
+            m.apply_event(&Event::ChainBlock { height: 1 }).unwrap();
+            assert_eq!(m.phase, Phase::Overlap);
+            m.apply_event(&Event::DownloadDone { peer: 0 }).unwrap();
+            assert_eq!(m.phase, Phase::Compute);
+        }
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn download_done_is_noop_in_compute_phase() {
+        // Fresh joiners download the model while (formally) already in
+        // the compute phase; the event must not trip the state machine.
+        let mut m = OffloadManager::new(1 << 20, 8);
+        m.enter_compute().unwrap();
+        m.apply_event(&Event::DownloadDone { peer: 3 }).unwrap();
+        assert_eq!(m.phase, Phase::Compute);
+    }
+
+    #[test]
+    fn compute_done_outside_compute_rejected() {
+        let mut m = OffloadManager::new(1 << 20, 8);
+        // initial phase is Communicate: a ComputeDone event is illegal
+        assert!(m.apply_event(&Event::ComputeDone { peer: 0 }).is_err());
     }
 }

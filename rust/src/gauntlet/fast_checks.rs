@@ -12,6 +12,10 @@ pub enum FastCheck {
     Pass,
     /// Upload arrived after the round deadline.
     Late,
+    /// Upload stalled mid-transfer and was cut off by the deadline event —
+    /// it never completed (arrival time is +inf). Distinct from `Late`
+    /// (which did land, just too late) for observability; both disqualify.
+    LateUpload,
     /// Trained from a stale global model (base_round mismatch).
     OutOfSync,
     /// Malformed payload (geometry / NaN scales / out-of-range).
@@ -101,6 +105,9 @@ fn run_fast_checks_inner(
             if is_dup {
                 return FastCheck::Duplicate;
             }
+            if s.uploaded_at.is_infinite() {
+                return FastCheck::LateUpload;
+            }
             if s.uploaded_at > p.deadline {
                 return FastCheck::Late;
             }
@@ -170,6 +177,18 @@ mod tests {
         let subs = vec![sub("a", 0, 0.01, 5, 150.0), sub("b", 1, 0.01, 5, 50.0)];
         let checks = run_fast_checks(&subs, &params(), &Default::default());
         assert_eq!(checks[0], FastCheck::Late);
+        assert!(checks[1].passed());
+    }
+
+    #[test]
+    fn stalled_upload_flagged_as_late_upload() {
+        // A stalled connection cut by the deadline event reports an
+        // infinite arrival time -> LateUpload, not Late.
+        let subs = vec![sub("a", 0, 0.01, 5, f64::INFINITY), sub("b", 1, 0.01, 5, 50.0)];
+        let checks = run_fast_checks(&subs, &params(), &Default::default());
+        assert_eq!(checks[0], FastCheck::LateUpload);
+        assert!(!checks[0].passed());
+        assert!(checks[0].score() < 0.0, "LateUpload must disqualify");
         assert!(checks[1].passed());
     }
 

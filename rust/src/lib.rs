@@ -15,7 +15,13 @@
 //! rayon pool, then merges deterministically — parallel and serial
 //! rounds produce byte-identical global models (per-peer RNGs are seeded
 //! from (run seed, hotkey, round); aggregation accumulates in submission
-//! order within disjoint chunk ranges). The compute hot path underneath
+//! order within disjoint chunk ranges). Simulated *time* runs on a
+//! discrete-event spine ([`netsim::sched`]): per-peer compute durations
+//! ([`netsim::compute_model`] hardware tiers), FIFO link transfers,
+//! deadline cuts and chain blocks are typed events on a binary heap, so
+//! stragglers miss deadlines for real and the paper's Fig.-1 overlap
+//! (comm hidden behind the next compute window) is simulated rather than
+//! assumed. The compute hot path underneath
 //! is built the same way: [`runtime::kernels`] are cache-blocked and
 //! rayon-parallel yet bit-identical to their serial references (fixed
 //! per-element accumulation order), ops run allocation-free over pooled

@@ -1,10 +1,18 @@
 //! Figure-3-style compute/communication timelines.
 //!
-//! Renders successive rounds as rows of black (compute) and red (sync)
-//! segments over a time window — ASCII here, with a CSV emitter for
-//! plotting.
+//! Two renderings over the round reports:
+//!
+//! * **Round rows** ([`rows`], [`render_ascii`], [`to_csv`]) — one row per
+//!   round of black (compute) and red (sync) segments, the paper's Fig. 3
+//!   bars.
+//! * **Peer lanes** ([`render_lanes_ascii`]) — one row per *peer* within a
+//!   round, drawn from the event spine's [`PeerLane`] segments: compute
+//!   (`#`), upload (`^`), download (`v`), overlap of segments (`*`). This
+//!   is where heterogeneity and the Fig.-1 overlap trick become visible:
+//!   stragglers' `#` runs past the deadline column (`|`), and with overlap
+//!   enabled upload/download tails extend past the round boundary.
 
-use crate::coordinator::RoundReport;
+use crate::coordinator::{PeerLane, RoundReport};
 
 /// One rendered timeline row.
 #[derive(Debug, Clone)]
@@ -75,9 +83,86 @@ pub fn mean_utilization(rows: &[TimelineRow]) -> f64 {
         / rows.len() as f64
 }
 
+/// Paint `[a, b)` (virtual seconds) with `c` onto a lane row spanning
+/// `[t0, t1)` across `row.len()` columns; cells already holding a
+/// different segment become `*` (overlap).
+///
+/// Cells are half-open ranges of floor-mapped columns, so segments that
+/// merely *abut* in time (an upload starting exactly at compute end)
+/// never share a cell — `*` marks only genuine overlap. Sub-cell
+/// segments keep a one-cell minimum so they stay visible.
+fn paint(row: &mut [char], t0: f64, t1: f64, a: f64, b: f64, c: char) {
+    if b <= a || t1 <= t0 || row.is_empty() {
+        return;
+    }
+    let scale = row.len() as f64 / (t1 - t0);
+    let lo = (((a - t0) * scale).floor().max(0.0) as usize).min(row.len() - 1);
+    let hi = ((((b.min(t1) - t0) * scale).floor().max(0.0) as usize).max(lo + 1)).min(row.len());
+    for cell in row.iter_mut().take(hi).skip(lo) {
+        *cell = if *cell == '.' || *cell == c { c } else { '*' };
+    }
+}
+
+/// Per-peer lane rendering of one round: `#` compute, `^` upload,
+/// `v` download, `*` overlapping segments, `|` the upload deadline.
+/// The window spans the round start to the latest finite segment end
+/// (so overlap-mode tails that cross into the next round stay visible).
+/// Stalled uploads (infinite end) are drawn up to the deadline; lanes the
+/// Gauntlet flagged late are annotated `LATE`.
+pub fn render_lanes_ascii(rep: &RoundReport, width: usize) -> String {
+    if rep.lanes.is_empty() || width == 0 {
+        return String::new();
+    }
+    let t0 = rep.t_start;
+    let mut t1 = rep.t_comm_end.max(rep.deadline);
+    for l in &rep.lanes {
+        for seg in [l.compute, l.upload, l.download].into_iter().flatten() {
+            if seg.1.is_finite() {
+                t1 = t1.max(seg.1);
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "round {} [{:.0}s..{:.0}s]  # compute  ^ upload  v download  * overlap  | deadline\n",
+        rep.round, t0, t1
+    ));
+    for l in &rep.lanes {
+        let mut row = vec!['.'; width];
+        if let Some((a, b)) = l.compute {
+            paint(&mut row, t0, t1, a, b, '#');
+        }
+        if let Some((a, b)) = l.upload {
+            let b = if b.is_finite() { b } else { rep.deadline };
+            paint(&mut row, t0, t1, a, b, '^');
+        }
+        if let Some((a, b)) = l.download {
+            paint(&mut row, t0, t1, a, b, 'v');
+        }
+        // deadline marker (overwrites whatever is under it); when the
+        // deadline is the latest time in the window it lands on the
+        // final column rather than falling off the edge
+        if t1 > t0 && rep.deadline >= t0 {
+            let d = (((rep.deadline - t0) / (t1 - t0) * width as f64) as usize)
+                .min(width - 1);
+            row[d] = '|';
+        }
+        let tier = format!("{:?}", l.tier);
+        out.push_str(&format!(
+            "{:<9} {:<9} |{}|{}\n",
+            l.hotkey,
+            tier,
+            row.iter().collect::<String>(),
+            if l.late { " LATE" } else { "" },
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::netsim::ComputeTier;
 
     fn row(c: f64, s: f64) -> TimelineRow {
         TimelineRow { round: 0, compute_s: c, comm_s: s }
@@ -99,9 +184,105 @@ mod tests {
     }
 
     #[test]
+    fn ascii_zero_comm_round() {
+        // A round with no communication at all (nothing selected): the
+        // whole bar is compute, no '!' columns, no div-by-zero.
+        let s = render_ascii(&[row(600.0, 0.0)], 40);
+        assert_eq!(s.lines().count(), 1);
+        assert!(s.contains(&"#".repeat(40)));
+        assert!(!s.contains('!'));
+        assert!(s.contains("100.0%"));
+    }
+
+    #[test]
+    fn ascii_comm_dominated_round() {
+        // Comm >> compute: the compute side may round to zero columns but
+        // the bar must stay exactly `width` wide and not underflow.
+        let s = render_ascii(&[row(0.001, 5000.0)], 30);
+        let bar: String = s.chars().skip_while(|&c| c != '|').take(32).collect();
+        assert_eq!(bar.chars().count(), 32, "bar must be |{{30 cols}}|");
+        assert!(s.matches('!').count() == 30, "all columns are sync: {s}");
+    }
+
+    #[test]
+    fn ascii_empty_slice() {
+        assert_eq!(render_ascii(&[], 60), "");
+        assert_eq!(rows(&[]).len(), 0);
+        assert_eq!(to_csv(&[]).lines().count(), 1, "header only");
+        assert_eq!(mean_utilization(&[]), 0.0);
+    }
+
+    #[test]
     fn csv_emits() {
         let s = to_csv(&[row(10.0, 1.0)]);
         assert!(s.starts_with("round,"));
         assert!(s.lines().count() == 2);
+    }
+
+    fn lane_report() -> RoundReport {
+        RoundReport {
+            round: 3,
+            t_start: 0.0,
+            t_compute_end: 100.0,
+            t_comm_end: 110.0,
+            deadline: 120.0,
+            active: 2,
+            submitted: 2,
+            contributing: 1,
+            adversarial_submitted: 0,
+            adversarial_selected: 0,
+            late_submissions: 1,
+            mean_loss: 0.0,
+            bytes_up: 0,
+            bytes_down: 0,
+            outer_alpha: 1.0,
+            rejections: Vec::new(),
+            lanes: vec![
+                PeerLane {
+                    uid: 0,
+                    hotkey: "hk-00000".into(),
+                    tier: ComputeTier::Median,
+                    compute: Some((0.0, 100.0)),
+                    upload: Some((100.0, 104.0)),
+                    download: Some((108.0, 110.0)),
+                    late: false,
+                },
+                PeerLane {
+                    uid: 1,
+                    hotkey: "hk-00001".into(),
+                    tier: ComputeTier::Straggler,
+                    compute: Some((0.0, 150.0)),
+                    upload: Some((150.0, f64::INFINITY)),
+                    download: Some((108.0, 110.0)),
+                    late: true,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn lanes_render_segments_and_late_flag() {
+        let s = render_lanes_ascii(&lane_report(), 60);
+        assert_eq!(s.lines().count(), 3, "header + 2 lanes");
+        // check the lane rows, not the header legend
+        let body: Vec<&str> = s.lines().skip(1).collect();
+        let median = body[0];
+        let straggler = body[1];
+        assert!(median.contains('#') && median.contains('^') && median.contains('v'));
+        assert!(!median.contains("LATE"));
+        assert!(straggler.contains("LATE"));
+        assert!(straggler.contains("Straggler"));
+        // straggler's compute overruns its own download window: overlap cell
+        assert!(straggler.contains('*'), "overlap cells marked: {s}");
+        // deadline marker lands in every lane row
+        assert!(median.contains('|') && straggler.contains('|'));
+    }
+
+    #[test]
+    fn lanes_empty_report() {
+        let mut rep = lane_report();
+        rep.lanes.clear();
+        assert_eq!(render_lanes_ascii(&rep, 60), "");
+        assert_eq!(render_lanes_ascii(&lane_report(), 0), "");
     }
 }

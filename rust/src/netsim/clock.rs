@@ -4,14 +4,23 @@
 //! blocks) advances through one `VirtualClock`, making whole-network runs
 //! bit-reproducible and letting us simulate a 2-hour Figure-3 window in
 //! microseconds.
+//!
+//! The clock is `Send + Sync`: time is stored as the bit pattern of an
+//! `f64` inside an `Arc<AtomicU64>`, so the event scheduler
+//! ([`crate::netsim::sched`]) can be driven from the rayon round loop and
+//! clones can be read from worker threads. Monotonicity is enforced with
+//! CAS loops — concurrent `advance_to` calls can never move time
+//! backwards. Clones share the underlying time.
 
-use std::cell::Cell;
-use std::rc::Rc;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Shared virtual clock. Clone shares the underlying time.
 #[derive(Debug, Clone, Default)]
 pub struct VirtualClock {
-    now: Rc<Cell<f64>>,
+    /// `f64` bit pattern of the current time (bits of `0.0` are `0`, so
+    /// `AtomicU64::default()` is a clock at t = 0).
+    now: Arc<AtomicU64>,
 }
 
 impl VirtualClock {
@@ -19,21 +28,46 @@ impl VirtualClock {
         Self::default()
     }
 
+    /// A *detached* clock starting at `t` (does not share time with any
+    /// existing clock) — used by the round engine to give each round's
+    /// event scheduler its own cursor.
+    pub fn at(t: f64) -> Self {
+        assert!(t >= 0.0 && t.is_finite(), "clock must start at finite t >= 0 (t={t})");
+        Self { now: Arc::new(AtomicU64::new(t.to_bits())) }
+    }
+
     /// Current simulated time in seconds.
     pub fn now(&self) -> f64 {
-        self.now.get()
+        f64::from_bits(self.now.load(Ordering::Acquire))
     }
 
     /// Advance by `dt` seconds (dt >= 0).
     pub fn advance(&self, dt: f64) {
         assert!(dt >= 0.0, "time cannot go backwards (dt={dt})");
-        self.now.set(self.now.get() + dt);
+        let mut cur = self.now.load(Ordering::Acquire);
+        loop {
+            let next = (f64::from_bits(cur) + dt).to_bits();
+            match self
+                .now
+                .compare_exchange_weak(cur, next, Ordering::AcqRel, Ordering::Acquire)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
     }
 
     /// Advance to an absolute time if it is in the future.
     pub fn advance_to(&self, t: f64) {
-        if t > self.now.get() {
-            self.now.set(t);
+        let mut cur = self.now.load(Ordering::Acquire);
+        while t > f64::from_bits(cur) {
+            match self
+                .now
+                .compare_exchange_weak(cur, t.to_bits(), Ordering::AcqRel, Ordering::Acquire)
+            {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
         }
     }
 }
@@ -58,5 +92,37 @@ mod tests {
     #[should_panic]
     fn rejects_negative() {
         VirtualClock::new().advance(-1.0);
+    }
+
+    #[test]
+    fn detached_start() {
+        let c = VirtualClock::at(42.0);
+        assert_eq!(c.now(), 42.0);
+        let d = VirtualClock::new();
+        d.advance(1.0);
+        assert_eq!(c.now(), 42.0, "detached clocks do not share time");
+    }
+
+    #[test]
+    fn is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<VirtualClock>();
+    }
+
+    #[test]
+    fn concurrent_advance_to_is_monotone() {
+        let c = VirtualClock::new();
+        std::thread::scope(|s| {
+            for i in 0..8u64 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for j in 0..1000u64 {
+                        c.advance_to(((i * 1000 + j) % 7000) as f64);
+                    }
+                });
+            }
+        });
+        // the max target ever requested wins; time never went backwards
+        assert_eq!(c.now(), 6999.0);
     }
 }

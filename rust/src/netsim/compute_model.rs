@@ -1,0 +1,239 @@
+//! Deterministic per-peer compute-duration model.
+//!
+//! The paper's deadline economics only matter because peers are
+//! heterogeneous: a 20-minute compute window is comfortable on 8xH100 and
+//! hopeless on last-generation hardware, so stragglers miss the upload
+//! deadline and the Gauntlet's `Late` verdicts have teeth. This module
+//! assigns every hotkey a hardware *tier* (fast / median / straggler) and
+//! produces per-round compute durations — tier multiplier, small
+//! per-round jitter, and an occasional stall (driver hiccup, thermal
+//! throttle) — as a pure function of `(run seed, hotkey, round)`. No
+//! shared RNG stream is consumed, so enabling heterogeneity perturbs
+//! *only* the simulated timeline, never the training math or the peers'
+//! behavioural randomness.
+//!
+//! With `HeterogeneityConfig::enabled == false` the model is degenerate:
+//! every duration is exactly the compute window (bit-for-bit), which is
+//! what the event-spine equivalence test pins against the historical
+//! barrier timings.
+
+/// Hardware tier of a peer, fixed for the lifetime of its hotkey.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ComputeTier {
+    /// Better-than-window hardware; finishes early.
+    Fast,
+    /// Finishes right at the window (the calibration point).
+    Median,
+    /// Under-provisioned; regularly overruns the window.
+    Straggler,
+}
+
+/// Heterogeneity knobs (configured via `config::run::NetworkConfig`).
+#[derive(Debug, Clone)]
+pub struct HeterogeneityConfig {
+    /// Master switch. Off = degenerate model (every peer's compute takes
+    /// exactly the window; zero jitter, zero stalls).
+    pub enabled: bool,
+    /// Fraction of hotkeys in the fast tier.
+    pub fast_frac: f64,
+    /// Fraction of hotkeys in the straggler tier.
+    pub straggler_frac: f64,
+    /// Compute-duration multiplier for fast peers (< 1).
+    pub fast_mult: f64,
+    /// Compute-duration multiplier for stragglers (> 1).
+    pub straggler_mult: f64,
+    /// Uniform per-round jitter amplitude as a fraction of the duration
+    /// (duration *= 1 + jitter_frac * U[-1, 1)).
+    pub jitter_frac: f64,
+    /// Per-round probability of an occasional stall.
+    pub p_stall: f64,
+    /// Duration multiplier applied in stall rounds.
+    pub stall_mult: f64,
+}
+
+impl Default for HeterogeneityConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            fast_frac: 0.25,
+            straggler_frac: 0.15,
+            fast_mult: 0.85,
+            straggler_mult: 1.5,
+            jitter_frac: 0.04,
+            p_stall: 0.01,
+            stall_mult: 3.0,
+        }
+    }
+}
+
+/// Stateless duration model seeded from the run seed.
+#[derive(Debug, Clone)]
+pub struct ComputeModel {
+    seed: u64,
+    pub cfg: HeterogeneityConfig,
+}
+
+/// FNV-style mix of (seed, hotkey, tag) -> u64, matching the spirit of the
+/// round engine's per-peer round seeds: stable across scheduling order and
+/// population size.
+fn mix(seed: u64, hotkey: &str, tag: u64) -> u64 {
+    let mut h = 0xcbf29ce484222325u64 ^ seed.wrapping_mul(0x9E3779B97F4A7C15);
+    for b in hotkey.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h ^= tag.wrapping_mul(0xD1B54A32D192ED03);
+    h ^= h >> 29;
+    h = h.wrapping_mul(0xBF58476D1CE4E5B9);
+    h ^ (h >> 31)
+}
+
+/// Map a mixed hash to a uniform f64 in [0, 1).
+fn unit(z: u64) -> f64 {
+    (z >> 11) as f64 / (1u64 << 53) as f64
+}
+
+impl ComputeModel {
+    pub fn new(seed: u64, cfg: HeterogeneityConfig) -> Self {
+        Self { seed, cfg }
+    }
+
+    /// The tier a hotkey belongs to — a pure function of (seed, hotkey),
+    /// so a peer's hardware never changes between rounds.
+    pub fn tier(&self, hotkey: &str) -> ComputeTier {
+        if !self.cfg.enabled {
+            return ComputeTier::Median;
+        }
+        let u = unit(mix(self.seed, hotkey, 0x7E9));
+        if u < self.cfg.fast_frac {
+            ComputeTier::Fast
+        } else if u < self.cfg.fast_frac + self.cfg.straggler_frac {
+            ComputeTier::Straggler
+        } else {
+            ComputeTier::Median
+        }
+    }
+
+    /// Tier duration multiplier.
+    pub fn multiplier(&self, tier: ComputeTier) -> f64 {
+        match tier {
+            ComputeTier::Fast => self.cfg.fast_mult,
+            ComputeTier::Median => 1.0,
+            ComputeTier::Straggler => self.cfg.straggler_mult,
+        }
+    }
+
+    /// Compute duration for `hotkey` in `round`, given the nominal compute
+    /// window. Degenerate model: returns `window_s` unchanged (bit-exact).
+    pub fn duration(&self, hotkey: &str, round: usize, window_s: f64) -> f64 {
+        if !self.cfg.enabled {
+            return window_s;
+        }
+        let mut d = window_s * self.multiplier(self.tier(hotkey));
+        let j = unit(mix(self.seed, hotkey, 0x11D ^ ((round as u64) << 8)));
+        d *= 1.0 + self.cfg.jitter_frac * (2.0 * j - 1.0);
+        let s = unit(mix(self.seed, hotkey, 0x57A11 ^ (round as u64).wrapping_mul(0x9E37)));
+        if s < self.cfg.p_stall {
+            d *= self.cfg.stall_mult;
+        }
+        d
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enabled_cfg() -> HeterogeneityConfig {
+        HeterogeneityConfig { enabled: true, ..Default::default() }
+    }
+
+    #[test]
+    fn degenerate_is_bit_exact_window() {
+        let m = ComputeModel::new(7, HeterogeneityConfig::default());
+        for r in 0..50 {
+            assert_eq!(m.duration("hk-00003", r, 1200.0).to_bits(), 1200.0f64.to_bits());
+            assert_eq!(m.tier("hk-00003"), ComputeTier::Median);
+        }
+    }
+
+    #[test]
+    fn tier_is_stable_per_hotkey() {
+        let m = ComputeModel::new(42, enabled_cfg());
+        for i in 0..40 {
+            let hk = format!("hk-{i:05}");
+            let t = m.tier(&hk);
+            assert_eq!(t, m.tier(&hk));
+            assert_eq!(t, ComputeModel::new(42, enabled_cfg()).tier(&hk));
+        }
+    }
+
+    #[test]
+    fn tier_fractions_roughly_respected() {
+        let m = ComputeModel::new(3, enabled_cfg());
+        let n = 5000;
+        let mut fast = 0;
+        let mut strag = 0;
+        for i in 0..n {
+            match m.tier(&format!("hk-{i:05}")) {
+                ComputeTier::Fast => fast += 1,
+                ComputeTier::Straggler => strag += 1,
+                ComputeTier::Median => {}
+            }
+        }
+        let ff = fast as f64 / n as f64;
+        let sf = strag as f64 / n as f64;
+        assert!((ff - 0.25).abs() < 0.03, "fast frac = {ff}");
+        assert!((sf - 0.15).abs() < 0.03, "straggler frac = {sf}");
+    }
+
+    #[test]
+    fn straggler_overruns_fast_underruns() {
+        let mut cfg = enabled_cfg();
+        cfg.jitter_frac = 0.0;
+        cfg.p_stall = 0.0;
+        let m = ComputeModel::new(1, cfg);
+        let (mut saw_fast, mut saw_strag) = (false, false);
+        for i in 0..200 {
+            let hk = format!("hk-{i:05}");
+            let d = m.duration(&hk, 0, 1000.0);
+            match m.tier(&hk) {
+                ComputeTier::Fast => {
+                    assert!(d < 1000.0, "fast peer slower than window: {d}");
+                    saw_fast = true;
+                }
+                ComputeTier::Straggler => {
+                    assert!(d > 1000.0, "straggler faster than window: {d}");
+                    saw_strag = true;
+                }
+                ComputeTier::Median => assert_eq!(d, 1000.0),
+            }
+        }
+        assert!(saw_fast && saw_strag, "200 hotkeys must cover all tiers");
+    }
+
+    #[test]
+    fn jitter_varies_by_round_but_is_deterministic() {
+        let m = ComputeModel::new(9, enabled_cfg());
+        let a0 = m.duration("hk-00000", 0, 1000.0);
+        let a1 = m.duration("hk-00000", 1, 1000.0);
+        assert_ne!(a0, a1, "jitter must vary round to round");
+        assert_eq!(a0, m.duration("hk-00000", 0, 1000.0));
+    }
+
+    #[test]
+    fn stalls_occur_at_configured_rate() {
+        let mut cfg = enabled_cfg();
+        cfg.p_stall = 0.1;
+        cfg.jitter_frac = 0.0;
+        cfg.fast_frac = 0.0;
+        cfg.straggler_frac = 0.0;
+        let m = ComputeModel::new(5, cfg);
+        let n = 4000;
+        let stalls = (0..n)
+            .filter(|&r| m.duration("hk-00001", r, 100.0) > 200.0)
+            .count();
+        let rate = stalls as f64 / n as f64;
+        assert!((rate - 0.1).abs() < 0.03, "stall rate = {rate}");
+    }
+}

@@ -124,4 +124,55 @@ mod tests {
         l.transfer(0.0, 200);
         assert_eq!(l.bytes_total, 300);
     }
+
+    #[test]
+    fn back_to_back_transfers_queue_fifo() {
+        // Three transfers requested out of order in *request time* still
+        // serialize in request order (FIFO): each begins no earlier than
+        // the previous one's completion.
+        let mut l = Link::new(8e6, 0.5); // 1 MB/s + 0.5s latency floor
+        let d1 = l.transfer(0.0, 500_000); // 0.5 + 0.5 = 1.0
+        let d2 = l.transfer(0.2, 500_000); // queued: 1.0 + 1.0 = 2.0
+        let d3 = l.transfer(1.9, 500_000); // queued: 2.0 + 1.0 = 3.0
+        assert!((d1 - 1.0).abs() < 1e-9, "d1={d1}");
+        assert!((d2 - 2.0).abs() < 1e-9, "d2={d2}");
+        assert!((d3 - 3.0).abs() < 1e-9, "d3={d3}");
+        assert_eq!(l.busy_until(), d3);
+    }
+
+    #[test]
+    fn idle_gap_does_not_queue() {
+        // A transfer requested after the link went idle starts at its own
+        // request time, not at the previous busy_until.
+        let mut l = Link::new(8e6, 0.0);
+        let d1 = l.transfer(0.0, 1_000_000); // done at 1.0
+        let d2 = l.transfer(5.0, 1_000_000); // idle gap: starts at 5.0
+        assert!((d1 - 1.0).abs() < 1e-9);
+        assert!((d2 - 6.0).abs() < 1e-9, "d2={d2}");
+    }
+
+    #[test]
+    fn release_at_is_monotone() {
+        // release_at only ever *raises* busy_until: it can hold a link
+        // busy (a stalled upload cut at the deadline) but can never free
+        // it early or move time backwards.
+        let mut l = Link::new(8e6, 0.0);
+        l.transfer(0.0, 1_000_000); // busy until 1.0
+        l.release_at(0.25); // in the past: no-op
+        assert!((l.busy_until() - 1.0).abs() < 1e-9);
+        l.release_at(3.0);
+        assert!((l.busy_until() - 3.0).abs() < 1e-9);
+        l.release_at(2.0); // earlier again: no-op
+        assert!((l.busy_until() - 3.0).abs() < 1e-9);
+        // and the next transfer queues behind the held busy window
+        let d = l.transfer(0.0, 1_000_000);
+        assert!((d - 4.0).abs() < 1e-9, "d={d}");
+    }
+
+    #[test]
+    fn release_at_does_not_charge_bytes() {
+        let mut l = Link::new(1e6, 0.0);
+        l.release_at(100.0);
+        assert_eq!(l.bytes_total, 0);
+    }
 }

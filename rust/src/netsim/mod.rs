@@ -1,14 +1,29 @@
-//! Network simulation substrate: virtual clock + per-peer
+//! Network simulation substrate: virtual clock, per-peer
 //! bandwidth-constrained FIFO links (paper §4.3's 110 Mb/s uplink /
-//! 500 Mb/s downlink constraint).
+//! 500 Mb/s downlink constraint), a discrete-event scheduler, and the
+//! per-peer compute-duration model.
 //!
 //! The paper's communication phase runs over real internet links to object
 //! storage; here transfers are scheduled on a deterministic virtual clock
 //! so Figure 3's compute/communication timelines are reproducible, with
 //! transfer durations computed from real payload byte-sizes.
+//!
+//! Since the event-spine rewire, the round engine no longer assumes a
+//! compute-window barrier: [`sched::Scheduler`] pops typed events
+//! (compute/upload/download completions, the round deadline, chain
+//! blocks) off a binary heap in deterministic time order, and
+//! [`compute_model::ComputeModel`] gives every hotkey a hardware tier so
+//! stragglers genuinely miss deadlines instead of being assumed away.
+//! [`VirtualClock`] is `Send + Sync` (atomic f64 bit-patterns), so the
+//! clock can be shared with the rayon round loop.
 
 pub mod clock;
+pub mod compute_model;
 pub mod link;
+pub mod sched;
+pub mod testkit;
 
 pub use clock::VirtualClock;
+pub use compute_model::{ComputeModel, ComputeTier, HeterogeneityConfig};
 pub use link::{Link, LinkPair};
+pub use sched::{Event, Scheduler};

@@ -1,0 +1,192 @@
+//! Discrete-event scheduler over the virtual clock.
+//!
+//! The round engine (`coordinator::network`) no longer advances time with
+//! a single compute-window barrier: every peer's compute completion,
+//! upload completion, download completion, the round deadline, and chain
+//! block boundaries are *events* in a binary-heap queue, popped in
+//! monotonically non-decreasing time order. Ties are broken by scheduling
+//! sequence number, so the pop order — and therefore the whole simulated
+//! timeline — is fully deterministic.
+//!
+//! The scheduler owns a [`VirtualClock`] cursor that advances to each
+//! popped event's timestamp. The round engine uses *detached* cursors
+//! (`VirtualClock::at`) per processing wave and only folds the resulting
+//! round-end time back into the shared network clock, so simulated wall
+//! time stays monotone even when a straggler's upload completes after the
+//! next round has conceptually begun (the overlap case).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::clock::VirtualClock;
+
+/// Typed simulation events. `peer` indices refer to the round engine's
+/// peer-slot order (stable within a round).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Event {
+    /// A peer finished its H inner steps (or, for non-computing
+    /// behaviours, reached the end of its fabrication window).
+    ComputeDone { peer: usize },
+    /// A peer's payload upload to its bucket completed.
+    UploadDone { peer: usize },
+    /// A peer finished downloading the round's selected payloads.
+    DownloadDone { peer: usize },
+    /// The round's upload deadline passed; in-flight stalled uploads are
+    /// cut off here and yield a `LateUpload` fast-check verdict.
+    DeadlineHit,
+    /// The chain produced a block (emissions tick).
+    ChainBlock { height: u64 },
+}
+
+#[derive(Debug)]
+struct Entry {
+    t: f64,
+    seq: u64,
+    ev: Event,
+}
+
+// `seq` is unique per scheduler, so equality on `seq` alone is consistent
+// with the (t, seq) ordering below.
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert so the earliest (t, seq) pops
+        // first. total_cmp gives a total order on f64 without NaN panics.
+        other
+            .t
+            .total_cmp(&self.t)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Binary-heap event queue over a monotonically-advancing clock cursor.
+#[derive(Debug)]
+pub struct Scheduler {
+    heap: BinaryHeap<Entry>,
+    clock: VirtualClock,
+    seq: u64,
+    /// Events popped so far (observability).
+    pub processed: u64,
+}
+
+impl Scheduler {
+    /// A scheduler whose cursor starts at `clock.now()`. The clock may be
+    /// shared (events then advance the shared time) or detached
+    /// ([`VirtualClock::at`]).
+    pub fn new(clock: VirtualClock) -> Self {
+        Self { heap: BinaryHeap::new(), clock, seq: 0, processed: 0 }
+    }
+
+    /// Current cursor time.
+    pub fn now(&self) -> f64 {
+        self.clock.now()
+    }
+
+    /// Schedule `ev` at absolute time `t`. Times earlier than the cursor
+    /// are clamped to it (an event cannot fire in the past).
+    pub fn schedule_at(&mut self, t: f64, ev: Event) {
+        assert!(!t.is_nan(), "event time must not be NaN ({ev:?})");
+        let t = t.max(self.clock.now());
+        self.heap.push(Entry { t, seq: self.seq, ev });
+        self.seq += 1;
+    }
+
+    /// Schedule `ev` at `dt` seconds after the cursor.
+    pub fn schedule_in(&mut self, dt: f64, ev: Event) {
+        assert!(dt >= 0.0, "negative event delay ({dt})");
+        self.schedule_at(self.clock.now() + dt, ev);
+    }
+
+    /// Pop the earliest event, advancing the cursor to its time.
+    pub fn pop(&mut self) -> Option<(f64, Event)> {
+        let e = self.heap.pop()?;
+        self.clock.advance_to(e.t);
+        self.processed += 1;
+        Some((e.t, e.ev))
+    }
+
+    /// Timestamp of the next event without popping it.
+    pub fn peek_time(&self) -> Option<f64> {
+        self.heap.peek().map(|e| e.t)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut s = Scheduler::new(VirtualClock::new());
+        s.schedule_at(5.0, Event::DeadlineHit);
+        s.schedule_at(1.0, Event::ComputeDone { peer: 0 });
+        s.schedule_at(3.0, Event::UploadDone { peer: 0 });
+        let order: Vec<f64> = std::iter::from_fn(|| s.pop()).map(|(t, _)| t).collect();
+        assert_eq!(order, vec![1.0, 3.0, 5.0]);
+        assert_eq!(s.processed, 3);
+    }
+
+    #[test]
+    fn ties_break_by_schedule_order() {
+        let mut s = Scheduler::new(VirtualClock::new());
+        s.schedule_at(2.0, Event::ComputeDone { peer: 7 });
+        s.schedule_at(2.0, Event::ComputeDone { peer: 3 });
+        s.schedule_at(2.0, Event::ComputeDone { peer: 9 });
+        let peers: Vec<usize> = std::iter::from_fn(|| s.pop())
+            .map(|(_, ev)| match ev {
+                Event::ComputeDone { peer } => peer,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(peers, vec![7, 3, 9], "FIFO among simultaneous events");
+    }
+
+    #[test]
+    fn cursor_advances_monotonically() {
+        let mut s = Scheduler::new(VirtualClock::at(10.0));
+        s.schedule_at(4.0, Event::DeadlineHit); // in the past: clamped
+        let (t, _) = s.pop().unwrap();
+        assert_eq!(t, 10.0);
+        assert_eq!(s.now(), 10.0);
+        s.schedule_in(2.5, Event::DeadlineHit);
+        let (t, _) = s.pop().unwrap();
+        assert_eq!(t, 12.5);
+    }
+
+    #[test]
+    fn interleaved_schedule_and_pop() {
+        let mut s = Scheduler::new(VirtualClock::new());
+        s.schedule_at(1.0, Event::ComputeDone { peer: 0 });
+        let (t, _) = s.pop().unwrap();
+        assert_eq!(t, 1.0);
+        // handler schedules the follow-up event
+        s.schedule_at(6.0, Event::UploadDone { peer: 0 });
+        s.schedule_at(4.0, Event::ChainBlock { height: 1 });
+        assert_eq!(s.peek_time(), Some(4.0));
+        let (t, ev) = s.pop().unwrap();
+        assert_eq!((t, ev), (4.0, Event::ChainBlock { height: 1 }));
+        let (t, ev) = s.pop().unwrap();
+        assert_eq!((t, ev), (6.0, Event::UploadDone { peer: 0 }));
+        assert!(s.is_empty());
+    }
+}

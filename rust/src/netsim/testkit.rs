@@ -1,0 +1,73 @@
+//! Shared heterogeneity fixtures for tests and benches (the netsim
+//! analogue of `gauntlet::testkit`): a stress-tier configuration whose
+//! stragglers deterministically overrun the default deadline, and a
+//! deterministic search for a run seed whose initial cohort contains a
+//! straggler minority. Keeping these here means `tests/netsim_events.rs`
+//! and `benches/fig3_timeline.rs` exercise the *same* operating point.
+
+use super::compute_model::{ComputeModel, ComputeTier, HeterogeneityConfig};
+
+/// A heterogeneity config for straggler stress tests: no jitter, no
+/// stalls (fully analyzable timings), and a straggler multiplier of 1.5
+/// so a straggler's compute (1.5 x 20 min) overruns the default
+/// 24-minute upload deadline every round.
+pub fn stress_heterogeneity(fast_frac: f64) -> HeterogeneityConfig {
+    HeterogeneityConfig {
+        enabled: true,
+        fast_frac,
+        straggler_frac: 0.25,
+        fast_mult: 0.85,
+        straggler_mult: 1.5,
+        jitter_frac: 0.0,
+        p_stall: 0.0,
+        stall_mult: 3.0,
+    }
+}
+
+/// Find a run seed whose first `peers` minted hotkeys (`hk-00000`, ...,
+/// in churn mint order) contain at least one straggler while keeping a
+/// punctual majority. Tier assignment is a pure function of
+/// (seed, hotkey), so this is cheap, deterministic, and requires no
+/// network run. Returns (seed, straggler count).
+pub fn seed_with_straggler_minority(
+    peers: usize,
+    cfg: &HeterogeneityConfig,
+) -> (u64, usize) {
+    for seed in 0..2000u64 {
+        let cm = ComputeModel::new(seed, cfg.clone());
+        let n = (0..peers)
+            .filter(|i| cm.tier(&format!("hk-{i:05}")) == ComputeTier::Straggler)
+            .count();
+        if (1..=peers / 3).contains(&n) {
+            return (seed, n);
+        }
+    }
+    panic!("no seed with a straggler minority among {peers} peers in 2000 candidates");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_a_straggler_minority_seed() {
+        let cfg = stress_heterogeneity(0.0);
+        let (seed, n) = seed_with_straggler_minority(6, &cfg);
+        assert!((1..=2).contains(&n));
+        // the found seed really does produce that many stragglers
+        let cm = ComputeModel::new(seed, cfg);
+        let again = (0..6)
+            .filter(|i| cm.tier(&format!("hk-{i:05}")) == ComputeTier::Straggler)
+            .count();
+        assert_eq!(n, again);
+    }
+
+    #[test]
+    fn stress_stragglers_overrun_default_deadline() {
+        let cfg = stress_heterogeneity(0.0);
+        // 1.5 x 1200s window = 1800s > 1200 + 240 deadline
+        assert!(cfg.straggler_mult * 1200.0 > 1200.0 + 240.0);
+        assert_eq!(cfg.jitter_frac, 0.0);
+        assert_eq!(cfg.p_stall, 0.0);
+    }
+}

@@ -14,6 +14,7 @@
 use anyhow::Result;
 
 use crate::gauntlet::Submission;
+use crate::netsim::ComputeTier;
 use crate::runtime::{ops, Engine};
 use crate::sparseloco::{codec, topk, Payload};
 use crate::util::rng::Rng;
@@ -59,6 +60,10 @@ pub struct PeerState {
     pub hotkey: String,
     pub uid: usize,
     pub behavior: Behavior,
+    /// Hardware tier (netsim compute model): fixed at join from
+    /// (run seed, hotkey), drives this peer's simulated compute duration
+    /// each round. Median for every peer when heterogeneity is disabled.
+    pub tier: ComputeTier,
     /// Local replica (synchronized global params after each outer step).
     pub params: Vec<f32>,
     /// Inner AdamW moments (per-peer).
@@ -79,10 +84,12 @@ pub struct PeerState {
 
 impl PeerState {
     /// A peer joining at `round` with the current global params.
+    #[allow(clippy::too_many_arguments)]
     pub fn join(
         hotkey: String,
         uid: usize,
         behavior: Behavior,
+        tier: ComputeTier,
         global_params: &[f32],
         inner_step: usize,
         round: usize,
@@ -93,6 +100,7 @@ impl PeerState {
             hotkey,
             uid,
             behavior,
+            tier,
             params: global_params.to_vec(),
             m: vec![0.0; n],
             v: vec![0.0; n],
@@ -284,7 +292,7 @@ mod tests {
     use super::*;
 
     fn mk_peer(b: Behavior) -> PeerState {
-        PeerState::join("hk".into(), 0, b, &[0.0; 256], 0, 3, 7)
+        PeerState::join("hk".into(), 0, b, ComputeTier::Median, &[0.0; 256], 0, 3, 7)
     }
 
     #[test]

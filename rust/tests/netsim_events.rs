@@ -1,0 +1,234 @@
+//! Event-spine acceptance tests (ISSUE 4):
+//!
+//! 1. **Barrier equivalence** — with a degenerate compute model (every
+//!    peer identical, overlap off) the event-driven round loop must
+//!    reproduce the historical barrier-model timings *bit-exactly*: the
+//!    expected values are recomputed here with the same `netsim::Link`
+//!    arithmetic the barrier implementation used (uplink transfer from
+//!    the compute-window end, downloads fanned from the same barrier).
+//! 2. **Straggler dynamics** — with heterogeneity enabled, straggler-tier
+//!    peers genuinely miss the `fast_checks` deadline (flagged Late every
+//!    round, never selected), and enabling overlap strictly shrinks the
+//!    per-round wall-clock because downloads hide behind the next
+//!    round's compute.
+//! 3. **Stalled uploads** — a stalled connection is cut by the
+//!    `DeadlineHit` event and yields a `LateUpload` verdict instead of a
+//!    silent duration bump.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use covenant::config::run::RunConfig;
+use covenant::coordinator::network::{Network, NetworkParams};
+use covenant::netsim::{testkit, ComputeTier, Event, Link};
+use covenant::runtime::Engine;
+use covenant::sparseloco::codec;
+use covenant::train::{OuterAlphaSchedule, Schedule, Segment};
+
+fn build_params(seed: u64, peers: usize) -> NetworkParams {
+    let mut run = RunConfig::default();
+    run.artifacts = "artifacts/tiny".into();
+    run.max_contributors = peers;
+    run.target_active = peers;
+    run.seed = seed;
+    let mut p = NetworkParams::quick(run, 4, 10);
+    p.initial_peers = peers;
+    p.churn.p_adversarial = 0.0;
+    p.churn.p_leave = 0.0;
+    p.p_slow_upload = 0.0;
+    p.schedule = Schedule::new(vec![Segment::Constant { lr: 2e-3, steps: 1 << 20 }]);
+    p.alpha = OuterAlphaSchedule::scaled(1.0, 4);
+    p
+}
+
+#[test]
+fn degenerate_event_spine_reproduces_barrier_timings() {
+    let eng = Engine::new("artifacts/tiny").unwrap();
+    let man = eng.manifest().clone();
+    let peers = 4usize;
+    let rounds = 4usize;
+    let p = build_params(0x11, peers);
+    let window = p.run.network.compute_window_s;
+    let comm_deadline = p.comm_deadline_s;
+    let (up_bps, down_bps, lat) =
+        (p.run.network.uplink_bps, p.run.network.downlink_bps, p.run.network.latency_s);
+    let wb = codec::wire_size(man.n_chunks, man.config.topk);
+
+    let mut net = Network::new(&eng, p).unwrap();
+    let mut t_start_expected = 0.0f64;
+    for _ in 0..rounds {
+        let rep = net.run_round().unwrap();
+        assert_eq!(rep.contributing, peers, "all honest peers selected: {:?}", rep.rejections);
+
+        // ---- replicate the historical barrier arithmetic ----------------
+        let compute_end = t_start_expected + window;
+        // uplink: one payload per peer, charged from the compute barrier
+        let up_done = Link::new(up_bps, lat).transfer(compute_end, wb);
+        // downlink: every peer pulls the other peers' selected payloads
+        let down_done = Link::new(down_bps, lat).transfer(compute_end, (peers - 1) * wb);
+        let t_comm_end = compute_end.max(down_done).max(up_done);
+
+        assert_eq!(rep.t_start.to_bits(), t_start_expected.to_bits(), "round start");
+        assert_eq!(rep.t_compute_end.to_bits(), compute_end.to_bits(), "compute barrier");
+        assert_eq!(
+            rep.deadline.to_bits(),
+            (compute_end + comm_deadline).to_bits(),
+            "deadline anchor"
+        );
+        assert_eq!(rep.t_comm_end.to_bits(), t_comm_end.to_bits(), "comm end");
+        assert_eq!(rep.lanes.len(), peers);
+        for lane in &rep.lanes {
+            assert_eq!(lane.tier, ComputeTier::Median, "degenerate model: one tier");
+            assert!(!lane.late);
+            let (cs, ce) = lane.compute.expect("every peer computed");
+            assert_eq!(cs.to_bits(), t_start_expected.to_bits());
+            assert_eq!(ce.to_bits(), compute_end.to_bits());
+            let (_, ue) = lane.upload.expect("every peer uploaded");
+            assert_eq!(ue.to_bits(), up_done.to_bits(), "upload completion");
+            let (ds, de) = lane.download.expect("every peer downloaded");
+            assert_eq!(ds.to_bits(), compute_end.to_bits(), "downloads fan from barrier");
+            assert_eq!(de.to_bits(), down_done.to_bits(), "download completion");
+        }
+        assert_eq!(rep.late_submissions, 0);
+        t_start_expected = t_comm_end;
+    }
+
+    // The final round's event trace has the full typed-event cast.
+    let count = |f: &dyn Fn(&Event) -> bool| {
+        net.event_log.iter().filter(|(_, e)| f(e)).count()
+    };
+    assert_eq!(count(&|e| matches!(e, Event::ComputeDone { .. })), peers);
+    assert_eq!(count(&|e| matches!(e, Event::UploadDone { .. })), peers);
+    assert_eq!(count(&|e| matches!(e, Event::DownloadDone { .. })), peers);
+    assert_eq!(count(&|e| matches!(e, Event::DeadlineHit)), 1);
+    assert!(
+        count(&|e| matches!(e, Event::ChainBlock { .. })) > 50,
+        "a 20-minute round spans many 12s blocks"
+    );
+
+    // Bit-reproducibility: an identical run produces identical params and
+    // an identical event trace.
+    let mut net2 = Network::new(&eng, build_params(0x11, peers)).unwrap();
+    for _ in 0..rounds {
+        net2.run_round().unwrap();
+    }
+    assert_eq!(net.global_params, net2.global_params);
+    assert_eq!(net.event_log.len(), net2.event_log.len());
+    for (a, b) in net.event_log.iter().zip(&net2.event_log) {
+        assert_eq!(a.0.to_bits(), b.0.to_bits());
+        assert_eq!(a.1, b.1);
+    }
+}
+
+fn het_params(seed: u64, peers: usize, overlap: bool) -> NetworkParams {
+    let mut p = build_params(seed, peers);
+    // 1.5 * 20min stragglers: past the 24min deadline every round.
+    p.run.network.heterogeneity = testkit::stress_heterogeneity(0.0);
+    p.run.network.overlap = overlap;
+    p
+}
+
+#[test]
+fn stragglers_miss_deadlines_and_overlap_shortens_rounds() {
+    let eng = Engine::new("artifacts/tiny").unwrap();
+    let peers = 6usize;
+    let rounds = 3usize;
+    let (seed, n_stragglers) =
+        testkit::seed_with_straggler_minority(peers, &testkit::stress_heterogeneity(0.0));
+
+    let mut barrier = Network::new(&eng, het_params(seed, peers, false)).unwrap();
+    let mut overlap = Network::new(&eng, het_params(seed, peers, true)).unwrap();
+    let mut wall_barrier = 0.0;
+    let mut wall_overlap = 0.0;
+    for r in 0..rounds {
+        let rb = barrier.run_round().unwrap();
+        let ro = overlap.run_round().unwrap();
+        for rep in [&rb, &ro] {
+            // Stragglers compute past the deadline -> flagged late, never
+            // selected; the punctual majority still carries the round.
+            assert_eq!(
+                rep.late_submissions, n_stragglers,
+                "round {r}: exactly the stragglers are late: {:?}",
+                rep.rejections
+            );
+            // The punctual majority carries the round; stragglers are
+            // excluded by their Late verdicts, so selection can never
+            // exceed the punctual peer count. Any selection at all means
+            // the overlap run turns over at its (pre-deadline) t_agg,
+            // while the barrier run waits out the straggler to the
+            // deadline — the wall-clock gap asserted below.
+            assert!(
+                rep.contributing >= 1 && rep.contributing <= peers - n_stragglers,
+                "round {r}: contributing={} punctual={}: {:?}",
+                rep.contributing,
+                peers - n_stragglers,
+                rep.rejections
+            );
+            for lane in &rep.lanes {
+                let is_straggler = lane.tier == ComputeTier::Straggler;
+                assert_eq!(lane.late, is_straggler, "late flag follows tier");
+                let (_, ce) = lane.compute.unwrap();
+                if is_straggler {
+                    assert!(ce > rep.deadline, "straggler compute overruns the deadline");
+                } else {
+                    assert!(ce <= rep.deadline);
+                }
+            }
+        }
+        // Barrier: the round is held open to the timeout by the
+        // straggler's missing upload. Overlap: it turns over as soon as
+        // the selected (punctual) uploads land — before the deadline.
+        assert_eq!(rb.t_comm_end.to_bits(), rb.deadline.to_bits());
+        assert!(ro.t_comm_end < ro.deadline);
+        wall_barrier += rb.wall_clock();
+        wall_overlap += ro.wall_clock();
+        if r > 0 {
+            // Overlap: every peer's compute starts strictly after the
+            // round boundary, because its previous download was still in
+            // flight when the round turned over.
+            for lane in &ro.lanes {
+                if let Some((cs, _)) = lane.compute {
+                    assert!(cs > ro.t_start, "compute overlaps prior comm");
+                }
+            }
+        }
+    }
+    assert!(
+        wall_overlap < wall_barrier,
+        "overlap must strictly shrink wall-clock: {wall_overlap} vs {wall_barrier}"
+    );
+}
+
+#[test]
+fn stalled_upload_cut_at_deadline_yields_late_upload() {
+    let eng = Engine::new("artifacts/tiny").unwrap();
+    let peers = 3usize;
+    let mut p = build_params(7, peers);
+    p.p_slow_upload = 1.0; // every upload stalls
+    let mut net = Network::new(&eng, p).unwrap();
+    let rep = net.run_round().unwrap();
+
+    assert_eq!(rep.submitted, peers);
+    assert_eq!(rep.late_submissions, peers);
+    assert_eq!(rep.contributing, 0, "stalled uploads never aggregate");
+    assert_eq!(rep.bytes_up, 0);
+    for lane in &rep.lanes {
+        let (_, ue) = lane.upload.expect("upload attempted");
+        assert!(ue.is_infinite(), "stalled upload never completes");
+        assert!(lane.late);
+        assert!(lane.download.is_none(), "nothing selected, nothing to download");
+    }
+    // The verdicts are LateUpload (cut at the deadline), not Late.
+    assert!(
+        rep.rejections.iter().all(|r| r.contains("LateUpload")),
+        "rejections: {:?}",
+        rep.rejections
+    );
+    // The deadline event is in the trace; no UploadDone ever fired.
+    assert!(net.event_log.iter().any(|(t, e)| {
+        matches!(e, Event::DeadlineHit) && t.to_bits() == rep.deadline.to_bits()
+    }));
+    assert!(!net.event_log.iter().any(|(_, e)| matches!(e, Event::UploadDone { .. })));
+    // Barrier collection waited out the timeout: the round stretches
+    // exactly to the deadline where the stalled transfers were cut.
+    assert_eq!(rep.t_comm_end.to_bits(), rep.deadline.to_bits());
+}
