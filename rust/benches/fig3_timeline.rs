@@ -143,6 +143,7 @@ fn paper_accounting(smoke: bool) {
                 outer_alpha: 1.0,
                 rejections: Vec::new(),
                 lanes: Vec::new(),
+                shard_lanes: Vec::new(),
             });
             t += s.compute_s + s.paper_tcomm_s;
         }
@@ -272,6 +273,11 @@ fn event_driven_section(smoke: bool) {
     let lanes = timeline::render_lanes_ascii(last, 72);
     println!("\noverlap-mode per-peer lanes, final round:");
     print!("{lanes}");
+    let shard_lanes = timeline::render_shard_lanes_ascii(last, 72);
+    if !shard_lanes.is_empty() {
+        println!("coordinator shard lanes (gather + outer-step barrier), final round:");
+        print!("{shard_lanes}");
+    }
     println!(
         "event trace: {} events in the final round ({} barrier)",
         overlap.event_log.len(),
@@ -279,7 +285,7 @@ fn event_driven_section(smoke: bool) {
     );
     if !smoke {
         std::fs::create_dir_all("results/fig3").unwrap();
-        std::fs::write("results/fig3/lanes.txt", lanes).unwrap();
+        std::fs::write("results/fig3/lanes.txt", format!("{lanes}{shard_lanes}")).unwrap();
         println!("wrote results/fig3/lanes.txt");
     }
 }

@@ -2,9 +2,11 @@
 //! timings — blocked/parallel kernels vs the naive serial baseline
 //! (`kernels::force_naive`, bit-identical, so both run in one process on
 //! one host) — the pure-Rust comm-phase components (compress, wire codec,
-//! aggregation), Gauntlet `score_round` serial vs rayon fan-out, and the
-//! headline number for this repo's perf trajectory: serial vs parallel
-//! round-engine throughput at 16 simulated peers.
+//! aggregation), sharded vs unsharded aggregation + round throughput
+//! (multi-coordinator `ShardSet`; outputs asserted bit-identical, so the
+//! comparison is pure overhead), Gauntlet `score_round` serial vs rayon
+//! fan-out, and the headline number for this repo's perf trajectory:
+//! serial vs parallel round-engine throughput at 16 simulated peers.
 //!
 //! Results are printed and written to `BENCH_hotpath.json` at the repo
 //! root, so successive PRs can track the trajectory.
@@ -22,6 +24,7 @@ use serde_json::json;
 use covenant::config::run::{GauntletConfig, RunConfig};
 use covenant::coordinator::aggregator;
 use covenant::coordinator::network::{Network, NetworkParams};
+use covenant::coordinator::shard::ShardSet;
 use covenant::gauntlet::testkit::{synthetic_submission, SyntheticEvalData};
 use covenant::gauntlet::validator::Validator;
 use covenant::gauntlet::Submission;
@@ -32,14 +35,22 @@ use covenant::util::cli::Args;
 use covenant::util::rng::Rng;
 use covenant::util::stats::{bench, report};
 
-/// Wall-seconds for `rounds` full network rounds at `peers` peers.
-fn round_engine_secs(eng: &Engine, peers: usize, rounds: usize, parallel: bool) -> Result<f64> {
+/// Wall-seconds for `rounds` full network rounds at `peers` peers with
+/// `n_shards` coordinator shards (1 = the degenerate single coordinator).
+fn round_engine_secs(
+    eng: &Engine,
+    peers: usize,
+    rounds: usize,
+    parallel: bool,
+    n_shards: usize,
+) -> Result<f64> {
     let h = eng.manifest().config.inner_steps;
     let mut run = RunConfig::default();
     run.artifacts = "bench".into();
     run.max_contributors = peers;
     run.target_active = peers;
     run.seed = 0xBE7C;
+    run.n_shards = n_shards;
     let mut p = NetworkParams::quick(run, h, rounds);
     p.initial_peers = peers;
     p.churn.p_leave = 0.0;
@@ -206,6 +217,41 @@ fn main() -> Result<()> {
     });
     report("chunk-parallel compress_dense", &s_rc, Some((na * 4) as f64));
 
+    // ---- multi-coordinator sharding ----------------------------------------
+    // Sharded aggregation is bit-identical to unsharded (the shard
+    // invariant), so like the kernel baseline this comparison is pure
+    // speed/overhead: per-shard scatter fan-out vs the single scatter,
+    // plus the wire cost of per-slice headers.
+    let bench_shards = 4usize;
+    println!("\n== multi-coordinator sharding ({bench_shards} shards) ==");
+    let mut shard_set = ShardSet::new(man.n_chunks, man.config.chunk, bench_shards)?;
+    let baseline = aggregator::aggregate(&refs, na)?;
+    let sharded_once = shard_set.aggregate_selected(&refs)?;
+    assert_eq!(baseline.len(), sharded_once.len());
+    assert!(
+        baseline.iter().zip(&sharded_once).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "shard invariant violated in bench (sharded aggregate not bitwise equal)"
+    );
+    let s_agg_sharded = bench(wu * 2, it(20), || {
+        std::hint::black_box(shard_set.aggregate_selected(&refs).unwrap());
+    });
+    report(
+        &format!("aggregate 20 payloads ({} shards)", shard_set.n_shards()),
+        &s_agg_sharded,
+        Some((20 * payloads[0].n_values() * 6) as f64),
+    );
+    let full_wire = codec::wire_size(man.n_chunks, man.config.topk);
+    let sliced_wire: usize = shard_set
+        .specs()
+        .iter()
+        .map(|sp| codec::wire_size(sp.n_chunks(), man.config.topk))
+        .sum();
+    let wire_overhead = sliced_wire as f64 / full_wire as f64 - 1.0;
+    println!(
+        "slice wire overhead: {sliced_wire} B vs {full_wire} B ({:+.2}%)",
+        100.0 * wire_overhead
+    );
+
     // ---- Gauntlet scoring: serial vs rayon fan-out -------------------------
     let v_peers = if smoke { 3 } else { 8 };
     let v_batches = 2;
@@ -227,12 +273,14 @@ fn main() -> Result<()> {
         rayon::current_num_threads()
     );
 
-    // ---- round engine: serial vs parallel ----------------------------------
+    // ---- round engine: serial vs parallel vs sharded -----------------------
     println!(
         "\n== round engine throughput ({round_peers} peers x {round_rounds} rounds) =="
     );
-    let serial_s = round_engine_secs(&eng, round_peers, round_rounds, false)?;
-    let parallel_s = round_engine_secs(&eng, round_peers, round_rounds, true)?;
+    let serial_s = round_engine_secs(&eng, round_peers, round_rounds, false, 1)?;
+    let parallel_s = round_engine_secs(&eng, round_peers, round_rounds, true, 1)?;
+    let sharded_s =
+        round_engine_secs(&eng, round_peers, round_rounds, true, bench_shards)?;
     let peer_rounds = (round_peers * round_rounds) as f64;
     let speedup = serial_s / parallel_s;
     println!(
@@ -244,8 +292,13 @@ fn main() -> Result<()> {
         peer_rounds / parallel_s
     );
     println!(
-        "speedup:  {speedup:.2}x on {} rayon threads",
-        rayon::current_num_threads()
+        "sharded:  {sharded_s:>8.2}s  ({:>6.2} peer-rounds/s, {bench_shards} coordinator shards)",
+        peer_rounds / sharded_s
+    );
+    println!(
+        "speedup:  {speedup:.2}x on {} rayon threads; sharding overhead {:+.1}%",
+        rayon::current_num_threads(),
+        100.0 * (sharded_s / parallel_s - 1.0)
     );
 
     if smoke {
@@ -295,6 +348,15 @@ fn main() -> Result<()> {
             "decode_mb_per_s": wire.len() as f64 / s_dec.mean / 1e6,
             "aggregate_20_payloads_ms": s_agg.mean * 1e3,
             "compress_dense_mb_per_s": (na * 4) as f64 / s_rc.mean / 1e6,
+        },
+        "sharding": {
+            "n_shards": shard_set.n_shards(),
+            "aggregate_20_payloads_sharded_ms": s_agg_sharded.mean * 1e3,
+            "aggregate_sharded_vs_unsharded": s_agg.mean / s_agg_sharded.mean,
+            "round_engine_sharded_s": sharded_s,
+            "round_engine_sharding_overhead_frac": sharded_s / parallel_s - 1.0,
+            "slice_wire_bytes": sliced_wire,
+            "slice_wire_overhead_frac": wire_overhead,
         },
     });
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");

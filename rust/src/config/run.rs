@@ -30,7 +30,19 @@ pub struct RunConfig {
     pub ef_beta: f64,
     /// RNG seed for the whole run.
     pub seed: u64,
+    /// Coordinator shards: the flat parameter vector is split into this
+    /// many contiguous chunk-range shards, each owned by a
+    /// `coordinator::shard::ShardCoordinator` with its own aggregation
+    /// bucket and a cross-shard outer-step barrier. `1` (the default) is
+    /// the single-coordinator degenerate case, bit-identical to the
+    /// pre-sharding rounds; any value is clamped to the chunk count.
+    /// Sharded aggregation is bitwise-identical to unsharded for every
+    /// shard count (`tests/shard_parity.rs`). Distinct from the *data*
+    /// shard count (`NetworkParams::data_shards`).
+    pub n_shards: usize,
+    /// Simulated link shape + timing-model knobs.
     pub network: NetworkConfig,
+    /// Validator (Gauntlet) knobs.
     pub gauntlet: GauntletConfig,
 }
 
@@ -44,6 +56,7 @@ impl Default for RunConfig {
             outer_lr: 1.0,
             ef_beta: 0.95,
             seed: 0xC0DE,
+            n_shards: 1,
             network: NetworkConfig::default(),
             gauntlet: GauntletConfig::default(),
         }
@@ -160,6 +173,10 @@ impl RunConfig {
         if let Some(v) = j.opt("seed") {
             c.seed = v.as_i64()? as u64;
         }
+        if let Some(v) = j.opt("n_shards") {
+            c.n_shards = v.as_usize()?;
+            anyhow::ensure!(c.n_shards >= 1, "n_shards must be >= 1 (got 0)");
+        }
         if let Some(n) = j.opt("network") {
             if let Some(v) = n.opt("uplink_bps") {
                 c.network.uplink_bps = v.as_f64()?;
@@ -260,6 +277,17 @@ mod tests {
         assert_eq!(c.gauntlet.eval_batches, 7);
         // untouched fields keep defaults
         assert_eq!(c.max_contributors, 20);
+    }
+
+    #[test]
+    fn n_shards_parses_and_defaults_to_single_coordinator() {
+        // The degenerate single-coordinator case must stay the default
+        // so existing runs keep bit-identical rounds.
+        assert_eq!(RunConfig::default().n_shards, 1);
+        let j = Json::parse(r#"{"n_shards": 4}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&j).unwrap().n_shards, 4);
+        let j = Json::parse(r#"{"n_shards": 0}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err(), "zero coordinators rejected");
     }
 
     #[test]

@@ -20,8 +20,10 @@ use crate::sparseloco::Payload;
 use crate::util::stats::median;
 
 /// Below this many (chunks x payloads) scatter units the serial path is
-/// used.
-const PAR_MIN_UNITS: usize = 256;
+/// used. Shared with the per-shard fan-out gate in
+/// `coordinator::shard`, so the inner and outer parallelism cutoffs
+/// can't drift apart.
+pub(crate) const PAR_MIN_UNITS: usize = 256;
 
 /// Per-payload weights implementing median-norm scaling: payloads whose
 /// norm exceeds the median are scaled *down* to the median (dampening
@@ -54,40 +56,87 @@ pub fn aggregate_weighted(
     weights: &[f32],
     dense_len: usize,
 ) -> Result<Vec<f32>> {
+    ensure!(!payloads.is_empty(), "no payloads to aggregate");
+    for p in payloads {
+        ensure!(p.dense_len() == dense_len, "payload dense length mismatch");
+    }
+    aggregate_weighted_range(payloads, weights, 0, payloads[0].n_chunks)
+}
+
+/// Aggregate only the contiguous chunk range `[chunk0, chunk1)` of the
+/// payloads, with explicit weights, into a dense vector covering just
+/// that range — zero-copy over the borrowed full payloads (the
+/// multi-coordinator sharding path: each `ShardCoordinator` scatters
+/// its own range without slicing anything). [`aggregate_weighted`] is
+/// the `[0, n_chunks)` case, so there is exactly one copy of the
+/// bit-determinism-critical accumulation loop
+/// ([`aggregate_weighted_range_into`]).
+pub fn aggregate_weighted_range(
+    payloads: &[&Payload],
+    weights: &[f32],
+    chunk0: usize,
+    chunk1: usize,
+) -> Result<Vec<f32>> {
+    ensure!(!payloads.is_empty(), "no payloads to aggregate");
+    let mut acc = vec![0f32; chunk1.saturating_sub(chunk0) * payloads[0].chunk];
+    aggregate_weighted_range_into(&mut acc, payloads, weights, chunk0, chunk1)?;
+    Ok(acc)
+}
+
+/// The scatter core: accumulate the chunk range `[chunk0, chunk1)` of
+/// the payloads into `out` (`out.len()` must equal the range's dense
+/// length; it is zeroed first). This is the single load-bearing copy of
+/// the accumulation loop: within each chunk, payloads accumulate in
+/// order — the bit-determinism invariant every caller (unsharded,
+/// sharded, serial, parallel) inherits.
+pub fn aggregate_weighted_range_into(
+    out: &mut [f32],
+    payloads: &[&Payload],
+    weights: &[f32],
+    chunk0: usize,
+    chunk1: usize,
+) -> Result<()> {
     ensure!(payloads.len() == weights.len(), "weights length mismatch");
     ensure!(!payloads.is_empty(), "no payloads to aggregate");
     let chunk = payloads[0].chunk;
     let n_chunks = payloads[0].n_chunks;
+    ensure!(
+        chunk0 < chunk1 && chunk1 <= n_chunks,
+        "chunk range [{chunk0}, {chunk1}) out of bounds for {n_chunks} chunks"
+    );
     for p in payloads {
-        ensure!(p.dense_len() == dense_len, "payload dense length mismatch");
         ensure!(
             p.chunk == chunk && p.n_chunks == n_chunks,
             "payload chunk geometry mismatch"
         );
     }
+    let range_chunks = chunk1 - chunk0;
+    ensure!(out.len() == range_chunks * chunk, "output length mismatch");
+    out.fill(0.0);
     let inv_r = 1.0 / payloads.len() as f32;
     let scaled: Vec<f32> = weights.iter().map(|&w| w * inv_r).collect();
-    let mut acc = vec![0f32; dense_len];
     // Chunk-range parallel reduction; payload order fixed inside each
     // range (see module docs for why this is bit-deterministic).
-    let scatter_range = |acc_range: &mut [f32], chunk0: usize| {
-        for (ci, out) in acc_range.chunks_mut(chunk).enumerate() {
-            let r = chunk0 + ci;
+    let scatter_range = |acc_range: &mut [f32], first_chunk: usize| {
+        for (ci, acc_chunk) in acc_range.chunks_mut(chunk).enumerate() {
+            let r = first_chunk + ci;
             for (p, &w) in payloads.iter().zip(&scaled) {
-                p.accumulate_chunk_into(r, out, w);
+                p.accumulate_chunk_into(r, acc_chunk, w);
             }
         }
     };
-    if n_chunks * payloads.len() >= PAR_MIN_UNITS {
+    if range_chunks * payloads.len() >= PAR_MIN_UNITS {
         // Whole chunks per task: task size is a multiple of `chunk`.
-        let chunks_per_task = (n_chunks / (rayon::current_num_threads() * 4)).max(1);
-        acc.par_chunks_mut(chunks_per_task * chunk)
+        let chunks_per_task = (range_chunks / (rayon::current_num_threads() * 4)).max(1);
+        out.par_chunks_mut(chunks_per_task * chunk)
             .enumerate()
-            .for_each(|(ti, acc_range)| scatter_range(acc_range, ti * chunks_per_task));
+            .for_each(|(ti, acc_range)| {
+                scatter_range(acc_range, chunk0 + ti * chunks_per_task)
+            });
     } else {
-        scatter_range(&mut acc, 0);
+        scatter_range(out, chunk0);
     }
-    Ok(acc)
+    Ok(())
 }
 
 #[cfg(test)]
@@ -182,8 +231,33 @@ mod tests {
     }
 
     #[test]
+    fn range_scatter_matches_full_slice_bitwise() {
+        // aggregate_weighted_range over every split must reproduce the
+        // corresponding slice of the full scatter bit for bit (the
+        // shard coordinators' zero-copy hot path).
+        let ps: Vec<Payload> = (0..5).map(big_payload).collect();
+        let refs: Vec<&Payload> = ps.iter().collect();
+        let n = ps[0].dense_len();
+        let (n_chunks, chunk) = (ps[0].n_chunks, ps[0].chunk);
+        let weights = median_norm_weights(&refs);
+        let full = aggregate_weighted(&refs, &weights, n).unwrap();
+        for ranges in [vec![(0, n_chunks)], vec![(0, 1), (1, 64), (64, n_chunks)]] {
+            let mut stitched = Vec::new();
+            for &(a, b) in &ranges {
+                stitched
+                    .extend(aggregate_weighted_range(&refs, &weights, a, b).unwrap());
+            }
+            assert_eq!(stitched, full, "ranges {ranges:?}");
+        }
+        // out-of-range / empty ranges rejected
+        assert!(aggregate_weighted_range(&refs, &weights, 0, n_chunks + 1).is_err());
+        assert!(aggregate_weighted_range(&refs, &weights, 3, 3).is_err());
+    }
+
+    #[test]
     fn empty_payloads_rejected() {
         assert!(aggregate(&[], 10).is_err());
+        assert!(aggregate_weighted_range(&[], &[], 0, 1).is_err());
     }
 
     #[test]

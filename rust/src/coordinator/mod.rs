@@ -2,14 +2,31 @@
 //! the parallel round engine orchestrating simulated peers over the
 //! object store and chain on an event-driven timing spine (`network`);
 //! aggregation with median-norm scaling, §2.2, as a deterministic
-//! chunk-parallel reduction (`aggregator`); and the phase-dependent
-//! optimizer-state offload protocol of Figure 1 (`offload`), driven by
-//! the netsim scheduler's events.
+//! chunk-parallel reduction (`aggregator`); the multi-coordinator
+//! sharding layer splitting the flat parameter vector into chunk-range
+//! shards with a cross-shard outer-step barrier (`shard`); and the
+//! phase-dependent optimizer-state offload protocol of Figure 1
+//! (`offload`), driven by the netsim scheduler's events.
+//!
+//! ## The shard invariant
+//!
+//! Coordinator shards own **disjoint contiguous chunk ranges** covering
+//! the whole flat vector, and within every chunk the selected payloads
+//! are accumulated in a **fixed submission order** with globally shared
+//! median-norm weights — so the sharded aggregate is **bitwise
+//! reproducible** and identical to the unsharded one for any shard
+//! count and any thread count. `tests/shard_parity.rs` pins the shard
+//! leg, `tests/parallel_determinism.rs` the thread leg, and
+//! `tests/netsim_events.rs` the timing spine.
+
+#![deny(missing_docs)]
 
 pub mod aggregator;
 pub mod network;
 pub mod offload;
+pub mod shard;
 
 pub use aggregator::{aggregate, median_norm_weights};
 pub use network::{Network, NetworkParams, PeerLane, RoundReport};
 pub use offload::{OffloadManager, Phase, StateKind};
+pub use shard::{ShardCoordinator, ShardLane, ShardSet, ShardSpec, ShardedNetwork};

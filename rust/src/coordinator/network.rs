@@ -8,10 +8,21 @@
 //! 2. compute phase — every active peer runs H inner steps (real model
 //!    compute through the engine),
 //! 3. compress phase — SparseLoCo Top-k + 2-bit quant + EF (Eq. 1),
-//! 4. upload to per-peer buckets under uplink constraints,
+//! 4. upload to per-peer buckets under uplink constraints — one wire
+//!    slice per coordinator shard, in shard order over the FIFO uplink,
 //! 5. Gauntlet scoring + contributor selection + chain weights,
-//! 6. every peer downloads the selected payloads, median-norm-scaled
-//!    aggregation, outer step (Eq. 2), sync.
+//! 6. every peer downloads the selected payloads; each
+//!    [`ShardCoordinator`](super::shard::ShardCoordinator) aggregates
+//!    the selected slices for its chunk range (median-norm scaling with
+//!    globally shared weights); the outer step (Eq. 2) applies at the
+//!    cross-shard barrier (every shard aggregated); sync.
+//!
+//! The aggregation layer always runs through the
+//! [`ShardSet`](super::shard::ShardSet): `run.n_shards = 1` (the
+//! default) is the degenerate single-coordinator case and reproduces
+//! the pre-sharding rounds bit-exactly; any shard count produces the
+//! identical global model because sharded aggregation is bitwise equal
+//! to unsharded (`tests/shard_parity.rs`).
 //!
 //! ## Parallel round engine
 //!
@@ -74,6 +85,7 @@ use anyhow::Result;
 use crate::chain::Subnet;
 use crate::config::run::RunConfig;
 use crate::coordinator::offload::{OffloadManager, Phase};
+use crate::coordinator::shard::{ShardLane, ShardSet, ShardSpec};
 use crate::data::grammar::GrammarKind;
 use crate::data::shards::{BatchSampler, ShardStore};
 use crate::gauntlet::fast_checks::FastCheck;
@@ -82,23 +94,32 @@ use crate::gauntlet::validator::{EvalDataProvider, Validator};
 use crate::gauntlet::Submission;
 use crate::netsim::sched::{Event, Scheduler};
 use crate::netsim::{ComputeModel, ComputeTier, LinkPair, VirtualClock};
+use crate::peer::worker::encode_payload_slices;
 use crate::peer::{Behavior, ChurnConfig, ChurnModel, PeerState};
 use crate::runtime::{ops, Engine, Manifest};
-use crate::sparseloco::{codec, Payload};
+use crate::sparseloco::Payload;
 use crate::storage::ObjectStore;
 use crate::train::{OuterAlphaSchedule, Schedule};
 use crate::util::rng::Rng;
 
 /// Everything configurable about a network run.
 pub struct NetworkParams {
+    /// Run-level configuration (model, seeds, links, gauntlet, and the
+    /// coordinator shard count `run.n_shards`).
     pub run: RunConfig,
+    /// Join/leave dynamics.
     pub churn: ChurnConfig,
+    /// Inner (per-step) learning-rate schedule.
     pub schedule: Schedule,
+    /// Outer learning-rate schedule (Eq. 2's alpha).
     pub alpha: OuterAlphaSchedule,
     /// Tokens per data shard.
     pub shard_tokens: usize,
-    pub n_shards: usize,
-    /// Shards assigned per peer per round.
+    /// Number of *data* shards in the synthetic corpus store. Distinct
+    /// from the coordinator shard count (`RunConfig::n_shards`), which
+    /// partitions the parameter vector, not the data.
+    pub data_shards: usize,
+    /// Data shards assigned per peer per round.
     pub assigned_per_peer: usize,
     /// Upload deadline after the *nominal* compute end (seconds).
     pub comm_deadline_s: f64,
@@ -122,6 +143,8 @@ pub struct NetworkParams {
 }
 
 impl NetworkParams {
+    /// Reasonable defaults for a run of `rounds_hint` rounds at `h`
+    /// inner steps (schedules scaled to the run length).
     pub fn quick(run: RunConfig, h: usize, rounds_hint: usize) -> Self {
         let scale = (rounds_hint * h) as f64 / 183_000.0;
         NetworkParams {
@@ -129,7 +152,7 @@ impl NetworkParams {
             schedule: Schedule::covenant_pretrain_scaled(scale.max(1e-4)),
             alpha: OuterAlphaSchedule::scaled(scale.max(1e-4), h),
             shard_tokens: 16_384,
-            n_shards: 24,
+            data_shards: 24,
             assigned_per_peer: 2,
             comm_deadline_s: 240.0,
             p_slow_upload: 0.04,
@@ -148,8 +171,11 @@ impl NetworkParams {
 /// segments routinely cross the round boundary — that's the point.
 #[derive(Debug, Clone)]
 pub struct PeerLane {
+    /// Chain UID of the peer.
     pub uid: usize,
+    /// The peer's hotkey (stable identity).
     pub hotkey: String,
+    /// Hardware tier driving this peer's compute duration.
     pub tier: ComputeTier,
     /// [start, end) of this round's compute window, if the peer submitted.
     pub compute: Option<(f64, f64)>,
@@ -166,10 +192,12 @@ pub struct PeerLane {
 /// Per-round observability (feeds Figures 3/4/5/6 + EXPERIMENTS.md).
 #[derive(Debug, Clone)]
 pub struct RoundReport {
+    /// Outer round index.
     pub round: usize,
-    /// Virtual times: round start, *nominal* compute end (the deadline
-    /// anchor; per-peer actuals live in `lanes`), round end.
+    /// Virtual time the round opened.
     pub t_start: f64,
+    /// *Nominal* compute end (the deadline anchor; per-peer actuals
+    /// live in `lanes`).
     pub t_compute_end: f64,
     /// Time the round handed over to the next one. Barrier mode: every
     /// expected upload landed or the deadline passed, and the slowest
@@ -178,26 +206,40 @@ pub struct RoundReport {
     pub t_comm_end: f64,
     /// Upload deadline (`t_compute_end + comm_deadline_s`).
     pub deadline: f64,
+    /// Active (registered) peers this round.
     pub active: usize,
+    /// Submissions received (incl. adversarial fabrications).
     pub submitted: usize,
+    /// Submissions selected into the aggregate.
     pub contributing: usize,
+    /// Submissions from adversarial/stale peers.
     pub adversarial_submitted: usize,
+    /// Adversarial/stale submissions that made it into the aggregate.
     pub adversarial_selected: usize,
     /// Submissions flagged `Late` or `LateUpload` by the fast checks.
     pub late_submissions: usize,
     /// Mean training loss across honest peers (last inner step).
     pub mean_loss: f64,
+    /// Selected-upload wire bytes (sum of per-shard slice sizes).
     pub bytes_up: u64,
+    /// Download bytes across all peers (selected payloads minus own).
     pub bytes_down: u64,
+    /// Outer learning rate applied this round.
     pub outer_alpha: f64,
     /// Human-readable reasons for non-selected submissions (debugging +
     /// observability): "hotkey fast=... score=...".
     pub rejections: Vec<String>,
     /// Per-peer timing lanes (one per active peer slot).
     pub lanes: Vec<PeerLane>,
+    /// Per-coordinator-shard timing lanes: when each shard's aggregation
+    /// became ready and the cross-shard barrier at which the outer step
+    /// applied. Empty when nothing was selected. One lane with
+    /// `n_shards = 1`.
+    pub shard_lanes: Vec<ShardLane>,
 }
 
 impl RoundReport {
+    /// Communication time after the nominal compute end.
     pub fn t_comm(&self) -> f64 {
         self.t_comm_end - self.t_compute_end
     }
@@ -207,6 +249,7 @@ impl RoundReport {
         self.t_comm_end - self.t_start
     }
 
+    /// Fraction of the round spent computing (vs syncing).
     pub fn utilization(&self) -> f64 {
         let total = self.t_comm_end - self.t_start;
         (self.t_compute_end - self.t_start) / total.max(1e-9)
@@ -259,12 +302,18 @@ struct RoundCtx<'a> {
     ef_beta: f32,
     rust_compress: bool,
     median_hint: f32,
+    /// Coordinator shard geometries: the peer wire-encodes one payload
+    /// slice per shard (a single full-cover spec degenerates to the
+    /// historical whole-payload encode).
+    shard_specs: &'a [ShardSpec],
 }
 
 /// What one peer's round work produces (merged serially afterwards).
 struct PeerOutcome {
     sub: Submission,
-    wire: Vec<u8>,
+    /// Per-coordinator-shard wire slices, in shard order (one full
+    /// payload buffer in the `n_shards = 1` degenerate case).
+    slices: Vec<Vec<u8>>,
     /// Last-inner-step training loss (honest peers only).
     loss: Option<f64>,
     adversarial: bool,
@@ -311,7 +360,7 @@ fn peer_round(
     } else {
         Some(&ctx.prev_payloads[slot.state.roll_below(ctx.prev_payloads.len())])
     };
-    let sub = slot.state.fabricate_submission(
+    let mut sub = slot.state.fabricate_submission(
         ctx.round,
         honest_payload,
         copy_src,
@@ -321,10 +370,14 @@ fn peer_round(
         ctx.median_hint,
         0.0, // uploaded_at stamped by the event spine
     );
-    let wire = codec::encode(&sub.payload);
+    // One wire slice per coordinator shard; the uplink is charged per
+    // slice, so `wire_bytes` is the *total* cost actually uploaded
+    // (equal to the single-payload encode when there is one shard).
+    let slices = encode_payload_slices(&sub.payload, ctx.shard_specs)?;
+    sub.wire_bytes = slices.iter().map(Vec::len).sum();
     Ok(Some(PeerOutcome {
         sub,
-        wire,
+        slices,
         loss,
         adversarial: behavior.is_adversarial() || behavior == Behavior::Stale,
         slow,
@@ -333,19 +386,36 @@ fn peer_round(
 
 /// The whole simulated network.
 pub struct Network<'e> {
+    /// The execution backend (model math).
     pub eng: &'e Engine,
+    /// Run parameters.
     pub p: NetworkParams,
+    /// Shared virtual clock (advances to each round's end).
     pub clock: VirtualClock,
+    /// In-memory object store (peer buckets + shard buckets + corpus).
     pub store: ObjectStore,
+    /// Bittensor-like subnet stand-in (registration, weights, blocks).
     pub chain: Subnet,
+    /// The Gauntlet validator.
     pub validator: Validator,
+    /// Join/leave model.
     pub churn: ChurnModel,
+    /// Synthetic-corpus *data* shard store (distinct from the
+    /// coordinator shards below).
     pub shards: ShardStore,
     /// Per-peer compute-duration model (tiers assigned per hotkey).
     pub compute_model: ComputeModel,
+    /// Coordinator shards: chunk-range owners of the flat parameter
+    /// vector driving aggregation and the cross-shard outer-step
+    /// barrier. `run.n_shards = 1` (the default) is the degenerate
+    /// single-coordinator case, bit-identical to the pre-sharding path.
+    pub shard_set: ShardSet,
     peers: Vec<PeerSlot>,
+    /// The global flat parameter vector (every shard's slices stitched).
     pub global_params: Vec<f32>,
+    /// Next round index.
     pub round: usize,
+    /// One report per completed round.
     pub reports: Vec<RoundReport>,
     /// The most recent round's full event trace, in pop order
     /// (observability + tests; cleared at each round start).
@@ -356,6 +426,8 @@ pub struct Network<'e> {
 }
 
 impl<'e> Network<'e> {
+    /// Build a network: engine + params -> initial peer cohort, shard
+    /// coordinators, published corpus, fresh chain state.
     pub fn new(eng: &'e Engine, p: NetworkParams) -> Result<Self> {
         let man = eng.manifest();
         let mut rng = Rng::new(p.run.seed);
@@ -363,8 +435,15 @@ impl<'e> Network<'e> {
         let mut store = ObjectStore::new();
         let chain = Subnet::new(3, 256);
         let grammar = crate::data::Grammar::new(man.config.vocab_size, p.world_seed);
-        let shards = ShardStore::new(grammar, p.shard_tokens, p.n_shards);
+        let shards = ShardStore::new(grammar, p.shard_tokens, p.data_shards);
         shards.publish(&mut store, p.kind)?;
+        // Coordinator shards: contiguous chunk ranges of the flat
+        // vector, each with its own bucket in the object store (peers
+        // upload per-shard payload slices there).
+        let shard_set = ShardSet::new(man.n_chunks, man.config.chunk, p.run.n_shards)?;
+        for s in 0..shard_set.n_shards() {
+            store.create_bucket(&format!("shard-{s}"), &format!("cred-shard-{s}"))?;
+        }
         let churn = ChurnModel::new(p.churn, p.run.seed ^ 0xC0DE);
         let global_params = ops::init_params(eng, p.run.seed as i32)?;
         let mut validator = Validator::new(p.run.gauntlet.clone(), p.run.seed ^ 0x5C0);
@@ -383,6 +462,7 @@ impl<'e> Network<'e> {
             validator,
             shards,
             compute_model,
+            shard_set,
             peers: Vec::new(),
             global_params,
             round: 0,
@@ -447,10 +527,12 @@ impl<'e> Network<'e> {
         Ok(())
     }
 
+    /// Currently registered peers.
     pub fn active_peers(&self) -> usize {
         self.peers.len()
     }
 
+    /// Distinct hotkeys ever registered (churn accounting).
     pub fn unique_peers_ever(&self) -> usize {
         self.chain.unique_hotkeys_ever()
     }
@@ -536,6 +618,8 @@ impl<'e> Network<'e> {
             slot.state.begin_round(round_seed(run_seed, &slot.state.hotkey, round));
         }
 
+        let shard_specs = self.shard_set.specs();
+        let n_coord_shards = shard_specs.len();
         let ctx = RoundCtx {
             eng: self.eng,
             man: &man,
@@ -547,6 +631,7 @@ impl<'e> Network<'e> {
             ef_beta: self.p.run.ef_beta as f32,
             rust_compress: self.p.rust_compress,
             median_hint,
+            shard_specs: &shard_specs,
         };
         let mut outcomes: Vec<Option<PeerOutcome>> = if self.p.parallel {
             self.peers
@@ -589,6 +674,10 @@ impl<'e> Network<'e> {
 
         let mut sched = Scheduler::new(VirtualClock::at(t_start));
         let mut stalled = vec![false; n_peers];
+        // Per-peer, per-coordinator-shard slice arrival times (+inf until
+        // the slice lands; stalled connections never land any slice).
+        let mut slice_done: Vec<Vec<f64>> =
+            vec![vec![f64::INFINITY; n_coord_shards]; n_peers];
         for (i, (slot, outcome)) in
             self.peers.iter_mut().zip(outcomes.iter()).enumerate()
         {
@@ -626,8 +715,24 @@ impl<'e> Network<'e> {
                         o.sub.uploaded_at = f64::INFINITY;
                         lanes[peer].upload = Some((t, f64::INFINITY));
                     } else {
+                        // One FIFO uplink transfer per coordinator-shard
+                        // slice, in shard order; the *final* slice is the
+                        // historical UploadDone, so a single shard means a
+                        // single transfer of the whole payload — the
+                        // pre-sharding arithmetic bit for bit.
                         let begin = t.max(slot.link.up.busy_until());
-                        let done = slot.link.up.transfer(t, o.sub.wire_bytes);
+                        let n_slices = o.slices.len();
+                        let mut done = t;
+                        for (s, wire) in o.slices.iter().enumerate() {
+                            done = slot.link.up.transfer(t, wire.len());
+                            slice_done[peer][s] = done;
+                            if s + 1 < n_slices {
+                                sched.schedule_at(
+                                    done,
+                                    Event::ShardUploadDone { peer, shard: s },
+                                );
+                            }
+                        }
                         lanes[peer].upload = Some((begin, done));
                         sched.schedule_at(done, Event::UploadDone { peer });
                     }
@@ -648,23 +753,40 @@ impl<'e> Network<'e> {
         let mut losses = Vec::new();
         let mut submissions: Vec<Submission> = Vec::new();
         let mut lane_of_submission: Vec<usize> = Vec::new();
+        // Per-submission slice arrival times / wire sizes, in submission
+        // order (the shard coordinators' gather inputs).
+        let mut sub_slice_done: Vec<Vec<f64>> = Vec::new();
+        let mut sub_slice_bytes: Vec<Vec<usize>> = Vec::new();
         let mut adversarial_submitted = 0;
         for (i, outcome) in outcomes.into_iter().enumerate() {
-            let Some(outcome) = outcome else { continue };
-            if let Some(l) = outcome.loss {
+            let Some(PeerOutcome { sub, slices, loss, adversarial, .. }) = outcome else {
+                continue;
+            };
+            if let Some(l) = loss {
                 losses.push(l);
             }
-            if outcome.adversarial {
+            if adversarial {
                 adversarial_submitted += 1;
             }
-            // Store in the peer's bucket (the validator reads from here).
-            self.store.put(
-                &outcome.sub.hotkey,
-                &format!("round-{round}/grad.bin"),
-                outcome.wire,
-            )?;
+            // Store each shard slice in the peer's bucket under a
+            // shard-scoped key — the surface a real ShardCoordinator
+            // would gather its chunk range from. (This sim's shards
+            // aggregate the in-memory payloads directly; the stored
+            // slices are the wire-format/byte-accounting fidelity
+            // layer, like the whole-payload `grad.bin` before them.)
+            let mut bytes = Vec::with_capacity(slices.len());
+            for (s, wire) in slices.into_iter().enumerate() {
+                bytes.push(wire.len());
+                self.store.put(
+                    &sub.hotkey,
+                    &format!("round-{round}/shard-{s}/grad.bin"),
+                    wire,
+                )?;
+            }
+            sub_slice_bytes.push(bytes);
+            sub_slice_done.push(slice_done[i].clone());
             lane_of_submission.push(i);
-            submissions.push(outcome.sub);
+            submissions.push(sub);
         }
 
         // ---- 5. Gauntlet scoring ------------------------------------------
@@ -709,31 +831,70 @@ impl<'e> Network<'e> {
         let mut t_comm_end = compute_end;
         let mut bytes_up = 0u64;
         let mut bytes_down = 0u64;
+        let mut shard_lanes: Vec<ShardLane> = Vec::new();
         let mut sched2 = Scheduler::new(VirtualClock::at(t_start));
         if !selected_payloads.is_empty() {
-            let delta = crate::coordinator::aggregator::aggregate(
-                &selected_payloads,
-                self.global_params.len(),
-            )?;
+            // Sharded aggregation + the cross-shard outer-step barrier:
+            // every ShardCoordinator gathers the selected slices for its
+            // chunk range and aggregates them with *globally* computed
+            // median-norm weights — bit-identical to the unsharded
+            // aggregate for any shard count (`coordinator::shard` docs,
+            // pinned by tests/shard_parity.rs). Shard s becomes ready
+            // when its last selected slice has arrived (ShardAggregated
+            // event); the outer step applies only at the max over shards,
+            // so a late shard holds the round exactly like a late upload
+            // does in the single-coordinator path.
+            let sel_arrivals: Vec<&[f64]> = verdict
+                .selected
+                .iter()
+                .map(|&i| sub_slice_done[i].as_slice())
+                .collect();
+            let sel_bytes: Vec<&[usize]> = verdict
+                .selected
+                .iter()
+                .map(|&i| sub_slice_bytes[i].as_slice())
+                .collect();
+            let shard_round =
+                self.shard_set.aggregate_round(&selected_payloads, &sel_arrivals, &sel_bytes)?;
+            for (t_agg, ev) in ShardSet::round_events(&shard_round) {
+                sched2.schedule_at(t_agg, ev);
+            }
+            // Publish each shard's round record to its bucket (what
+            // peers poll in a real multi-coordinator deployment).
+            for lane in &shard_round.lanes {
+                let record = serde_json::json!({
+                    "chunks": [lane.chunk0, lane.chunk1],
+                    "selected": verdict.selected.len(),
+                    "ready_at": lane.ready_at,
+                    "bytes": lane.bytes,
+                });
+                self.store.put(
+                    &format!("shard-{}", lane.shard),
+                    &format!("round-{round}/agg.json"),
+                    record.to_string().into_bytes(),
+                )?;
+            }
             self.global_params =
-                ops::outer_step(self.eng, &global_snapshot, &delta, alpha as f32)?;
+                ops::outer_step(self.eng, &global_snapshot, &shard_round.delta, alpha as f32)?;
             let selected_bytes: Vec<usize> =
                 verdict.selected.iter().map(|&i| submissions[i].wire_bytes).collect();
             let total_sel: usize = selected_bytes.iter().sum();
             // Barrier mode treats selection as instantaneous at the
             // nominal compute end (the historical model, pinned by the
             // equivalence test); overlap mode publishes the aggregate
-            // once the slowest *selected* upload has landed.
+            // once every shard has aggregated — i.e. once the slowest
+            // *selected* slice has landed (with one shard: the slowest
+            // selected upload, the historical condition bit for bit).
             let download_start = if overlap {
-                verdict
-                    .selected
-                    .iter()
-                    .map(|&i| submissions[i].uploaded_at)
-                    .fold(compute_end, f64::max)
+                compute_end.max(shard_round.applied_at)
             } else {
                 compute_end
             };
             // Downloads: every peer pulls every selected payload but its own.
+            let mut submitted = vec![false; n_peers];
+            for &slot_i in &lane_of_submission {
+                submitted[slot_i] = true;
+            }
             for (si, slot) in self.peers.iter_mut().enumerate() {
                 let own: usize = verdict
                     .selected
@@ -750,14 +911,19 @@ impl<'e> Network<'e> {
                 // Barrier: comm ends when the slowest submitter has
                 // downloaded; overlap hides downloads behind the next
                 // round's compute (they land in `ready_at` instead).
-                if !overlap && si < submissions.len() {
+                if !overlap && submitted[si] {
                     t_comm_end = t_comm_end.max(done);
                 }
             }
+            // The cross-shard barrier: the aggregate is not published
+            // before every shard has aggregated. Identical to the old
+            // max-over-selected-uploads fold, because a submission's
+            // upload completes exactly when its last slice lands.
+            t_comm_end = t_comm_end.max(shard_round.applied_at);
             for &i in &verdict.selected {
-                t_comm_end = t_comm_end.max(submissions[i].uploaded_at);
                 bytes_up += submissions[i].wire_bytes as u64;
             }
+            shard_lanes = shard_round.lanes;
         }
         if !overlap {
             // Barrier-synchronous collection: the round stays open until
@@ -878,6 +1044,7 @@ impl<'e> Network<'e> {
             outer_alpha: alpha,
             rejections,
             lanes,
+            shard_lanes,
         };
         self.reports.push(report.clone());
         self.round += 1;

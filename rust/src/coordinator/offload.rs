@@ -32,9 +32,13 @@ pub enum Phase {
 /// Heavy sharded states tracked by the manager.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum StateKind {
+    /// The parameter shard (always resident).
     Params,
+    /// Gradient shard (compute phase only).
     Grads,
-    InnerOpt, // AdamW m+v (2x params)
+    /// Inner AdamW moments m+v (2x params).
+    InnerOpt,
+    /// SparseLoCo error-feedback buffer (communicate phase only).
     ErrorFeedback,
 }
 
@@ -43,10 +47,12 @@ pub enum StateKind {
 pub struct OffloadManager {
     /// Bytes of one full f32 copy of the flat parameter vector, per shard.
     pub shard_param_bytes: usize,
+    /// Current round phase.
     pub phase: Phase,
     resident: Vec<StateKind>,
-    /// Host<->device traffic accounting (bytes).
+    /// Device->host traffic (bytes offloaded).
     pub bytes_offloaded: u64,
+    /// Host->device traffic (bytes prefetched).
     pub bytes_prefetched: u64,
     /// Number of swaps performed (2 per round in steady state).
     pub swaps: u64,
@@ -74,6 +80,7 @@ impl OffloadManager {
         }
     }
 
+    /// Whether `s` is currently on-GPU for this shard.
     pub fn is_resident(&self, s: StateKind) -> bool {
         self.resident.contains(&s)
     }

@@ -1,0 +1,496 @@
+//! Multi-coordinator sharding: the flat parameter vector split into
+//! contiguous *chunk-range shards*, each owned by a [`ShardCoordinator`]
+//! that scatters its disjoint range of the round delta and keeps
+//! selected-set/byte accounting. Peers wire-encode one payload slice
+//! per shard and store them under shard-scoped keys in their own
+//! buckets (the surface a deployed shard would gather from — this
+//! sim's shards aggregate the in-memory payloads directly); each shard
+//! publishes its round record to its own `shard-{s}` bucket. This
+//! is the first concrete step toward the paper's 72B-scale
+//! serving story (one coordinator object cannot own a 72B flat vector):
+//! IOTA-style orchestration sharding over the unit this codebase already
+//! aggregates in parallel — chunk ranges.
+//!
+//! ## The shard invariant (bitwise reproducibility)
+//!
+//! Shards own **disjoint, contiguous chunk ranges** that exactly cover
+//! `[0, n_chunks)`. Within each chunk, selected payload slices are
+//! accumulated in **submission order** — the identical per-position
+//! operation sequence as the unsharded
+//! [`aggregate`](super::aggregator::aggregate) scatter. Median-norm
+//! weights are computed **globally** from full-payload norms (norm
+//! metadata is a handful of bytes per payload; shards exchange it before
+//! aggregating — computing weights per-slice would change them). Together
+//! these make the stitched sharded aggregate **bit-identical** to the
+//! unsharded aggregate for *any* shard count, which is what lets the
+//! single-coordinator path be the `n_shards = 1` degenerate case instead
+//! of a separate implementation (`tests/shard_parity.rs` pins both).
+//!
+//! ## Cross-shard outer-step barrier
+//!
+//! Each shard's aggregation becomes *ready* when the last selected slice
+//! for its chunk range has arrived ([`Event::ShardAggregated`] on the
+//! event spine). The outer step applies only at the **maximum** of the
+//! shard ready times — a late shard holds the round exactly like a late
+//! upload does in the single-coordinator path. (With one shard the
+//! barrier degenerates to "the last selected upload landed", the
+//! historical round-turnover condition.)
+
+use std::ops::Range;
+
+use rayon::prelude::*;
+
+use anyhow::{ensure, Context, Result};
+
+use super::aggregator::{aggregate_weighted_range_into, median_norm_weights, PAR_MIN_UNITS};
+use crate::netsim::sched::Event;
+use crate::sparseloco::Payload;
+
+/// One shard's geometry: a contiguous chunk range `[chunk0, chunk1)` of
+/// the flat parameter vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Shard index (position in the [`ShardSet`]).
+    pub index: usize,
+    /// First chunk owned by this shard (inclusive).
+    pub chunk0: usize,
+    /// One past the last chunk owned by this shard (exclusive).
+    pub chunk1: usize,
+    /// Elements per chunk (the manifest's chunk size).
+    pub chunk: usize,
+}
+
+impl ShardSpec {
+    /// Number of chunks in this shard's range.
+    pub fn n_chunks(&self) -> usize {
+        self.chunk1 - self.chunk0
+    }
+
+    /// Dense element range this shard owns in the flat vector.
+    pub fn dense_range(&self) -> Range<usize> {
+        self.chunk0 * self.chunk..self.chunk1 * self.chunk
+    }
+
+    /// Dense length of this shard's slice.
+    pub fn dense_len(&self) -> usize {
+        self.n_chunks() * self.chunk
+    }
+
+    /// Whether this shard covers the whole vector (the `n_shards = 1`
+    /// degenerate case — slicing can be skipped entirely).
+    pub fn covers_all(&self, n_chunks: usize) -> bool {
+        self.chunk0 == 0 && self.chunk1 == n_chunks
+    }
+}
+
+/// Split `n_chunks` chunks into `n_shards` contiguous ranges. The first
+/// `n_chunks % n_shards` shards take one extra chunk, so range lengths
+/// differ by at most one and every shard is non-empty. `n_shards` is
+/// clamped to `[1, n_chunks]` — more coordinators than chunks would
+/// leave some with nothing to own.
+pub fn shard_chunk_ranges(n_chunks: usize, n_shards: usize) -> Vec<(usize, usize)> {
+    assert!(n_chunks > 0, "cannot shard zero chunks");
+    let n = n_shards.clamp(1, n_chunks);
+    let base = n_chunks / n;
+    let extra = n_chunks % n;
+    let mut out = Vec::with_capacity(n);
+    let mut start = 0;
+    for s in 0..n {
+        let len = base + usize::from(s < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    debug_assert_eq!(start, n_chunks);
+    out
+}
+
+/// One coordinator shard: owns a contiguous chunk range of the flat
+/// parameter vector and the accounting for its selected-slice set. The
+/// slices themselves live in the object store (peers upload them under
+/// shard-scoped keys) and the shard's delta lands directly in its
+/// disjoint range of the stitched output buffer — aggregation is
+/// **zero-copy** over the borrowed full payloads
+/// ([`aggregate_weighted_range_into`]): no per-round slice clones or
+/// stitch memcpys on the coordinator-side hot path.
+///
+/// [`aggregate_weighted_range_into`]: super::aggregator::aggregate_weighted_range_into
+#[derive(Debug)]
+pub struct ShardCoordinator {
+    /// The chunk range this shard owns.
+    pub spec: ShardSpec,
+    /// Virtual time the last round's aggregation became ready (all
+    /// selected slices for this range had arrived).
+    pub ready_at: f64,
+    /// Payloads in the most recent aggregation (the selected-slice set
+    /// size).
+    pub selected: usize,
+    /// Rounds this shard has aggregated.
+    pub rounds_aggregated: usize,
+    /// Total selected-slice wire bytes received across the run.
+    pub bytes_received: u64,
+}
+
+impl ShardCoordinator {
+    /// A fresh coordinator for `spec`.
+    pub fn new(spec: ShardSpec) -> Self {
+        Self { spec, ready_at: 0.0, selected: 0, rounds_aggregated: 0, bytes_received: 0 }
+    }
+
+    /// Aggregate this round's selected payloads over the shard's chunk
+    /// range with the *globally computed* median-norm weights, directly
+    /// into `out` — the shard's disjoint slice of the round's dense
+    /// delta (`out.len() == self.spec.dense_len()`). The accumulation
+    /// order per chunk is payload-minor — identical to the unsharded
+    /// scatter — and the scatter reads the borrowed full payloads
+    /// (no slicing, no copies).
+    pub fn aggregate_into(
+        &mut self,
+        out: &mut [f32],
+        payloads: &[&Payload],
+        weights: &[f32],
+    ) -> Result<()> {
+        aggregate_weighted_range_into(out, payloads, weights, self.spec.chunk0, self.spec.chunk1)
+            .with_context(|| format!("aggregating shard {}", self.spec.index))?;
+        self.selected = payloads.len();
+        self.rounds_aggregated += 1;
+        Ok(())
+    }
+}
+
+/// One shard's per-round timing/byte record (the per-shard analogue of
+/// [`PeerLane`](super::network::PeerLane); feeds the timeline renderer).
+#[derive(Debug, Clone)]
+pub struct ShardLane {
+    /// Shard index.
+    pub shard: usize,
+    /// First chunk of the shard's range.
+    pub chunk0: usize,
+    /// One past the last chunk of the shard's range.
+    pub chunk1: usize,
+    /// Virtual time the last selected slice for this shard arrived —
+    /// when the shard's aggregation became ready.
+    pub ready_at: f64,
+    /// Virtual time the outer step applied: the cross-shard barrier,
+    /// `max` of every shard's `ready_at` (identical across lanes).
+    pub applied_at: f64,
+    /// Selected-slice wire bytes this shard received this round.
+    pub bytes: u64,
+}
+
+/// The result of one sharded aggregation round.
+#[derive(Debug)]
+pub struct ShardRound {
+    /// The stitched dense delta (bit-identical to the unsharded
+    /// [`aggregate`](super::aggregator::aggregate) of the same payloads).
+    pub delta: Vec<f32>,
+    /// Per-shard timing/byte lanes, in shard order.
+    pub lanes: Vec<ShardLane>,
+    /// The cross-shard barrier time: `max` over shards of `ready_at`.
+    /// The outer step applies here and not a moment earlier.
+    pub applied_at: f64,
+}
+
+/// The full set of shard coordinators covering the flat vector with
+/// disjoint contiguous chunk ranges. `n_shards = 1` is the degenerate
+/// single-coordinator case.
+#[derive(Debug)]
+pub struct ShardSet {
+    shards: Vec<ShardCoordinator>,
+    /// Elements per chunk.
+    chunk: usize,
+    /// Total chunks across all shards.
+    n_chunks: usize,
+}
+
+impl ShardSet {
+    /// Split `n_chunks` chunks of `chunk` elements across `n_shards`
+    /// coordinators (clamped to `[1, n_chunks]`; see
+    /// [`shard_chunk_ranges`]).
+    pub fn new(n_chunks: usize, chunk: usize, n_shards: usize) -> Result<Self> {
+        ensure!(n_chunks > 0 && chunk > 0, "bad shard geometry ({n_chunks} x {chunk})");
+        let shards = shard_chunk_ranges(n_chunks, n_shards)
+            .into_iter()
+            .enumerate()
+            .map(|(index, (chunk0, chunk1))| {
+                ShardCoordinator::new(ShardSpec { index, chunk0, chunk1, chunk })
+            })
+            .collect();
+        Ok(Self { shards, chunk, n_chunks })
+    }
+
+    /// Number of shard coordinators (after clamping).
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard geometries, in shard order.
+    pub fn specs(&self) -> Vec<ShardSpec> {
+        self.shards.iter().map(|s| s.spec).collect()
+    }
+
+    /// The shard coordinators, in shard order.
+    pub fn shards(&self) -> &[ShardCoordinator] {
+        &self.shards
+    }
+
+    /// Aggregate the selected payloads across all shards — the math-only
+    /// core (no timing): compute **global** median-norm weights from
+    /// full-payload norms, split one output buffer into the shards'
+    /// disjoint dense ranges, and fan the per-shard range scatters out
+    /// across the rayon pool (each writes its own range in place — no
+    /// stitch copy). Bit-identical to the unsharded
+    /// [`aggregate`](super::aggregator::aggregate) for any shard count
+    /// (`tests/shard_parity.rs`).
+    pub fn aggregate_selected(&mut self, payloads: &[&Payload]) -> Result<Vec<f32>> {
+        ensure!(!payloads.is_empty(), "no payloads to aggregate");
+        for p in payloads {
+            ensure!(
+                p.n_chunks == self.n_chunks && p.chunk == self.chunk,
+                "payload geometry ({} x {}) does not match shard set ({} x {})",
+                p.n_chunks,
+                p.chunk,
+                self.n_chunks,
+                self.chunk
+            );
+        }
+        let weights = median_norm_weights(payloads);
+        let mut delta = vec![0f32; self.n_chunks * self.chunk];
+        // Disjoint per-shard output ranges, in shard order.
+        let mut parts: Vec<&mut [f32]> = Vec::with_capacity(self.shards.len());
+        let mut rest: &mut [f32] = &mut delta;
+        for sh in &self.shards {
+            let (head, tail) = std::mem::take(&mut rest).split_at_mut(sh.spec.dense_len());
+            parts.push(head);
+            rest = tail;
+        }
+        if self.n_chunks * payloads.len() >= PAR_MIN_UNITS && self.shards.len() > 1 {
+            self.shards
+                .par_iter_mut()
+                .zip(parts)
+                .try_for_each(|(sh, out)| sh.aggregate_into(out, payloads, &weights))?;
+        } else {
+            for (sh, out) in self.shards.iter_mut().zip(parts) {
+                sh.aggregate_into(out, payloads, &weights)?;
+            }
+        }
+        Ok(delta)
+    }
+
+    /// One full sharded aggregation round: [`Self::aggregate_selected`]
+    /// plus the timing layer. `arrivals[i][s]` is the virtual time
+    /// payload `i`'s slice for shard `s` finished uploading, and
+    /// `slice_bytes[i][s]` its wire size; both are in submission order,
+    /// matching `payloads`. Each shard becomes ready at the max arrival
+    /// over its selected slices; the outer step applies at the max over
+    /// shards (the cross-shard barrier).
+    pub fn aggregate_round(
+        &mut self,
+        payloads: &[&Payload],
+        arrivals: &[&[f64]],
+        slice_bytes: &[&[usize]],
+    ) -> Result<ShardRound> {
+        ensure!(
+            arrivals.len() == payloads.len() && slice_bytes.len() == payloads.len(),
+            "arrivals/slice_bytes must align with payloads"
+        );
+        let n = self.shards.len();
+        for (a, b) in arrivals.iter().zip(slice_bytes) {
+            ensure!(
+                a.len() == n && b.len() == n,
+                "per-payload slice vectors must have one entry per shard"
+            );
+        }
+        let delta = self.aggregate_selected(payloads)?;
+        let mut lanes = Vec::with_capacity(n);
+        let mut applied_at = f64::NEG_INFINITY;
+        for (s, sh) in self.shards.iter_mut().enumerate() {
+            let ready_at = arrivals.iter().map(|a| a[s]).fold(f64::NEG_INFINITY, f64::max);
+            let bytes: u64 = slice_bytes.iter().map(|b| b[s] as u64).sum();
+            sh.ready_at = ready_at;
+            sh.bytes_received += bytes;
+            applied_at = applied_at.max(ready_at);
+            lanes.push(ShardLane {
+                shard: s,
+                chunk0: sh.spec.chunk0,
+                chunk1: sh.spec.chunk1,
+                ready_at,
+                applied_at: 0.0, // filled below once the barrier is known
+                bytes,
+            });
+        }
+        for l in &mut lanes {
+            l.applied_at = applied_at;
+        }
+        Ok(ShardRound { delta, lanes, applied_at })
+    }
+
+    /// The `ShardAggregated` events for a completed round, in shard
+    /// order (the round engine schedules these on its event spine).
+    pub fn round_events(round: &ShardRound) -> Vec<(f64, Event)> {
+        round
+            .lanes
+            .iter()
+            .map(|l| (l.ready_at, Event::ShardAggregated { shard: l.shard }))
+            .collect()
+    }
+}
+
+/// The multi-coordinator network facade: a [`Network`] whose aggregation
+/// layer runs through a [`ShardSet`] (every `Network` does — the
+/// single-coordinator path *is* the `n_shards = 1` degenerate case),
+/// plus per-shard observability. Construct with an explicit shard count
+/// to override whatever `RunConfig::n_shards` says.
+///
+/// [`Network`]: super::network::Network
+pub struct ShardedNetwork<'e> {
+    /// The underlying network (peers, churn, validator, event spine).
+    pub net: super::network::Network<'e>,
+}
+
+impl<'e> ShardedNetwork<'e> {
+    /// Build a sharded network with `n_shards` coordinator shards
+    /// (overrides `p.run.n_shards`).
+    pub fn new(
+        eng: &'e crate::runtime::Engine,
+        mut p: super::network::NetworkParams,
+        n_shards: usize,
+    ) -> Result<Self> {
+        p.run.n_shards = n_shards;
+        Ok(Self { net: super::network::Network::new(eng, p)? })
+    }
+
+    /// Run one outer round (delegates to the inner network; the shard
+    /// drive happens inside the round's event spine).
+    pub fn run_round(&mut self) -> Result<super::network::RoundReport> {
+        self.net.run_round()
+    }
+
+    /// Number of coordinator shards.
+    pub fn n_shards(&self) -> usize {
+        self.net.shard_set.n_shards()
+    }
+
+    /// The shard coordinators, in shard order.
+    pub fn shards(&self) -> &[ShardCoordinator] {
+        self.net.shard_set.shards()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparseloco::topk::compress_dense;
+    use crate::util::rng::Rng;
+
+    fn payload(seed: u64, n_chunks: usize, chunk: usize) -> Payload {
+        let mut rng = Rng::new(seed);
+        let dense: Vec<f32> =
+            (0..n_chunks * chunk).map(|_| rng.normal() as f32 * 0.01).collect();
+        compress_dense(&dense, chunk, 8usize.min(chunk))
+    }
+
+    #[test]
+    fn ranges_cover_exactly_and_contiguously() {
+        for (n_chunks, n_shards) in
+            [(7, 3), (12, 5), (1, 1), (5, 5), (100, 7), (3, 10), (64, 64)]
+        {
+            let r = shard_chunk_ranges(n_chunks, n_shards);
+            assert_eq!(r.len(), n_shards.clamp(1, n_chunks));
+            assert_eq!(r[0].0, 0);
+            assert_eq!(r.last().unwrap().1, n_chunks);
+            for w in r.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous: {r:?}");
+            }
+            for &(a, b) in &r {
+                assert!(b > a, "every shard non-empty: {r:?}");
+            }
+            // lengths differ by at most one, big shards first
+            let lens: Vec<usize> = r.iter().map(|&(a, b)| b - a).collect();
+            let (min, max) =
+                (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(max - min <= 1, "balanced: {lens:?}");
+            assert!(lens.windows(2).all(|w| w[0] >= w[1]), "extras first: {lens:?}");
+        }
+    }
+
+    #[test]
+    fn uneven_split_distributes_remainder() {
+        // 7 chunks over 3 shards: 3 + 2 + 2.
+        assert_eq!(shard_chunk_ranges(7, 3), vec![(0, 3), (3, 5), (5, 7)]);
+        // one-chunk shards appear when n_shards == n_chunks
+        assert_eq!(shard_chunk_ranges(3, 3), vec![(0, 1), (1, 2), (2, 3)]);
+    }
+
+    #[test]
+    fn more_shards_than_chunks_clamps() {
+        let s = ShardSet::new(3, 64, 10).unwrap();
+        assert_eq!(s.n_shards(), 3, "clamped to one chunk per shard");
+        assert!(s.specs().iter().all(|sp| sp.n_chunks() == 1));
+        let s = ShardSet::new(4, 64, 0).unwrap();
+        assert_eq!(s.n_shards(), 1, "zero clamps up to one coordinator");
+    }
+
+    #[test]
+    fn single_shard_covers_all() {
+        let s = ShardSet::new(9, 32, 1).unwrap();
+        let sp = s.specs()[0];
+        assert!(sp.covers_all(9));
+        assert_eq!(sp.dense_range(), 0..9 * 32);
+    }
+
+    #[test]
+    fn sharded_aggregate_bitwise_matches_unsharded() {
+        // The acceptance-criteria invariant at unit scope (the full-run
+        // version lives in tests/shard_parity.rs): for several shard
+        // counts, incl. uneven splits and 1-chunk shards, the stitched
+        // delta equals the unsharded aggregate bit for bit.
+        for &(n_chunks, chunk) in &[(7usize, 64usize), (12, 32), (5, 16)] {
+            let payloads: Vec<Payload> =
+                (0..6).map(|i| payload(0xA0 + i, n_chunks, chunk)).collect();
+            let refs: Vec<&Payload> = payloads.iter().collect();
+            let unsharded =
+                super::super::aggregator::aggregate(&refs, n_chunks * chunk).unwrap();
+            for n_shards in [1usize, 2, 3, 5, n_chunks] {
+                let mut set = ShardSet::new(n_chunks, chunk, n_shards).unwrap();
+                let sharded = set.aggregate_selected(&refs).unwrap();
+                assert_eq!(
+                    sharded, unsharded,
+                    "n_shards={n_shards} over {n_chunks}x{chunk}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn barrier_is_max_of_ready_times() {
+        let payloads: Vec<Payload> = (0..3).map(|i| payload(i, 6, 16)).collect();
+        let refs: Vec<&Payload> = payloads.iter().collect();
+        let mut set = ShardSet::new(6, 16, 2).unwrap();
+        // payload 1's slice for shard 1 is the straggler
+        let arrivals: Vec<Vec<f64>> = vec![vec![10.0, 11.0], vec![10.5, 99.0], vec![9.0, 12.0]];
+        let bytes: Vec<Vec<usize>> = vec![vec![100, 120]; 3];
+        let ar: Vec<&[f64]> = arrivals.iter().map(|a| a.as_slice()).collect();
+        let br: Vec<&[usize]> = bytes.iter().map(|b| b.as_slice()).collect();
+        let round = set.aggregate_round(&refs, &ar, &br).unwrap();
+        assert_eq!(round.lanes[0].ready_at, 10.5);
+        assert_eq!(round.lanes[1].ready_at, 99.0, "late slice holds its shard");
+        assert_eq!(round.applied_at, 99.0, "outer step waits for every shard");
+        assert!(round.lanes.iter().all(|l| l.applied_at == 99.0));
+        assert_eq!(round.lanes[0].bytes, 300);
+        let evs = ShardSet::round_events(&round);
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[1], (99.0, Event::ShardAggregated { shard: 1 }));
+        // persistent per-shard state advanced
+        assert_eq!(set.shards()[1].ready_at, 99.0);
+        assert_eq!(set.shards()[0].rounds_aggregated, 1);
+        assert_eq!(set.shards()[0].selected, 3);
+    }
+
+    #[test]
+    fn geometry_mismatch_rejected() {
+        let p = payload(1, 4, 64);
+        let mut set = ShardSet::new(8, 64, 2).unwrap();
+        assert!(set.aggregate_selected(&[&p]).is_err());
+        assert!(set.aggregate_selected(&[]).is_err());
+    }
+}

@@ -15,7 +15,15 @@
 //! rayon pool, then merges deterministically — parallel and serial
 //! rounds produce byte-identical global models (per-peer RNGs are seeded
 //! from (run seed, hotkey, round); aggregation accumulates in submission
-//! order within disjoint chunk ranges). Simulated *time* runs on a
+//! order within disjoint chunk ranges). The coordinator itself is
+//! *sharded* ([`coordinator::shard`]): the flat parameter vector splits
+//! into contiguous chunk-range shards, each owned by a
+//! `ShardCoordinator` with its own aggregation bucket, and the outer
+//! step applies at a cross-shard barrier. The shard invariant — disjoint
+//! chunk ranges, fixed accumulation order, globally shared median-norm
+//! weights — makes the sharded aggregate bitwise identical to the
+//! unsharded one at every shard count, so the single-coordinator path
+//! is just `n_shards = 1` (`tests/shard_parity.rs`). Simulated *time* runs on a
 //! discrete-event spine ([`netsim::sched`]): per-peer compute durations
 //! ([`netsim::compute_model`] hardware tiers), FIFO link transfers,
 //! deadline cuts and chain blocks are typed events on a binary heap, so

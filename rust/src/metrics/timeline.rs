@@ -11,8 +11,14 @@
 //!   is where heterogeneity and the Fig.-1 overlap trick become visible:
 //!   stragglers' `#` runs past the deadline column (`|`), and with overlap
 //!   enabled upload/download tails extend past the round boundary.
+//! * **Shard lanes** ([`render_shard_lanes_ascii`]) — one row per
+//!   *coordinator shard* within a round, drawn from
+//!   [`ShardLane`]: the gather window (`g`, nominal compute end to the
+//!   shard's aggregation-ready time) and the cross-shard barrier column
+//!   (`B`) where the outer step applied. A shard whose `g` run stretches
+//!   to the barrier is the round's critical shard.
 
-use crate::coordinator::{PeerLane, RoundReport};
+use crate::coordinator::{PeerLane, RoundReport, ShardLane};
 
 /// One rendered timeline row.
 #[derive(Debug, Clone)]
@@ -159,6 +165,57 @@ pub fn render_lanes_ascii(rep: &RoundReport, width: usize) -> String {
     out
 }
 
+/// Per-coordinator-shard lane rendering of one round: `g` is the
+/// shard's gather window (from the nominal compute end until its last
+/// selected slice arrived and aggregation became ready), `B` the
+/// cross-shard barrier column where the outer step applied (identical
+/// for every shard — that's the barrier). Rows are annotated with the
+/// shard's chunk range and received bytes. Empty string when the round
+/// selected nothing (no shard aggregated).
+pub fn render_shard_lanes_ascii(rep: &RoundReport, width: usize) -> String {
+    if rep.shard_lanes.is_empty() || width == 0 {
+        return String::new();
+    }
+    let t0 = rep.t_start;
+    // The barrier is identical across lanes by construction (it is the
+    // max of every shard's ready time).
+    let barrier = rep.shard_lanes[0].applied_at;
+    let mut t1 = rep.t_comm_end;
+    if barrier.is_finite() {
+        t1 = t1.max(barrier);
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "round {} [{:.0}s..{:.0}s]  g gather  B outer-step barrier\n",
+        rep.round, t0, t1
+    ));
+    for l in &rep.shard_lanes {
+        let mut row = vec!['.'; width];
+        if l.ready_at.is_finite() {
+            // A shard that became ready *before* the nominal compute end
+            // (all its selected peers were fast-tier) still gets a
+            // visible one-cell gather mark at its ready time.
+            let a = rep.t_compute_end.min(l.ready_at);
+            let b = l.ready_at.max(a + (t1 - t0) / width as f64);
+            paint(&mut row, t0, t1, a, b, 'g');
+        }
+        if t1 > t0 && barrier.is_finite() && barrier >= t0 {
+            let b = (((barrier - t0) / (t1 - t0) * width as f64) as usize).min(width - 1);
+            row[b] = 'B';
+        }
+        out.push_str(&format!(
+            "shard {:<3} chunks [{:>4}, {:>4}) |{}| {:>9} B ready {:>8.1}s\n",
+            l.shard,
+            l.chunk0,
+            l.chunk1,
+            row.iter().collect::<String>(),
+            l.bytes,
+            l.ready_at,
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -257,6 +314,24 @@ mod tests {
                     late: true,
                 },
             ],
+            shard_lanes: vec![
+                ShardLane {
+                    shard: 0,
+                    chunk0: 0,
+                    chunk1: 3,
+                    ready_at: 104.0,
+                    applied_at: 107.0,
+                    bytes: 1200,
+                },
+                ShardLane {
+                    shard: 1,
+                    chunk0: 3,
+                    chunk1: 5,
+                    ready_at: 107.0,
+                    applied_at: 107.0,
+                    bytes: 900,
+                },
+            ],
         }
     }
 
@@ -284,5 +359,29 @@ mod tests {
         rep.lanes.clear();
         assert_eq!(render_lanes_ascii(&rep, 60), "");
         assert_eq!(render_lanes_ascii(&lane_report(), 0), "");
+    }
+
+    #[test]
+    fn shard_lanes_render_gather_and_barrier() {
+        let rep = lane_report();
+        let s = render_shard_lanes_ascii(&rep, 60);
+        assert_eq!(s.lines().count(), 3, "header + 2 shard lanes");
+        let body: Vec<&str> = s.lines().skip(1).collect();
+        // every shard row shows its chunk range and the barrier column
+        assert!(body[0].contains("chunks [   0,    3)"));
+        assert!(body[1].contains("chunks [   3,    5)"));
+        assert!(body.iter().all(|r| r.contains('B')), "barrier in every row: {s}");
+        // the early shard's gather ends before the barrier; the critical
+        // shard's gather run reaches it
+        assert!(body[0].contains('g') && body[1].contains('g'));
+        assert!(body[0].contains("1200 B"));
+    }
+
+    #[test]
+    fn shard_lanes_empty_when_nothing_selected() {
+        let mut rep = lane_report();
+        rep.shard_lanes.clear();
+        assert_eq!(render_shard_lanes_ascii(&rep, 60), "");
+        assert_eq!(render_shard_lanes_ascii(&lane_report(), 0), "");
     }
 }

@@ -24,6 +24,7 @@ pub struct VirtualClock {
 }
 
 impl VirtualClock {
+    /// A fresh clock at t = 0.
     pub fn new() -> Self {
         Self::default()
     }

@@ -70,6 +70,7 @@ impl Default for HeterogeneityConfig {
 #[derive(Debug, Clone)]
 pub struct ComputeModel {
     seed: u64,
+    /// The heterogeneity knobs in effect.
     pub cfg: HeterogeneityConfig,
 }
 
@@ -94,6 +95,7 @@ fn unit(z: u64) -> f64 {
 }
 
 impl ComputeModel {
+    /// A duration model for the given run seed and knobs.
     pub fn new(seed: u64, cfg: HeterogeneityConfig) -> Self {
         Self { seed, cfg }
     }

@@ -23,6 +23,7 @@ pub struct Link {
 }
 
 impl Link {
+    /// An idle link with the given bandwidth and latency floor.
     pub fn new(bps: f64, latency_s: f64) -> Self {
         assert!(bps > 0.0);
         Self { bps, latency_s, busy_until: 0.0, bytes_total: 0 }
@@ -43,6 +44,7 @@ impl Link {
         self.latency_s + bytes as f64 * 8.0 / self.bps
     }
 
+    /// Time at which the link's transfer queue drains.
     pub fn busy_until(&self) -> f64 {
         self.busy_until
     }
@@ -56,11 +58,14 @@ impl Link {
 /// A peer's full connection: uplink + downlink, sharing the virtual clock.
 #[derive(Debug, Clone)]
 pub struct LinkPair {
+    /// Uplink (peer -> object store).
     pub up: Link,
+    /// Downlink (object store -> peer).
     pub down: Link,
 }
 
 impl LinkPair {
+    /// An idle asymmetric connection.
     pub fn new(uplink_bps: f64, downlink_bps: f64, latency_s: f64) -> Self {
         Self {
             up: Link::new(uplink_bps, latency_s),

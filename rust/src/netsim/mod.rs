@@ -16,6 +16,17 @@
 //! stragglers genuinely miss deadlines instead of being assumed away.
 //! [`VirtualClock`] is `Send + Sync` (atomic f64 bit-patterns), so the
 //! clock can be shared with the rayon round loop.
+//!
+//! Under multi-coordinator sharding (`coordinator::shard`) the same
+//! spine carries the shard protocol: per-slice upload completions
+//! ([`Event::ShardUploadDone`]) and per-shard aggregation readiness
+//! ([`Event::ShardAggregated`]) are ordinary events, and the outer step
+//! applies at the cross-shard barrier (the last `ShardAggregated`).
+//! Every timing model here is deterministic, so the sharded rounds stay
+//! bit-reproducible: disjoint chunk ranges + fixed accumulation order
+//! on the coordinator side, pure-hash durations on this side.
+
+#![deny(missing_docs)]
 
 pub mod clock;
 pub mod compute_model;

@@ -27,8 +27,19 @@ pub enum Event {
     /// A peer finished its H inner steps (or, for non-computing
     /// behaviours, reached the end of its fabrication window).
     ComputeDone { peer: usize },
-    /// A peer's payload upload to its bucket completed.
+    /// A peer's payload upload to its bucket completed. Under
+    /// multi-coordinator sharding this is the *final* shard slice
+    /// landing (earlier slices emit `ShardUploadDone`), so with one
+    /// shard the event stream is unchanged.
     UploadDone { peer: usize },
+    /// One shard slice of a peer's payload finished uploading (emitted
+    /// for every slice but the last; `n_shards = 1` rounds never see
+    /// this event).
+    ShardUploadDone { peer: usize, shard: usize },
+    /// A shard coordinator's aggregation became ready: the last selected
+    /// slice for its chunk range had arrived. The outer step applies
+    /// only once every shard has fired this — the cross-shard barrier.
+    ShardAggregated { shard: usize },
     /// A peer finished downloading the round's selected payloads.
     DownloadDone { peer: usize },
     /// The round's upload deadline passed; in-flight stalled uploads are
@@ -122,10 +133,12 @@ impl Scheduler {
         self.heap.peek().map(|e| e.t)
     }
 
+    /// Number of events still queued.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// Whether the queue has drained.
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }

@@ -13,11 +13,33 @@
 
 use anyhow::Result;
 
+use crate::coordinator::shard::ShardSpec;
 use crate::gauntlet::Submission;
 use crate::netsim::ComputeTier;
 use crate::runtime::{ops, Engine};
 use crate::sparseloco::{codec, topk, Payload};
 use crate::util::rng::Rng;
+
+/// Wire-encode a payload as per-coordinator-shard slices, one buffer per
+/// shard in shard order (what the peer actually uploads under
+/// multi-coordinator sharding — each slice lands in the owning shard's
+/// bucket). With a single full-cover shard this is exactly one buffer,
+/// byte-identical to `codec::encode(payload)` — the degenerate
+/// single-coordinator upload. With more shards the total byte count
+/// grows slightly (per-slice headers and sub-byte packing tails): the
+/// real wire cost of sharding, charged to the uplink by the round
+/// engine.
+pub fn encode_payload_slices(payload: &Payload, specs: &[ShardSpec]) -> Result<Vec<Vec<u8>>> {
+    if let [spec] = specs {
+        if spec.covers_all(payload.n_chunks) {
+            return Ok(vec![codec::encode(payload)]);
+        }
+    }
+    specs
+        .iter()
+        .map(|sp| Ok(codec::encode(&payload.slice_chunks(sp.chunk0, sp.chunk1)?)))
+        .collect()
+}
 
 /// Peer behaviour. Adversarial variants exercise Gauntlet's defenses:
 /// copiers are caught by assigned-vs-unassigned LossScore, whales by
@@ -358,6 +380,28 @@ mod tests {
         let sa = a.fabricate_submission(3, None, None, 4, 8, 64, 1.0, 0.0);
         let sb = b.fabricate_submission(3, None, None, 4, 8, 64, 1.0, 0.0);
         assert_eq!(sa.payload, sb.payload);
+    }
+
+    #[test]
+    fn slice_encoding_degenerate_and_sharded() {
+        use crate::coordinator::shard::ShardSet;
+        let p = topk::compress_dense(&[0.01f32; 256], 64, 8); // 4 chunks
+        // single full-cover shard: byte-identical to the plain encode
+        let one = ShardSet::new(4, 64, 1).unwrap();
+        let slices = encode_payload_slices(&p, &one.specs()).unwrap();
+        assert_eq!(slices, vec![codec::encode(&p)]);
+        // three shards: each slice decodes back to its chunk range, and
+        // the total wire cost strictly exceeds the unsharded encode
+        // (per-slice headers — the price of sharding)
+        let three = ShardSet::new(4, 64, 3).unwrap();
+        let slices = encode_payload_slices(&p, &three.specs()).unwrap();
+        assert_eq!(slices.len(), 3);
+        let total: usize = slices.iter().map(Vec::len).sum();
+        assert!(total > codec::encode(&p).len());
+        for (sp, wire) in three.specs().iter().zip(&slices) {
+            let dec = codec::decode(wire).unwrap();
+            assert_eq!(dec, p.slice_chunks(sp.chunk0, sp.chunk1).unwrap());
+        }
     }
 
     #[test]

@@ -109,6 +109,33 @@ impl Payload {
         }
     }
 
+    /// Extract the contiguous chunk range `[chunk0, chunk1)` as a
+    /// standalone payload (the per-shard slice peers upload under
+    /// multi-coordinator sharding). Chunk-local indices are unchanged —
+    /// a slice's chunk `r` is the full payload's chunk `chunk0 + r` —
+    /// so scattering every slice into its shard's dense range
+    /// reproduces the full payload's scatter exactly, value for value.
+    /// A full-cover slice (`0..n_chunks`) is a plain clone, and its wire
+    /// encoding is byte-identical to the unsliced payload's.
+    pub fn slice_chunks(&self, chunk0: usize, chunk1: usize) -> Result<Payload> {
+        ensure!(
+            chunk0 < chunk1 && chunk1 <= self.n_chunks,
+            "chunk slice [{chunk0}, {chunk1}) out of bounds for {} chunks",
+            self.n_chunks
+        );
+        if chunk0 == 0 && chunk1 == self.n_chunks {
+            return Ok(self.clone());
+        }
+        Ok(Payload {
+            n_chunks: chunk1 - chunk0,
+            k: self.k,
+            chunk: self.chunk,
+            idx: self.idx[chunk0 * self.k..chunk1 * self.k].to_vec(),
+            codes: self.codes[chunk0 * self.k..chunk1 * self.k].to_vec(),
+            scales: self.scales[chunk0..chunk1].to_vec(),
+        })
+    }
+
     /// Expand to a fresh dense vector.
     pub fn to_dense(&self) -> Vec<f32> {
         let mut out = vec![0f32; self.dense_len()];
@@ -220,6 +247,30 @@ mod tests {
         assert!(Payload::from_parts(&[0, 1], &[0, 1], &[1.0, 2.0], 2, 8).is_err()); // scales len
         let p = Payload::from_parts(&[0, 1], &[0, 1], &[1.0], 2, 8).unwrap();
         assert_eq!(p.n_chunks, 1);
+    }
+
+    #[test]
+    fn slice_chunks_scatter_matches_full() {
+        let p = sample();
+        let full = p.to_dense();
+        // concatenating the slices' dense expansions reproduces the full
+        // payload's, value for value (the shard invariant's payload leg)
+        for ranges in [vec![(0usize, 1usize), (1, 2)], vec![(0, 2)]] {
+            let mut stitched = Vec::new();
+            for &(a, b) in &ranges {
+                stitched.extend(p.slice_chunks(a, b).unwrap().to_dense());
+            }
+            assert_eq!(stitched, full, "ranges {ranges:?}");
+        }
+        // a full-cover slice is the payload itself
+        assert_eq!(p.slice_chunks(0, 2).unwrap(), p);
+        // slice geometry is standalone-valid
+        let s = p.slice_chunks(1, 2).unwrap();
+        assert!(s.validate(1, 3, 8).is_ok());
+        assert_eq!(s.scales, vec![0.5]);
+        // out-of-range slices rejected
+        assert!(p.slice_chunks(0, 3).is_err());
+        assert!(p.slice_chunks(1, 1).is_err());
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! Multi-coordinator sharding acceptance tests (ISSUE 5):
+//!
+//! 1. **Aggregation parity** — for any shard count (uneven splits,
+//!    1-chunk shards, the full manifest geometry), the stitched sharded
+//!    aggregate is *bitwise identical* to the unsharded
+//!    `coordinator::aggregate` over random payload sets.
+//! 2. **Degenerate round parity** — `n_shards = 1` reproduces the
+//!    unsharded round bit-exactly: a single whole-payload upload per
+//!    peer (the historical `Link` arithmetic), no `ShardUploadDone`
+//!    events, one `ShardAggregated` event at the last selected upload,
+//!    and bit-identical replicated runs.
+//! 3. **Shard-count invariance** — full runs with churn + adversaries
+//!    produce byte-identical global models for `n_shards` in {1, 2, 3,
+//!    5}: sharding changes timings and wire overhead, never the math.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use covenant::config::run::RunConfig;
+use covenant::coordinator::network::{Network, NetworkParams};
+use covenant::coordinator::shard::{ShardSet, ShardedNetwork};
+use covenant::coordinator::{aggregate, aggregator};
+use covenant::netsim::{Event, Link};
+use covenant::runtime::Engine;
+use covenant::sparseloco::{codec, topk, Payload};
+use covenant::train::{OuterAlphaSchedule, Schedule, Segment};
+use covenant::util::rng::Rng;
+
+fn random_payloads(seed: u64, n: usize, n_chunks: usize, chunk: usize) -> Vec<Payload> {
+    (0..n)
+        .map(|i| {
+            let mut rng = Rng::new(seed ^ (i as u64) << 16);
+            // mixed magnitudes so median-norm weights actually dampen
+            let mag = if i % 3 == 0 { 0.5 } else { 0.01 };
+            let dense: Vec<f32> =
+                (0..n_chunks * chunk).map(|_| rng.normal() as f32 * mag).collect();
+            topk::compress_dense(&dense, chunk, 8usize.min(chunk))
+        })
+        .collect()
+}
+
+#[test]
+fn sharded_aggregate_bitwise_equals_unsharded_over_random_payload_sets() {
+    for trial in 0..10u64 {
+        let (n_chunks, chunk, n) = match trial % 3 {
+            0 => (7, 64, 5),   // uneven split for every shard count below
+            1 => (12, 32, 3),  // divisible by 2 and 3, not 5
+            _ => (5, 16, 8),   // 1-chunk shards at n_shards = 5
+        };
+        let payloads = random_payloads(0xA11CE ^ trial, n, n_chunks, chunk);
+        let refs: Vec<&Payload> = payloads.iter().collect();
+        let unsharded = aggregate(&refs, n_chunks * chunk).unwrap();
+        for n_shards in [1usize, 2, 3, 5] {
+            let mut set = ShardSet::new(n_chunks, chunk, n_shards).unwrap();
+            let sharded = set.aggregate_selected(&refs).unwrap();
+            assert_eq!(
+                sharded.len(),
+                unsharded.len(),
+                "trial {trial} n_shards {n_shards}"
+            );
+            // bitwise, not approximate: identical accumulation order
+            for (i, (a, b)) in sharded.iter().zip(&unsharded).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "trial {trial} n_shards {n_shards} position {i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn per_slice_weights_would_diverge_so_weights_must_be_global() {
+    // Negative control for the invariant's weight leg: computing
+    // median-norm weights from *slice* norms instead of full-payload
+    // norms produces a different aggregate — the cross-shard norm
+    // exchange is load-bearing, not a formality.
+    let payloads = random_payloads(0xBAD, 5, 8, 32);
+    let refs: Vec<&Payload> = payloads.iter().collect();
+    let global = aggregate(&refs, 8 * 32).unwrap();
+    let mut sliced_weights = Vec::new();
+    for (a, b) in [(0usize, 4usize), (4, 8)] {
+        let slices: Vec<Payload> =
+            refs.iter().map(|p| p.slice_chunks(a, b).unwrap()).collect();
+        let srefs: Vec<&Payload> = slices.iter().collect();
+        let w = aggregator::median_norm_weights(&srefs);
+        let part = aggregator::aggregate_weighted(&srefs, &w, (b - a) * 32).unwrap();
+        sliced_weights.extend(part);
+    }
+    assert_eq!(sliced_weights.len(), global.len());
+    assert!(
+        sliced_weights.iter().zip(&global).any(|(a, b)| a.to_bits() != b.to_bits()),
+        "slice-local weights happened to match global ones; pick payloads \
+         with more norm spread"
+    );
+}
+
+fn build_params(seed: u64, peers: usize, adversarial: f64) -> NetworkParams {
+    let mut run = RunConfig::default();
+    run.artifacts = "artifacts/tiny".into();
+    run.max_contributors = peers;
+    run.target_active = peers;
+    run.seed = seed;
+    let mut p = NetworkParams::quick(run, 4, 10);
+    p.initial_peers = peers;
+    p.churn.p_adversarial = adversarial;
+    p.churn.p_leave = 0.0;
+    p.p_slow_upload = 0.0;
+    p.schedule = Schedule::new(vec![Segment::Constant { lr: 2e-3, steps: 1 << 20 }]);
+    p.alpha = OuterAlphaSchedule::scaled(1.0, 4);
+    p
+}
+
+#[test]
+fn n_shards_one_reproduces_the_unsharded_round_bit_exactly() {
+    let eng = Engine::new("artifacts/tiny").unwrap();
+    let man = eng.manifest().clone();
+    let peers = 4usize;
+    let rounds = 3usize;
+    let p = build_params(0x51, peers, 0.0);
+    assert_eq!(p.run.n_shards, 1, "single coordinator is the default");
+    let window = p.run.network.compute_window_s;
+    let (up_bps, lat) = (p.run.network.uplink_bps, p.run.network.latency_s);
+    let wb = codec::wire_size(man.n_chunks, man.config.topk);
+
+    let mut net = Network::new(&eng, p).unwrap();
+    let mut t_start = 0.0f64;
+    for _ in 0..rounds {
+        let rep = net.run_round().unwrap();
+        assert_eq!(rep.contributing, peers, "{:?}", rep.rejections);
+        // The historical single-coordinator arithmetic: one upload of
+        // the *whole* wire payload per peer, charged from the barrier.
+        let compute_end = t_start + window;
+        let up_done = Link::new(up_bps, lat).transfer(compute_end, wb);
+        for lane in &rep.lanes {
+            let (_, ue) = lane.upload.expect("every peer uploaded");
+            assert_eq!(ue.to_bits(), up_done.to_bits(), "one whole-payload transfer");
+        }
+        // Exactly one shard lane covering every chunk; its ready time
+        // and the barrier are the last selected upload — the historical
+        // round-turnover condition.
+        assert_eq!(rep.shard_lanes.len(), 1);
+        let sl = &rep.shard_lanes[0];
+        assert_eq!((sl.chunk0, sl.chunk1), (0, man.n_chunks));
+        assert_eq!(sl.ready_at.to_bits(), up_done.to_bits());
+        assert_eq!(sl.applied_at.to_bits(), up_done.to_bits());
+        assert_eq!(sl.bytes, (peers * wb) as u64);
+        // the degenerate event stream: no per-slice events, exactly one
+        // shard aggregation event at the barrier
+        assert!(!net
+            .event_log
+            .iter()
+            .any(|(_, e)| matches!(e, Event::ShardUploadDone { .. })));
+        let aggs: Vec<f64> = net
+            .event_log
+            .iter()
+            .filter(|(_, e)| matches!(e, Event::ShardAggregated { .. }))
+            .map(|&(t, _)| t)
+            .collect();
+        assert_eq!(aggs.len(), 1);
+        assert_eq!(aggs[0].to_bits(), up_done.to_bits());
+        t_start = rep.t_comm_end;
+    }
+
+    // Bit-reproducibility of the full degenerate path (params + trace).
+    let mut net2 = Network::new(&eng, build_params(0x51, peers, 0.0)).unwrap();
+    for _ in 0..rounds {
+        net2.run_round().unwrap();
+    }
+    assert_eq!(net.global_params, net2.global_params);
+    assert_eq!(net.event_log.len(), net2.event_log.len());
+    for (a, b) in net.event_log.iter().zip(&net2.event_log) {
+        assert_eq!(a.0.to_bits(), b.0.to_bits());
+        assert_eq!(a.1, b.1);
+    }
+}
+
+#[test]
+fn global_model_is_invariant_across_shard_counts() {
+    let eng = Engine::new("artifacts/tiny").unwrap();
+    let man = eng.manifest().clone();
+    let peers = 5usize;
+    let rounds = 3usize;
+    let seed = 0x5AD;
+
+    let mut reference: Option<Vec<f32>> = None;
+    let mut bytes_up_single = 0u64;
+    for n_shards in [1usize, 2, 3, 5] {
+        let mut net =
+            ShardedNetwork::new(&eng, build_params(seed, peers, 0.2), n_shards).unwrap();
+        assert_eq!(net.n_shards(), n_shards.min(man.n_chunks));
+        let mut bytes_up = 0u64;
+        let mut rounds_with_selection = 0usize;
+        for _ in 0..rounds {
+            let rep = net.run_round().unwrap();
+            bytes_up += rep.bytes_up;
+            if rep.contributing > 0 {
+                rounds_with_selection += 1;
+                // shard lanes cover the chunk space disjointly, in order
+                assert_eq!(rep.shard_lanes.len(), net.n_shards());
+                assert_eq!(rep.shard_lanes[0].chunk0, 0);
+                assert_eq!(rep.shard_lanes.last().unwrap().chunk1, man.n_chunks);
+                for w in rep.shard_lanes.windows(2) {
+                    assert_eq!(w[0].chunk1, w[1].chunk0);
+                }
+                // every shard ready by the barrier; barrier identical
+                // across lanes
+                let barrier = rep.shard_lanes[0].applied_at;
+                for l in &rep.shard_lanes {
+                    assert!(l.ready_at <= barrier);
+                    assert_eq!(l.applied_at.to_bits(), barrier.to_bits());
+                }
+            }
+        }
+        // per-shard coordinator state advanced on every selecting round
+        assert!(rounds_with_selection > 0, "no round selected anything");
+        assert!(net
+            .shards()
+            .iter()
+            .all(|s| s.rounds_aggregated == rounds_with_selection));
+        match &reference {
+            None => {
+                reference = Some(net.net.global_params.clone());
+                bytes_up_single = bytes_up;
+            }
+            Some(r) => {
+                assert_eq!(
+                    &net.net.global_params, r,
+                    "global model must not depend on the shard count \
+                     (n_shards={n_shards})"
+                );
+                assert!(
+                    bytes_up >= bytes_up_single,
+                    "sharding adds per-slice wire overhead, never removes bytes"
+                );
+            }
+        }
+    }
+}
