@@ -137,6 +137,7 @@ fn paper_accounting(smoke: bool) {
                 adversarial_submitted: 0,
                 adversarial_selected: 0,
                 late_submissions: 0,
+                rejected_pre_decode: 0,
                 mean_loss: 0.0,
                 bytes_up: s.payload_bytes as u64,
                 bytes_down: 0,

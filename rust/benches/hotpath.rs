@@ -2,7 +2,9 @@
 //! timings — blocked/parallel kernels vs the naive serial baseline
 //! (`kernels::force_naive`, bit-identical, so both run in one process on
 //! one host) — the pure-Rust comm-phase components (compress, wire codec,
-//! aggregation), sharded vs unsharded aggregation + round throughput
+//! aggregation), the payload-auth envelope (seal and the coordinator's
+//! pre-decode open + verify gate), sharded vs unsharded aggregation +
+//! round throughput
 //! (multi-coordinator `ShardSet`; outputs asserted bit-identical, so the
 //! comparison is pure overhead), Gauntlet `score_round` serial vs rayon
 //! fan-out, and the headline number for this repo's perf trajectory:
@@ -29,7 +31,7 @@ use covenant::gauntlet::testkit::{synthetic_submission, SyntheticEvalData};
 use covenant::gauntlet::validator::Validator;
 use covenant::gauntlet::Submission;
 use covenant::runtime::{kernels, ops, Engine};
-use covenant::sparseloco::{codec, topk, Payload};
+use covenant::sparseloco::{codec, envelope, topk, Payload};
 use covenant::train::{OuterAlphaSchedule, Schedule, Segment};
 use covenant::util::cli::Args;
 use covenant::util::rng::Rng;
@@ -217,6 +219,33 @@ fn main() -> Result<()> {
     });
     report("chunk-parallel compress_dense", &s_rc, Some((na * 4) as f64));
 
+    // ---- payload auth: seal / open + verify throughput ---------------------
+    // The trust boundary's per-submission cost: wrapping the wire bytes
+    // in a signed CVEV envelope on the peer side, and the coordinator's
+    // pre-decode signature check. Both are single-pass over the buffer,
+    // so they report as bandwidth like the codec above.
+    println!("\n== payload auth (CVEV envelope seal + verify) ==");
+    let sign_key = envelope::SigningKey::derive(0xBE7C, "hk-00042");
+    let verify_key = sign_key.verifying();
+    let sealed = envelope::seal(&wire, "hk-00042", 1, 0, 1, &sign_key);
+    let s_seal = bench(wu * 2, it(50), || {
+        std::hint::black_box(envelope::seal(&wire, "hk-00042", 1, 0, 1, &sign_key));
+    });
+    report("envelope seal (header + keyed MAC)", &s_seal, Some(wire.len() as f64));
+    let s_verify = bench(wu * 2, it(50), || {
+        let env = envelope::open(std::hint::black_box(&sealed)).unwrap();
+        assert!(env.verify(&verify_key), "bench envelope must verify");
+    });
+    report("envelope open + verify (pre-decode gate)", &s_verify, Some(sealed.len() as f64));
+    let auth_overhead = sealed.len() - wire.len();
+    println!(
+        "envelope overhead: {auth_overhead} B on a {} B payload ({:.4}%); \
+         verify gate adds {:.1}% to the decode path",
+        wire.len(),
+        100.0 * auth_overhead as f64 / wire.len() as f64,
+        100.0 * s_verify.mean / s_dec.mean
+    );
+
     // ---- multi-coordinator sharding ----------------------------------------
     // Sharded aggregation is bit-identical to unsharded (the shard
     // invariant), so like the kernel baseline this comparison is pure
@@ -348,6 +377,13 @@ fn main() -> Result<()> {
             "decode_mb_per_s": wire.len() as f64 / s_dec.mean / 1e6,
             "aggregate_20_payloads_ms": s_agg.mean * 1e3,
             "compress_dense_mb_per_s": (na * 4) as f64 / s_rc.mean / 1e6,
+        },
+        "auth": {
+            "sealed_bytes": sealed.len(),
+            "envelope_overhead_bytes": auth_overhead,
+            "seal_mb_per_s": wire.len() as f64 / s_seal.mean / 1e6,
+            "open_verify_mb_per_s": sealed.len() as f64 / s_verify.mean / 1e6,
+            "verify_vs_decode_frac": s_verify.mean / s_dec.mean,
         },
         "sharding": {
             "n_shards": shard_set.n_shards(),

@@ -4,6 +4,8 @@ use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::sparseloco::envelope::VerifyingKey;
+
 /// One registered slot in the subnet's UID table.
 #[derive(Debug, Clone)]
 pub struct Neuron {
@@ -36,6 +38,13 @@ pub struct Subnet {
     /// All hotkeys ever seen with their first-registration block
     /// (ground truth for Fig. 5's "lower bound" comparison).
     pub hotkey_history: BTreeMap<String, u64>,
+    /// Payload-verification key registry for *currently registered*
+    /// hotkeys. Registration is permissionless (any registered hotkey may
+    /// publish any key, including one shared with other hotkeys — sybil
+    /// swarms do exactly that); the entry is dropped with the hotkey, on
+    /// deregistration or UID recycling, so a recycled UID's new owner
+    /// never inherits the old key.
+    keys: BTreeMap<String, VerifyingKey>,
 }
 
 impl Subnet {
@@ -49,6 +58,7 @@ impl Subnet {
             burn: 1.0,
             emission_per_block: 1.0,
             hotkey_history: BTreeMap::new(),
+            keys: BTreeMap::new(),
         }
     }
 
@@ -107,6 +117,12 @@ impl Subnet {
                 victim
             }
         };
+        // Evict the victim hotkey's key along with its slot: the UID's
+        // new owner starts with no registered key.
+        if let Some(old) = &self.neurons[uid] {
+            let old_hotkey = old.hotkey.clone();
+            self.keys.remove(&old_hotkey);
+        }
         self.neurons[uid] = Some(Neuron {
             uid,
             hotkey: hotkey.to_string(),
@@ -119,11 +135,28 @@ impl Subnet {
         Ok(uid)
     }
 
-    /// Deregister (peer leaves voluntarily); the UID becomes free.
+    /// Deregister (peer leaves voluntarily); the UID becomes free and the
+    /// hotkey's verification key leaves the registry with it.
     pub fn deregister(&mut self, hotkey: &str) -> Result<()> {
         let uid = self.uid_of(hotkey).ok_or_else(|| anyhow!("hotkey '{hotkey}' not registered"))?;
         self.neurons[uid] = None;
+        self.keys.remove(hotkey);
         Ok(())
+    }
+
+    /// Publish the payload-verification key for a registered hotkey
+    /// (overwrites any previous key for the same hotkey — key rotation).
+    pub fn register_key(&mut self, hotkey: &str, key: VerifyingKey) -> Result<()> {
+        if self.uid_of(hotkey).is_none() {
+            bail!("hotkey '{hotkey}' not registered; cannot publish a key");
+        }
+        self.keys.insert(hotkey.to_string(), key);
+        Ok(())
+    }
+
+    /// The currently registered verification key for a hotkey, if any.
+    pub fn verifying_key(&self, hotkey: &str) -> Option<VerifyingKey> {
+        self.keys.get(hotkey).copied()
     }
 
     /// Mark liveness (peers that stop submitting go inactive).
@@ -243,5 +276,82 @@ mod tests {
         let mut s = Subnet::new(3, 2);
         s.sync_to_time(60.0);
         assert_eq!(s.block, 5);
+    }
+
+    // ---- key registry / recycled-UID hygiene ----------------------------
+
+    use crate::sparseloco::envelope::SigningKey;
+
+    #[test]
+    fn key_registration_requires_a_registered_hotkey() {
+        let mut s = Subnet::new(3, 2);
+        let key = SigningKey::derive(1, "ghost").verifying();
+        assert!(s.register_key("ghost", key).is_err());
+        s.register("a", 1.0).unwrap();
+        let ka = SigningKey::derive(1, "a").verifying();
+        s.register_key("a", ka).unwrap();
+        assert_eq!(s.verifying_key("a"), Some(ka));
+        assert_eq!(s.verifying_key("ghost"), None);
+        // rotation: a later registration overwrites
+        let ka2 = SigningKey::derive(2, "a").verifying();
+        s.register_key("a", ka2).unwrap();
+        assert_eq!(s.verifying_key("a"), Some(ka2));
+    }
+
+    #[test]
+    fn deregistration_drops_the_key() {
+        let mut s = Subnet::new(3, 2);
+        s.register("a", 1.0).unwrap();
+        s.register_key("a", SigningKey::derive(1, "a").verifying()).unwrap();
+        s.deregister("a").unwrap();
+        assert_eq!(s.verifying_key("a"), None);
+        // re-registering the hotkey does NOT resurrect the old key
+        s.register("a", 1.0).unwrap();
+        assert_eq!(s.verifying_key("a"), None);
+    }
+
+    #[test]
+    fn recycled_uid_with_fresh_hotkey_inherits_neither_key_nor_scores() {
+        let mut s = Subnet::new(3, 2);
+        s.register("a", 10.0).unwrap();
+        let uid_b = s.register("b", 1.0).unwrap();
+        s.register_key("b", SigningKey::derive(1, "b").verifying()).unwrap();
+        // give b on-chain standing: weight and accumulated emissions
+        s.set_weights(&[(uid_b, 1.0)]).unwrap();
+        s.sync_to_time(120.0);
+        assert!(s.neuron(uid_b).unwrap().emissions > 0.0);
+        // table full: "c" recycles b's UID (lowest stake)
+        let uid_c = s.register("c", 20.0).unwrap();
+        assert_eq!(uid_c, uid_b);
+        // b's key is gone with b — c starts keyless until it publishes
+        assert_eq!(s.verifying_key("b"), None);
+        assert_eq!(s.verifying_key("c"), None);
+        let kc = SigningKey::derive(1, "c").verifying();
+        s.register_key("c", kc).unwrap();
+        assert_eq!(s.verifying_key("c"), Some(kc));
+        // and c's key is its own, not b's
+        assert_ne!(kc, SigningKey::derive(1, "b").verifying());
+        // no inherited scores: weight, emissions, stake all reset
+        let n = s.neuron(uid_c).unwrap();
+        assert_eq!(n.hotkey, "c");
+        assert_eq!(n.weight, 0.0, "recycled UID inherited the old weight");
+        assert_eq!(n.emissions, 0.0, "recycled UID inherited old emissions");
+        assert_eq!(n.stake, 20.0 - s.burn);
+    }
+
+    #[test]
+    fn sybil_swarm_may_share_one_key_registration_is_permissionless() {
+        // The chain does not police key reuse — the Gauntlet's per-key
+        // replay window is what makes a shared key useless (one
+        // submission per round for the whole swarm).
+        let mut s = Subnet::new(3, 4);
+        let shared = SigningKey::derive(7, "sybil-shared").verifying();
+        for hk in ["s0", "s1", "s2"] {
+            s.register(hk, 1.0).unwrap();
+            s.register_key(hk, shared).unwrap();
+        }
+        for hk in ["s0", "s1", "s2"] {
+            assert_eq!(s.verifying_key(hk), Some(shared));
+        }
     }
 }

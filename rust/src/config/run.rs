@@ -40,6 +40,13 @@ pub struct RunConfig {
     /// shard count (`tests/shard_parity.rs`). Distinct from the *data*
     /// shard count (`NetworkParams::data_shards`).
     pub n_shards: usize,
+    /// Sign per-shard payload slices in `CVEV` envelopes and verify
+    /// signature + nonce freshness before any decode (the trust
+    /// boundary). `false` falls back to the legacy bare-codec wire
+    /// format: old bytes still decode, but nothing is authenticated.
+    pub sign_payloads: bool,
+    /// Deterministic adversary cohort injected at network construction.
+    pub adversary: AdversaryConfig,
     /// Simulated link shape + timing-model knobs.
     pub network: NetworkConfig,
     /// Validator (Gauntlet) knobs.
@@ -57,9 +64,47 @@ impl Default for RunConfig {
             ef_beta: 0.95,
             seed: 0xC0DE,
             n_shards: 1,
+            sign_payloads: true,
+            adversary: AdversaryConfig::default(),
             network: NetworkConfig::default(),
             gauntlet: GauntletConfig::default(),
         }
+    }
+}
+
+/// Deterministic adversary cohort for the gauntlet suite: these peers are
+/// appended *after* the honest initial peers at network construction (so
+/// honest identities, UIDs and RNG streams are unchanged by their
+/// presence) and attack the envelope layer every round. All zero by
+/// default — production runs see only churn-rolled adversaries.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AdversaryConfig {
+    /// Sybil swarm size: hotkeys sharing ONE signing key. At most one of
+    /// them authenticates per round; the rest are `ReplayedPayload`.
+    pub sybils: usize,
+    /// Free-riders replaying another peer's previous-round sealed slices
+    /// verbatim (`ReplayedPayload` via nonce staleness).
+    pub replayers: usize,
+    /// Peers signing with a key that does not match their registered
+    /// verifying key (`BadSignature`).
+    pub forgers: usize,
+    /// Peers flooding one target shard with oversized junk slices
+    /// (`BadSignature`; junk bytes land in the shard's rejected
+    /// accounting).
+    pub shard_spammers: usize,
+    /// Shard index targeted by `shard_spammers` (clamped to the shard
+    /// count at run time).
+    pub spam_shard: usize,
+    /// Gradient-inflation peers: compute honestly, then blow up their
+    /// payload scales 1000x (`AbnormalNorm` via the median-norm check —
+    /// the classic `Whale`, injectable deterministically here).
+    pub whales: usize,
+}
+
+impl AdversaryConfig {
+    /// Total injected adversary count.
+    pub fn total(&self) -> usize {
+        self.sybils + self.replayers + self.forgers + self.shard_spammers + self.whales
     }
 }
 
@@ -177,6 +222,29 @@ impl RunConfig {
             c.n_shards = v.as_usize()?;
             anyhow::ensure!(c.n_shards >= 1, "n_shards must be >= 1 (got 0)");
         }
+        if let Some(v) = j.opt("sign_payloads") {
+            c.sign_payloads = v.as_bool()?;
+        }
+        if let Some(a) = j.opt("adversary") {
+            if let Some(v) = a.opt("sybils") {
+                c.adversary.sybils = v.as_usize()?;
+            }
+            if let Some(v) = a.opt("replayers") {
+                c.adversary.replayers = v.as_usize()?;
+            }
+            if let Some(v) = a.opt("forgers") {
+                c.adversary.forgers = v.as_usize()?;
+            }
+            if let Some(v) = a.opt("shard_spammers") {
+                c.adversary.shard_spammers = v.as_usize()?;
+            }
+            if let Some(v) = a.opt("spam_shard") {
+                c.adversary.spam_shard = v.as_usize()?;
+            }
+            if let Some(v) = a.opt("whales") {
+                c.adversary.whales = v.as_usize()?;
+            }
+        }
         if let Some(n) = j.opt("network") {
             if let Some(v) = n.opt("uplink_bps") {
                 c.network.uplink_bps = v.as_f64()?;
@@ -288,6 +356,33 @@ mod tests {
         assert_eq!(RunConfig::from_json(&j).unwrap().n_shards, 4);
         let j = Json::parse(r#"{"n_shards": 0}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err(), "zero coordinators rejected");
+    }
+
+    #[test]
+    fn signing_defaults_on_and_adversaries_default_off() {
+        let c = RunConfig::default();
+        assert!(c.sign_payloads, "payload auth must be on by default");
+        assert_eq!(c.adversary, AdversaryConfig::default());
+        assert_eq!(c.adversary.total(), 0, "no injected adversaries by default");
+    }
+
+    #[test]
+    fn json_adversary_and_signing_overrides() {
+        let j = Json::parse(
+            r#"{"sign_payloads": false,
+                "adversary": {"sybils": 3, "replayers": 1, "forgers": 2,
+                              "shard_spammers": 1, "spam_shard": 2, "whales": 1}}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert!(!c.sign_payloads);
+        assert_eq!(c.adversary.sybils, 3);
+        assert_eq!(c.adversary.replayers, 1);
+        assert_eq!(c.adversary.forgers, 2);
+        assert_eq!(c.adversary.shard_spammers, 1);
+        assert_eq!(c.adversary.spam_shard, 2);
+        assert_eq!(c.adversary.whales, 1);
+        assert_eq!(c.adversary.total(), 8);
     }
 
     #[test]

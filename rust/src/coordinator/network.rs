@@ -88,15 +88,17 @@ use crate::coordinator::offload::{OffloadManager, Phase};
 use crate::coordinator::shard::{ShardLane, ShardSet, ShardSpec};
 use crate::data::grammar::GrammarKind;
 use crate::data::shards::{BatchSampler, ShardStore};
+use crate::gauntlet::auth::AuthVerifier;
 use crate::gauntlet::fast_checks::FastCheck;
 use crate::gauntlet::loss_score::EvalBatch;
 use crate::gauntlet::validator::{EvalDataProvider, Validator};
 use crate::gauntlet::Submission;
 use crate::netsim::sched::{Event, Scheduler};
 use crate::netsim::{ComputeModel, ComputeTier, LinkPair, VirtualClock};
-use crate::peer::worker::encode_payload_slices;
+use crate::peer::worker::{encode_payload_slices, seal_payload_slices};
 use crate::peer::{Behavior, ChurnConfig, ChurnModel, PeerState};
 use crate::runtime::{ops, Engine, Manifest};
+use crate::sparseloco::envelope::SigningKey;
 use crate::sparseloco::Payload;
 use crate::storage::ObjectStore;
 use crate::train::{OuterAlphaSchedule, Schedule};
@@ -218,6 +220,10 @@ pub struct RoundReport {
     pub adversarial_selected: usize,
     /// Submissions flagged `Late` or `LateUpload` by the fast checks.
     pub late_submissions: usize,
+    /// Submissions rejected by payload authentication *before any
+    /// decode* (`BadSignature` + `ReplayedPayload` pre-verdicts); their
+    /// bytes land only in the shards' rejected accounting.
+    pub rejected_pre_decode: usize,
     /// Mean training loss across honest peers (last inner step).
     pub mean_loss: f64,
     /// Selected-upload wire bytes (sum of per-shard slice sizes).
@@ -271,6 +277,10 @@ struct PeerSlot {
     /// Fig.-1 phase-dependent offload state machine, driven by this
     /// peer's scheduler events.
     offload: OffloadManager,
+    /// Key this peer *signs* with. Honest peers sign with the key whose
+    /// verifying half they registered on-chain; forgers deliberately
+    /// sign with a different one, sybils with the swarm's shared one.
+    sign_key: SigningKey,
 }
 
 /// Deterministic per-peer round seed: a pure function of (run seed,
@@ -306,6 +316,14 @@ struct RoundCtx<'a> {
     /// slice per shard (a single full-cover spec degenerates to the
     /// historical whole-payload encode).
     shard_specs: &'a [ShardSpec],
+    /// Seal slices in signed `CVEV` envelopes (`RunConfig::sign_payloads`;
+    /// off = legacy bare-codec wire format).
+    sign_payloads: bool,
+    /// Previous round's selected submissions' *sealed* wire slices,
+    /// aligned with `prev_payloads` — replayers re-upload these verbatim.
+    prev_sealed: &'a [Vec<Vec<u8>>],
+    /// Shard index targeted by `ShardSpammer` peers (already clamped).
+    spam_shard: usize,
 }
 
 /// What one peer's round work produces (merged serially afterwards).
@@ -355,11 +373,12 @@ fn peer_round(
     // Occasional pathological upload slowness (stall), rolled first to
     // keep the per-peer RNG stream identical to the pre-event-spine code.
     let slow = slot.state.roll_bool(ctx.p_slow_upload);
-    let copy_src = if ctx.prev_payloads.is_empty() {
+    let pick = if ctx.prev_payloads.is_empty() {
         None
     } else {
-        Some(&ctx.prev_payloads[slot.state.roll_below(ctx.prev_payloads.len())])
+        Some(slot.state.roll_below(ctx.prev_payloads.len()))
     };
+    let copy_src = pick.map(|i| &ctx.prev_payloads[i]);
     let mut sub = slot.state.fabricate_submission(
         ctx.round,
         honest_payload,
@@ -373,7 +392,37 @@ fn peer_round(
     // One wire slice per coordinator shard; the uplink is charged per
     // slice, so `wire_bytes` is the *total* cost actually uploaded
     // (equal to the single-payload encode when there is one shard).
-    let slices = encode_payload_slices(&sub.payload, ctx.shard_specs)?;
+    // With payload auth on, each slice is sealed in a signed `CVEV`
+    // envelope (nonce = round index); legacy mode uploads bare codec
+    // bytes, which the versioned decode path still accepts.
+    let slices = match (ctx.sign_payloads, behavior, pick) {
+        (false, ..) => encode_payload_slices(&sub.payload, ctx.shard_specs)?,
+        // Free-rider replay: the victim's previous-round sealed slices,
+        // re-uploaded verbatim — valid signature, stale nonce.
+        (true, Behavior::Replayer, Some(i)) => ctx.prev_sealed[i].clone(),
+        (true, ..) => {
+            let r = ctx.round as u64;
+            let mut sealed = seal_payload_slices(
+                &sub.payload,
+                ctx.shard_specs,
+                &slot.sign_key,
+                &slot.state.hotkey,
+                r,
+                r,
+            )?;
+            if behavior == Behavior::ShardSpammer {
+                // Shard-targeted spam: the target slice is swapped for
+                // an oversized junk buffer (4x the honest slice) that
+                // fails envelope parsing — the whole submission is
+                // `BadSignature` and the junk bytes land only in the
+                // target shard's rejected accounting.
+                let t = ctx.spam_shard.min(sealed.len() - 1);
+                let n = sealed[t].len() * 4;
+                sealed[t] = (0..n).map(|_| slot.state.roll_below(256) as u8).collect();
+            }
+            sealed
+        }
+    };
     sub.wire_bytes = slices.iter().map(Vec::len).sum();
     Ok(Some(PeerOutcome {
         sub,
@@ -398,6 +447,10 @@ pub struct Network<'e> {
     pub chain: Subnet,
     /// The Gauntlet validator.
     pub validator: Validator,
+    /// Payload-authentication verifier: per-key replay windows plus
+    /// lifetime accept/reject counters (the trust boundary in front of
+    /// the validator's decode path).
+    pub auth: AuthVerifier,
     /// Join/leave model.
     pub churn: ChurnModel,
     /// Synthetic-corpus *data* shard store (distinct from the
@@ -423,6 +476,9 @@ pub struct Network<'e> {
     rng: Rng,
     /// Previous round's selected payloads (copier source material).
     prev_payloads: Vec<Payload>,
+    /// Previous round's selected submissions' sealed wire slices,
+    /// aligned with `prev_payloads` (replayer source material).
+    prev_sealed: Vec<Vec<Vec<u8>>>,
 }
 
 impl<'e> Network<'e> {
@@ -460,6 +516,7 @@ impl<'e> Network<'e> {
             store,
             chain,
             validator,
+            auth: AuthVerifier::new(),
             shards,
             compute_model,
             shard_set,
@@ -470,11 +527,29 @@ impl<'e> Network<'e> {
             event_log: Vec::new(),
             rng: rng.fork(1),
             prev_payloads: Vec::new(),
+            prev_sealed: Vec::new(),
             churn,
             p,
         };
         for _ in 0..net.p.initial_peers {
             net.add_peer(None)?;
+        }
+        // Injected adversary cohort (config::run::AdversaryConfig),
+        // appended strictly AFTER the honest initial peers: honest
+        // hotkeys, UIDs, and per-peer RNG streams are byte-identical
+        // with or without the cohort (the adversary-gauntlet parity
+        // invariant). No churn RNG is consumed here.
+        let adv = net.p.run.adversary;
+        for (n, b) in [
+            (adv.sybils, Behavior::Sybil),
+            (adv.replayers, Behavior::Replayer),
+            (adv.forgers, Behavior::Forger),
+            (adv.shard_spammers, Behavior::ShardSpammer),
+            (adv.whales, Behavior::Whale),
+        ] {
+            for _ in 0..n {
+                net.add_peer(Some(b))?;
+            }
         }
         // initial cohort is ready at round 0 (no join lag)
         for s in &mut net.peers {
@@ -494,6 +569,25 @@ impl<'e> Network<'e> {
                 None => Behavior::Honest,
             }
         });
+        // Key setup. Honest peers (and most adversaries) derive their
+        // canonical per-hotkey key from the run seed and register its
+        // verifying half on-chain. Sybils register (and sign with) the
+        // swarm's ONE shared key — registration is permissionless, so
+        // nothing stops them; the shared replay window is what bites.
+        // Forgers register the canonical key but sign with a different
+        // one (impersonation): every envelope is `BadSignature`.
+        let seed = self.p.run.seed;
+        let canonical = SigningKey::derive(seed, &hotkey);
+        let sign_key = match behavior {
+            Behavior::Sybil => SigningKey::derive(seed, "sybil-shared"),
+            Behavior::Forger => SigningKey::derive(seed ^ 0xF0F0_F0F0, &hotkey),
+            _ => canonical,
+        };
+        let registered = match behavior {
+            Behavior::Sybil => sign_key,
+            _ => canonical,
+        };
+        self.chain.register_key(&hotkey, registered.verifying())?;
         self.store.create_bucket(&hotkey, &format!("cred-{hotkey}"))?;
         let mut link = LinkPair::new(
             self.p.run.network.uplink_bps,
@@ -523,6 +617,7 @@ impl<'e> Network<'e> {
             joined_round: self.round + 1,
             ready_at: synced_at,
             offload: OffloadManager::new(self.global_params.len(), 8),
+            sign_key,
         });
         Ok(())
     }
@@ -620,6 +715,8 @@ impl<'e> Network<'e> {
 
         let shard_specs = self.shard_set.specs();
         let n_coord_shards = shard_specs.len();
+        let sign = self.p.run.sign_payloads;
+        let spam_shard = self.p.run.adversary.spam_shard.min(n_coord_shards - 1);
         let ctx = RoundCtx {
             eng: self.eng,
             man: &man,
@@ -632,6 +729,9 @@ impl<'e> Network<'e> {
             rust_compress: self.p.rust_compress,
             median_hint,
             shard_specs: &shard_specs,
+            sign_payloads: sign,
+            prev_sealed: &self.prev_sealed,
+            spam_shard,
         };
         let mut outcomes: Vec<Option<PeerOutcome>> = if self.p.parallel {
             self.peers
@@ -735,6 +835,16 @@ impl<'e> Network<'e> {
                         }
                         lanes[peer].upload = Some((begin, done));
                         sched.schedule_at(done, Event::UploadDone { peer });
+                        // Shard-targeted spam is visible on the event
+                        // spine: the junk slice landing on its target
+                        // shard is an AdversarySpam event (trace-only;
+                        // payload auth rejects the submission later).
+                        if sign && slot.state.behavior == Behavior::ShardSpammer {
+                            sched.schedule_at(
+                                slice_done[peer][spam_shard],
+                                Event::AdversarySpam { peer, shard: spam_shard },
+                            );
+                        }
                     }
                 }
                 Event::UploadDone { peer } => {
@@ -749,15 +859,22 @@ impl<'e> Network<'e> {
         }
 
         // Serial merge, in peer-slot (= hotkey mint) order: losses,
-        // adversary accounting, bucket uploads, submission list.
+        // adversary accounting, payload authentication, bucket uploads,
+        // submission list.
         let mut losses = Vec::new();
         let mut submissions: Vec<Submission> = Vec::new();
         let mut lane_of_submission: Vec<usize> = Vec::new();
-        // Per-submission slice arrival times / wire sizes, in submission
-        // order (the shard coordinators' gather inputs).
+        // Per-submission slice arrival times / wire sizes / sealed
+        // buffers, in submission order (the shard coordinators' gather
+        // inputs + next round's replay source).
         let mut sub_slice_done: Vec<Vec<f64>> = Vec::new();
         let mut sub_slice_bytes: Vec<Vec<usize>> = Vec::new();
+        let mut sub_sealed: Vec<Vec<Vec<u8>>> = Vec::new();
+        // Auth pre-verdicts, aligned with `submissions` (all None in
+        // legacy unsigned mode).
+        let mut pre_verdicts: Vec<Option<FastCheck>> = Vec::new();
         let mut adversarial_submitted = 0;
+        let mut rejected_pre_decode = 0usize;
         for (i, outcome) in outcomes.into_iter().enumerate() {
             let Some(PeerOutcome { sub, slices, loss, adversarial, .. }) = outcome else {
                 continue;
@@ -768,24 +885,49 @@ impl<'e> Network<'e> {
             if adversarial {
                 adversarial_submitted += 1;
             }
-            // Store each shard slice in the peer's bucket under a
-            // shard-scoped key — the surface a real ShardCoordinator
-            // would gather its chunk range from. (This sim's shards
-            // aggregate the in-memory payloads directly; the stored
-            // slices are the wire-format/byte-accounting fidelity
-            // layer, like the whole-payload `grad.bin` before them.)
-            let mut bytes = Vec::with_capacity(slices.len());
-            for (s, wire) in slices.into_iter().enumerate() {
-                bytes.push(wire.len());
-                self.store.put(
-                    &sub.hotkey,
-                    &format!("round-{round}/shard-{s}/grad.bin"),
-                    wire,
-                )?;
+            // The trust boundary: authenticate the sealed slices BEFORE
+            // any decode or coordinator-side storage — signature, then
+            // nonce freshness, per verifying key. Stalled uploads never
+            // arrived, so there is nothing to authenticate (they get
+            // `LateUpload` from the fast checks either way).
+            let pre = if sign && sub.uploaded_at.is_finite() {
+                let chain = &self.chain;
+                self.auth.verify_submission(
+                    &slices,
+                    &|hk| chain.verifying_key(hk),
+                    round as u64,
+                    n_coord_shards,
+                )
+            } else {
+                None
+            };
+            let bytes: Vec<usize> = slices.iter().map(Vec::len).collect();
+            if pre.is_some() {
+                // Rejected bytes never reach a decoder or the gather
+                // surface: they land only in the shards' rejected
+                // accounting (who was rejected, and how much it cost).
+                rejected_pre_decode += 1;
+                self.shard_set.record_rejected(&bytes);
+            } else {
+                // Store each shard slice in the peer's bucket under a
+                // shard-scoped key — the surface a real ShardCoordinator
+                // would gather its chunk range from. (This sim's shards
+                // aggregate the in-memory payloads directly; the stored
+                // slices are the wire-format/byte-accounting fidelity
+                // layer, like the whole-payload `grad.bin` before them.)
+                for (s, wire) in slices.iter().enumerate() {
+                    self.store.put(
+                        &sub.hotkey,
+                        &format!("round-{round}/shard-{s}/grad.bin"),
+                        wire.clone(),
+                    )?;
+                }
             }
             sub_slice_bytes.push(bytes);
             sub_slice_done.push(slice_done[i].clone());
+            sub_sealed.push(slices);
             lane_of_submission.push(i);
+            pre_verdicts.push(pre);
             submissions.push(sub);
         }
 
@@ -802,10 +944,11 @@ impl<'e> Network<'e> {
             assigned_per_peer: self.p.assigned_per_peer,
             seed: self.p.run.seed ^ 0xE7A1,
         };
-        let verdict = self.validator.score_round(
+        let verdict = self.validator.score_round_auth(
             self.eng,
             &global_snapshot,
             &submissions,
+            &pre_verdicts,
             round,
             deadline,
             apply_scale,
@@ -860,11 +1003,21 @@ impl<'e> Network<'e> {
                 sched2.schedule_at(t_agg, ev);
             }
             // Publish each shard's round record to its bucket (what
-            // peers poll in a real multi-coordinator deployment).
+            // peers poll in a real multi-coordinator deployment): who
+            // was selected and who was rejected, by name and by byte.
+            let selected_hotkeys: Vec<&str> = verdict
+                .selected
+                .iter()
+                .map(|&i| submissions[i].hotkey.as_str())
+                .collect();
             for lane in &shard_round.lanes {
+                let sh = &self.shard_set.shards()[lane.shard];
                 let record = serde_json::json!({
                     "chunks": [lane.chunk0, lane.chunk1],
                     "selected": verdict.selected.len(),
+                    "selected_hotkeys": selected_hotkeys,
+                    "rejected_slices": sh.rejected_slices,
+                    "rejected_bytes": sh.rejected_bytes,
                     "ready_at": lane.ready_at,
                     "bytes": lane.bytes,
                 });
@@ -964,6 +1117,8 @@ impl<'e> Network<'e> {
             .iter()
             .map(|&i| submissions[i].payload.clone())
             .collect();
+        self.prev_sealed =
+            verdict.selected.iter().map(|&i| sub_sealed[i].clone()).collect();
 
         // ---- 7. EF restore for unselected honest contributions + sync -----
         let selected_uids: std::collections::HashSet<usize> =
@@ -1038,6 +1193,7 @@ impl<'e> Network<'e> {
             adversarial_submitted,
             adversarial_selected,
             late_submissions,
+            rejected_pre_decode,
             mean_loss: losses.iter().sum::<f64>() / losses.len().max(1) as f64,
             bytes_up,
             bytes_down,

@@ -128,12 +128,26 @@ pub struct ShardCoordinator {
     pub rounds_aggregated: usize,
     /// Total selected-slice wire bytes received across the run.
     pub bytes_received: u64,
+    /// Slices rejected by payload authentication (bad signature or
+    /// replayed nonce) before any decode touched their bytes.
+    pub rejected_slices: u64,
+    /// Wire bytes of those rejected slices — the bandwidth the trust
+    /// boundary absorbed instead of the decoder.
+    pub rejected_bytes: u64,
 }
 
 impl ShardCoordinator {
     /// A fresh coordinator for `spec`.
     pub fn new(spec: ShardSpec) -> Self {
-        Self { spec, ready_at: 0.0, selected: 0, rounds_aggregated: 0, bytes_received: 0 }
+        Self {
+            spec,
+            ready_at: 0.0,
+            selected: 0,
+            rounds_aggregated: 0,
+            bytes_received: 0,
+            rejected_slices: 0,
+            rejected_bytes: 0,
+        }
     }
 
     /// Aggregate this round's selected payloads over the shard's chunk
@@ -324,6 +338,19 @@ impl ShardSet {
         Ok(ShardRound { delta, lanes, applied_at })
     }
 
+    /// Record one authentication-rejected submission: `slice_bytes[s]`
+    /// is the wire size of the rejected slice addressed to shard `s`
+    /// (missing entries count as zero-byte slices). The bytes never
+    /// reach a decoder — they land only in the shards' rejected
+    /// accounting, which is how the per-shard record answers "who was
+    /// selected and who was rejected".
+    pub fn record_rejected(&mut self, slice_bytes: &[usize]) {
+        for (sh, &b) in self.shards.iter_mut().zip(slice_bytes) {
+            sh.rejected_slices += 1;
+            sh.rejected_bytes += b as u64;
+        }
+    }
+
     /// The `ShardAggregated` events for a completed round, in shard
     /// order (the round engine schedules these on its event spine).
     pub fn round_events(round: &ShardRound) -> Vec<(f64, Event)> {
@@ -484,6 +511,24 @@ mod tests {
         assert_eq!(set.shards()[1].ready_at, 99.0);
         assert_eq!(set.shards()[0].rounds_aggregated, 1);
         assert_eq!(set.shards()[0].selected, 3);
+    }
+
+    #[test]
+    fn rejected_accounting_lands_per_shard() {
+        let mut set = ShardSet::new(6, 16, 3).unwrap();
+        set.record_rejected(&[100, 200, 300]);
+        set.record_rejected(&[10, 20, 30]);
+        // A shorter vector leaves the tail shards' bytes untouched but
+        // still unpolluted (no panic, no phantom slice count).
+        set.record_rejected(&[5]);
+        let shards = set.shards();
+        assert_eq!(shards[0].rejected_slices, 3);
+        assert_eq!(shards[0].rejected_bytes, 115);
+        assert_eq!(shards[1].rejected_slices, 2);
+        assert_eq!(shards[1].rejected_bytes, 220);
+        assert_eq!(shards[2].rejected_slices, 2);
+        assert_eq!(shards[2].rejected_bytes, 330);
+        assert!(shards.iter().all(|s| s.bytes_received == 0), "rejects never count as received");
     }
 
     #[test]

@@ -1,0 +1,288 @@
+//! Pre-decode payload authentication for the Gauntlet fast-check path.
+//!
+//! The trust boundary sits *before* the codec: a submission's sealed
+//! shard-slices are parsed ([`envelope::open`], zero-copy), the tag is
+//! verified against the chain's registered key for the claimed hotkey,
+//! and nonce freshness is checked against a per-key replay window — all
+//! without decoding a single payload byte. Failures become pre-verdicts
+//! ([`FastCheck::BadSignature`] / [`FastCheck::ReplayedPayload`]) that
+//! pre-empt the rest of the fast-check battery, so forged or replayed
+//! bytes cost the validator one MAC recompute, never a decode or an eval.
+//!
+//! Replay windows are keyed by [`VerifyingKey::id`], not by hotkey or
+//! UID:
+//!
+//! - a sybil swarm registering one shared key under many hotkeys shares
+//!   ONE window — the first envelope of a round advances it and every
+//!   other swarm member bounces off as [`FastCheck::ReplayedPayload`]
+//!   ("one key, one submission per round");
+//! - a recycled UID re-registered with a fresh hotkey derives a fresh
+//!   key and therefore a fresh window — it inherits nothing from the
+//!   departed identity.
+
+use std::collections::HashMap;
+
+use crate::gauntlet::fast_checks::FastCheck;
+use crate::sparseloco::envelope::{self, VerifyingKey};
+
+/// Running authentication counters for a network lifetime.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AuthStats {
+    /// Submissions whose every slice parsed, verified, and was fresh.
+    pub verified: u64,
+    /// Submissions rejected with [`FastCheck::BadSignature`].
+    pub bad_signature: u64,
+    /// Submissions rejected with [`FastCheck::ReplayedPayload`].
+    pub replayed: u64,
+}
+
+/// Stateful envelope verifier: key lookup is delegated to the caller
+/// (the chain's registry), replay windows live here.
+#[derive(Debug, Default)]
+pub struct AuthVerifier {
+    /// Highest accepted nonce per verifying-key id. Advances only on
+    /// fully accepted submissions, so a rejected envelope cannot burn a
+    /// victim's window.
+    windows: HashMap<u64, u64>,
+    /// Lifetime accept/reject counters.
+    pub stats: AuthStats,
+}
+
+impl AuthVerifier {
+    /// Fresh verifier with empty replay windows.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Authenticate one submission's sealed shard-slices.
+    ///
+    /// Returns `None` if the submission is authentic and fresh (the
+    /// replay window advances), or the pre-verdict that rejects it.
+    /// `lookup` resolves a claimed hotkey to its registered verifying
+    /// key; `round` is the coordinator's current outer round (envelopes
+    /// for any other round are stale or premature); `n_shards` is the
+    /// expected slice count.
+    pub fn verify_submission(
+        &mut self,
+        slices: &[Vec<u8>],
+        lookup: &dyn Fn(&str) -> Option<VerifyingKey>,
+        round: u64,
+        n_shards: usize,
+    ) -> Option<FastCheck> {
+        match self.check(slices, lookup, round, n_shards) {
+            Ok(()) => {
+                self.stats.verified += 1;
+                None
+            }
+            Err(v) => {
+                match v {
+                    FastCheck::BadSignature => self.stats.bad_signature += 1,
+                    FastCheck::ReplayedPayload => self.stats.replayed += 1,
+                    _ => {}
+                }
+                Some(v)
+            }
+        }
+    }
+
+    fn check(
+        &mut self,
+        slices: &[Vec<u8>],
+        lookup: &dyn Fn(&str) -> Option<VerifyingKey>,
+        round: u64,
+        n_shards: usize,
+    ) -> Result<(), FastCheck> {
+        if slices.len() != n_shards || n_shards == 0 {
+            return Err(FastCheck::BadSignature);
+        }
+        // Parse every slice before trusting anything: each must be a
+        // well-formed envelope targeting its own slice position.
+        let mut envs = Vec::with_capacity(slices.len());
+        for (s, bytes) in slices.iter().enumerate() {
+            let env = envelope::open(bytes).map_err(|_| FastCheck::BadSignature)?;
+            if env.shard as usize != s {
+                return Err(FastCheck::BadSignature);
+            }
+            envs.push(env);
+        }
+        // One identity and one nonce across the whole slice set.
+        let (hotkey, nonce, env_round) = (envs[0].hotkey, envs[0].nonce, envs[0].round);
+        if envs.iter().any(|e| e.hotkey != hotkey || e.nonce != nonce || e.round != env_round) {
+            return Err(FastCheck::BadSignature);
+        }
+        let key = lookup(hotkey).ok_or(FastCheck::BadSignature)?;
+        for env in &envs {
+            if !env.verify(&key) {
+                return Err(FastCheck::BadSignature);
+            }
+        }
+        // Freshness, per verifying KEY (see module docs). Signature
+        // problems outrank replay problems, so this comes last.
+        if let Some(&w) = self.windows.get(&key.id()) {
+            if nonce <= w {
+                return Err(FastCheck::ReplayedPayload);
+            }
+        }
+        if env_round != round {
+            return Err(FastCheck::ReplayedPayload);
+        }
+        self.windows.insert(key.id(), nonce);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparseloco::envelope::SigningKey;
+
+    const SEED: u64 = 0x7E57;
+
+    fn sealed(hotkey: &str, key: &SigningKey, round: u64, n_shards: usize) -> Vec<Vec<u8>> {
+        (0..n_shards)
+            .map(|s| envelope::seal(&[s as u8; 32], hotkey, round, s as u32, round, key))
+            .collect()
+    }
+
+    /// Registry with honestly derived keys for the given hotkeys.
+    fn registry(hotkeys: &[&str]) -> HashMap<String, VerifyingKey> {
+        hotkeys
+            .iter()
+            .map(|h| (h.to_string(), SigningKey::derive(SEED, h).verifying()))
+            .collect()
+    }
+
+    #[test]
+    fn honest_submission_accepted_across_rounds_and_shards() {
+        let reg = registry(&["alice", "bob"]);
+        let lookup = |h: &str| reg.get(h).copied();
+        let mut auth = AuthVerifier::new();
+        for round in 0..3u64 {
+            for hk in ["alice", "bob"] {
+                let s = sealed(hk, &SigningKey::derive(SEED, hk), round, 3);
+                assert_eq!(auth.verify_submission(&s, &lookup, round, 3), None);
+            }
+        }
+        assert_eq!(auth.stats, AuthStats { verified: 6, bad_signature: 0, replayed: 0 });
+    }
+
+    #[test]
+    fn forged_signature_rejected() {
+        let reg = registry(&["alice"]);
+        let lookup = |h: &str| reg.get(h).copied();
+        let mut auth = AuthVerifier::new();
+        // signed with a key that is not alice's registered key
+        let s = sealed("alice", &SigningKey::derive(SEED ^ 1, "alice"), 0, 2);
+        assert_eq!(auth.verify_submission(&s, &lookup, 0, 2), Some(FastCheck::BadSignature));
+        assert_eq!(auth.stats.bad_signature, 1);
+    }
+
+    #[test]
+    fn unregistered_hotkey_rejected() {
+        let reg = registry(&["alice"]);
+        let lookup = |h: &str| reg.get(h).copied();
+        let mut auth = AuthVerifier::new();
+        let s = sealed("mallory", &SigningKey::derive(SEED, "mallory"), 0, 1);
+        assert_eq!(auth.verify_submission(&s, &lookup, 0, 1), Some(FastCheck::BadSignature));
+    }
+
+    #[test]
+    fn replayed_submission_rejected_but_window_survives() {
+        let reg = registry(&["alice"]);
+        let lookup = |h: &str| reg.get(h).copied();
+        let key = SigningKey::derive(SEED, "alice");
+        let mut auth = AuthVerifier::new();
+        let round0 = sealed("alice", &key, 0, 2);
+        assert_eq!(auth.verify_submission(&round0, &lookup, 0, 2), None);
+        // verbatim replay in the next round: valid tag, stale nonce
+        assert_eq!(
+            auth.verify_submission(&round0, &lookup, 1, 2),
+            Some(FastCheck::ReplayedPayload)
+        );
+        // alice herself is unharmed: her fresh round-1 envelope passes
+        let round1 = sealed("alice", &key, 1, 2);
+        assert_eq!(auth.verify_submission(&round1, &lookup, 1, 2), None);
+        assert_eq!(auth.stats.replayed, 1);
+    }
+
+    #[test]
+    fn sybil_swarm_sharing_one_key_gets_one_submission_per_round() {
+        let shared = SigningKey::derive(SEED, "sybil-shared");
+        // three hotkeys, all registered with the SAME verifying key —
+        // registration is permissionless, the window is not
+        let reg: HashMap<String, VerifyingKey> = ["s0", "s1", "s2"]
+            .iter()
+            .map(|h| (h.to_string(), shared.verifying()))
+            .collect();
+        let lookup = |h: &str| reg.get(h).copied();
+        let mut auth = AuthVerifier::new();
+        for round in 0..2u64 {
+            let verdicts: Vec<_> = ["s0", "s1", "s2"]
+                .iter()
+                .map(|h| auth.verify_submission(&sealed(h, &shared, round, 1), &lookup, round, 1))
+                .collect();
+            assert_eq!(verdicts[0], None, "first swarm member passes");
+            assert_eq!(verdicts[1], Some(FastCheck::ReplayedPayload));
+            assert_eq!(verdicts[2], Some(FastCheck::ReplayedPayload));
+        }
+        assert_eq!(auth.stats, AuthStats { verified: 2, bad_signature: 0, replayed: 4 });
+    }
+
+    #[test]
+    fn recycled_uid_with_fresh_hotkey_gets_fresh_window() {
+        // "bob" departs after advancing his window to nonce 5; "dave"
+        // joins on bob's recycled UID with a fresh hotkey. Dave's key id
+        // differs, so his window starts empty — nonce 5 is fine for him.
+        let mut reg = registry(&["bob"]);
+        let mut auth = AuthVerifier::new();
+        {
+            let lookup = |h: &str| reg.get(h).copied();
+            let bob = SigningKey::derive(SEED, "bob");
+            assert_eq!(auth.verify_submission(&sealed("bob", &bob, 5, 1), &lookup, 5, 1), None);
+        }
+        reg.remove("bob"); // dereg: bob's key leaves the registry
+        reg.insert("dave".into(), SigningKey::derive(SEED, "dave").verifying());
+        let lookup = |h: &str| reg.get(h).copied();
+        let dave = SigningKey::derive(SEED, "dave");
+        assert_eq!(auth.verify_submission(&sealed("dave", &dave, 5, 1), &lookup, 5, 1), None);
+        // and bob's stale bytes no longer authenticate at all
+        let bob = SigningKey::derive(SEED, "bob");
+        assert_eq!(
+            auth.verify_submission(&sealed("bob", &bob, 6, 1), &lookup, 6, 1),
+            Some(FastCheck::BadSignature)
+        );
+    }
+
+    #[test]
+    fn cross_slice_inconsistency_rejected() {
+        let reg = registry(&["alice"]);
+        let lookup = |h: &str| reg.get(h).copied();
+        let key = SigningKey::derive(SEED, "alice");
+        let mut auth = AuthVerifier::new();
+        // wrong slice count
+        let s = sealed("alice", &key, 0, 2);
+        assert_eq!(auth.verify_submission(&s[..1], &lookup, 0, 2), Some(FastCheck::BadSignature));
+        // slice in the wrong position (shard field mismatch)
+        let swapped = vec![s[1].clone(), s[0].clone()];
+        assert_eq!(auth.verify_submission(&swapped, &lookup, 0, 2), Some(FastCheck::BadSignature));
+        // mixed nonces across the slice set
+        let mixed = vec![
+            envelope::seal(&[0; 32], "alice", 0, 0, 0, &key),
+            envelope::seal(&[1; 32], "alice", 0, 1, 9, &key),
+        ];
+        assert_eq!(auth.verify_submission(&mixed, &lookup, 0, 2), Some(FastCheck::BadSignature));
+    }
+
+    #[test]
+    fn wrong_round_is_a_replay_not_a_forgery() {
+        let reg = registry(&["alice"]);
+        let lookup = |h: &str| reg.get(h).copied();
+        let key = SigningKey::derive(SEED, "alice");
+        let mut auth = AuthVerifier::new();
+        // validly signed for round 3, presented in round 2
+        let s = sealed("alice", &key, 3, 1);
+        assert_eq!(auth.verify_submission(&s, &lookup, 2, 1), Some(FastCheck::ReplayedPayload));
+        // the rejection did NOT advance the window: round 3 still works
+        assert_eq!(auth.verify_submission(&s, &lookup, 3, 1), None);
+    }
+}

@@ -1,7 +1,8 @@
 //! Fast checks (paper §2.2): cheap per-submission validation the
 //! validator runs on *every* peer every round, without forward passes —
-//! liveness, synchronization with the main model, payload geometry and
-//! norm sanity.
+//! payload authentication (signature + replay freshness, performed
+//! upstream before any decode and fed in as pre-verdicts), liveness,
+//! synchronization with the main model, payload geometry and norm sanity.
 
 use crate::gauntlet::Submission;
 use crate::util::stats::median;
@@ -10,6 +11,14 @@ use crate::util::stats::median;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FastCheck {
     Pass,
+    /// Envelope failed authentication before decode: unparseable or
+    /// inconsistent envelope slices, unregistered hotkey, or a tag that
+    /// does not verify against the hotkey's registered key (forgery).
+    BadSignature,
+    /// Envelope authenticated but is not fresh: its nonce is inside the
+    /// signer key's replay window, or it was signed for a different
+    /// round — a verbatim replay of someone's (or one's own) old bytes.
+    ReplayedPayload,
     /// Upload arrived after the round deadline.
     Late,
     /// Upload stalled mid-transfer and was cut off by the deadline event —
@@ -28,6 +37,24 @@ pub enum FastCheck {
     /// one) — copying/duplicate behaviour (§2.2).
     Duplicate,
 }
+
+/// The order checks fire in: the first failing check in this list is the
+/// submission's verdict. Authentication outranks everything (a forged
+/// submission is never decoded, so nothing downstream of it is even
+/// defined), duplicates outrank liveness (a copied payload is damning
+/// regardless of when it arrived), and the norm checks come last because
+/// they depend on the round's norm population.
+pub const PRECEDENCE: [FastCheck; 9] = [
+    FastCheck::BadSignature,
+    FastCheck::ReplayedPayload,
+    FastCheck::Duplicate,
+    FastCheck::LateUpload,
+    FastCheck::Late,
+    FastCheck::OutOfSync,
+    FastCheck::Malformed,
+    FastCheck::Empty,
+    FastCheck::AbnormalNorm,
+];
 
 impl FastCheck {
     pub fn passed(&self) -> bool {
@@ -64,45 +91,64 @@ pub fn run_fast_checks(
     p: &FastCheckParams,
     prev_hashes: &std::collections::HashSet<u64>,
 ) -> Vec<FastCheck> {
+    run_fast_checks_pre(subs, p, prev_hashes, &[])
+}
+
+/// [`run_fast_checks`] with authentication pre-verdicts: `pre[i]`, when
+/// `Some`, is the verdict the payload-auth layer reached for submission
+/// `i` *before decode* ([`FastCheck::BadSignature`] or
+/// [`FastCheck::ReplayedPayload`]) and pre-empts every other check. A
+/// pre-failed submission's payload is treated as never decoded: it is
+/// excluded from duplicate-hash seeding and from the norm-median
+/// population, so an attacker cannot use rejected bytes to frame an
+/// honest original as a duplicate or to shift the norm family. `pre` may
+/// be shorter than `subs` (missing entries mean "no pre-verdict").
+pub fn run_fast_checks_pre(
+    subs: &[Submission],
+    p: &FastCheckParams,
+    prev_hashes: &std::collections::HashSet<u64>,
+    pre: &[Option<FastCheck>],
+) -> Vec<FastCheck> {
+    let pre_at = |i: usize| pre.get(i).copied().flatten();
     // Within-round duplicates: every submission after the first holder of
     // a hash is flagged (the first might be the original).
     let mut seen = std::collections::HashMap::new();
-    let hashes: Vec<u64> = subs.iter().map(|s| s.payload.content_hash()).collect();
     let mut dup = vec![false; subs.len()];
-    for (i, &h) in hashes.iter().enumerate() {
+    for (i, s) in subs.iter().enumerate() {
+        if pre_at(i).is_some() {
+            continue; // rejected before decode: its hash does not exist
+        }
+        let h = s.payload.content_hash();
         if prev_hashes.contains(&h) {
             dup[i] = true;
-        } else if let Some(&first) = seen.get(&h) {
-            let _: usize = first;
+        } else if seen.contains_key(&h) {
             dup[i] = true;
         } else {
             seen.insert(h, i);
         }
     }
-    run_fast_checks_inner(subs, p, &dup)
-}
-
-fn run_fast_checks_inner(
-    subs: &[Submission],
-    p: &FastCheckParams,
-    dup: &[bool],
-) -> Vec<FastCheck> {
-    // Median norm across structurally-valid submissions (for the ratio check).
+    // Median norm across structurally-valid, authenticated submissions
+    // (for the ratio check).
     let norms: Vec<f64> = subs
         .iter()
-        .filter(|s| {
-            s.payload
-                .validate(p.expect_chunks, p.expect_k, p.expect_chunk)
-                .is_ok()
+        .enumerate()
+        .filter(|(i, s)| {
+            pre_at(*i).is_none()
+                && s.payload
+                    .validate(p.expect_chunks, p.expect_k, p.expect_chunk)
+                    .is_ok()
         })
-        .map(|s| s.payload.l2_norm())
+        .map(|(_, s)| s.payload.l2_norm())
         .filter(|n| *n > 0.0)
         .collect();
     let med = if norms.is_empty() { 0.0 } else { median(&norms) };
     subs.iter()
-        .zip(dup)
-        .map(|(s, &is_dup)| {
-            if is_dup {
+        .enumerate()
+        .map(|(i, s)| {
+            if let Some(v) = pre_at(i) {
+                return v;
+            }
+            if dup[i] {
                 return FastCheck::Duplicate;
             }
             if s.uploaded_at.is_infinite() {
@@ -247,5 +293,153 @@ mod tests {
     fn scores() {
         assert_eq!(FastCheck::Pass.score(), 1.0);
         assert!(FastCheck::Late.score() < 0.0);
+    }
+
+    // ---- pre-verdicts (payload authentication) --------------------------
+
+    #[test]
+    fn pre_verdicts_pass_through_verbatim() {
+        let subs = vec![sub("forger", 0, 0.01, 5, 50.0), sub("replayer", 1, 0.01, 5, 50.0)];
+        let pre = vec![Some(FastCheck::BadSignature), Some(FastCheck::ReplayedPayload)];
+        let checks = run_fast_checks_pre(&subs, &params(), &Default::default(), &pre);
+        assert_eq!(checks, vec![FastCheck::BadSignature, FastCheck::ReplayedPayload]);
+    }
+
+    #[test]
+    fn short_pre_slice_means_no_verdict_for_the_tail() {
+        let subs = vec![sub("forger", 0, 0.01, 5, 50.0), sub("honest", 1, 0.01, 5, 50.0)];
+        let pre = vec![Some(FastCheck::BadSignature)];
+        let checks = run_fast_checks_pre(&subs, &params(), &Default::default(), &pre);
+        assert_eq!(checks[0], FastCheck::BadSignature);
+        assert!(checks[1].passed());
+    }
+
+    #[test]
+    fn pre_failed_bytes_cannot_frame_the_honest_original_as_duplicate() {
+        // A forger uploads a byte-identical copy of alice's payload but
+        // fails authentication; because rejected bytes are never decoded,
+        // alice — listed AFTER the forger — must still pass.
+        let alice = sub("alice", 1, 0.01, 5, 50.0);
+        let mut forger = sub("forger", 0, 0.02, 5, 50.0);
+        forger.payload = alice.payload.clone();
+        let pre = vec![Some(FastCheck::BadSignature), None];
+        let checks =
+            run_fast_checks_pre(&[forger, alice], &params(), &Default::default(), &pre);
+        assert_eq!(checks[0], FastCheck::BadSignature);
+        assert!(checks[1].passed(), "honest original framed as duplicate");
+    }
+
+    #[test]
+    fn pre_failed_bytes_are_excluded_from_the_norm_median() {
+        // Five rejected whales and two honest peers: if the rejected
+        // payloads entered the median, the honest pair would be flagged
+        // AbnormalNorm-relative-to-whales (or the whales would define the
+        // family). With auth exclusion the honest pair simply passes.
+        let mut subs: Vec<_> =
+            (0..5).map(|i| sub(&format!("w{i}"), i, 50.0, 5, 50.0)).collect();
+        subs.push(sub("a", 7, 0.01, 5, 50.0));
+        subs.push(sub("b", 8, 0.01, 5, 50.0));
+        let pre: Vec<_> = (0..5)
+            .map(|_| Some(FastCheck::BadSignature))
+            .chain([None, None])
+            .collect();
+        let checks = run_fast_checks_pre(&subs, &params(), &Default::default(), &pre);
+        assert!(checks[5].passed() && checks[6].passed(), "{checks:?}");
+    }
+
+    // ---- verdict precedence (every variant, pinned order) ---------------
+
+    /// Build a submission that would trip *all* post-auth checks at once:
+    /// duplicate of the previous round, stalled upload, stale base round,
+    /// malformed payload. Stripping failures one precedence rank at a
+    /// time must surface exactly the next verdict in [`PRECEDENCE`].
+    #[test]
+    fn precedence_table_fires_highest_rank_first() {
+        let p = params();
+        let honest = sub("honest", 3, 0.01, 5, 50.0);
+        let make_worst = || {
+            let mut s = sub("worst", 0, 0.01, 4, f64::INFINITY);
+            s.payload.scales[0] = f32::NAN;
+            s
+        };
+        let prev: std::collections::HashSet<u64> =
+            [make_worst().payload.content_hash()].into_iter().collect();
+
+        // rank 0: a pre-verdict (BadSignature) beats everything
+        let subs = vec![make_worst(), honest.clone()];
+        let pre = vec![Some(FastCheck::BadSignature), None];
+        assert_eq!(run_fast_checks_pre(&subs, &p, &prev, &pre)[0], FastCheck::BadSignature);
+        // rank 1: ReplayedPayload likewise
+        let pre = vec![Some(FastCheck::ReplayedPayload), None];
+        assert_eq!(run_fast_checks_pre(&subs, &p, &prev, &pre)[0], FastCheck::ReplayedPayload);
+        // rank 2: authenticated -> Duplicate fires before liveness
+        assert_eq!(run_fast_checks(&subs, &p, &prev)[0], FastCheck::Duplicate);
+        // rank 3: not a duplicate -> the stalled upload (LateUpload)
+        let subs = vec![make_worst(), honest.clone()];
+        assert_eq!(run_fast_checks(&subs, &p, &Default::default())[0], FastCheck::LateUpload);
+        // rank 4: upload completed, but late
+        let mut s = make_worst();
+        s.uploaded_at = p.deadline + 1.0;
+        assert_eq!(
+            run_fast_checks(&[s, honest.clone()], &p, &Default::default())[0],
+            FastCheck::Late
+        );
+        // rank 5: punctual, but out of sync
+        let mut s = make_worst();
+        s.uploaded_at = 50.0;
+        assert_eq!(
+            run_fast_checks(&[s, honest.clone()], &p, &Default::default())[0],
+            FastCheck::OutOfSync
+        );
+        // rank 6: synced, but malformed
+        let mut s = make_worst();
+        s.uploaded_at = 50.0;
+        s.base_round = 5;
+        assert_eq!(
+            run_fast_checks(&[s, honest.clone()], &p, &Default::default())[0],
+            FastCheck::Malformed
+        );
+        // rank 7: well-formed, but empty
+        let mut s = sub("worst", 0, 0.01, 5, 50.0);
+        s.payload.scales.iter_mut().for_each(|x| *x = 0.0);
+        assert_eq!(
+            run_fast_checks(&[s, honest.clone()], &p, &Default::default())[0],
+            FastCheck::Empty
+        );
+        // rank 8: non-empty, but out of the norm family
+        let s = sub("worst", 0, 50.0, 5, 50.0);
+        assert_eq!(
+            run_fast_checks(&[s, honest.clone()], &p, &Default::default())[0],
+            FastCheck::AbnormalNorm
+        );
+        // all failures stripped: Pass
+        let s = sub("worst", 0, 0.01, 5, 50.0);
+        assert!(run_fast_checks(&[s, honest], &p, &Default::default())[0].passed());
+    }
+
+    #[test]
+    fn precedence_covers_every_failing_variant_exactly_once() {
+        // The table is the spec: every non-Pass variant appears exactly
+        // once, every entry disqualifies, and Pass is not ranked.
+        for v in PRECEDENCE {
+            assert!(!v.passed());
+            assert!(v.score() < 0.0, "{v:?} must disqualify");
+            assert_eq!(PRECEDENCE.iter().filter(|&&x| x == v).count(), 1, "{v:?} listed twice");
+        }
+        let all = [
+            FastCheck::BadSignature,
+            FastCheck::ReplayedPayload,
+            FastCheck::Duplicate,
+            FastCheck::LateUpload,
+            FastCheck::Late,
+            FastCheck::OutOfSync,
+            FastCheck::Malformed,
+            FastCheck::Empty,
+            FastCheck::AbnormalNorm,
+        ];
+        assert_eq!(PRECEDENCE.len(), all.len());
+        for v in all {
+            assert!(PRECEDENCE.contains(&v), "{v:?} missing from the precedence table");
+        }
     }
 }

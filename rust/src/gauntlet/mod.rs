@@ -9,6 +9,7 @@
 //! then selects the round's contributors (cap R=20) and writes weights to
 //! the chain for emissions.
 
+pub mod auth;
 pub mod fast_checks;
 pub mod loss_score;
 pub mod openskill;

@@ -17,7 +17,7 @@ use anyhow::Result;
 use rayon::prelude::*;
 
 use crate::config::run::GauntletConfig;
-use crate::gauntlet::fast_checks::{run_fast_checks, FastCheck, FastCheckParams};
+use crate::gauntlet::fast_checks::{run_fast_checks_pre, FastCheck, FastCheckParams};
 use crate::gauntlet::loss_score::{loss_score, mean_loss, EvalBatch, LossScoreResult};
 use crate::gauntlet::openskill::RatingBook;
 use crate::gauntlet::Submission;
@@ -104,8 +104,31 @@ impl Validator {
         max_contributors: usize,
         data: &mut dyn EvalDataProvider,
     ) -> Result<RoundVerdict> {
+        self.score_round_auth(eng, base_params, subs, &[], round, deadline, alpha, max_contributors, data)
+    }
+
+    /// [`Validator::score_round`] with payload-authentication
+    /// pre-verdicts: `pre[i]`, when `Some`, is the verdict the auth layer
+    /// reached for submission `i` before decode (see
+    /// `gauntlet::auth::AuthVerifier`). Pre-failed submissions are never
+    /// decoded: they pre-empt the fast-check battery, stay out of the
+    /// duplicate-hash memory and the norm median, and can never be
+    /// evaluated or selected. An empty `pre` is plain `score_round`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn score_round_auth(
+        &mut self,
+        eng: &Engine,
+        base_params: &[f32],
+        subs: &[Submission],
+        pre: &[Option<FastCheck>],
+        round: usize,
+        deadline: f64,
+        alpha: f32,
+        max_contributors: usize,
+        data: &mut dyn EvalDataProvider,
+    ) -> Result<RoundVerdict> {
         let man = eng.manifest();
-        let fast = run_fast_checks(
+        let fast = run_fast_checks_pre(
             subs,
             &FastCheckParams {
                 round,
@@ -116,8 +139,18 @@ impl Validator {
                 max_norm_ratio: self.cfg.max_norm_ratio,
             },
             &self.prev_hashes,
+            pre,
         );
-        self.prev_hashes = subs.iter().map(|s| s.payload.content_hash()).collect();
+        // Duplicate memory for the next round: only authenticated
+        // payloads exist as far as the validator is concerned — a
+        // rejected forgery's bytes were never decoded, so they must not
+        // seed hashes an honest original could later collide with.
+        self.prev_hashes = subs
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| pre.get(*i).copied().flatten().is_none())
+            .map(|(_, s)| s.payload.content_hash())
+            .collect();
         // ---- subset LossScore evaluation --------------------------------
         let passing: Vec<usize> =
             (0..subs.len()).filter(|&i| fast[i].passed()).collect();

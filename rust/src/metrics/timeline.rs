@@ -289,6 +289,7 @@ mod tests {
             adversarial_submitted: 0,
             adversarial_selected: 0,
             late_submissions: 1,
+            rejected_pre_decode: 0,
             mean_loss: 0.0,
             bytes_up: 0,
             bytes_down: 0,

@@ -42,6 +42,12 @@ pub enum Event {
     ShardAggregated { shard: usize },
     /// A peer finished downloading the round's selected payloads.
     DownloadDone { peer: usize },
+    /// An adversarial peer's junk slice landed on a targeted shard
+    /// coordinator (shard-targeted spam). Injected by the round engine
+    /// when the spammer's transfer completes, so attacks are visible in
+    /// the event trace alongside honest transfers; the engine takes no
+    /// action on it (the submission is rejected by payload auth).
+    AdversarySpam { peer: usize, shard: usize },
     /// The round's upload deadline passed; in-flight stalled uploads are
     /// cut off here and yield a `LateUpload` fast-check verdict.
     DeadlineHit,

@@ -84,8 +84,11 @@ impl ChurnModel {
             let noise = self.rng.poisson(0.3);
             ev.joins = (base + noise).min(self.cfg.max_joins_per_round);
         } else {
-            // At/above target: occasional speculative join.
-            ev.joins = usize::from(self.rng.bool(0.05));
+            // At/above target: occasional speculative join — still capped
+            // by the registration rate limit, so max_joins_per_round = 0
+            // really means zero churn-driven joins (the adversary-suite
+            // tests rely on an exactly-frozen population).
+            ev.joins = usize::from(self.rng.bool(0.05)).min(self.cfg.max_joins_per_round);
         }
         ev
     }
@@ -138,6 +141,23 @@ mod tests {
     #[test]
     fn deterministic() {
         assert_eq!(run_population(100, 9), run_population(100, 9));
+    }
+
+    #[test]
+    fn zero_max_joins_freezes_the_population() {
+        let cfg = ChurnConfig {
+            target_active: 4,
+            p_leave: 0.0,
+            max_joins_per_round: 0,
+            p_adversarial: 0.0,
+        };
+        let mut cm = ChurnModel::new(cfg, 11);
+        let active: Vec<String> = (0..4).map(|_| cm.fresh_hotkey()).collect();
+        for _ in 0..200 {
+            let ev = cm.step(&active);
+            assert!(ev.leaves.is_empty());
+            assert_eq!(ev.joins, 0, "speculative joins must respect the cap");
+        }
     }
 
     #[test]

@@ -17,7 +17,7 @@ use crate::coordinator::shard::ShardSpec;
 use crate::gauntlet::Submission;
 use crate::netsim::ComputeTier;
 use crate::runtime::{ops, Engine};
-use crate::sparseloco::{codec, topk, Payload};
+use crate::sparseloco::{codec, envelope, topk, Payload};
 use crate::util::rng::Rng;
 
 /// Wire-encode a payload as per-coordinator-shard slices, one buffer per
@@ -41,6 +41,25 @@ pub fn encode_payload_slices(payload: &Payload, specs: &[ShardSpec]) -> Result<V
         .collect()
 }
 
+/// [`encode_payload_slices`], then seal each slice in a signed envelope:
+/// one `CVEV` buffer per shard carrying `(hotkey, round, shard, nonce)`
+/// and the authentication tag the Gauntlet verifies before any decode.
+/// The nonce is shared across the slice set (one submission, one nonce).
+pub fn seal_payload_slices(
+    payload: &Payload,
+    specs: &[ShardSpec],
+    key: &envelope::SigningKey,
+    hotkey: &str,
+    round: u64,
+    nonce: u64,
+) -> Result<Vec<Vec<u8>>> {
+    Ok(encode_payload_slices(payload, specs)?
+        .into_iter()
+        .enumerate()
+        .map(|(s, wire)| envelope::seal(&wire, hotkey, round, s as u32, nonce, key))
+        .collect())
+}
+
 /// Peer behaviour. Adversarial variants exercise Gauntlet's defenses:
 /// copiers are caught by assigned-vs-unassigned LossScore, whales by
 /// median-norm checks, stale peers by the sync check, free-riders by the
@@ -59,9 +78,32 @@ pub enum Behavior {
     FreeRider,
     /// Submits an abnormally large-magnitude update (dominance attack).
     Whale,
+    /// Sybil swarm member: many hotkeys registered with ONE shared
+    /// signing key (liveness farming). Submits an empty payload; the
+    /// shared key's replay window lets at most one envelope through per
+    /// round, so the rest of the swarm is `ReplayedPayload`.
+    Sybil,
+    /// Free-rider that replays another peer's previous-round *sealed*
+    /// slices verbatim — valid signature, stale nonce. Caught by the
+    /// replay window before decode.
+    Replayer,
+    /// Signs with a key that does not match the hotkey's registered
+    /// verifying key (payload forgery / impersonation attempt):
+    /// `BadSignature` before decode.
+    Forger,
+    /// Floods one targeted coordinator shard with oversized junk bytes
+    /// in place of its slice; the whole submission fails envelope
+    /// parsing, and the junk is charged to the target shard's rejected
+    /// accounting.
+    ShardSpammer,
 }
 
 impl Behavior {
+    /// The classic payload-level adversaries the churn model rolls for
+    /// organically joining peers. The envelope-level kinds (`Sybil`,
+    /// `Replayer`, `Forger`, `ShardSpammer`) are NOT rolled here — they
+    /// are injected explicitly via `config::run::AdversaryConfig`, so
+    /// adding them left the churn roll distribution untouched.
     pub fn adversarial_kinds() -> [Behavior; 4] {
         [Behavior::Copier, Behavior::Noise, Behavior::FreeRider, Behavior::Whale]
     }
@@ -245,14 +287,22 @@ impl PeerState {
                 None => self.noise_payload(n_chunks, k, chunk, median_norm_hint),
             },
             Behavior::Noise => self.noise_payload(n_chunks, k, chunk, median_norm_hint),
-            Behavior::FreeRider => Payload {
-                n_chunks,
-                k,
-                chunk,
-                idx: vec![0; n_chunks * k],
-                codes: vec![2; n_chunks * k],
-                scales: vec![0.0; n_chunks],
+            // Sybils are liveness-only free-riders: the swarm's goal is
+            // registered presence, not gradient mass, so the payload is
+            // empty (the envelope layer is what makes the swarm visible).
+            Behavior::FreeRider | Behavior::Sybil => Self::empty_payload(n_chunks, k, chunk),
+            // The replayer's in-memory payload mirrors the victim slice
+            // set it replays on the wire; with no victim yet (round 0) it
+            // has nothing to replay and degenerates to an empty payload.
+            Behavior::Replayer => match copy_source {
+                Some(p) => p.clone(),
+                None => Self::empty_payload(n_chunks, k, chunk),
             },
+            // Forgers and spammers carry plausible-looking content — the
+            // attack is in the envelope, not the payload.
+            Behavior::Forger | Behavior::ShardSpammer => {
+                self.noise_payload(n_chunks, k, chunk, median_norm_hint)
+            }
             Behavior::Whale => {
                 let mut p = honest_payload
                     .unwrap_or_else(|| self.noise_payload(n_chunks, k, chunk, median_norm_hint));
@@ -277,6 +327,18 @@ impl PeerState {
             wire_bytes: codec::wire_size(payload.n_chunks, payload.k),
             payload,
             uploaded_at,
+        }
+    }
+
+    /// The all-zero payload (FreeRider / Sybil / fallback Replayer).
+    fn empty_payload(n_chunks: usize, k: usize, chunk: usize) -> Payload {
+        Payload {
+            n_chunks,
+            k,
+            chunk,
+            idx: vec![0; n_chunks * k],
+            codes: vec![2; n_chunks * k],
+            scales: vec![0.0; n_chunks],
         }
     }
 
@@ -413,5 +475,58 @@ mod tests {
         assert_eq!(p.params[0], 1.0);
         assert_eq!(p.base_round, 9);
         assert_eq!(p.rounds_done, 1);
+    }
+
+    #[test]
+    fn sybil_payload_is_empty_and_liveness_only() {
+        let mut p = mk_peer(Behavior::Sybil);
+        let sub = p.fabricate_submission(3, None, None, 4, 8, 64, 1.0, 0.0);
+        assert_eq!(sub.payload.l2_norm(), 0.0);
+        assert!(!Behavior::Sybil.computes());
+        assert!(Behavior::Sybil.is_adversarial());
+    }
+
+    #[test]
+    fn replayer_mirrors_victim_or_degenerates_to_empty() {
+        let mut p = mk_peer(Behavior::Replayer);
+        let victim = topk::compress_dense(&[0.5; 256], 64, 8);
+        let sub = p.fabricate_submission(3, None, Some(&victim), 4, 8, 64, 1.0, 0.0);
+        assert_eq!(sub.payload, victim);
+        // round 0: nothing to replay
+        let sub0 = p.fabricate_submission(0, None, None, 4, 8, 64, 1.0, 0.0);
+        assert_eq!(sub0.payload.l2_norm(), 0.0);
+    }
+
+    #[test]
+    fn envelope_kinds_are_adversarial_but_not_rolled_by_churn() {
+        for b in [Behavior::Sybil, Behavior::Replayer, Behavior::Forger, Behavior::ShardSpammer] {
+            assert!(b.is_adversarial());
+            assert!(!b.computes());
+            assert!(
+                !Behavior::adversarial_kinds().contains(&b),
+                "{b:?} must not enter the churn roll distribution"
+            );
+        }
+    }
+
+    #[test]
+    fn sealed_slices_verify_and_size_as_predicted() {
+        use crate::coordinator::shard::ShardSet;
+        let key = envelope::SigningKey::derive(0x5EED, "hk-00002");
+        let p = topk::compress_dense(&[0.01f32; 256], 64, 8);
+        let three = ShardSet::new(4, 64, 3).unwrap();
+        let bare = encode_payload_slices(&p, &three.specs()).unwrap();
+        let sealed =
+            seal_payload_slices(&p, &three.specs(), &key, "hk-00002", 5, 5).unwrap();
+        assert_eq!(sealed.len(), 3);
+        let vk = key.verifying();
+        for (s, (b, w)) in bare.iter().zip(&sealed).enumerate() {
+            assert_eq!(w.len(), envelope::sealed_size("hk-00002".len(), b.len()));
+            let env = envelope::open(w).unwrap();
+            assert_eq!(env.shard as usize, s);
+            assert_eq!((env.hotkey, env.round, env.nonce), ("hk-00002", 5, 5));
+            assert_eq!(env.payload, &b[..]);
+            assert!(env.verify(&vk));
+        }
     }
 }

@@ -1,0 +1,428 @@
+//! Signed payload envelopes: the authenticated layer of the wire format.
+//!
+//! The bare [`codec`] bytes (`CVPG`) say nothing about *who* produced
+//! them — any peer could upload bytes into a bucket and attribute them to
+//! an arbitrary hotkey. Permissionless participation (paper §3, Gauntlet
+//! §2.2) needs the coordinator to check origin and freshness *before*
+//! spending any decode or scoring work on a submission. This module wraps
+//! each shard-slice in a `CVEV` envelope carrying a
+//! `(hotkey, round, shard, nonce)` header and a 128-bit authentication
+//! tag over the header fields and the payload bytes.
+//!
+//! Envelope layout (little-endian), fixed 48-byte header:
+//!
+//! | section | bytes |
+//! |---------|-------|
+//! | magic `"CVEV"`   | 4  |
+//! | version u16      | 2  |
+//! | hotkey_len u16   | 2  |
+//! | shard u32        | 4  |
+//! | round u64        | 8  |
+//! | nonce u64        | 8  |
+//! | payload_len u32  | 4  |
+//! | tag              | 16 |
+//! | hotkey bytes     | hotkey_len |
+//! | payload bytes    | payload_len (bare `CVPG` codec bytes) |
+//!
+//! [`open`] is parse-only and zero-copy: it borrows from the sealed
+//! buffer and validates the exact total length against the header's
+//! length fields *before* touching the variable sections, so hostile
+//! length fields can never size an allocation. [`decode_compat`] keeps
+//! the wire format versioned: pre-envelope bare `CVPG` buffers still
+//! decode, so old bytes remain readable.
+//!
+//! Keys are deterministic *test* keys derived from the run seed — a
+//! keyed two-lane FNV/splitmix MAC stands in for a real signature scheme
+//! (no cryptography crates in this container). The API is shaped like a
+//! detached-signature scheme (`SigningKey` / `VerifyingKey` /
+//! [`Envelope::verify`]) so an Ed25519 implementation can drop in without
+//! touching any call site.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::codec;
+use super::payload::Payload;
+
+const MAGIC: &[u8; 4] = b"CVEV";
+const VERSION: u16 = 1;
+
+/// Fixed envelope header size in bytes (everything before the hotkey).
+pub const HEADER_BYTES: usize = 48;
+/// Authentication-tag width in bytes (two 64-bit lanes).
+pub const SIG_BYTES: usize = 16;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn splitmix(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// One keyed FNV-1a lane of the MAC; parts are length-prefixed so part
+/// boundaries are unambiguous (no concatenation collisions).
+struct Lane(u64);
+
+impl Lane {
+    fn new(key: u64, domain: &[u8]) -> Self {
+        let mut l = Lane(FNV_OFFSET ^ splitmix(key));
+        l.part(domain);
+        l
+    }
+
+    fn word(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    fn part(&mut self, bytes: &[u8]) {
+        self.word(bytes.len() as u64);
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+    }
+
+    fn finish(self, key: u64) -> u64 {
+        splitmix(self.0 ^ key.rotate_left(29))
+    }
+}
+
+/// 128-bit authentication tag carried in the envelope header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Signature {
+    lo: u64,
+    hi: u64,
+}
+
+impl Signature {
+    /// Wire form: `lo` then `hi`, little-endian.
+    pub fn to_bytes(self) -> [u8; SIG_BYTES] {
+        let mut out = [0u8; SIG_BYTES];
+        out[..8].copy_from_slice(&self.lo.to_le_bytes());
+        out[8..].copy_from_slice(&self.hi.to_le_bytes());
+        out
+    }
+
+    /// Parse the wire form.
+    pub fn from_bytes(bytes: [u8; SIG_BYTES]) -> Self {
+        Signature {
+            lo: u64::from_le_bytes(bytes[..8].try_into().unwrap()),
+            hi: u64::from_le_bytes(bytes[8..].try_into().unwrap()),
+        }
+    }
+}
+
+/// Per-hotkey signing key (two 64-bit MAC lanes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SigningKey {
+    k0: u64,
+    k1: u64,
+}
+
+impl SigningKey {
+    /// Deterministic test key for `hotkey` under `run_seed` — every
+    /// process in a run derives the same key for the same identity, so
+    /// simulated peers need no key-distribution machinery.
+    pub fn derive(run_seed: u64, hotkey: &str) -> Self {
+        let h = fnv1a(hotkey.as_bytes());
+        SigningKey {
+            k0: splitmix(run_seed ^ h ^ 0x4356_4556_2D4B_4559), // "CVEV-KEY"
+            k1: splitmix(run_seed.rotate_left(32) ^ h.wrapping_mul(FNV_PRIME) ^ 0x6B65_7931),
+        }
+    }
+
+    /// The verification half of this key.
+    pub fn verifying(&self) -> VerifyingKey {
+        VerifyingKey { k0: self.k0, k1: self.k1 }
+    }
+
+    /// Tag `payload` bound to the full envelope header context.
+    pub fn sign(&self, hotkey: &str, round: u64, shard: u32, nonce: u64, payload: &[u8]) -> Signature {
+        mac(self.k0, self.k1, hotkey, round, shard, nonce, payload)
+    }
+}
+
+/// The verification half of a [`SigningKey`]. With the MAC stand-in it
+/// holds the same lanes (shared secret); the type split keeps call sites
+/// honest about which direction of the scheme they need.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VerifyingKey {
+    k0: u64,
+    k1: u64,
+}
+
+impl VerifyingKey {
+    /// Stable identifier for replay-window bookkeeping: windows are keyed
+    /// by the *key*, not the hotkey, so a sybil swarm sharing one key
+    /// shares one window, and a recycled UID with a fresh hotkey gets a
+    /// fresh window.
+    pub fn id(&self) -> u64 {
+        splitmix(self.k0 ^ self.k1.rotate_left(17))
+    }
+
+    /// Recompute the tag and compare.
+    pub fn verify(
+        &self,
+        hotkey: &str,
+        round: u64,
+        shard: u32,
+        nonce: u64,
+        payload: &[u8],
+        sig: Signature,
+    ) -> bool {
+        mac(self.k0, self.k1, hotkey, round, shard, nonce, payload) == sig
+    }
+}
+
+fn mac(k0: u64, k1: u64, hotkey: &str, round: u64, shard: u32, nonce: u64, payload: &[u8]) -> Signature {
+    let mut lanes = [Lane::new(k0, b"CVEV-SIG-V1/0"), Lane::new(k1, b"CVEV-SIG-V1/1")];
+    for lane in &mut lanes {
+        lane.part(hotkey.as_bytes());
+        lane.word(round);
+        lane.word(shard as u64);
+        lane.word(nonce);
+        lane.part(payload);
+    }
+    let [a, b] = lanes;
+    Signature { lo: a.finish(k0), hi: b.finish(k1) }
+}
+
+/// A parsed envelope borrowing the sealed buffer ([`open`] never
+/// allocates or copies).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Envelope<'a> {
+    /// Claimed producer identity (authenticated by [`Envelope::verify`]).
+    pub hotkey: &'a str,
+    /// Outer round the payload was produced for.
+    pub round: u64,
+    /// Coordinator shard this slice targets.
+    pub shard: u32,
+    /// Replay counter; the verifier only accepts strictly increasing
+    /// nonces per verifying key.
+    pub nonce: u64,
+    /// Authentication tag over the header fields and payload.
+    pub sig: Signature,
+    /// The bare `CVPG` codec bytes (still undecoded).
+    pub payload: &'a [u8],
+}
+
+impl Envelope<'_> {
+    /// Check the tag against `key`. The tag covers every header field
+    /// and the payload bytes, so any tamper — identity, round, shard,
+    /// nonce, or content — fails verification.
+    pub fn verify(&self, key: &VerifyingKey) -> bool {
+        key.verify(self.hotkey, self.round, self.shard, self.nonce, self.payload, self.sig)
+    }
+}
+
+/// Exact sealed size for a hotkey/payload byte count.
+pub fn sealed_size(hotkey_len: usize, payload_len: usize) -> usize {
+    HEADER_BYTES + hotkey_len + payload_len
+}
+
+/// Sign and frame `payload` into a sealed envelope buffer.
+pub fn seal(payload: &[u8], hotkey: &str, round: u64, shard: u32, nonce: u64, key: &SigningKey) -> Vec<u8> {
+    assert!(hotkey.len() <= u16::MAX as usize, "hotkey too long for envelope");
+    assert!(payload.len() <= u32::MAX as usize, "payload too long for envelope");
+    let sig = key.sign(hotkey, round, shard, nonce, payload);
+    let mut out = Vec::with_capacity(sealed_size(hotkey.len(), payload.len()));
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(hotkey.len() as u16).to_le_bytes());
+    out.extend_from_slice(&shard.to_le_bytes());
+    out.extend_from_slice(&round.to_le_bytes());
+    out.extend_from_slice(&nonce.to_le_bytes());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&sig.to_bytes());
+    out.extend_from_slice(hotkey.as_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Parse a sealed buffer without verifying the tag (that is the caller's
+/// next step, against the chain's registered key for the claimed hotkey).
+///
+/// The exact total length is checked against the header's length fields
+/// *before* the variable sections are touched, and nothing is allocated,
+/// so hostile `hotkey_len`/`payload_len` values bounce off cheaply.
+pub fn open(bytes: &[u8]) -> Result<Envelope<'_>> {
+    ensure!(bytes.len() >= HEADER_BYTES, "envelope too short: {} bytes", bytes.len());
+    ensure!(&bytes[0..4] == MAGIC, "bad envelope magic");
+    let version = u16::from_le_bytes([bytes[4], bytes[5]]);
+    ensure!(version == VERSION, "unsupported envelope version {version}");
+    let hk_len = u16::from_le_bytes([bytes[6], bytes[7]]) as usize;
+    let shard = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    let round = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
+    let nonce = u64::from_le_bytes(bytes[20..28].try_into().unwrap());
+    let payload_len = u32::from_le_bytes(bytes[28..32].try_into().unwrap()) as usize;
+    let sig = Signature::from_bytes(bytes[32..HEADER_BYTES].try_into().unwrap());
+    // u64 arithmetic: the sum cannot overflow even with hostile fields
+    let expect = HEADER_BYTES as u64 + hk_len as u64 + payload_len as u64;
+    if bytes.len() as u64 != expect {
+        bail!("envelope length {} != expected {}", bytes.len(), expect);
+    }
+    let hotkey = std::str::from_utf8(&bytes[HEADER_BYTES..HEADER_BYTES + hk_len])
+        .context("envelope hotkey is not utf-8")?;
+    Ok(Envelope { hotkey, round, shard, nonce, sig, payload: &bytes[HEADER_BYTES + hk_len..] })
+}
+
+/// True if the buffer leads with the envelope magic (as opposed to bare
+/// `CVPG` codec bytes).
+pub fn is_sealed(bytes: &[u8]) -> bool {
+    bytes.len() >= 4 && &bytes[0..4] == MAGIC
+}
+
+/// Version-compatible decode: bare pre-envelope `CVPG` codec buffers
+/// still decode, and sealed `CVEV` buffers decode their payload section.
+///
+/// Authentication is **not** performed here — callers on the trust
+/// boundary must [`open`] and [`Envelope::verify`] first; this is the
+/// convenience path for trusted local bytes (self-produced payloads,
+/// archived rounds).
+pub fn decode_compat(bytes: &[u8]) -> Result<Payload> {
+    if is_sealed(bytes) {
+        codec::decode(open(bytes)?.payload)
+    } else {
+        codec::decode(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparseloco::topk::compress_dense;
+    use crate::util::rng::Rng;
+
+    fn wire(seed: u64) -> Vec<u8> {
+        let mut rng = Rng::new(seed);
+        let dense: Vec<f32> = (0..8 * 64).map(|_| rng.normal() as f32 * 0.01).collect();
+        codec::encode(&compress_dense(&dense, 64, 8))
+    }
+
+    #[test]
+    fn seal_open_roundtrip() {
+        let key = SigningKey::derive(0xA1, "hk-00003");
+        let payload = wire(1);
+        let sealed = seal(&payload, "hk-00003", 7, 2, 7, &key);
+        assert_eq!(sealed.len(), sealed_size(8, payload.len()));
+        let env = open(&sealed).unwrap();
+        assert_eq!(env.hotkey, "hk-00003");
+        assert_eq!(env.round, 7);
+        assert_eq!(env.shard, 2);
+        assert_eq!(env.nonce, 7);
+        assert_eq!(env.payload, &payload[..]);
+        assert!(env.verify(&key.verifying()));
+    }
+
+    #[test]
+    fn wrong_key_fails_verification() {
+        let key = SigningKey::derive(0xA1, "hk-00003");
+        let sealed = seal(&wire(2), "hk-00003", 1, 0, 1, &key);
+        let env = open(&sealed).unwrap();
+        // different seed, different hotkey: both produce different keys
+        assert!(!env.verify(&SigningKey::derive(0xA2, "hk-00003").verifying()));
+        assert!(!env.verify(&SigningKey::derive(0xA1, "hk-00004").verifying()));
+    }
+
+    #[test]
+    fn any_tampered_byte_is_caught() {
+        let key = SigningKey::derive(9, "peer");
+        let vk = key.verifying();
+        let sealed = seal(&wire(3), "peer", 4, 1, 4, &key);
+        // Flip one bit in every byte position: the envelope must either
+        // fail to parse or fail verification — never verify clean.
+        for pos in 0..sealed.len() {
+            let mut t = sealed.clone();
+            t[pos] ^= 1;
+            if let Ok(env) = open(&t) {
+                assert!(!env.verify(&vk), "tamper at byte {pos} verified clean");
+            }
+        }
+    }
+
+    #[test]
+    fn header_fields_are_all_bound_by_the_tag() {
+        let key = SigningKey::derive(5, "peer");
+        let payload = wire(4);
+        let base = key.sign("peer", 3, 1, 3, &payload);
+        assert_ne!(base, key.sign("peer", 4, 1, 3, &payload), "round unbound");
+        assert_ne!(base, key.sign("peer", 3, 2, 3, &payload), "shard unbound");
+        assert_ne!(base, key.sign("peer", 3, 1, 4, &payload), "nonce unbound");
+        assert_ne!(base, key.sign("reep", 3, 1, 3, &payload), "hotkey unbound");
+        assert_ne!(base, key.sign("peer", 3, 1, 3, &payload[1..]), "payload unbound");
+    }
+
+    #[test]
+    fn derive_is_deterministic_and_identity_separated() {
+        let a = SigningKey::derive(7, "alice");
+        assert_eq!(a, SigningKey::derive(7, "alice"));
+        assert_ne!(a, SigningKey::derive(7, "bob"));
+        assert_ne!(a, SigningKey::derive(8, "alice"));
+        assert_ne!(a.verifying().id(), SigningKey::derive(7, "bob").verifying().id());
+    }
+
+    #[test]
+    fn signature_byte_roundtrip() {
+        let sig = SigningKey::derive(1, "x").sign("x", 1, 0, 1, b"abc");
+        assert_eq!(Signature::from_bytes(sig.to_bytes()), sig);
+    }
+
+    #[test]
+    fn every_truncation_is_a_clean_err() {
+        let key = SigningKey::derive(2, "hk");
+        let sealed = seal(&wire(5), "hk", 1, 0, 1, &key);
+        for len in 0..sealed.len() {
+            assert!(open(&sealed[..len]).is_err(), "prefix of {len} bytes parsed");
+        }
+    }
+
+    #[test]
+    fn hostile_length_fields_never_allocate() {
+        let key = SigningKey::derive(2, "hk");
+        let mut sealed = seal(&wire(6), "hk", 1, 0, 1, &key);
+        // hotkey_len = u16::MAX
+        sealed[6] = 0xFF;
+        sealed[7] = 0xFF;
+        assert!(open(&sealed).is_err());
+        sealed[6] = 2;
+        sealed[7] = 0;
+        // payload_len = u32::MAX: expected length overflows the buffer,
+        // the exact-length check rejects before anything is sized
+        sealed[28..32].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(open(&sealed).is_err());
+    }
+
+    #[test]
+    fn non_utf8_hotkey_is_rejected() {
+        let key = SigningKey::derive(3, "hk");
+        let mut sealed = seal(&wire(7), "hk", 1, 0, 1, &key);
+        sealed[HEADER_BYTES] = 0xFF; // invalid utf-8 lead byte
+        sealed[HEADER_BYTES + 1] = 0xFF;
+        assert!(open(&sealed).is_err());
+    }
+
+    #[test]
+    fn decode_compat_accepts_both_wire_generations() {
+        let payload = wire(8);
+        let bare = codec::decode(&payload).unwrap();
+        // generation 1: bare CVPG bytes
+        assert_eq!(decode_compat(&payload).unwrap(), bare);
+        // generation 2: sealed CVEV envelope
+        let key = SigningKey::derive(4, "hk");
+        let sealed = seal(&payload, "hk", 2, 0, 2, &key);
+        assert_eq!(decode_compat(&sealed).unwrap(), bare);
+        assert!(is_sealed(&sealed));
+        assert!(!is_sealed(&payload));
+    }
+}

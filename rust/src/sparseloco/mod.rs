@@ -6,6 +6,7 @@
 //! large payloads while staying bit-identical to their serial paths.
 
 pub mod codec;
+pub mod envelope;
 pub mod payload;
 pub mod quant;
 pub mod topk;

@@ -21,7 +21,7 @@ use covenant::config::run::RunConfig;
 use covenant::coordinator::network::{Network, NetworkParams};
 use covenant::netsim::{testkit, ComputeTier, Event, Link};
 use covenant::runtime::Engine;
-use covenant::sparseloco::codec;
+use covenant::sparseloco::{codec, envelope};
 use covenant::train::{OuterAlphaSchedule, Schedule, Segment};
 
 fn build_params(seed: u64, peers: usize) -> NetworkParams {
@@ -51,7 +51,10 @@ fn degenerate_event_spine_reproduces_barrier_timings() {
     let comm_deadline = p.comm_deadline_s;
     let (up_bps, down_bps, lat) =
         (p.run.network.uplink_bps, p.run.network.downlink_bps, p.run.network.latency_s);
-    let wb = codec::wire_size(man.n_chunks, man.config.topk);
+    // Uploads are sealed in signed envelopes (the default wire format):
+    // each peer's single slice carries the 48-byte CVEV header plus its
+    // 8-byte "hk-NNNNN" hotkey on top of the bare codec bytes.
+    let wb = envelope::sealed_size(8, codec::wire_size(man.n_chunks, man.config.topk));
 
     let mut net = Network::new(&eng, p).unwrap();
     let mut t_start_expected = 0.0f64;

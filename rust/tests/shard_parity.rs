@@ -21,7 +21,7 @@ use covenant::coordinator::shard::{ShardSet, ShardedNetwork};
 use covenant::coordinator::{aggregate, aggregator};
 use covenant::netsim::{Event, Link};
 use covenant::runtime::Engine;
-use covenant::sparseloco::{codec, topk, Payload};
+use covenant::sparseloco::{codec, envelope, topk, Payload};
 use covenant::train::{OuterAlphaSchedule, Schedule, Segment};
 use covenant::util::rng::Rng;
 
@@ -121,7 +121,10 @@ fn n_shards_one_reproduces_the_unsharded_round_bit_exactly() {
     assert_eq!(p.run.n_shards, 1, "single coordinator is the default");
     let window = p.run.network.compute_window_s;
     let (up_bps, lat) = (p.run.network.uplink_bps, p.run.network.latency_s);
-    let wb = codec::wire_size(man.n_chunks, man.config.topk);
+    // One whole-payload slice per peer, sealed in a signed envelope: the
+    // 48-byte CVEV header + the 8-byte "hk-NNNNN" hotkey ride on top of
+    // the bare codec bytes.
+    let wb = envelope::sealed_size(8, codec::wire_size(man.n_chunks, man.config.topk));
 
     let mut net = Network::new(&eng, p).unwrap();
     let mut t_start = 0.0f64;
