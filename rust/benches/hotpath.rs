@@ -6,7 +6,10 @@
 //! pre-decode open + verify gate), sharded vs unsharded aggregation +
 //! round throughput
 //! (multi-coordinator `ShardSet`; outputs asserted bit-identical, so the
-//! comparison is pure overhead), Gauntlet `score_round` serial vs rayon
+//! comparison is pure overhead), the SIMD tier (per-core GFLOP/s for the
+//! 8-lane matmul microkernels vs blocked, codec/quantizer GB/s for the
+//! SWAR wire paths vs scalar — with the byte-identity and tolerance
+//! contracts asserted in-process), Gauntlet `score_round` serial vs rayon
 //! fan-out, and the headline number for this repo's perf trajectory:
 //! serial vs parallel round-engine throughput at 16 simulated peers.
 //!
@@ -30,8 +33,9 @@ use covenant::coordinator::shard::ShardSet;
 use covenant::gauntlet::testkit::{synthetic_submission, SyntheticEvalData};
 use covenant::gauntlet::validator::Validator;
 use covenant::gauntlet::Submission;
+use covenant::runtime::kernels::KernelMode;
 use covenant::runtime::{kernels, ops, Engine};
-use covenant::sparseloco::{codec, envelope, topk, Payload};
+use covenant::sparseloco::{codec, envelope, quant, topk, Payload};
 use covenant::train::{OuterAlphaSchedule, Schedule, Segment};
 use covenant::util::cli::Args;
 use covenant::util::rng::Rng;
@@ -281,6 +285,149 @@ fn main() -> Result<()> {
         100.0 * wire_overhead
     );
 
+    // ---- SIMD tier: lane microkernels + SWAR wire paths --------------------
+    // GFLOP/s are measured inside a 1-thread rayon pool, so each number
+    // is per-core microkernel throughput (not pool scaling, which the
+    // sections above already cover). The bench doubles as an in-process
+    // contract check: the codec/quant lane must be byte-identical to
+    // scalar, and the lane-accumulated matmuls must sit inside the
+    // documented tolerance of the blocked path.
+    println!(
+        "\n== SIMD tier ({}-lane microkernels, 1-thread pool => per-core) ==",
+        kernels::LANES
+    );
+    let pool1 = rayon::ThreadPoolBuilder::new().num_threads(1).build()?;
+    let mm_shapes: &[(usize, usize, usize)] =
+        if smoke { &[(33, 320, 65)] } else { &[(64, 256, 256), (33, 320, 65), (128, 512, 512)] };
+    let mut simd_kernel_rows: Vec<serde_json::Value> = Vec::new();
+    for &(mm, pp, nn) in mm_shapes {
+        let a: Vec<f32> = (0..mm * pp).map(|_| rng.normal() as f32).collect();
+        let bmat: Vec<f32> = (0..pp * nn).map(|_| rng.normal() as f32).collect();
+        let btr: Vec<f32> = (0..nn * pp).map(|_| rng.normal() as f32).collect();
+        let bn: Vec<f32> = (0..mm * nn).map(|_| rng.normal() as f32).collect();
+        // tolerance pin: lane-accumulated vs blocked, checked on real data
+        let mut blocked_out = vec![0f32; mm * nn];
+        let mut simd_out = vec![0f32; mm * nn];
+        kernels::matmul_mode(KernelMode::Blocked, &a, &bmat, mm, pp, nn, &mut blocked_out);
+        kernels::matmul_mode(KernelMode::Simd, &a, &bmat, mm, pp, nn, &mut simd_out);
+        let max_rel = blocked_out
+            .iter()
+            .zip(&simd_out)
+            .map(|(&x, &y)| {
+                (f64::from(x) - f64::from(y)).abs()
+                    / f64::from(x.abs()).max(f64::from(y.abs())).max(1e-6)
+            })
+            .fold(0.0, f64::max);
+        assert!(max_rel < 1e-4, "simd matmul outside tolerance at {mm}x{pp}x{nn}: {max_rel:.2e}");
+        let mut out_mn = vec![0f32; mm * nn];
+        let mut out_pn = vec![0f32; pp * nn];
+        let flops = 2.0 * (mm * pp * nn) as f64;
+        for which in ["matmul", "matmul_bt", "matmul_at_add"] {
+            let mut gf = [0f64; 2];
+            for (mi, mode) in [KernelMode::Blocked, KernelMode::Simd].into_iter().enumerate() {
+                let s = pool1.install(|| {
+                    bench(wu, it(10), || match which {
+                        "matmul" => kernels::matmul_mode(mode, &a, &bmat, mm, pp, nn, &mut out_mn),
+                        "matmul_bt" => {
+                            kernels::matmul_bt_mode(mode, &a, &btr, mm, pp, nn, &mut out_mn)
+                        }
+                        _ => kernels::matmul_at_add_mode(mode, &a, &bn, mm, pp, nn, &mut out_pn),
+                    })
+                });
+                gf[mi] = flops / s.mean / 1e9;
+            }
+            println!(
+                "  {which:13} {mm:>3}x{pp:>3}x{nn:>3}: blocked {:>6.2} GF/s/core, simd {:>6.2} GF/s/core ({:.2}x)",
+                gf[0],
+                gf[1],
+                gf[1] / gf[0]
+            );
+            simd_kernel_rows.push(json!({
+                "kernel": which,
+                "shape": [mm, pp, nn],
+                "blocked_gflops_per_core": gf[0],
+                "simd_gflops_per_core": gf[1],
+                "speedup": gf[1] / gf[0],
+            }));
+        }
+    }
+    // SWAR wire codec vs scalar on the comm-phase payload: byte-identity
+    // asserted first, then throughput per path.
+    let mut wire_scalar = Vec::new();
+    let mut wire_simd = Vec::new();
+    codec::encode_into_mode(&payloads[0], &mut wire_scalar, KernelMode::Blocked);
+    codec::encode_into_mode(&payloads[0], &mut wire_simd, KernelMode::Simd);
+    assert_eq!(wire_scalar, wire_simd, "SWAR encode not byte-identical to scalar");
+    assert_eq!(
+        codec::decode_mode(&wire_scalar, KernelMode::Blocked)?,
+        codec::decode_mode(&wire_scalar, KernelMode::Simd)?,
+        "SWAR decode not byte-identical to scalar"
+    );
+    let s_enc_scalar = bench(wu * 2, it(50), || {
+        codec::encode_into_mode(&payloads[0], &mut wire_scalar, KernelMode::Blocked);
+        std::hint::black_box(&wire_scalar);
+    });
+    report("wire encode (scalar)", &s_enc_scalar, Some(wire.len() as f64));
+    let s_enc_simd = bench(wu * 2, it(50), || {
+        codec::encode_into_mode(&payloads[0], &mut wire_simd, KernelMode::Simd);
+        std::hint::black_box(&wire_simd);
+    });
+    report("wire encode (SWAR)", &s_enc_simd, Some(wire.len() as f64));
+    let s_dec_scalar = bench(wu * 2, it(50), || {
+        std::hint::black_box(codec::decode_mode(&wire, KernelMode::Blocked).unwrap());
+    });
+    report("wire decode (scalar)", &s_dec_scalar, Some(wire.len() as f64));
+    let s_dec_simd = bench(wu * 2, it(50), || {
+        std::hint::black_box(codec::decode_mode(&wire, KernelMode::Simd).unwrap());
+    });
+    report("wire decode (SWAR)", &s_dec_simd, Some(wire.len() as f64));
+    // lane quantizer vs the scalar branchy loop: byte-identical codes
+    let qn = if smoke { 1 << 16 } else { 1 << 22 };
+    let qvals: Vec<f32> = (0..qn).map(|_| rng.normal() as f32).collect();
+    let mut codes_scalar = vec![0u8; qn];
+    let mut codes_simd = vec![0u8; qn];
+    let s_q_scalar = bench(wu, it(20), || {
+        for (c, &x) in codes_scalar.iter_mut().zip(&qvals) {
+            *c = quant::quantize_value(x, 0.9);
+        }
+        std::hint::black_box(&codes_scalar);
+    });
+    report("quantize (scalar branchy)", &s_q_scalar, Some((qn * 4) as f64));
+    let s_q_simd = bench(wu, it(20), || {
+        quant::quantize_slice_into(&qvals, 0.9, &mut codes_simd);
+        std::hint::black_box(&codes_simd);
+    });
+    report("quantize (lane branchless)", &s_q_simd, Some((qn * 4) as f64));
+    assert_eq!(codes_scalar, codes_simd, "lane quantizer not byte-identical to scalar");
+    // full compress path parity (selection + lane quant + EF interplay)
+    assert_eq!(
+        topk::compress_dense_mode(&delta, man.config.chunk, man.config.topk, KernelMode::Blocked),
+        topk::compress_dense_mode(&delta, man.config.chunk, man.config.topk, KernelMode::Simd),
+        "simd compress_dense not byte-identical to scalar"
+    );
+    // end-to-end engine ops under the global Simd mode (main is
+    // sequential here, so flipping the process-global switch is safe;
+    // restore the ambient mode right after).
+    let ambient_mode = kernels::mode();
+    kernels::set_mode(KernelMode::Simd);
+    let s_step_simd = bench(wu, it(3), || {
+        ops::train_step(&eng, &params, &m, &v, 1.0, &tokens, &mask, 1e-3, 0.0).unwrap();
+    });
+    report("train_step (simd kernels)", &s_step_simd, None);
+    let s_eval_simd = bench(wu, it(3), || {
+        ops::eval_loss(&eng, &params, &tokens, &mask).unwrap();
+    });
+    report("eval_loss  (simd kernels)", &s_eval_simd, None);
+    kernels::set_mode(ambient_mode);
+    println!(
+        "simd vs blocked: train_step {:.2}x, eval_loss {:.2}x; codec enc {:.2}x, dec {:.2}x, quant {:.2}x",
+        s_step.mean / s_step_simd.mean,
+        s_eval.mean / s_eval_simd.mean,
+        s_enc_scalar.mean / s_enc_simd.mean,
+        s_dec_scalar.mean / s_dec_simd.mean,
+        s_q_scalar.mean / s_q_simd.mean
+    );
+
     // ---- Gauntlet scoring: serial vs rayon fan-out -------------------------
     let v_peers = if smoke { 3 } else { 8 };
     let v_batches = 2;
@@ -393,6 +540,26 @@ fn main() -> Result<()> {
             "round_engine_sharding_overhead_frac": sharded_s / parallel_s - 1.0,
             "slice_wire_bytes": sliced_wire,
             "slice_wire_overhead_frac": wire_overhead,
+        },
+        "simd": {
+            "lane_width": kernels::LANES,
+            "microkernels": simd_kernel_rows,
+            "codec": {
+                "wire_bytes": wire.len(),
+                "encode_scalar_mb_per_s": wire.len() as f64 / s_enc_scalar.mean / 1e6,
+                "encode_swar_mb_per_s": wire.len() as f64 / s_enc_simd.mean / 1e6,
+                "decode_scalar_mb_per_s": wire.len() as f64 / s_dec_scalar.mean / 1e6,
+                "decode_swar_mb_per_s": wire.len() as f64 / s_dec_simd.mean / 1e6,
+            },
+            "quantize": {
+                "values": qn,
+                "scalar_gb_per_s": (qn * 4) as f64 / s_q_scalar.mean / 1e9,
+                "lane_gb_per_s": (qn * 4) as f64 / s_q_simd.mean / 1e9,
+            },
+            "train_step_simd_s": s_step_simd.mean,
+            "train_step_simd_vs_blocked": s_step.mean / s_step_simd.mean,
+            "eval_loss_simd_s": s_eval_simd.mean,
+            "eval_loss_simd_vs_blocked": s_eval.mean / s_eval_simd.mean,
         },
     });
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");

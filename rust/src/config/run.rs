@@ -11,6 +11,7 @@
 use anyhow::{Context, Result};
 
 use crate::netsim::HeterogeneityConfig;
+use crate::runtime::kernels::{self, KernelMode};
 use crate::util::json::Json;
 
 /// Top-level run configuration.
@@ -45,6 +46,15 @@ pub struct RunConfig {
     /// boundary). `false` falls back to the legacy bare-codec wire
     /// format: old bytes still decode, but nothing is authenticated.
     pub sign_payloads: bool,
+    /// Dense-kernel implementation for the whole run
+    /// (`"reference" | "blocked" | "simd"`): installed as the
+    /// process-global `runtime::kernels` mode at network construction.
+    /// `reference`/`blocked` are bit-identical; `simd` keeps the
+    /// codec/quant lane bit-identical but lane-accumulates the matmuls
+    /// (deterministic across threads/reruns, tolerance-pinned vs
+    /// blocked). Defaults to `blocked` unless the `COVENANT_KERNEL_MODE`
+    /// env var overrides the process default.
+    pub kernel_mode: KernelMode,
     /// Deterministic adversary cohort injected at network construction.
     pub adversary: AdversaryConfig,
     /// Simulated link shape + timing-model knobs.
@@ -65,6 +75,7 @@ impl Default for RunConfig {
             seed: 0xC0DE,
             n_shards: 1,
             sign_payloads: true,
+            kernel_mode: kernels::default_mode(),
             adversary: AdversaryConfig::default(),
             network: NetworkConfig::default(),
             gauntlet: GauntletConfig::default(),
@@ -225,6 +236,12 @@ impl RunConfig {
         if let Some(v) = j.opt("sign_payloads") {
             c.sign_payloads = v.as_bool()?;
         }
+        if let Some(v) = j.opt("kernel_mode") {
+            let s = v.as_str()?;
+            c.kernel_mode = KernelMode::parse(s).ok_or_else(|| {
+                anyhow::anyhow!("kernel_mode {s:?}: expected \"reference\", \"blocked\" or \"simd\"")
+            })?;
+        }
         if let Some(a) = j.opt("adversary") {
             if let Some(v) = a.opt("sybils") {
                 c.adversary.sybils = v.as_usize()?;
@@ -383,6 +400,22 @@ mod tests {
         assert_eq!(c.adversary.spam_shard, 2);
         assert_eq!(c.adversary.whales, 1);
         assert_eq!(c.adversary.total(), 8);
+    }
+
+    #[test]
+    fn kernel_mode_parses_and_rejects_unknown() {
+        // Default unless COVENANT_KERNEL_MODE overrides the process
+        // default (which these tests don't set).
+        assert!(matches!(
+            RunConfig::default().kernel_mode,
+            KernelMode::Reference | KernelMode::Blocked | KernelMode::Simd
+        ));
+        let j = Json::parse(r#"{"kernel_mode": "simd"}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&j).unwrap().kernel_mode, KernelMode::Simd);
+        let j = Json::parse(r#"{"kernel_mode": "reference"}"#).unwrap();
+        assert_eq!(RunConfig::from_json(&j).unwrap().kernel_mode, KernelMode::Reference);
+        let j = Json::parse(r#"{"kernel_mode": "avx512"}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err(), "unknown kernel_mode rejected");
     }
 
     #[test]

@@ -485,6 +485,10 @@ impl<'e> Network<'e> {
     /// Build a network: engine + params -> initial peer cohort, shard
     /// coordinators, published corpus, fresh chain state.
     pub fn new(eng: &'e Engine, p: NetworkParams) -> Result<Self> {
+        // Install the run's kernel mode (config knob -> process-global
+        // switch): every workspace op, compress phase and aggregation
+        // scatter below flows through `runtime::kernels` dispatch.
+        crate::runtime::kernels::set_mode(p.run.kernel_mode);
         let man = eng.manifest();
         let mut rng = Rng::new(p.run.seed);
         let clock = VirtualClock::new();

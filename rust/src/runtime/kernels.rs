@@ -1,65 +1,192 @@
-//! Dense CPU kernels for the native backend: cache-blocked, rayon-parallel
-//! matrix products that are **bit-identical** to the naive serial
-//! references they replace.
+//! Dense CPU kernels for the native backend, selectable via
+//! [`KernelMode`]: bit-exact serial references, cache-blocked
+//! rayon-parallel kernels that are **bit-identical** to those references,
+//! and explicit 8-lane SIMD microkernels written so stable rustc
+//! autovectorizes them (fixed-width `[f32; LANES]` lane accumulators, no
+//! dependencies, no unsafe — a `#[cfg(target_feature)]`-gated intrinsics
+//! path can later slot in behind the same `*_mode` entry points).
 //!
-//! ## Determinism contract
+//! ## Determinism contract (two classes)
 //!
-//! Every kernel in this module computes each output element with the exact
-//! floating-point operation sequence of its `*_ref` sibling: one
-//! multiply-add per k index, accumulated in strictly increasing k order
-//! into a single accumulation chain. Blocking only reorders *which*
-//! element is computed when (row panels across the rayon pool, k/column
-//! panels for cache reuse inside a panel) — never the order of additions
-//! within an element. Rust never licenses float reassociation, so the
-//! optimized kernels produce byte-identical results to the references on
-//! every input, regardless of thread count or scheduling. The
-//! `kernel_equivalence` integration test and the unit tests below assert
-//! this on odd shapes and panel-boundary sizes.
+//! **[`KernelMode::Reference`] and [`KernelMode::Blocked`] are
+//! byte-identical on every input.** Every blocked kernel computes each
+//! output element with the exact floating-point operation sequence of its
+//! `*_ref` sibling: one multiply-add per k index, accumulated in strictly
+//! increasing k order into a single accumulation chain. Blocking only
+//! reorders *which* element is computed when (row panels across the rayon
+//! pool, k/column panels for cache reuse inside a panel) — never the
+//! order of additions within an element. Rust never licenses float
+//! reassociation, so the optimized kernels produce byte-identical results
+//! to the references on every input, regardless of thread count or
+//! scheduling.
+//!
+//! **[`KernelMode::Simd`] is lane-accumulated**: each output element is
+//! the combination of [`LANES`] partial sums — lane `l` accumulates the
+//! multiply-adds whose reduction index `≡ l (mod LANES)` — folded by the
+//! fixed binary tree [`tree8`]. This reassociates the additions, so SIMD
+//! matmul results are **not** bit-equal to the single-chain reference;
+//! they ARE bit-deterministic across thread counts, panel splits and
+//! reruns, because the lane assignment and combine tree depend only on
+//! the reduction length, never on scheduling. `tests/kernel_equivalence.rs`
+//! pins both properties: rerun/thread-count bit-identity, and a relative
+//! -error tolerance envelope against the blocked reference (the ROADMAP's
+//! "tolerance pins where accumulation order does not permit" clause).
+//!
+//! The mode is a process-global switch ([`set_mode`]) so the round
+//! engine, Gauntlet fan-out and workspace ops all flow through one
+//! selection; tests and benches that need a *specific* path use the
+//! `*_mode` entry points ([`matmul_mode`] et al.) and never touch the
+//! global. The ambient default is [`KernelMode::Blocked`], overridable
+//! for a whole process with `COVENANT_KERNEL_MODE=reference|blocked|simd`
+//! (how CI runs the full suite in both default and SIMD modes) and per
+//! run with the `kernel_mode` config knob (`config::run`).
 //!
 //! Panel sizes: row panels of `m / (4 * threads)` rows fan out across
 //! rayon (disjoint `&mut` output slices, so scheduling cannot race); the
-//! k dimension is processed in panels of [`KC`] so the shared `b` panel
-//! stays cache-resident across a task's rows; `matmul_bt` tiles columns by
-//! [`JT`] so a small group of `b` rows is reused across the panel's rows.
+//! blocked k dimension is processed in panels of [`KC`] so the shared `b`
+//! panel stays cache-resident across a task's rows; `matmul_bt` tiles
+//! columns by [`JT`] so a small group of `b` rows is reused across the
+//! panel's rows. The SIMD kernels tile columns by [`LANES`] and unroll
+//! the reduction by [`LANES`], holding an 8x8 `[[f32; 8]; 8]` register
+//! tile per column group.
 //!
-//! [`force_naive`] routes every call through the serial references — used
-//! by `benches/hotpath.rs` to measure the blocked/parallel speedup against
-//! the pre-optimization baseline on the same host, inside one process.
-//! Because both paths are bit-identical, toggling it is always safe.
+//! [`force_naive`] survives as a compatibility shim over the mode switch
+//! (`true` = [`KernelMode::Reference`], `false` = the ambient default).
 
 #![allow(clippy::needless_range_loop)]
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
 
 use rayon::prelude::*;
 
-/// k-panel size: `KC` rows of `b` (each `n` floats) are streamed against a
-/// task's row panel before moving to the next k range.
+/// SIMD lane width: every lane-accumulated kernel splits its reduction
+/// into this many partial sums (and tiles columns by the same width).
+/// Eight f32 lanes = one AVX2 register / two NEON registers; the lane
+/// structs are plain `[f32; 8]` so stable rustc autovectorizes them on
+/// whatever the target offers.
+pub const LANES: usize = 8;
+
+/// k-panel size for the blocked kernels: `KC` rows of `b` (each `n`
+/// floats) are streamed against a task's row panel before moving to the
+/// next k range.
 pub const KC: usize = 256;
 
-/// Column tile for [`matmul_bt`]: rows of the transposed operand reused
-/// across a panel's rows.
+/// Column tile for blocked [`matmul_bt`]: rows of the transposed operand
+/// reused across a panel's rows.
 pub const JT: usize = 8;
 
 /// Below this many multiply-adds a matmul stays on the current thread —
 /// rayon task overhead would dominate (covers the tiny norm/head shapes).
 const PAR_MIN_MADDS: usize = 1 << 15;
 
-static FORCE_NAIVE: AtomicBool = AtomicBool::new(false);
-
-/// Route all kernels through the serial naive references (benchmark
-/// baseline). Safe to toggle at any time: both paths are bit-identical.
-pub fn force_naive(on: bool) {
-    FORCE_NAIVE.store(on, Ordering::SeqCst);
+/// Which kernel implementation the dense hot paths use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelMode {
+    /// Naive serial references: the semantics oracle and benchmark
+    /// baseline. Byte-identical to [`KernelMode::Blocked`] on every
+    /// input.
+    Reference,
+    /// Cache-blocked, rayon row-panel-parallel kernels, byte-identical
+    /// to [`KernelMode::Reference`] (single accumulation chain per
+    /// output element, strictly increasing k order).
+    Blocked,
+    /// Explicit 8-lane SIMD microkernels: rayon-parallel like `Blocked`,
+    /// lane-accumulated with the fixed [`tree8`] combine. Deterministic
+    /// across threads/reruns but NOT bit-equal to the other two modes
+    /// (reassociation); pinned by tolerance tests instead.
+    Simd,
 }
 
-/// Whether [`force_naive`] is currently set.
+impl KernelMode {
+    /// Parse a mode name (`reference` | `blocked` | `simd`,
+    /// case-insensitive). `None` for anything else.
+    pub fn parse(s: &str) -> Option<KernelMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "reference" | "naive" => Some(KernelMode::Reference),
+            "blocked" => Some(KernelMode::Blocked),
+            "simd" => Some(KernelMode::Simd),
+            _ => None,
+        }
+    }
+
+    /// Canonical lower-case name (round-trips through [`KernelMode::parse`]).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KernelMode::Reference => "reference",
+            KernelMode::Blocked => "blocked",
+            KernelMode::Simd => "simd",
+        }
+    }
+}
+
+const MODE_UNSET: u8 = u8::MAX;
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+
+fn mode_to_u8(m: KernelMode) -> u8 {
+    match m {
+        KernelMode::Reference => 0,
+        KernelMode::Blocked => 1,
+        KernelMode::Simd => 2,
+    }
+}
+
+fn mode_from_u8(v: u8) -> KernelMode {
+    match v {
+        0 => KernelMode::Reference,
+        2 => KernelMode::Simd,
+        _ => KernelMode::Blocked,
+    }
+}
+
+/// The process default: `COVENANT_KERNEL_MODE` if set (panics on an
+/// unknown value — it is a CI/dev knob and a typo must not silently run
+/// the wrong suite), otherwise [`KernelMode::Blocked`].
+pub fn default_mode() -> KernelMode {
+    static DEFAULT: OnceLock<KernelMode> = OnceLock::new();
+    *DEFAULT.get_or_init(|| match std::env::var("COVENANT_KERNEL_MODE") {
+        Ok(s) => KernelMode::parse(&s).unwrap_or_else(|| {
+            panic!("COVENANT_KERNEL_MODE={s:?}: expected reference|blocked|simd")
+        }),
+        Err(_) => KernelMode::Blocked,
+    })
+}
+
+/// Set the process-global kernel mode. Every mode is deterministic in
+/// itself, so toggling is always *safe*; but `Simd` is not bit-equal to
+/// the other two, so code comparing outputs across calls must hold the
+/// mode fixed in between (the bit-equivalence tests serialize on a mutex
+/// for exactly this reason).
+pub fn set_mode(m: KernelMode) {
+    MODE.store(mode_to_u8(m), Ordering::SeqCst);
+}
+
+/// The current process-global kernel mode (lazily initialized from
+/// [`default_mode`] on first read).
+pub fn mode() -> KernelMode {
+    let v = MODE.load(Ordering::Relaxed);
+    if v == MODE_UNSET {
+        let d = default_mode();
+        MODE.store(mode_to_u8(d), Ordering::SeqCst);
+        return d;
+    }
+    mode_from_u8(v)
+}
+
+/// Compatibility shim over [`set_mode`]: route every kernel through the
+/// serial naive references (`true`) or restore the ambient default
+/// (`false`).
+pub fn force_naive(on: bool) {
+    set_mode(if on { KernelMode::Reference } else { default_mode() });
+}
+
+/// Whether the references are currently selected.
 pub fn naive_forced() -> bool {
-    FORCE_NAIVE.load(Ordering::SeqCst)
+    mode() == KernelMode::Reference
 }
 
 /// Serial dot product: single accumulation chain in increasing index
-/// order (the per-element order every kernel here preserves).
+/// order (the per-element order the Reference/Blocked kernels preserve).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -78,6 +205,85 @@ pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     for i in 0..x.len() {
         y[i] += alpha * x[i];
     }
+}
+
+/// The canonical lane combine: a fixed binary tree over [`LANES`] partial
+/// sums. Every lane-accumulated kernel folds with exactly this tree, so
+/// a SIMD result depends only on the input values and reduction length —
+/// never on blocking, threading or call site.
+#[inline]
+pub fn tree8(l: &[f32; LANES]) -> f32 {
+    ((l[0] + l[4]) + (l[2] + l[6])) + ((l[1] + l[5]) + (l[3] + l[7]))
+}
+
+/// Lane-accumulated dot product: lane `l` sums the products of elements
+/// at indices `≡ l (mod LANES)`, combined by [`tree8`]. Deterministic
+/// for a given input; NOT bit-equal to the single-chain [`dot`].
+#[inline]
+pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut l = [0f32; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for i in 0..LANES {
+            l[i] += xa[i] * xb[i];
+        }
+    }
+    for (i, (&xa, &xb)) in ca.remainder().iter().zip(cb.remainder()).enumerate() {
+        l[i] += xa * xb;
+    }
+    tree8(&l)
+}
+
+/// out[i] = beta * a[i] + b[i], in [`LANES`]-wide strips. Elementwise —
+/// every lane performs exactly the scalar operation on its own element,
+/// so this is IEEE-exact against the scalar loop on every input (used by
+/// the error-feedback combine in `sparseloco::topk`, which must stay
+/// byte-identical across kernel modes).
+#[inline]
+pub fn scale_add_into(beta: f32, a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    let mut co = out.chunks_exact_mut(LANES);
+    for ((xa, xb), xo) in (&mut ca).zip(&mut cb).zip(&mut co) {
+        for i in 0..LANES {
+            xo[i] = beta * xa[i] + xb[i];
+        }
+    }
+    for ((&xa, &xb), xo) in
+        ca.remainder().iter().zip(cb.remainder()).zip(co.into_remainder())
+    {
+        *xo = beta * xa + xb;
+    }
+}
+
+/// Bitwise slice equality (`f32::to_bits` per element), in [`LANES`]-wide
+/// strips with an early exit — the "SIMD memcmp" the workspace
+/// packed-weights cache keys on. Exact by construction: -0.0 vs +0.0 is
+/// a mismatch, NaN == NaN (same payload) is a match.
+#[inline]
+pub fn bits_eq_f32(a: &[f32], b: &[f32]) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        let mut same = true;
+        for i in 0..LANES {
+            same &= xa[i].to_bits() == xb[i].to_bits();
+        }
+        if !same {
+            return false;
+        }
+    }
+    ca.remainder()
+        .iter()
+        .zip(cb.remainder())
+        .all(|(x, y)| x.to_bits() == y.to_bits())
 }
 
 /// Rows per rayon task: aim for ~4 tasks per thread so work-stealing can
@@ -139,8 +345,8 @@ pub fn matmul_at_add_ref(a: &[f32], b: &[f32], m: usize, p: usize, n: usize, out
 // Blocked / parallel kernels (bit-identical to the references)
 // ==========================================================================
 
-/// One row panel of `matmul`: k-blocked so the `b` panel (`kc * n`
-/// floats) is reused across the panel's rows. Per output element the
+/// One row panel of blocked `matmul`: k-blocked so the `b` panel (`kc *
+/// n` floats) is reused across the panel's rows. Per output element the
 /// additions still run in strictly increasing k order (panels are visited
 /// in order, and in order within a panel) — bit-identical to
 /// [`matmul_ref`].
@@ -161,30 +367,110 @@ fn matmul_rows(a: &[f32], b: &[f32], p: usize, n: usize, out: &mut [f32]) {
     }
 }
 
-/// out[m,n] = a[m,p] @ b[p,n] (row-major) — cache-blocked, parallel over
-/// row panels, bit-identical to [`matmul_ref`].
-pub fn matmul(a: &[f32], b: &[f32], m: usize, p: usize, n: usize, out: &mut [f32]) {
+/// One row panel of SIMD `matmul`: columns tiled by [`LANES`], the k
+/// reduction unrolled by [`LANES`] into an 8x8 register tile
+/// (`acc[l][j]`: lane `l` holds the partial sums of k indices `≡ l`),
+/// folded per column by [`tree8`]. The lane assignment depends only on
+/// `p`, so results are identical for any row-panel split.
+fn matmul_rows_simd(a: &[f32], b: &[f32], p: usize, n: usize, out: &mut [f32]) {
+    let rows = out.len() / n;
+    let mut j0 = 0;
+    while j0 < n {
+        let jw = LANES.min(n - j0);
+        for i in 0..rows {
+            let ar = &a[i * p..(i + 1) * p];
+            if jw == LANES {
+                let mut acc = [[0f32; LANES]; LANES];
+                let mut k = 0;
+                while k + LANES <= p {
+                    for l in 0..LANES {
+                        let av = ar[k + l];
+                        let br = &b[(k + l) * n + j0..(k + l) * n + j0 + LANES];
+                        for j in 0..LANES {
+                            acc[l][j] += av * br[j];
+                        }
+                    }
+                    k += LANES;
+                }
+                let mut l = 0;
+                while k < p {
+                    let av = ar[k];
+                    let br = &b[k * n + j0..k * n + j0 + LANES];
+                    for j in 0..LANES {
+                        acc[l][j] += av * br[j];
+                    }
+                    k += 1;
+                    l += 1;
+                }
+                let or = &mut out[i * n + j0..i * n + j0 + LANES];
+                for j in 0..LANES {
+                    or[j] = tree8(&[
+                        acc[0][j], acc[1][j], acc[2][j], acc[3][j], acc[4][j], acc[5][j],
+                        acc[6][j], acc[7][j],
+                    ]);
+                }
+            } else {
+                // column tail: same lane scheme, one element at a time
+                let or = &mut out[i * n + j0..i * n + j0 + jw];
+                for (dj, o) in or.iter_mut().enumerate() {
+                    let mut lanes = [0f32; LANES];
+                    let mut l = 0;
+                    for (k, &av) in ar.iter().enumerate() {
+                        lanes[l] += av * b[k * n + j0 + dj];
+                        l += 1;
+                        if l == LANES {
+                            l = 0;
+                        }
+                    }
+                    *o = tree8(&lanes);
+                }
+            }
+        }
+        j0 += LANES;
+    }
+}
+
+/// out[m,n] = a[m,p] @ b[p,n] (row-major) under an explicit mode.
+/// `Reference`/`Blocked` are bit-identical; `Simd` is lane-accumulated
+/// (see the module docs). Parallel over row panels above the madds
+/// threshold in the non-reference modes.
+pub fn matmul_mode(
+    mode: KernelMode,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    p: usize,
+    n: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(a.len(), m * p);
     debug_assert_eq!(b.len(), p * n);
     debug_assert_eq!(out.len(), m * n);
     if m == 0 || n == 0 {
         return;
     }
-    if naive_forced() {
-        return matmul_ref(a, b, m, p, n, out);
-    }
+    let rows = match mode {
+        KernelMode::Reference => return matmul_ref(a, b, m, p, n, out),
+        KernelMode::Blocked => matmul_rows,
+        KernelMode::Simd => matmul_rows_simd,
+    };
     if m * p * n < PAR_MIN_MADDS {
-        return matmul_rows(a, b, p, n, out);
+        return rows(a, b, p, n, out);
     }
     let rpt = rows_per_task(m);
     out.par_chunks_mut(rpt * n)
         .zip(a.par_chunks(rpt * p))
-        .for_each(|(oc, ac)| matmul_rows(ac, b, p, n, oc));
+        .for_each(|(oc, ac)| rows(ac, b, p, n, oc));
 }
 
-/// One row panel of `matmul_bt`: columns tiled by [`JT`] so a small group
-/// of `b` rows stays hot across the panel's rows. Each output element is
-/// one serial [`dot`] — identical chain to [`matmul_bt_ref`].
+/// out[m,n] = a[m,p] @ b[p,n] under the process-global [`mode`].
+pub fn matmul(a: &[f32], b: &[f32], m: usize, p: usize, n: usize, out: &mut [f32]) {
+    matmul_mode(mode(), a, b, m, p, n, out)
+}
+
+/// One row panel of blocked `matmul_bt`: columns tiled by [`JT`] so a
+/// small group of `b` rows stays hot across the panel's rows. Each output
+/// element is one serial [`dot`] — identical chain to [`matmul_bt_ref`].
 fn matmul_bt_rows(a: &[f32], b: &[f32], p: usize, n: usize, out: &mut [f32]) {
     let rows = out.len() / n;
     let mut j0 = 0;
@@ -201,55 +487,189 @@ fn matmul_bt_rows(a: &[f32], b: &[f32], p: usize, n: usize, out: &mut [f32]) {
     }
 }
 
+/// One row panel of SIMD `matmul_bt`: both operands of each output
+/// element are contiguous, so each element is one [`dot8`]. Column tiling
+/// as in the blocked path (pure cache reuse; per-element math unchanged).
+fn matmul_bt_rows_simd(a: &[f32], b: &[f32], p: usize, n: usize, out: &mut [f32]) {
+    let rows = out.len() / n;
+    let mut j0 = 0;
+    while j0 < n {
+        let jt = JT.min(n - j0);
+        for i in 0..rows {
+            let ar = &a[i * p..(i + 1) * p];
+            let or = &mut out[i * n + j0..i * n + j0 + jt];
+            for (dj, o) in or.iter_mut().enumerate() {
+                *o = dot8(ar, &b[(j0 + dj) * p..(j0 + dj + 1) * p]);
+            }
+        }
+        j0 += jt;
+    }
+}
+
 /// out[m,n] = a[m,p] @ b[n,p]^T — `b` row-major [n,p] (logits through the
-/// tied embedding, `dx` through transposed weights). Parallel over row
-/// panels, bit-identical to [`matmul_bt_ref`].
-pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, p: usize, n: usize, out: &mut [f32]) {
+/// tied embedding, `dx` through transposed weights) — under an explicit
+/// mode. Parallel over row panels in the non-reference modes.
+pub fn matmul_bt_mode(
+    mode: KernelMode,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    p: usize,
+    n: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(a.len(), m * p);
     debug_assert_eq!(b.len(), n * p);
     debug_assert_eq!(out.len(), m * n);
     if m == 0 || n == 0 {
         return;
     }
-    if naive_forced() {
-        return matmul_bt_ref(a, b, m, p, n, out);
-    }
+    let rows = match mode {
+        KernelMode::Reference => return matmul_bt_ref(a, b, m, p, n, out),
+        KernelMode::Blocked => matmul_bt_rows,
+        KernelMode::Simd => matmul_bt_rows_simd,
+    };
     if m * p * n < PAR_MIN_MADDS {
-        return matmul_bt_rows(a, b, p, n, out);
+        return rows(a, b, p, n, out);
     }
     let rpt = rows_per_task(m);
     out.par_chunks_mut(rpt * n)
         .zip(a.par_chunks(rpt * p))
-        .for_each(|(oc, ac)| matmul_bt_rows(ac, b, p, n, oc));
+        .for_each(|(oc, ac)| rows(ac, b, p, n, oc));
 }
 
-/// out[p,n] += a[m,p]^T @ b[m,n] (weight gradients). Parallelized over
-/// *output* row panels (the p dimension): each task owns a disjoint
-/// `out[kk0..kk0+krows]` range and walks all m rows of `a`/`b` in order,
-/// so per output element the additions run in increasing i order exactly
-/// as in [`matmul_at_add_ref`].
-pub fn matmul_at_add(a: &[f32], b: &[f32], m: usize, p: usize, n: usize, out: &mut [f32]) {
+/// out[m,n] = a[m,p] @ b[n,p]^T under the process-global [`mode`].
+pub fn matmul_bt(a: &[f32], b: &[f32], m: usize, p: usize, n: usize, out: &mut [f32]) {
+    matmul_bt_mode(mode(), a, b, m, p, n, out)
+}
+
+/// One output row panel of blocked `matmul_at_add` (rows `kk0..kk0+krows`
+/// of the p-dimension): walks all m rows of `a`/`b` in order, so per
+/// output element the additions run in increasing i order exactly as in
+/// [`matmul_at_add_ref`].
+fn matmul_at_add_rows(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    p: usize,
+    n: usize,
+    kk0: usize,
+    oc: &mut [f32],
+) {
+    let krows = oc.len() / n;
+    for i in 0..m {
+        let br = &b[i * n..(i + 1) * n];
+        let ar = &a[i * p + kk0..i * p + kk0 + krows];
+        for (kk, &av) in ar.iter().enumerate() {
+            axpy(av, br, &mut oc[kk * n..(kk + 1) * n]);
+        }
+    }
+}
+
+/// One output row panel of SIMD `matmul_at_add`: per output row, columns
+/// tiled by [`LANES`] with the i reduction unrolled into the 8x8 lane
+/// tile (lane `l` holds i indices `≡ l`), tree-folded and then added
+/// once onto the existing accumulator value. Lane assignment depends
+/// only on `m`, so results are identical for any panel split.
+fn matmul_at_add_rows_simd(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    p: usize,
+    n: usize,
+    kk0: usize,
+    oc: &mut [f32],
+) {
+    let krows = oc.len() / n;
+    for kk in 0..krows {
+        let col = kk0 + kk;
+        let or = &mut oc[kk * n..(kk + 1) * n];
+        let mut j0 = 0;
+        while j0 < n {
+            let jw = LANES.min(n - j0);
+            if jw == LANES {
+                let mut acc = [[0f32; LANES]; LANES];
+                let mut i = 0;
+                while i + LANES <= m {
+                    for l in 0..LANES {
+                        let av = a[(i + l) * p + col];
+                        let br = &b[(i + l) * n + j0..(i + l) * n + j0 + LANES];
+                        for j in 0..LANES {
+                            acc[l][j] += av * br[j];
+                        }
+                    }
+                    i += LANES;
+                }
+                let mut l = 0;
+                while i < m {
+                    let av = a[i * p + col];
+                    let br = &b[i * n + j0..i * n + j0 + LANES];
+                    for j in 0..LANES {
+                        acc[l][j] += av * br[j];
+                    }
+                    i += 1;
+                    l += 1;
+                }
+                for j in 0..LANES {
+                    or[j0 + j] += tree8(&[
+                        acc[0][j], acc[1][j], acc[2][j], acc[3][j], acc[4][j], acc[5][j],
+                        acc[6][j], acc[7][j],
+                    ]);
+                }
+            } else {
+                for dj in 0..jw {
+                    let mut lanes = [0f32; LANES];
+                    let mut l = 0;
+                    for i in 0..m {
+                        lanes[l] += a[i * p + col] * b[i * n + j0 + dj];
+                        l += 1;
+                        if l == LANES {
+                            l = 0;
+                        }
+                    }
+                    or[j0 + dj] += tree8(&lanes);
+                }
+            }
+            j0 += LANES;
+        }
+    }
+}
+
+/// out[p,n] += a[m,p]^T @ b[m,n] (weight gradients) under an explicit
+/// mode. Parallelized over *output* row panels (the p dimension): each
+/// task owns a disjoint `out[kk0..kk0+krows]` range.
+pub fn matmul_at_add_mode(
+    mode: KernelMode,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    p: usize,
+    n: usize,
+    out: &mut [f32],
+) {
     debug_assert_eq!(a.len(), m * p);
     debug_assert_eq!(b.len(), m * n);
     debug_assert_eq!(out.len(), p * n);
     if m == 0 || p == 0 || n == 0 {
         return;
     }
-    if naive_forced() || m * p * n < PAR_MIN_MADDS {
-        return matmul_at_add_ref(a, b, m, p, n, out);
+    let rows = match mode {
+        KernelMode::Reference => return matmul_at_add_ref(a, b, m, p, n, out),
+        KernelMode::Blocked => matmul_at_add_rows,
+        KernelMode::Simd => matmul_at_add_rows_simd,
+    };
+    if m * p * n < PAR_MIN_MADDS {
+        return rows(a, b, m, p, n, 0, out);
     }
     let rpt = rows_per_task(p);
-    out.par_chunks_mut(rpt * n).enumerate().for_each(|(ci, oc)| {
-        let kk0 = ci * rpt;
-        let krows = oc.len() / n;
-        for i in 0..m {
-            let br = &b[i * n..(i + 1) * n];
-            let ar = &a[i * p + kk0..i * p + kk0 + krows];
-            for (kk, &av) in ar.iter().enumerate() {
-                axpy(av, br, &mut oc[kk * n..(kk + 1) * n]);
-            }
-        }
-    });
+    out.par_chunks_mut(rpt * n)
+        .enumerate()
+        .for_each(|(ci, oc)| rows(a, b, m, p, n, ci * rpt, oc));
+}
+
+/// out[p,n] += a[m,p]^T @ b[m,n] under the process-global [`mode`].
+pub fn matmul_at_add(a: &[f32], b: &[f32], m: usize, p: usize, n: usize, out: &mut [f32]) {
+    matmul_at_add_mode(mode(), a, b, m, p, n, out)
 }
 
 #[cfg(test)]
@@ -262,10 +682,20 @@ mod tests {
     }
 
     fn bits_eq(a: &[f32], b: &[f32]) -> bool {
-        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+        bits_eq_f32(a, b)
     }
 
-    /// Odd shapes plus sizes straddling the KC / JT / row-panel
+    fn max_rel_err(a: &[f32], b: &[f32]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| {
+                let d = (x as f64 - y as f64).abs();
+                d / (x.abs() as f64).max(y.abs() as f64).max(1e-6)
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Odd shapes plus sizes straddling the KC / JT / LANES / row-panel
     /// boundaries.
     const SHAPES: &[(usize, usize, usize)] = &[
         (1, 1, 1),
@@ -279,6 +709,15 @@ mod tests {
         (33, 320, 128),
     ];
 
+    /// Tolerance for the Simd-vs-Blocked comparison: reassociating a
+    /// length-p f32 reduction into 8 lanes perturbs each output element
+    /// by a few ulps per accumulation step; 1e-4 relative is orders of
+    /// magnitude above what the unit-normal test inputs produce while
+    /// still catching any structural error (wrong lane, wrong tree,
+    /// dropped tail). The same pin (looser, end-to-end) guards
+    /// `tests/kernel_equivalence.rs`.
+    const SIMD_REL_TOL: f64 = 1e-4;
+
     #[test]
     fn matmul_matches_reference_bitwise() {
         let mut rng = Rng::new(11);
@@ -288,7 +727,7 @@ mod tests {
             let mut want = vec![0f32; m * n];
             matmul_ref(&a, &b, m, p, n, &mut want);
             let mut got = vec![7f32; m * n]; // must be fully overwritten
-            matmul(&a, &b, m, p, n, &mut got);
+            matmul_mode(KernelMode::Blocked, &a, &b, m, p, n, &mut got);
             assert!(bits_eq(&want, &got), "matmul mismatch at {m}x{p}x{n}");
         }
     }
@@ -302,7 +741,7 @@ mod tests {
             let mut want = vec![0f32; m * n];
             matmul_bt_ref(&a, &b, m, p, n, &mut want);
             let mut got = vec![7f32; m * n];
-            matmul_bt(&a, &b, m, p, n, &mut got);
+            matmul_bt_mode(KernelMode::Blocked, &a, &b, m, p, n, &mut got);
             assert!(bits_eq(&want, &got), "matmul_bt mismatch at {m}x{p}x{n}");
         }
     }
@@ -318,24 +757,129 @@ mod tests {
             let mut want = init.clone();
             matmul_at_add_ref(&a, &b, m, p, n, &mut want);
             let mut got = init;
-            matmul_at_add(&a, &b, m, p, n, &mut got);
+            matmul_at_add_mode(KernelMode::Blocked, &a, &b, m, p, n, &mut got);
             assert!(bits_eq(&want, &got), "matmul_at_add mismatch at {m}x{p}x{n}");
         }
     }
 
     #[test]
+    fn simd_kernels_within_tolerance_of_blocked() {
+        let mut rng = Rng::new(15);
+        for &(m, p, n) in SHAPES {
+            let a = randv(&mut rng, m * p);
+            let b = randv(&mut rng, p * n);
+            let bt = randv(&mut rng, n * p);
+            let bn = randv(&mut rng, m * n);
+            let init = randv(&mut rng, p * n);
+
+            let mut blocked = vec![0f32; m * n];
+            matmul_mode(KernelMode::Blocked, &a, &b, m, p, n, &mut blocked);
+            let mut simd = vec![7f32; m * n];
+            matmul_mode(KernelMode::Simd, &a, &b, m, p, n, &mut simd);
+            let e = max_rel_err(&blocked, &simd);
+            assert!(e < SIMD_REL_TOL, "matmul simd err {e:.2e} at {m}x{p}x{n}");
+
+            matmul_bt_mode(KernelMode::Blocked, &a, &bt, m, p, n, &mut blocked);
+            matmul_bt_mode(KernelMode::Simd, &a, &bt, m, p, n, &mut simd);
+            let e = max_rel_err(&blocked, &simd);
+            assert!(e < SIMD_REL_TOL, "matmul_bt simd err {e:.2e} at {m}x{p}x{n}");
+
+            let mut blocked = init.clone();
+            matmul_at_add_mode(KernelMode::Blocked, &a, &bn, m, p, n, &mut blocked);
+            let mut simd = init.clone();
+            matmul_at_add_mode(KernelMode::Simd, &a, &bn, m, p, n, &mut simd);
+            let e = max_rel_err(&blocked, &simd);
+            assert!(e < SIMD_REL_TOL, "matmul_at_add simd err {e:.2e} at {m}x{p}x{n}");
+        }
+    }
+
+    #[test]
+    fn simd_matmul_bit_identical_across_panel_splits_and_reruns() {
+        // The lane assignment depends only on the reduction length, so
+        // the serial small-shape path and the rayon row-panel path must
+        // agree bitwise, and reruns must reproduce exactly.
+        let mut rng = Rng::new(16);
+        let (m, p, n) = (33, 320, 65); // above the parallel threshold
+        let a = randv(&mut rng, m * p);
+        let b = randv(&mut rng, p * n);
+        let mut par = vec![0f32; m * n];
+        matmul_mode(KernelMode::Simd, &a, &b, m, p, n, &mut par);
+        // serial single-panel path on the same input
+        let mut ser = vec![0f32; m * n];
+        matmul_rows_simd(&a, &b, p, n, &mut ser);
+        assert!(bits_eq(&par, &ser), "simd panel split changed bits");
+        for _ in 0..3 {
+            let mut again = vec![0f32; m * n];
+            matmul_mode(KernelMode::Simd, &a, &b, m, p, n, &mut again);
+            assert!(bits_eq(&par, &again), "simd rerun changed bits");
+        }
+    }
+
+    #[test]
+    fn dot8_matches_scalar_within_tolerance_and_is_deterministic() {
+        let mut rng = Rng::new(17);
+        for len in [0usize, 1, 7, 8, 9, 63, 64, 65, 1000] {
+            let a = randv(&mut rng, len);
+            let b = randv(&mut rng, len);
+            let s = dot(&a, &b) as f64;
+            let v = dot8(&a, &b) as f64;
+            assert!(
+                (s - v).abs() <= 1e-4 * s.abs().max(v.abs()).max(1.0),
+                "len {len}: {s} vs {v}"
+            );
+            assert_eq!(dot8(&a, &b).to_bits(), dot8(&a, &b).to_bits());
+        }
+    }
+
+    #[test]
+    fn scale_add_into_is_elementwise_exact() {
+        let mut rng = Rng::new(18);
+        for len in [0usize, 1, 7, 8, 9, 100] {
+            let a = randv(&mut rng, len);
+            let b = randv(&mut rng, len);
+            let mut got = vec![0f32; len];
+            scale_add_into(0.95, &a, &b, &mut got);
+            let want: Vec<f32> = a.iter().zip(&b).map(|(&x, &y)| 0.95 * x + y).collect();
+            assert!(bits_eq(&want, &got), "len {len}");
+        }
+    }
+
+    #[test]
+    fn bits_eq_f32_is_bitwise() {
+        let a = vec![1.0f32, -0.0, f32::NAN, 3.5, 0.0, 1.0, 2.0, 3.0, 4.0];
+        let mut b = a.clone();
+        assert!(bits_eq_f32(&a, &b), "identical bits must match (incl. NaN)");
+        b[1] = 0.0; // -0.0 vs +0.0
+        assert!(!bits_eq_f32(&a, &b), "-0.0 vs +0.0 must mismatch");
+        assert!(!bits_eq_f32(&a, &a[..8]), "length mismatch");
+    }
+
+    #[test]
+    fn mode_parse_round_trips() {
+        for m in [KernelMode::Reference, KernelMode::Blocked, KernelMode::Simd] {
+            assert_eq!(KernelMode::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(KernelMode::parse("SIMD"), Some(KernelMode::Simd));
+        assert_eq!(KernelMode::parse("naive"), Some(KernelMode::Reference));
+        assert_eq!(KernelMode::parse("avx512"), None);
+    }
+
+    #[test]
     fn repeated_runs_are_deterministic() {
-        // Same inputs, many runs across the pool: identical bits each time.
+        // Same inputs, many runs across the pool: identical bits each
+        // time, in every mode.
         let mut rng = Rng::new(14);
         let (m, p, n) = (33, 320, 65);
         let a = randv(&mut rng, m * p);
         let b = randv(&mut rng, p * n);
-        let mut first = vec![0f32; m * n];
-        matmul(&a, &b, m, p, n, &mut first);
-        for _ in 0..5 {
-            let mut again = vec![0f32; m * n];
-            matmul(&a, &b, m, p, n, &mut again);
-            assert!(bits_eq(&first, &again));
+        for mode in [KernelMode::Reference, KernelMode::Blocked, KernelMode::Simd] {
+            let mut first = vec![0f32; m * n];
+            matmul_mode(mode, &a, &b, m, p, n, &mut first);
+            for _ in 0..5 {
+                let mut again = vec![0f32; m * n];
+                matmul_mode(mode, &a, &b, m, p, n, &mut again);
+                assert!(bits_eq(&first, &again), "{mode:?}");
+            }
         }
     }
 }

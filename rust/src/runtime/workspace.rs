@@ -445,12 +445,10 @@ impl Workspace {
     /// miss, NaN == NaN is a hit — bitwise identity, exactly the
     /// determinism contract's terms). Soundness does not rest on a hash.
     fn weights_hit(&self, flat: &[f32]) -> bool {
-        self.params_copy.len() == flat.len()
-            && self
-                .params_copy
-                .iter()
-                .zip(flat)
-                .all(|(a, b)| a.to_bits() == b.to_bits())
+        // Lane-strip bitwise comparator from the kernels module: exact
+        // in every KernelMode (a bit compare has nothing to reassociate),
+        // and the strip form autovectorizes the full-parameter scan.
+        super::kernels::bits_eq_f32(&self.params_copy, flat)
     }
 
     /// Make `self.weights` the row-major view of `flat`, reusing the

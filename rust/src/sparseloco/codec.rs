@@ -27,12 +27,30 @@
 //! buffer for callers that keep the bytes (the round engine itself uses
 //! the allocating [`encode`], since the wire bytes are moved into the
 //! object store and must be owned).
+//!
+//! ## Kernel modes
+//!
+//! The codec participates in the [`KernelMode`] switch through
+//! [`encode_into_mode`] / [`decode_mode`] (the plain entry points read
+//! the process-global mode): `Reference` pins the serial byte-at-a-time
+//! path (the GB/s bench baseline), `Blocked` is that same scalar loop
+//! fanned out over rayon, and `Simd` swaps the per-byte inner loops for
+//! word-at-a-time SWAR forms — 8 codes packed through one `u64` (two
+//! output bytes per op), 4 codes unpacked through one `u32` per packed
+//! byte, and 12-bit index pairs moved two-at-a-time through a 48-bit
+//! window. Packing 2-bit fields is pure bit shuffling with no arithmetic
+//! to reassociate, so **all three modes produce byte-identical wire
+//! bytes and byte-identical decoded payloads on every input, hostile
+//! ones included** — asserted by the mode-parity tests below, by
+//! `tests/kernel_equivalence.rs`, and per hostile case in
+//! `tests/wire_robustness.rs`.
 
 use rayon::prelude::*;
 
 use anyhow::{bail, ensure, Result};
 
 use super::payload::Payload;
+use crate::runtime::kernels::{self, KernelMode};
 
 const MAGIC: &[u8; 4] = b"CVPG";
 const VERSION: u16 = 1;
@@ -58,8 +76,26 @@ pub fn encode(p: &Payload) -> Vec<u8> {
 }
 
 /// Serialize into a reusable buffer (cleared and resized; the capacity
-/// survives across rounds).
+/// survives across rounds) under the process-global kernel mode.
 pub fn encode_into(p: &Payload, out: &mut Vec<u8>) {
+    encode_into_mode(p, out, kernels::mode())
+}
+
+/// Serialize into a reusable buffer under an explicit [`KernelMode`].
+/// All modes emit byte-identical wire bytes (see the module docs);
+/// `Reference` additionally pins the serial path regardless of size.
+pub fn encode_into_mode(p: &Payload, out: &mut Vec<u8>, mode: KernelMode) {
+    // The header stores log2(chunk): a non-power-of-two chunk would
+    // silently round down and corrupt every index on the wire. Payload
+    // construction (`topk::compress_dense`, `Payload::from_parts`,
+    // decode's own validation) enforces this; the assert catches any
+    // hand-rolled Payload that skipped those paths.
+    assert!(
+        p.chunk.is_power_of_two(),
+        "payload chunk {} is not a power of two; the wire header stores log2(chunk)",
+        p.chunk
+    );
+    let simd = mode == KernelMode::Simd;
     let nv = p.n_values();
     let total = wire_size(p.n_chunks, p.k);
     out.clear();
@@ -80,7 +116,25 @@ pub fn encode_into(p: &Payload, out: &mut Vec<u8>) {
     // ---- codes: 2 bits each, 4 per byte --------------------------------
     let codes = &p.codes;
     let fill_codes = |sec: &mut [u8], byte_base: usize| {
-        for (j, b) in sec.iter_mut().enumerate() {
+        let mut j = 0;
+        if simd {
+            // SWAR: 8 code bytes -> one u64, gather the 2-bit fields of
+            // each byte down to two packed output bytes. `& 0x03…` per
+            // byte matches the scalar `c & 3`; the shift-OR gather
+            // places code i at bit 2*i of the 16-bit result, exactly
+            // the scalar `(c & 3) << (sh * 2)` layout.
+            while j + 2 <= sec.len() && (byte_base + j) * 4 + 8 <= nv {
+                let lo = (byte_base + j) * 4;
+                let w = u64::from_le_bytes(codes[lo..lo + 8].try_into().unwrap())
+                    & 0x0303_0303_0303_0303;
+                let t = w | (w >> 6);
+                let u = t | (t >> 12);
+                sec[j] = u as u8;
+                sec[j + 1] = (u >> 32) as u8;
+                j += 2;
+            }
+        }
+        for (j, b) in sec.iter_mut().enumerate().skip(j) {
             let lo = (byte_base + j) * 4;
             let hi = (lo + 4).min(nv);
             let mut byte = 0u8;
@@ -94,7 +148,23 @@ pub fn encode_into(p: &Payload, out: &mut Vec<u8>) {
     let idx = &p.idx;
     let pairs = nv / 2;
     let fill_idx = |sec: &mut [u8], pair_base: usize| {
-        for (g, dst) in sec.chunks_exact_mut(3).enumerate() {
+        let mut g = 0;
+        if simd {
+            // Two 24-bit packed pairs through one 48-bit window. Each
+            // pair is computed with the exact scalar expression
+            // (`a | b<<12`, low 24 bits kept), so hostile indices that
+            // overflow 12 bits OR-overlap identically to the scalar
+            // path before truncation.
+            while (g + 2) * 3 <= sec.len() {
+                let i = (pair_base + g) * 2;
+                let p0 = (idx[i] as u32 | ((idx[i + 1] as u32) << 12)) & 0x00FF_FFFF;
+                let p1 = (idx[i + 2] as u32 | ((idx[i + 3] as u32) << 12)) & 0x00FF_FFFF;
+                let w = p0 as u64 | ((p1 as u64) << 24);
+                sec[g * 3..g * 3 + 6].copy_from_slice(&w.to_le_bytes()[..6]);
+                g += 2;
+            }
+        }
+        for (g, dst) in sec.chunks_exact_mut(3).enumerate().skip(g) {
             let i = (pair_base + g) * 2;
             let packed = idx[i] as u32 | ((idx[i + 1] as u32) << 12);
             dst[0] = (packed & 0xFF) as u8;
@@ -103,7 +173,7 @@ pub fn encode_into(p: &Payload, out: &mut Vec<u8>) {
         }
     };
     let (idx_pairs_sec, idx_tail_sec) = idx_sec.split_at_mut(pairs * 3);
-    if nv >= PAR_MIN_VALUES {
+    if nv >= PAR_MIN_VALUES && mode != KernelMode::Reference {
         codes_sec
             .par_chunks_mut(PAR_TASK)
             .enumerate()
@@ -123,8 +193,18 @@ pub fn encode_into(p: &Payload, out: &mut Vec<u8>) {
     }
 }
 
-/// Deserialize wire bytes.
+/// Deserialize wire bytes under the process-global kernel mode.
 pub fn decode(bytes: &[u8]) -> Result<Payload> {
+    decode_mode(bytes, kernels::mode())
+}
+
+/// Deserialize wire bytes under an explicit [`KernelMode`]. All modes
+/// produce byte-identical payloads and agree on every `Err` (all size and
+/// geometry validation happens before any section is parsed, so the
+/// vectorized path can never be steered into an attacker-sized
+/// allocation the scalar path would have refused).
+pub fn decode_mode(bytes: &[u8], mode: KernelMode) -> Result<Payload> {
+    let simd = mode == KernelMode::Simd;
     ensure!(bytes.len() >= HEADER_BYTES, "wire payload too short");
     ensure!(&bytes[0..4] == MAGIC, "bad magic");
     let version = u16::from_le_bytes([bytes[4], bytes[5]]);
@@ -152,7 +232,22 @@ pub fn decode(bytes: &[u8]) -> Result<Payload> {
 
     let mut codes = vec![0u8; nv];
     let fill_codes = |out: &mut [u8], base: usize| {
-        for (j, c) in out.iter_mut().enumerate() {
+        let mut j = 0;
+        if simd && base % 4 == 0 {
+            // SWAR unpack: one packed byte -> four code bytes through a
+            // u32 spread (v | v<<12, then | <<6, masked to 2 bits per
+            // byte) — code i lands in byte i exactly as the scalar
+            // shift-and-mask. Task bases are multiples of PAR_TASK
+            // (itself a multiple of 4), so the window is byte-aligned.
+            while j + 4 <= out.len() {
+                let v = codes_sec[(base + j) / 4] as u32;
+                let x = v | (v << 12);
+                let y = (x | (x << 6)) & 0x0303_0303;
+                out[j..j + 4].copy_from_slice(&y.to_le_bytes());
+                j += 4;
+            }
+        }
+        for (j, c) in out.iter_mut().enumerate().skip(j) {
             let i = base + j;
             *c = (codes_sec[i / 4] >> ((i % 4) * 2)) & 3;
         }
@@ -160,7 +255,28 @@ pub fn decode(bytes: &[u8]) -> Result<Payload> {
     let mut idx = vec![0u16; nv];
     let pairs = nv / 2;
     let fill_idx = |out: &mut [u16], pair_base: usize| {
-        for (g, dst) in out.chunks_exact_mut(2).enumerate() {
+        let mut g = 0;
+        if simd {
+            // Two packed pairs (6 bytes) through one 48-bit window; each
+            // 12-bit field is extracted with the same shift-and-mask as
+            // the scalar path, just from a wider word.
+            let n_pairs_here = out.len() / 2;
+            while g + 2 <= n_pairs_here {
+                let o = (pair_base + g) * 3;
+                let w = idx_sec[o] as u64
+                    | ((idx_sec[o + 1] as u64) << 8)
+                    | ((idx_sec[o + 2] as u64) << 16)
+                    | ((idx_sec[o + 3] as u64) << 24)
+                    | ((idx_sec[o + 4] as u64) << 32)
+                    | ((idx_sec[o + 5] as u64) << 40);
+                out[g * 2] = (w & 0xFFF) as u16;
+                out[g * 2 + 1] = ((w >> 12) & 0xFFF) as u16;
+                out[g * 2 + 2] = ((w >> 24) & 0xFFF) as u16;
+                out[g * 2 + 3] = ((w >> 36) & 0xFFF) as u16;
+                g += 2;
+            }
+        }
+        for (g, dst) in out.chunks_exact_mut(2).enumerate().skip(g) {
             let o = (pair_base + g) * 3;
             let packed =
                 idx_sec[o] as u32 | ((idx_sec[o + 1] as u32) << 8) | ((idx_sec[o + 2] as u32) << 16);
@@ -169,7 +285,7 @@ pub fn decode(bytes: &[u8]) -> Result<Payload> {
         }
     };
     let (idx_pairs, idx_tail) = idx.split_at_mut(pairs * 2);
-    if nv >= PAR_MIN_VALUES {
+    if nv >= PAR_MIN_VALUES && mode != KernelMode::Reference {
         // PAR_TASK is a multiple of 4, so every task starts byte-aligned.
         codes
             .par_chunks_mut(PAR_TASK)
@@ -382,5 +498,64 @@ mod tests {
         let dense: Vec<f32> = (0..4 * 256).map(|_| rng.normal() as f32 * 0.01).collect();
         let p = compress_dense(&dense, 256, 16);
         assert_eq!(decode(&encode(&p)).unwrap(), p);
+    }
+
+    /// encode/decode under every mode on a payload: wire bytes and
+    /// decoded payloads must be byte-identical across modes.
+    fn assert_mode_parity(p: &Payload) {
+        let mut reference = Vec::new();
+        encode_into_mode(p, &mut reference, KernelMode::Reference);
+        for mode in [KernelMode::Blocked, KernelMode::Simd] {
+            let mut got = Vec::new();
+            encode_into_mode(p, &mut got, mode);
+            assert_eq!(reference, got, "encode bytes differ in {mode:?}");
+            let q = decode_mode(&got, mode).unwrap();
+            assert_eq!(*p, q, "decode payload differs in {mode:?}");
+        }
+        assert_eq!(decode_mode(&reference, KernelMode::Reference).unwrap(), *p);
+    }
+
+    #[test]
+    fn simd_wire_bytes_identical_all_residues() {
+        // Every nv % 4 (partial code byte) and nv % 2 (odd index tail)
+        // residue class, plus k values straddling the 8-code SWAR word.
+        let mut rng = Rng::new(21);
+        for k in 1..=9usize {
+            for n_chunks in 1..=5usize {
+                assert_mode_parity(&random_payload(&mut rng, n_chunks, k, 16));
+            }
+        }
+        // 12-bit-maximal indices (chunk 4096): the widest field values
+        // the SWAR window must move without cross-pair contamination.
+        assert_mode_parity(&random_payload(&mut rng, 5, 7, 4096));
+    }
+
+    #[test]
+    fn simd_wire_bytes_identical_above_parallel_threshold() {
+        // Exercises the rayon SWAR fill paths and their task-boundary
+        // tails (PAR_TASK chunks with nv % PAR_TASK != 0).
+        let mut rng = Rng::new(22);
+        let n_chunks = PAR_MIN_VALUES / 32 + 3; // k=33 -> nv > threshold, odd tails
+        let p = random_payload(&mut rng, n_chunks, 33, 4096);
+        assert!(p.n_values() >= PAR_MIN_VALUES);
+        assert_mode_parity(&p);
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn non_power_of_two_chunk_is_refused_at_encode() {
+        // A chunk of 48 would write trailing_zeros() = 4 into the header
+        // and silently decode as chunk 16, corrupting every index. The
+        // construction paths (compress_dense, from_parts) assert first;
+        // this pins the encoder's own backstop for hand-rolled payloads.
+        let p = Payload {
+            n_chunks: 1,
+            k: 2,
+            chunk: 48,
+            idx: vec![1, 40],
+            codes: vec![3, 0],
+            scales: vec![1.0],
+        };
+        let _ = encode(&p);
     }
 }

@@ -8,6 +8,7 @@
 use anyhow::{bail, ensure, Result};
 
 use super::quant::dequant_level;
+use crate::runtime::kernels::{self, KernelMode, LANES};
 
 /// Compressed pseudo-gradient for one peer, one round.
 #[derive(Debug, Clone, PartialEq)]
@@ -33,6 +34,13 @@ impl Payload {
         chunk: usize,
     ) -> Result<Self> {
         ensure!(k > 0 && chunk > 0, "bad k/chunk");
+        // The wire header stores log2(chunk) and packs indices into 12
+        // bits: a non-power-of-two (or oversized) chunk would silently
+        // corrupt every index on encode, so refuse it at construction.
+        ensure!(
+            chunk.is_power_of_two() && chunk <= 1 << 12,
+            "chunk {chunk} must be a power of two <= 4096 (wire header stores log2(chunk))"
+        );
         ensure!(idx_i32.len() == codes_i32.len(), "idx/codes length mismatch");
         ensure!(idx_i32.len() % k == 0, "idx length not a multiple of k");
         let n_chunks = idx_i32.len() / k;
@@ -98,14 +106,48 @@ impl Payload {
     /// (`out.len() == self.chunk`). Lets the aggregator parallelize over
     /// disjoint chunk ranges while keeping per-position accumulation
     /// order identical to the serial path.
+    ///
+    /// Under [`KernelMode::Simd`] the dequantized values are computed in
+    /// [`LANES`]-wide strips (the vectorizable half of the work) and then
+    /// scattered in the original j order — adversarial payloads may
+    /// repeat an index within a chunk, so preserving store order keeps
+    /// the result bit-identical to the scalar path even then.
     #[inline]
     pub fn accumulate_chunk_into(&self, r: usize, out: &mut [f32], weight: f32) {
+        self.accumulate_chunk_into_mode(r, out, weight, kernels::mode())
+    }
+
+    /// [`Payload::accumulate_chunk_into`] under an explicit mode (all
+    /// modes are bit-identical; the split exists so tests and benches can
+    /// pin a path without touching the process-global switch).
+    #[inline]
+    pub fn accumulate_chunk_into_mode(
+        &self,
+        r: usize,
+        out: &mut [f32],
+        weight: f32,
+        mode: KernelMode,
+    ) {
         debug_assert_eq!(out.len(), self.chunk);
         let s = self.scales[r] * weight;
         let row = r * self.k;
-        for j in 0..self.k {
-            let pos = self.idx[row + j] as usize;
-            out[pos] += dequant_level(self.codes[row + j]) * s;
+        if mode == KernelMode::Simd {
+            let codes = &self.codes[row..row + self.k];
+            let idx = &self.idx[row..row + self.k];
+            let mut vals = [0f32; LANES];
+            for (cb, ib) in codes.chunks(LANES).zip(idx.chunks(LANES)) {
+                for (v, &c) in vals.iter_mut().zip(cb) {
+                    *v = dequant_level(c) * s;
+                }
+                for (&i, &v) in ib.iter().zip(&vals[..cb.len()]) {
+                    out[i as usize] += v;
+                }
+            }
+        } else {
+            for j in 0..self.k {
+                let pos = self.idx[row + j] as usize;
+                out[pos] += dequant_level(self.codes[row + j]) * s;
+            }
         }
     }
 
@@ -281,5 +323,38 @@ mod tests {
         let mut bad = sample();
         bad.scales[0] = f32::NAN;
         assert!(bad.validate(2, 3, 8).is_err());
+    }
+
+    #[test]
+    fn from_parts_rejects_non_power_of_two_chunk() {
+        // log2(chunk) on the wire: chunk 48 would encode as 16 and
+        // corrupt every index, chunk 8192 exceeds the 12-bit index range.
+        assert!(Payload::from_parts(&[0, 1], &[0, 1], &[1.0], 2, 48).is_err());
+        assert!(Payload::from_parts(&[0, 1], &[0, 1], &[1.0], 2, 8192).is_err());
+        assert!(Payload::from_parts(&[0, 1], &[0, 1], &[1.0], 2, 4096).is_ok());
+    }
+
+    #[test]
+    fn simd_scatter_bitwise_identical_even_with_repeated_indices() {
+        // An adversarial payload can repeat an index within a chunk, so
+        // the SIMD scatter must preserve the original store order to stay
+        // bit-identical (float += is order-sensitive).
+        let p = Payload {
+            n_chunks: 1,
+            k: 11, // odd: exercises the partial final lane strip
+            chunk: 16,
+            idx: vec![3, 3, 3, 7, 0, 3, 9, 3, 3, 1, 3],
+            codes: vec![3, 1, 2, 0, 3, 2, 1, 0, 3, 2, 1],
+            scales: vec![1.7],
+        };
+        for weight in [1.0f32, 0.37] {
+            let mut scalar = vec![0.125f32; 16];
+            let mut simd = scalar.clone();
+            p.accumulate_chunk_into_mode(0, &mut scalar, weight, KernelMode::Blocked);
+            p.accumulate_chunk_into_mode(0, &mut simd, weight, KernelMode::Simd);
+            for (a, b) in scalar.iter().zip(&simd) {
+                assert_eq!(a.to_bits(), b.to_bits(), "weight {weight}");
+            }
+        }
     }
 }

@@ -33,6 +33,58 @@ pub fn dequant_value(code: u8, scale: f32) -> f32 {
     dequant_level(code) * scale
 }
 
+/// Branchless quantizer, bit-identical to [`quantize_value`] on every
+/// input including NaN: each comparison is negated (`!(x < t)`) so a NaN
+/// `x` fails all three and lands on code 3, exactly like the scalar
+/// if-chain's final `else`. Written branch-free so rustc vectorizes the
+/// lane loop in [`quantize_slice_into`].
+#[inline]
+pub fn quantize_value_branchless(v: f32, scale: f32) -> u8 {
+    let x = v / scale.max(1e-12);
+    u8::from(!(x < -2.0 / 3.0)) + u8::from(!(x < 0.0)) + u8::from(!(x < 2.0 / 3.0))
+}
+
+/// SIMD lane width for the slice quantize/dequant helpers (matches
+/// `runtime::kernels::LANES`).
+const LANES: usize = 8;
+
+/// Quantize a slice against one chunk scale. Byte-identical to calling
+/// [`quantize_value`] per element (the branchless form computes the same
+/// `v / scale.max(1e-12)` then the same three threshold tests); the
+/// [`LANES`]-wide strip loop is purely for autovectorization.
+#[inline]
+pub fn quantize_slice_into(vals: &[f32], scale: f32, out: &mut [u8]) {
+    debug_assert_eq!(vals.len(), out.len());
+    let mut cv = vals.chunks_exact(LANES);
+    let mut co = out.chunks_exact_mut(LANES);
+    for (xv, xo) in (&mut cv).zip(&mut co) {
+        for i in 0..LANES {
+            xo[i] = quantize_value_branchless(xv[i], scale);
+        }
+    }
+    for (&v, o) in cv.remainder().iter().zip(co.into_remainder()) {
+        *o = quantize_value_branchless(v, scale);
+    }
+}
+
+/// Dequantize a slice of codes against one scale into `out`.
+/// Byte-identical to calling [`dequant_value`] per element — elementwise,
+/// no accumulation, so lane execution cannot reassociate anything.
+#[inline]
+pub fn dequant_slice_into(codes: &[u8], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    let mut cc = codes.chunks_exact(LANES);
+    let mut co = out.chunks_exact_mut(LANES);
+    for (xc, xo) in (&mut cc).zip(&mut co) {
+        for i in 0..LANES {
+            xo[i] = dequant_level(xc[i]) * scale;
+        }
+    }
+    for (&c, o) in cc.remainder().iter().zip(co.into_remainder()) {
+        *o = dequant_level(c) * scale;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -74,5 +126,71 @@ mod tests {
     fn zero_scale_safe() {
         assert_eq!(quantize_value(0.0, 0.0), 2); // 0/eps = 0 -> code 2
         assert_eq!(dequant_value(2, 0.0), 0.0);
+    }
+
+    #[test]
+    fn branchless_matches_branchy_on_every_class_of_input() {
+        // Exact threshold values, subnormals, infinities, NaN, signed
+        // zero, hostile scales — the branchless form must agree with the
+        // if-chain everywhere (NaN comparisons are all-false, so the
+        // negated tests land it on 3 like the final `else`).
+        let vals = [
+            -2.0f32,
+            -1.0,
+            -2.0 / 3.0,
+            -0.5,
+            -f32::MIN_POSITIVE,
+            -0.0,
+            0.0,
+            f32::MIN_POSITIVE,
+            0.5,
+            2.0 / 3.0,
+            1.0,
+            2.0,
+            f32::INFINITY,
+            f32::NEG_INFINITY,
+            f32::NAN,
+        ];
+        let scales = [0.0f32, 1e-20, 1e-12, 0.5, 1.0, 3.7, f32::INFINITY, f32::NAN];
+        for &s in &scales {
+            for &v in &vals {
+                assert_eq!(
+                    quantize_value(v, s),
+                    quantize_value_branchless(v, s),
+                    "v={v} scale={s}"
+                );
+            }
+        }
+        // dense sweep around the thresholds
+        let mut v = -1.5f32;
+        while v <= 1.5 {
+            assert_eq!(quantize_value(v, 1.0), quantize_value_branchless(v, 1.0), "v={v}");
+            v += 1.0 / 1024.0;
+        }
+    }
+
+    #[test]
+    fn slice_helpers_match_scalar_loops_bitwise() {
+        // Lengths straddling the lane width, including the NaN lane.
+        for len in [0usize, 1, 7, 8, 9, 16, 17, 100] {
+            let vals: Vec<f32> = (0..len)
+                .map(|i| if i == 3 { f32::NAN } else { (i as f32) * 0.13 - 1.0 })
+                .collect();
+            let scale = 0.9f32;
+            let mut got = vec![0u8; len];
+            quantize_slice_into(&vals, scale, &mut got);
+            let want: Vec<u8> = vals.iter().map(|&v| quantize_value(v, scale)).collect();
+            assert_eq!(want, got, "quantize len {len}");
+
+            let mut dq_got = vec![0f32; len];
+            dequant_slice_into(&got, scale, &mut dq_got);
+            for (j, (&c, &d)) in got.iter().zip(&dq_got).enumerate() {
+                assert_eq!(
+                    dequant_value(c, scale).to_bits(),
+                    d.to_bits(),
+                    "dequant len {len} j {j}"
+                );
+            }
+        }
     }
 }

@@ -14,12 +14,20 @@
 //! Chunks are independent, so compression is chunk-parallel across the
 //! rayon pool above [`PAR_MIN_CHUNKS`]; per-chunk selection reuses a
 //! thread-local scratch index buffer (no per-chunk allocations). Serial
-//! and parallel paths produce bit-identical payloads.
+//! and parallel paths produce bit-identical payloads — and so do all
+//! three [`KernelMode`]s: under `Simd` the selected values are gathered
+//! into a contiguous scratch row and quantized by the branchless lane
+//! quantizer (`quant::quantize_slice_into`), which is byte-identical to
+//! the scalar `quantize_value` on every input, and the `beta*ef + delta`
+//! error-feedback combine runs through the elementwise lane helper
+//! `kernels::scale_add_into` (IEEE-exact, nothing to reassociate).
+//! Selection itself (sort order, scale pick) is mode-independent.
 
 use rayon::prelude::*;
 
 use super::payload::Payload;
-use super::quant::quantize_value;
+use super::quant::{quantize_slice_into, quantize_value};
+use crate::runtime::kernels::{self, KernelMode};
 
 /// Below this many chunks the serial path is used (rayon dispatch would
 /// dominate for tiny payloads).
@@ -34,11 +42,16 @@ fn rank(row: &[f32], a: u32, b: u32) -> std::cmp::Ordering {
     vb.partial_cmp(&va).unwrap_or(std::cmp::Ordering::Equal).then(a.cmp(&b))
 }
 
-/// Compress one chunk into preallocated output rows.
+/// Compress one chunk into preallocated output rows. Under `simd` the
+/// selected values are gathered into `vals` and lane-quantized —
+/// byte-identical to the scalar per-value loop (the branchless quantizer
+/// matches `quantize_value` on every input, NaN included).
 fn compress_chunk(
     row: &[f32],
     k: usize,
+    simd: bool,
     order: &mut Vec<u32>,
+    vals: &mut Vec<f32>,
     idx_out: &mut [u16],
     code_out: &mut [u8],
     scale_out: &mut f32,
@@ -56,39 +69,67 @@ fn compress_chunk(
     // max |v| among selected = first element of the sorted prefix
     let scale = row[order[0] as usize].abs();
     *scale_out = scale;
-    for (j, &i) in order.iter().take(k).enumerate() {
-        idx_out[j] = i as u16;
-        code_out[j] = quantize_value(row[i as usize], scale);
+    if simd {
+        vals.clear();
+        for (j, &i) in order.iter().take(k).enumerate() {
+            idx_out[j] = i as u16;
+            vals.push(row[i as usize]);
+        }
+        quantize_slice_into(vals, scale, code_out);
+    } else {
+        for (j, &i) in order.iter().take(k).enumerate() {
+            idx_out[j] = i as u16;
+            code_out[j] = quantize_value(row[i as usize], scale);
+        }
     }
 }
 
-/// Compress a dense flat vector (len must be a multiple of `chunk`).
+/// Compress a dense flat vector (len must be a multiple of `chunk`)
+/// under the process-global kernel mode.
 pub fn compress_dense(acc: &[f32], chunk: usize, k: usize) -> Payload {
+    compress_dense_mode(acc, chunk, k, kernels::mode())
+}
+
+/// Compress a dense flat vector under an explicit [`KernelMode`]. All
+/// modes produce bit-identical payloads (see the module docs);
+/// `Reference` additionally pins the serial path.
+pub fn compress_dense_mode(acc: &[f32], chunk: usize, k: usize, mode: KernelMode) -> Payload {
     assert!(acc.len() % chunk == 0, "dense length not a multiple of chunk");
     assert!(k >= 1 && k <= chunk, "bad k");
+    // The wire header stores log2(chunk) and packs indices into 12 bits;
+    // construction is where a bad geometry must die, not on the wire.
+    assert!(
+        chunk.is_power_of_two(),
+        "chunk {chunk} must be a power of two (the wire header stores log2(chunk))"
+    );
+    assert!(chunk <= 1 << 12, "chunk {chunk} exceeds the 12-bit index range");
+    let simd = mode == KernelMode::Simd;
     let n_chunks = acc.len() / chunk;
     let mut idx = vec![0u16; n_chunks * k];
     let mut codes = vec![0u8; n_chunks * k];
     let mut scales = vec![0f32; n_chunks];
-    if n_chunks >= PAR_MIN_CHUNKS {
+    if n_chunks >= PAR_MIN_CHUNKS && mode != KernelMode::Reference {
         idx.par_chunks_mut(k)
             .zip(codes.par_chunks_mut(k))
             .zip(scales.par_iter_mut())
             .enumerate()
             .for_each_init(
-                || Vec::with_capacity(chunk),
-                |order, (r, ((idx_row, code_row), scale))| {
+                || (Vec::with_capacity(chunk), Vec::with_capacity(k)),
+                |(order, vals), (r, ((idx_row, code_row), scale))| {
                     let row = &acc[r * chunk..(r + 1) * chunk];
-                    compress_chunk(row, k, order, idx_row, code_row, scale);
+                    compress_chunk(row, k, simd, order, vals, idx_row, code_row, scale);
                 },
             );
     } else {
         let mut order = Vec::with_capacity(chunk);
+        let mut vals = Vec::with_capacity(k);
         for r in 0..n_chunks {
             compress_chunk(
                 &acc[r * chunk..(r + 1) * chunk],
                 k,
+                simd,
                 &mut order,
+                &mut vals,
                 &mut idx[r * k..(r + 1) * k],
                 &mut codes[r * k..(r + 1) * k],
                 &mut scales[r],
@@ -130,9 +171,9 @@ pub fn compress_with_ef_into(
 ) -> Payload {
     assert_eq!(delta.len(), ef.len());
     acc_scratch.resize(delta.len(), 0.0);
-    for i in 0..delta.len() {
-        acc_scratch[i] = beta * ef[i] + delta[i];
-    }
+    // Elementwise lane combine: IEEE-exact vs the scalar loop in every
+    // kernel mode (each lane performs exactly `beta * ef[i] + delta[i]`).
+    kernels::scale_add_into(beta, ef, delta, acc_scratch);
     compress_acc_update_ef(acc_scratch, ef, chunk, k)
 }
 
@@ -278,5 +319,35 @@ mod tests {
         for i in 0..64 {
             assert!((d[i] - dense[i]).abs() <= p.scales[0] / 3.0 + 1e-6);
         }
+    }
+
+    #[test]
+    fn simd_compression_bitwise_identical_to_scalar() {
+        // Gather + lane quantize must produce byte-identical payloads in
+        // every mode: odd k (lane tails), all-zero chunks (scale 0, the
+        // eps-guard path), and above the chunk-parallel threshold.
+        let mut rng = Rng::new(31);
+        for (n_chunks, chunk, k) in
+            [(1usize, 16usize, 1usize), (3, 64, 7), (5, 128, 9), (PAR_MIN_CHUNKS + 5, 256, 33)]
+        {
+            let mut dense: Vec<f32> = (0..n_chunks * chunk).map(|_| rng.normal() as f32).collect();
+            if n_chunks > 2 {
+                dense[2 * chunk..3 * chunk].fill(0.0); // zero-scale chunk
+            }
+            let reference = compress_dense_mode(&dense, chunk, k, KernelMode::Reference);
+            let blocked = compress_dense_mode(&dense, chunk, k, KernelMode::Blocked);
+            let simd = compress_dense_mode(&dense, chunk, k, KernelMode::Simd);
+            assert_eq!(reference, blocked, "blocked differs at {n_chunks}x{chunk} k={k}");
+            assert_eq!(reference, simd, "simd differs at {n_chunks}x{chunk} k={k}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "power of two")]
+    fn non_power_of_two_chunk_is_refused() {
+        // chunk = 48 would silently hit the wire as log2 -> 4 (chunk 16)
+        // and corrupt every index; construction must refuse it.
+        let dense = vec![1.0f32; 48];
+        let _ = compress_dense(&dense, 48, 4);
     }
 }

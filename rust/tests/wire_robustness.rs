@@ -4,22 +4,47 @@
 //! field. Both decoders validate the *exact* buffer length against the
 //! header's geometry before touching (or sizing anything from) the
 //! variable sections, so every case here is cheap to reject.
+//!
+//! Every codec case runs through **every kernel mode** (ISSUE 7): the
+//! vectorized (SWAR) decode shares all validation with the scalar path —
+//! geometry checks happen before any section is parsed in either — so
+//! the modes must agree on every `Err`, and byte-for-byte on every `Ok`.
 
-use covenant::sparseloco::{codec, envelope, topk};
+use covenant::runtime::kernels::KernelMode;
+use covenant::sparseloco::{codec, envelope, topk, Payload};
 use covenant::util::rng::Rng;
 
 /// A small valid payload (3 chunks of 64, k = 4 -> 45 wire bytes).
-fn payload() -> covenant::sparseloco::Payload {
+fn payload() -> Payload {
     let mut rng = Rng::new(0x0B0E);
     let dense: Vec<f32> = (0..3 * 64).map(|_| rng.normal() as f32 * 0.01).collect();
     topk::compress_dense(&dense, 64, 4)
+}
+
+/// Decode under every kernel mode; assert the modes agree (same Err-ness,
+/// byte-identical payload on Ok) and return the scalar result.
+fn decode_all_modes(bytes: &[u8]) -> anyhow::Result<Payload> {
+    let reference = codec::decode_mode(bytes, KernelMode::Reference);
+    for mode in [KernelMode::Blocked, KernelMode::Simd] {
+        let got = codec::decode_mode(bytes, mode);
+        match (&reference, &got) {
+            (Ok(a), Ok(b)) => assert_eq!(a, b, "{mode:?} decoded differently"),
+            (Err(_), Err(_)) => {}
+            _ => panic!(
+                "{mode:?} disagrees with Reference on Err-ness: {} vs {}",
+                reference.is_ok(),
+                got.is_ok()
+            ),
+        }
+    }
+    reference
 }
 
 #[test]
 fn every_truncation_of_a_codec_buffer_errs() {
     let bytes = codec::encode(&payload());
     for len in 0..bytes.len() {
-        assert!(codec::decode(&bytes[..len]).is_err(), "prefix of {len} bytes decoded");
+        assert!(decode_all_modes(&bytes[..len]).is_err(), "prefix of {len} bytes decoded");
     }
 }
 
@@ -29,7 +54,7 @@ fn oversized_codec_buffers_err() {
     for extra in [1usize, 7, 100, 4096] {
         let mut b = bytes.clone();
         b.resize(bytes.len() + extra, 0);
-        assert!(codec::decode(&b).is_err(), "{extra} trailing bytes decoded");
+        assert!(decode_all_modes(&b).is_err(), "{extra} trailing bytes decoded");
     }
 }
 
@@ -41,7 +66,7 @@ fn header_bit_flips_are_rejected_or_at_worst_reinterpreted() {
         for bit in 0..8u8 {
             let mut b = bytes.clone();
             b[pos] ^= 1 << bit;
-            let out = codec::decode(&b);
+            let out = decode_all_modes(&b);
             match pos {
                 // magic / version / k / n_chunks: every flip breaks an
                 // invariant the decoder checks up front (the k and
@@ -69,13 +94,16 @@ fn header_bit_flips_are_rejected_or_at_worst_reinterpreted() {
 fn body_bit_flips_never_panic_and_never_oom() {
     // Scales/codes/indices corruption: decode may succeed with garbage
     // content (the tag-checked envelope layer is what rejects tampering)
-    // or fail index validation — either way it returns, cleanly.
+    // or fail index validation — either way it returns, cleanly, with
+    // all kernel modes in agreement (index corruption especially: the
+    // SWAR 12-bit extraction must truncate hostile fields exactly like
+    // the scalar shift-and-mask).
     let bytes = codec::encode(&payload());
     for pos in 12..bytes.len() {
         for bit in 0..8u8 {
             let mut b = bytes.clone();
             b[pos] ^= 1 << bit;
-            let _ = codec::decode(&b);
+            let _ = decode_all_modes(&b);
         }
     }
 }
@@ -85,11 +113,12 @@ fn hostile_chunk_counts_bounce_off_the_length_check() {
     let bytes = codec::encode(&payload());
     // n_chunks = u32::MAX with a 45-byte buffer: the expected size
     // computation happens before any section is sliced or any vector is
-    // sized, so this is a cheap Err, not a 16-GiB allocation attempt.
+    // sized — in every kernel mode — so this is a cheap Err, not a
+    // 16-GiB allocation attempt.
     for hostile in [u32::MAX, u32::MAX / 2, 1 << 24, 0] {
         let mut b = bytes.clone();
         b[8..12].copy_from_slice(&hostile.to_le_bytes());
-        assert!(codec::decode(&b).is_err(), "n_chunks={hostile} decoded");
+        assert!(decode_all_modes(&b).is_err(), "n_chunks={hostile} decoded");
     }
 }
 
@@ -123,10 +152,11 @@ fn hostile_envelope_length_fields_err_without_allocating() {
     let mut b = sealed.clone();
     b[28..32].copy_from_slice(&u32::MAX.to_le_bytes());
     assert!(envelope::open(&b).is_err());
-    // the untampered buffer still opens and verifies, as a control
+    // the untampered buffer still opens and verifies, as a control —
+    // and the inner payload decodes identically under every kernel mode
     let env = envelope::open(&sealed).unwrap();
     assert!(env.verify(&key.verifying()));
-    assert_eq!(codec::decode(env.payload).unwrap(), payload());
+    assert_eq!(decode_all_modes(env.payload).unwrap(), payload());
 }
 
 #[test]
@@ -141,5 +171,21 @@ fn envelope_bit_flips_never_verify_clean() {
         if let Ok(env) = envelope::open(&b) {
             assert!(!env.verify(&vk), "tamper at byte {pos} verified clean");
         }
+    }
+}
+
+#[test]
+fn hostile_wire_bytes_same_err_in_every_mode_fuzz() {
+    // Random garbage with a valid magic/version prefix (so it reaches
+    // the geometry checks): every mode must agree on the outcome, byte
+    // for byte when Ok. Deterministic "fuzz" — seeded, so a failure is
+    // reproducible.
+    let mut rng = Rng::new(0xF0_22);
+    for _ in 0..200 {
+        let len = rng.below(160) + 12;
+        let mut b: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        b[0..4].copy_from_slice(b"CVPG");
+        b[4..6].copy_from_slice(&1u16.to_le_bytes());
+        let _ = decode_all_modes(&b);
     }
 }
