@@ -141,6 +141,9 @@ fn paper_accounting(smoke: bool) {
                 mean_loss: 0.0,
                 bytes_up: s.payload_bytes as u64,
                 bytes_down: 0,
+                retried_uploads: 0,
+                orphaned_slices: 0,
+                recovered_shards: 0,
                 outer_alpha: 1.0,
                 rejections: Vec::new(),
                 lanes: Vec::new(),

@@ -29,10 +29,12 @@ use serde_json::json;
 use covenant::config::run::{GauntletConfig, RunConfig};
 use covenant::coordinator::aggregator;
 use covenant::coordinator::network::{Network, NetworkParams};
-use covenant::coordinator::shard::ShardSet;
+use covenant::coordinator::shard::{ShardSet, ShardedNetwork};
+use covenant::coordinator::RoundReport;
 use covenant::gauntlet::testkit::{synthetic_submission, SyntheticEvalData};
 use covenant::gauntlet::validator::Validator;
 use covenant::gauntlet::Submission;
+use covenant::netsim::{FaultConfig, FaultKind, FaultScenario, ScriptedFault};
 use covenant::runtime::kernels::KernelMode;
 use covenant::runtime::{kernels, ops, Engine};
 use covenant::sparseloco::{codec, envelope, quant, topk, Payload};
@@ -72,6 +74,56 @@ fn round_engine_secs(
         net.run_round()?;
     }
     Ok(t0.elapsed().as_secs_f64())
+}
+
+/// Two simulated rounds over placed shard hosts, optionally crashing
+/// host 0 at round 1 (scripted fault); returns round 1's report. The
+/// costs read off it are *virtual* seconds — the simulated price of
+/// detection timeouts, state refetches and announce latency, which is
+/// deterministic and host-independent (unlike the wall-clock numbers in
+/// the sections above).
+fn failover_round(
+    eng: &Engine,
+    n_shards: usize,
+    n_hosts: usize,
+    latency_s: f64,
+    crash: bool,
+) -> Result<RoundReport> {
+    let peers = 3usize;
+    let h = eng.manifest().config.inner_steps;
+    let mut run = RunConfig::default();
+    run.artifacts = "bench".into();
+    run.max_contributors = peers;
+    run.target_active = peers;
+    run.seed = 0xFA11;
+    run.placement.n_hosts = n_hosts;
+    run.placement.interhost_latency_s = latency_s;
+    // A finite 1 Gb/s inter-host link so takeover state fetches have a
+    // measurable per-byte price (the fetch shrinks with the shard count
+    // — that's the split-optimizer-state story in one number).
+    run.placement.interhost_bps = 1e9;
+    // Explicitly scripted (even when empty) so the ambient
+    // COVENANT_FAULT_SCENARIO env var can never reshape the bench.
+    run.faults = FaultConfig {
+        enabled: crash,
+        scenario: FaultScenario::Scripted(if crash {
+            vec![ScriptedFault { round: 1, host: 0, kind: FaultKind::HostCrash }]
+        } else {
+            vec![]
+        }),
+        ..Default::default()
+    };
+    let mut p = NetworkParams::quick(run, h, 2);
+    p.initial_peers = peers;
+    p.churn.p_leave = 0.0;
+    p.churn.p_adversarial = 0.0;
+    p.p_slow_upload = 0.0;
+    p.schedule = Schedule::new(vec![Segment::Constant { lr: 2e-3, steps: 1 << 20 }]);
+    p.alpha = OuterAlphaSchedule::scaled(1.0, h);
+    p.rust_compress = true;
+    let mut net = ShardedNetwork::new(eng, p, n_shards)?;
+    net.run_round()?;
+    net.run_round()
 }
 
 /// Clean synthetic submissions via the shared Gauntlet fixture
@@ -477,6 +529,57 @@ fn main() -> Result<()> {
         100.0 * (sharded_s / parallel_s - 1.0)
     );
 
+    // ---- fail-over: recovery latency + placed-barrier cost -----------------
+    // Virtual-time costs of the fault/recovery machinery (deterministic,
+    // host-independent): how long a scripted host crash stretches the
+    // round at each shard count, and what a nonzero inter-host link
+    // charges the cross-shard barrier. Runs in smoke mode too — the
+    // numbers are exact, not sampled.
+    println!("\n== fail-over (virtual-time recovery latency + placed-barrier cost) ==");
+    let shard_counts: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+    let mut failover_recovery_rows: Vec<serde_json::Value> = Vec::new();
+    for &ns in shard_counts {
+        let healthy = failover_round(&eng, ns, ns + 1, 0.05, false)?;
+        let crashed = failover_round(&eng, ns, ns + 1, 0.05, true)?;
+        assert_eq!(crashed.recovered_shards, 1, "exactly host 0's shard fails over");
+        let barrier_h = healthy.shard_lanes[0].applied_at;
+        let barrier_c = crashed.shard_lanes[0].applied_at;
+        let recovery_s = barrier_c - barrier_h;
+        let round_stretch_s = crashed.t_comm_end - healthy.t_comm_end;
+        println!(
+            "  {ns} shard(s): barrier {barrier_h:>8.2}s -> {barrier_c:>8.2}s \
+             (recovery latency {recovery_s:>7.2}s, round stretched {round_stretch_s:>7.2}s)"
+        );
+        failover_recovery_rows.push(json!({
+            "n_shards": ns,
+            "n_hosts": ns + 1,
+            "recovered_shards": crashed.recovered_shards,
+            "barrier_healthy_s": barrier_h,
+            "barrier_crashed_s": barrier_c,
+            "recovery_latency_s": recovery_s,
+            "round_stretch_s": round_stretch_s,
+        }));
+    }
+    let mut failover_barrier_rows: Vec<serde_json::Value> = Vec::new();
+    for &lat in &[0.0f64, 0.1, 2.5] {
+        let rep = failover_round(&eng, 4, 4, lat, false)?;
+        let ready_max = rep
+            .shard_lanes
+            .iter()
+            .map(|l| l.ready_at)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let barrier_cost = rep.shard_lanes[0].applied_at - ready_max;
+        println!(
+            "  4 shards, link latency {lat:>4.2}s: barrier cost {barrier_cost:.3}s \
+             over the last shard's ready time"
+        );
+        failover_barrier_rows.push(json!({
+            "n_shards": 4,
+            "interhost_latency_s": lat,
+            "barrier_cost_s": barrier_cost,
+        }));
+    }
+
     if smoke {
         println!("\nsmoke mode: skipping BENCH_hotpath.json write");
         println!("hotpath smoke OK");
@@ -540,6 +643,11 @@ fn main() -> Result<()> {
             "round_engine_sharding_overhead_frac": sharded_s / parallel_s - 1.0,
             "slice_wire_bytes": sliced_wire,
             "slice_wire_overhead_frac": wire_overhead,
+        },
+        "failover": {
+            "note": "Virtual-time (simulated) costs, deterministic and host-independent: detection timeout + state refetch per shard count, and the announce cost a placed inter-host link charges the cross-shard barrier.",
+            "recovery_vs_shard_count": failover_recovery_rows,
+            "barrier_cost_vs_link": failover_barrier_rows,
         },
         "simd": {
             "lane_width": kernels::LANES,

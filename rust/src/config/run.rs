@@ -10,7 +10,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::netsim::HeterogeneityConfig;
+use crate::netsim::{FaultConfig, FaultScenario, HeterogeneityConfig};
 use crate::runtime::kernels::{self, KernelMode};
 use crate::util::json::Json;
 
@@ -41,6 +41,25 @@ pub struct RunConfig {
     /// shard count (`tests/shard_parity.rs`). Distinct from the *data*
     /// shard count (`NetworkParams::data_shards`).
     pub n_shards: usize,
+    /// Placement of shard coordinators on simulated hosts (host count,
+    /// inter-host link shape, announce size). The default — as many
+    /// hosts as shards, zero-cost links — makes the placed barrier
+    /// bit-identical to the historical free `max()` barrier.
+    pub placement: PlacementConfig,
+    /// Coordinator-side fault injection (host crashes/stalls, upload
+    /// link flaps) plus the detection/retry knobs. Disabled by default;
+    /// the `COVENANT_FAULT_SCENARIO` env var can switch a *pristine*
+    /// default config to a canned scenario (an explicitly configured
+    /// fault setup always wins — see `FaultConfig::with_env`).
+    pub faults: FaultConfig,
+    /// Per-shard outer-optimizer momentum coefficient. Each shard host
+    /// keeps only the momentum slice for its own chunk range (no host
+    /// ever holds the full flat optimizer vector) and checkpoints it to
+    /// the shard bucket every selection round, so a takeover host can
+    /// fetch exactly the dead shard's slice. `0.0` (the default) is the
+    /// degenerate plain-delta outer step, bit-identical to the
+    /// pre-momentum rounds.
+    pub outer_momentum: f64,
     /// Sign per-shard payload slices in `CVEV` envelopes and verify
     /// signature + nonce freshness before any decode (the trust
     /// boundary). `false` falls back to the legacy bare-codec wire
@@ -74,6 +93,9 @@ impl Default for RunConfig {
             ef_beta: 0.95,
             seed: 0xC0DE,
             n_shards: 1,
+            placement: PlacementConfig::default(),
+            faults: FaultConfig::default(),
+            outer_momentum: 0.0,
             sign_payloads: true,
             kernel_mode: kernels::default_mode(),
             adversary: AdversaryConfig::default(),
@@ -116,6 +138,39 @@ impl AdversaryConfig {
     /// Total injected adversary count.
     pub fn total(&self) -> usize {
         self.sybils + self.replayers + self.forgers + self.shard_spammers + self.whales
+    }
+}
+
+/// Placement of shard coordinators on simulated hosts.
+///
+/// Shards are assigned round-robin (`shard s -> host s % n_hosts`);
+/// spare hosts (`n_hosts > n_shards`) sit idle until a fail-over
+/// reassigns a dead shard's chunk range onto one. The inter-host link
+/// carries barrier announcements and takeover state fetches; with the
+/// default zero-cost link the placed barrier is bit-identical to the
+/// historical free `max()` barrier.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlacementConfig {
+    /// Simulated host count. `0` (the default) means "one host per
+    /// shard".
+    pub n_hosts: usize,
+    /// Inter-host link bandwidth, bits/second. `0.0` (the default)
+    /// means infinitely fast (zero transfer time).
+    pub interhost_bps: f64,
+    /// Inter-host per-message latency floor, seconds.
+    pub interhost_latency_s: f64,
+    /// Size of a shard-ready barrier announcement, bytes.
+    pub announce_bytes: usize,
+}
+
+impl Default for PlacementConfig {
+    fn default() -> Self {
+        Self {
+            n_hosts: 0,
+            interhost_bps: 0.0,
+            interhost_latency_s: 0.0,
+            announce_bytes: 256,
+        }
     }
 }
 
@@ -232,6 +287,65 @@ impl RunConfig {
         if let Some(v) = j.opt("n_shards") {
             c.n_shards = v.as_usize()?;
             anyhow::ensure!(c.n_shards >= 1, "n_shards must be >= 1 (got 0)");
+        }
+        if let Some(p) = j.opt("placement") {
+            if let Some(v) = p.opt("n_hosts") {
+                c.placement.n_hosts = v.as_usize()?;
+            }
+            if let Some(v) = p.opt("interhost_bps") {
+                c.placement.interhost_bps = v.as_f64()?;
+            }
+            if let Some(v) = p.opt("interhost_latency_s") {
+                c.placement.interhost_latency_s = v.as_f64()?;
+            }
+            if let Some(v) = p.opt("announce_bytes") {
+                c.placement.announce_bytes = v.as_usize()?;
+            }
+        }
+        if let Some(f) = j.opt("faults") {
+            if let Some(v) = f.opt("enabled") {
+                c.faults.enabled = v.as_bool()?;
+            }
+            if let Some(v) = f.opt("p_host_crash") {
+                c.faults.p_host_crash = v.as_f64()?;
+            }
+            if let Some(v) = f.opt("p_host_stall") {
+                c.faults.p_host_stall = v.as_f64()?;
+            }
+            if let Some(v) = f.opt("stall_s") {
+                c.faults.stall_s = v.as_f64()?;
+            }
+            if let Some(v) = f.opt("p_link_flap") {
+                c.faults.p_link_flap = v.as_f64()?;
+            }
+            if let Some(v) = f.opt("max_upload_retries") {
+                c.faults.max_upload_retries = v.as_usize()? as u32;
+            }
+            if let Some(v) = f.opt("retry_backoff_s") {
+                c.faults.retry_backoff_s = v.as_f64()?;
+            }
+            if let Some(v) = f.opt("failover_timeout_s") {
+                c.faults.failover_timeout_s = v.as_f64()?;
+            }
+            if let Some(v) = f.opt("scenario") {
+                let s = v.as_str()?;
+                c.faults.scenario = match s {
+                    "probabilistic" => FaultScenario::Probabilistic,
+                    "ci-crashy" => FaultScenario::CiCrashy,
+                    _ => anyhow::bail!(
+                        "faults.scenario {s:?}: expected \"probabilistic\" or \"ci-crashy\" \
+                         (scripted scenarios are test-only)"
+                    ),
+                };
+            }
+        }
+        if let Some(v) = j.opt("outer_momentum") {
+            c.outer_momentum = v.as_f64()?;
+            anyhow::ensure!(
+                (0.0..1.0).contains(&c.outer_momentum),
+                "outer_momentum must be in [0, 1) (got {})",
+                c.outer_momentum
+            );
         }
         if let Some(v) = j.opt("sign_payloads") {
             c.sign_payloads = v.as_bool()?;
@@ -416,6 +530,58 @@ mod tests {
         assert_eq!(RunConfig::from_json(&j).unwrap().kernel_mode, KernelMode::Reference);
         let j = Json::parse(r#"{"kernel_mode": "avx512"}"#).unwrap();
         assert!(RunConfig::from_json(&j).is_err(), "unknown kernel_mode rejected");
+    }
+
+    #[test]
+    fn placement_and_faults_default_degenerate() {
+        // Zero-cost placement + faults off must be the default so
+        // existing runs keep bit-identical rounds (pinned end-to-end in
+        // tests/failover.rs).
+        let c = RunConfig::default();
+        assert_eq!(c.placement, PlacementConfig::default());
+        assert_eq!(c.placement.n_hosts, 0, "0 = one host per shard");
+        assert_eq!(c.placement.interhost_bps, 0.0, "0.0 = zero-cost link");
+        assert_eq!(c.faults, FaultConfig::default());
+        assert!(!c.faults.enabled);
+        assert_eq!(c.outer_momentum, 0.0, "plain-delta outer step by default");
+    }
+
+    #[test]
+    fn json_placement_fault_and_momentum_overrides() {
+        let j = Json::parse(
+            r#"{"placement": {"n_hosts": 5, "interhost_bps": 1e9,
+                              "interhost_latency_s": 0.05, "announce_bytes": 512},
+                "faults": {"enabled": true, "p_host_crash": 0.02, "stall_s": 120.0,
+                           "p_link_flap": 0.1, "max_upload_retries": 5,
+                           "retry_backoff_s": 2.0, "failover_timeout_s": 90.0,
+                           "scenario": "ci-crashy"},
+                "outer_momentum": 0.9}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert_eq!(c.placement.n_hosts, 5);
+        assert_eq!(c.placement.interhost_bps, 1e9);
+        assert_eq!(c.placement.interhost_latency_s, 0.05);
+        assert_eq!(c.placement.announce_bytes, 512);
+        assert!(c.faults.enabled);
+        assert_eq!(c.faults.p_host_crash, 0.02);
+        assert_eq!(c.faults.stall_s, 120.0);
+        assert_eq!(c.faults.p_link_flap, 0.1);
+        assert_eq!(c.faults.max_upload_retries, 5);
+        assert_eq!(c.faults.retry_backoff_s, 2.0);
+        assert_eq!(c.faults.failover_timeout_s, 90.0);
+        assert_eq!(c.faults.scenario, FaultScenario::CiCrashy);
+        assert_eq!(c.outer_momentum, 0.9);
+        // untouched fault fields keep defaults
+        assert_eq!(c.faults.p_host_stall, 0.0);
+    }
+
+    #[test]
+    fn bad_fault_scenario_and_momentum_rejected() {
+        let j = Json::parse(r#"{"faults": {"scenario": "chaos-monkey"}}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err(), "unknown scenario rejected");
+        let j = Json::parse(r#"{"outer_momentum": 1.0}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err(), "momentum >= 1 rejected");
     }
 
     #[test]

@@ -77,6 +77,24 @@
 //! completion, own compute completion)`, and its uplink may still be
 //! draining the previous payload — the paper's Fig.-1 overlap phase,
 //! hiding communication behind compute.
+//!
+//! ## Faults and fail-over
+//!
+//! With fault injection enabled ([`crate::netsim::faults`]) the round
+//! additionally carries: host crashes at round start (permanent;
+//! `HostCrash` events), announce stalls that delay the cross-shard
+//! barrier, and upload-link flaps that cut peer transfers mid-flight
+//! (bounded-backoff retries as `UploadRetry` events; an exhausted budget
+//! abandons the submission with `FastCheck::OrphanedUpload`, orphaning
+//! any slices that already landed in the store). A shard whose host died
+//! misses its barrier announcement; at `deadline + failover_timeout_s`
+//! its chunk range is reassigned to a surviving host, which rebuilds the
+//! shard's state *from the object store* — momentum-slice checkpoint
+//! plus a re-aggregation of the stored selected slices under the pinned
+//! accumulation order — so a recovered run's final model is
+//! byte-identical to the fault-free run (`tests/failover.rs`). With the
+//! default config the fault layer is inert: no draws, no events, and
+//! every timing bit matches the pre-fault implementation.
 
 use rayon::prelude::*;
 
@@ -84,8 +102,9 @@ use anyhow::Result;
 
 use crate::chain::Subnet;
 use crate::config::run::RunConfig;
+use crate::coordinator::aggregator::{aggregate_weighted_range_into, median_norm_weights};
 use crate::coordinator::offload::{OffloadManager, Phase};
-use crate::coordinator::shard::{ShardLane, ShardSet, ShardSpec};
+use crate::coordinator::shard::{HostLink, RoundFaults, ShardLane, ShardSet, ShardSpec};
 use crate::data::grammar::GrammarKind;
 use crate::data::shards::{BatchSampler, ShardStore};
 use crate::gauntlet::auth::AuthVerifier;
@@ -94,14 +113,14 @@ use crate::gauntlet::loss_score::EvalBatch;
 use crate::gauntlet::validator::{EvalDataProvider, Validator};
 use crate::gauntlet::Submission;
 use crate::netsim::sched::{Event, Scheduler};
-use crate::netsim::{ComputeModel, ComputeTier, LinkPair, VirtualClock};
-use crate::peer::worker::{encode_payload_slices, seal_payload_slices};
+use crate::netsim::{ComputeModel, ComputeTier, FaultModel, LinkPair, VirtualClock};
+use crate::peer::worker::{encode_payload_slices, seal_payload_slices, upload_backoff_s};
 use crate::peer::{Behavior, ChurnConfig, ChurnModel, PeerState};
 use crate::runtime::{ops, Engine, Manifest};
-use crate::sparseloco::envelope::SigningKey;
+use crate::sparseloco::envelope::{self, SigningKey};
 use crate::sparseloco::Payload;
 use crate::storage::ObjectStore;
-use crate::train::{OuterAlphaSchedule, Schedule};
+use crate::train::{checkpoint, OuterAlphaSchedule, Schedule};
 use crate::util::rng::Rng;
 
 /// Everything configurable about a network run.
@@ -189,6 +208,10 @@ pub struct PeerLane {
     pub download: Option<(f64, f64)>,
     /// Whether the Gauntlet flagged this peer's submission Late/LateUpload.
     pub late: bool,
+    /// Virtual times this peer *re-started* a slice upload after a link
+    /// flap cut the transfer (bounded exponential backoff; empty when the
+    /// fault layer is off or the link held).
+    pub retry_at: Vec<f64>,
 }
 
 /// Per-round observability (feeds Figures 3/4/5/6 + EXPERIMENTS.md).
@@ -232,6 +255,17 @@ pub struct RoundReport {
     pub bytes_down: u64,
     /// Outer learning rate applied this round.
     pub outer_alpha: f64,
+    /// Upload-slice transfers that were cut by a link flap and then
+    /// re-attempted (each retry counted once; the final abandoning flap
+    /// of an exhausted budget is not a retry).
+    pub retried_uploads: u64,
+    /// Slices that landed in the object store but belong to submissions
+    /// abandoned after exhausting the retry budget — bytes the store
+    /// holds that no shard will ever gather.
+    pub orphaned_slices: u64,
+    /// Shards whose chunk range was reassigned to a surviving host this
+    /// round (fail-over recoveries; details in `shard_lanes`).
+    pub recovered_shards: usize,
     /// Human-readable reasons for non-selected submissions (debugging +
     /// observability): "hotkey fast=... score=...".
     pub rejections: Vec<String>,
@@ -458,6 +492,11 @@ pub struct Network<'e> {
     pub shards: ShardStore,
     /// Per-peer compute-duration model (tiers assigned per hotkey).
     pub compute_model: ComputeModel,
+    /// Deterministic fault model (host crashes, stalls, upload-link
+    /// flaps), with its scenario already env-resolved
+    /// (`COVENANT_FAULT_SCENARIO`). Every draw is a pure function of the
+    /// run seed — the default config performs no draws at all.
+    pub faults: FaultModel,
     /// Coordinator shards: chunk-range owners of the flat parameter
     /// vector driving aggregation and the cross-shard outer-step
     /// barrier. `run.n_shards = 1` (the default) is the degenerate
@@ -500,10 +539,33 @@ impl<'e> Network<'e> {
         // Coordinator shards: contiguous chunk ranges of the flat
         // vector, each with its own bucket in the object store (peers
         // upload per-shard payload slices there).
-        let shard_set = ShardSet::new(man.n_chunks, man.config.chunk, p.run.n_shards)?;
+        let mut shard_set = ShardSet::new(man.n_chunks, man.config.chunk, p.run.n_shards)?;
         for s in 0..shard_set.n_shards() {
             store.create_bucket(&format!("shard-{s}"), &format!("cred-shard-{s}"))?;
         }
+        // Place the shard coordinators on simulated hosts over the
+        // configured inter-host link (defaults: one host per shard,
+        // zero-cost link — the degenerate placement that adds nothing),
+        // and split the outer-optimizer momentum across the shards.
+        shard_set.configure_placement(
+            p.run.placement.n_hosts,
+            HostLink {
+                bps: p.run.placement.interhost_bps,
+                latency_s: p.run.placement.interhost_latency_s,
+                announce_bytes: p.run.placement.announce_bytes,
+            },
+        );
+        shard_set.set_outer_momentum(p.run.outer_momentum as f32);
+        // Fault scenario: an explicitly configured FaultConfig always
+        // wins; only the pristine default picks up the ambient
+        // COVENANT_FAULT_SCENARIO env var (CI's crashy third pass).
+        let faults = FaultModel::new(
+            p.run.seed,
+            p.run
+                .faults
+                .clone()
+                .with_env(std::env::var("COVENANT_FAULT_SCENARIO").ok().as_deref()),
+        );
         let churn = ChurnModel::new(p.churn, p.run.seed ^ 0xC0DE);
         let global_params = ops::init_params(eng, p.run.seed as i32)?;
         let mut validator = Validator::new(p.run.gauntlet.clone(), p.run.seed ^ 0x5C0);
@@ -523,6 +585,7 @@ impl<'e> Network<'e> {
             auth: AuthVerifier::new(),
             shards,
             compute_model,
+            faults,
             shard_set,
             peers: Vec::new(),
             global_params,
@@ -773,10 +836,26 @@ impl<'e> Network<'e> {
                 upload: None,
                 download: None,
                 late: false,
+                retry_at: Vec::new(),
             })
             .collect();
 
         let mut sched = Scheduler::new(VirtualClock::at(t_start));
+        // Fault plan for this round. Host crashes land at round start and
+        // are permanent (the shard set refuses to kill the last
+        // survivor); stalls and the detection timeout feed the barrier
+        // arithmetic in wave 2. With the default (disabled) config the
+        // plan is empty and no draw happens at all.
+        let plan = self.faults.round_plan(round, self.shard_set.hosts_alive());
+        for &h in &self.shard_set.apply_crashes(&plan.crashes) {
+            sched.schedule_at(t_start, Event::HostCrash { host: h });
+        }
+        // Cloned so the flap draws below don't contend with the peer-slot
+        // borrows (the model is a couple of words plus the config).
+        let fault_model = self.faults.clone();
+        let flaps_on = fault_model.flaps_enabled();
+        let mut retried_uploads = 0u64;
+        let mut orphans = vec![false; n_peers];
         let mut stalled = vec![false; n_peers];
         // Per-peer, per-coordinator-shard slice arrival times (+inf until
         // the slice lands; stalled connections never land any slice).
@@ -818,6 +897,77 @@ impl<'e> Network<'e> {
                         slot.link.up.release_at(deadline.max(t));
                         o.sub.uploaded_at = f64::INFINITY;
                         lanes[peer].upload = Some((t, f64::INFINITY));
+                    } else if flaps_on {
+                        // Flap-prone uplink: each slice transfer may be
+                        // cut mid-flight (pure per-attempt draw); the
+                        // peer re-queues the whole slice after bounded
+                        // exponential backoff. Cut bytes stay charged to
+                        // the link (wasted bandwidth). Exhausting the
+                        // retry budget abandons the submission: later
+                        // slices are never attempted, arrival is +inf,
+                        // and the slices that *did* land are orphaned in
+                        // the object store (`FastCheck::OrphanedUpload`).
+                        let up_begin = t.max(slot.link.up.busy_until());
+                        let n_slices = o.slices.len();
+                        let hotkey = slot.state.hotkey.clone();
+                        let mut done = t;
+                        let mut abandoned = false;
+                        'slices: for (s, wire) in o.slices.iter().enumerate() {
+                            let mut attempt: u32 = 0;
+                            let mut req = t;
+                            loop {
+                                let start = req.max(slot.link.up.busy_until());
+                                let fin = slot.link.up.transfer(req, wire.len());
+                                if !fault_model.link_flaps(&hotkey, s, round, attempt) {
+                                    slice_done[peer][s] = fin;
+                                    done = fin;
+                                    if s + 1 < n_slices {
+                                        sched.schedule_at(
+                                            fin,
+                                            Event::ShardUploadDone { peer, shard: s },
+                                        );
+                                    }
+                                    break;
+                                }
+                                let frac =
+                                    fault_model.flap_cut_frac(&hotkey, s, round, attempt);
+                                let cut_t = start + frac * (fin - start);
+                                slot.link.up.cut_at(cut_t);
+                                if attempt >= fault_model.cfg.max_upload_retries {
+                                    abandoned = true;
+                                    break 'slices;
+                                }
+                                retried_uploads += 1;
+                                attempt += 1;
+                                req = cut_t
+                                    + upload_backoff_s(
+                                        fault_model.cfg.retry_backoff_s,
+                                        attempt,
+                                    );
+                                lanes[peer].retry_at.push(req);
+                                sched.schedule_at(
+                                    req,
+                                    Event::UploadRetry { peer, shard: s, attempt },
+                                );
+                            }
+                        }
+                        if abandoned {
+                            orphans[peer] = true;
+                            o.sub.uploaded_at = f64::INFINITY;
+                            lanes[peer].upload = Some((up_begin, f64::INFINITY));
+                        } else {
+                            lanes[peer].upload = Some((up_begin, done));
+                            sched.schedule_at(done, Event::UploadDone { peer });
+                            if sign
+                                && slot.state.behavior == Behavior::ShardSpammer
+                                && slice_done[peer][spam_shard].is_finite()
+                            {
+                                sched.schedule_at(
+                                    slice_done[peer][spam_shard],
+                                    Event::AdversarySpam { peer, shard: spam_shard },
+                                );
+                            }
+                        }
                     } else {
                         // One FIFO uplink transfer per coordinator-shard
                         // slice, in shard order; the *final* slice is the
@@ -879,6 +1029,7 @@ impl<'e> Network<'e> {
         let mut pre_verdicts: Vec<Option<FastCheck>> = Vec::new();
         let mut adversarial_submitted = 0;
         let mut rejected_pre_decode = 0usize;
+        let mut orphaned_slices = 0u64;
         for (i, outcome) in outcomes.into_iter().enumerate() {
             let Some(PeerOutcome { sub, slices, loss, adversarial, .. }) = outcome else {
                 continue;
@@ -894,7 +1045,14 @@ impl<'e> Network<'e> {
             // nonce freshness, per verifying key. Stalled uploads never
             // arrived, so there is nothing to authenticate (they get
             // `LateUpload` from the fast checks either way).
-            let pre = if sign && sub.uploaded_at.is_finite() {
+            let pre = if orphans[i] {
+                // Abandoned after exhausting the retry budget: nothing
+                // complete ever arrived, so there is nothing to
+                // authenticate or decode — a pre-verdict, like the auth
+                // rejections, but a *transport* failure rather than a
+                // trust one.
+                Some(FastCheck::OrphanedUpload)
+            } else if sign && sub.uploaded_at.is_finite() {
                 let chain = &self.chain;
                 self.auth.verify_submission(
                     &slices,
@@ -906,7 +1064,22 @@ impl<'e> Network<'e> {
                 None
             };
             let bytes: Vec<usize> = slices.iter().map(Vec::len).collect();
-            if pre.is_some() {
+            if orphans[i] {
+                // The slices that landed before the budget ran out are
+                // real store objects nobody will gather — orphaned bytes,
+                // counted so the report can answer "what did the faults
+                // cost".
+                for (s, wire) in slices.iter().enumerate() {
+                    if slice_done[i][s].is_finite() {
+                        orphaned_slices += 1;
+                        self.store.put(
+                            &sub.hotkey,
+                            &format!("round-{round}/shard-{s}/grad.bin"),
+                            wire.clone(),
+                        )?;
+                    }
+                }
+            } else if pre.is_some() {
                 // Rejected bytes never reach a decoder or the gather
                 // surface: they land only in the shards' rejected
                 // accounting (who was rejected, and how much it cost).
@@ -918,7 +1091,9 @@ impl<'e> Network<'e> {
                 // would gather its chunk range from. (This sim's shards
                 // aggregate the in-memory payloads directly; the stored
                 // slices are the wire-format/byte-accounting fidelity
-                // layer, like the whole-payload `grad.bin` before them.)
+                // layer, like the whole-payload `grad.bin` before them.
+                // Fail-over leans on exactly this surface: a takeover
+                // host re-gathers its chunk range from these objects.)
                 for (s, wire) in slices.iter().enumerate() {
                     self.store.put(
                         &sub.hotkey,
@@ -978,6 +1153,7 @@ impl<'e> Network<'e> {
         let mut t_comm_end = compute_end;
         let mut bytes_up = 0u64;
         let mut bytes_down = 0u64;
+        let mut recovered_shards = 0usize;
         let mut shard_lanes: Vec<ShardLane> = Vec::new();
         let mut sched2 = Scheduler::new(VirtualClock::at(t_start));
         if !selected_payloads.is_empty() {
@@ -1001,10 +1177,85 @@ impl<'e> Network<'e> {
                 .iter()
                 .map(|&i| sub_slice_bytes[i].as_slice())
                 .collect();
-            let shard_round =
-                self.shard_set.aggregate_round(&selected_payloads, &sel_arrivals, &sel_bytes)?;
+            // Barrier under placement + faults: stalled hosts delay
+            // their announcement; a shard on a dead host is detected at
+            // deadline + failover_timeout and reassigned. The degenerate
+            // config (no faults, zero-cost placement) makes this exactly
+            // `aggregate_round` — same bits, no extra events.
+            let rf = RoundFaults {
+                stalls: plan.stalls.clone(),
+                t_detect: deadline + self.faults.cfg.failover_timeout_s,
+            };
+            let mut shard_round = self.shard_set.aggregate_round_faulted(
+                &selected_payloads,
+                &sel_arrivals,
+                &sel_bytes,
+                &rf,
+            )?;
             for (t_agg, ev) in ShardSet::round_events(&shard_round) {
                 sched2.schedule_at(t_agg, ev);
+            }
+            for &(t_ev, ev) in &shard_round.events {
+                sched2.schedule_at(t_ev, ev);
+            }
+            recovered_shards = shard_round.recoveries.len();
+            if !shard_round.recoveries.is_empty() {
+                // Fail-over state rebuild — the store-backed leg. The
+                // takeover host owns nothing of the dead shard, so it
+                // (a) fetches the shard's outer-momentum slice from the
+                // latest bucket checkpoint (absent only before the first
+                // selected round, when the slice is still all zero), and
+                // (b) re-gathers this round's selected slices from the
+                // object store and re-aggregates its chunk range under
+                // the same pinned accumulation order with the same
+                // global weights. Both legs are bitwise — the rebuilt
+                // range is debug-asserted against the in-memory
+                // aggregate and then *used*, so the recovery path is
+                // load-bearing, not decorative (tests/failover.rs pins
+                // final-model byte-identity end to end).
+                let weights = median_norm_weights(&selected_payloads);
+                let specs = self.shard_set.specs();
+                for ri in 0..shard_round.recoveries.len() {
+                    let s = shard_round.recoveries[ri].shard;
+                    let bucket = format!("shard-{s}");
+                    let cred = format!("cred-shard-{s}");
+                    for r in (0..round).rev() {
+                        let key = format!("round-{r}/momentum.bin");
+                        if self.store.head(&bucket, &key).is_ok() {
+                            let raw = self.store.get(&bucket, &key, &cred)?;
+                            self.shard_set
+                                .install_momentum_slice(s, checkpoint::from_bytes(&raw)?)?;
+                            break;
+                        }
+                    }
+                    let spec = specs[s];
+                    let mut rebuilt = vec![0f32; spec.dense_len()];
+                    let mut slice_payloads = Vec::with_capacity(verdict.selected.len());
+                    for &i in &verdict.selected {
+                        let hk = &submissions[i].hotkey;
+                        let wire = self.store.get(
+                            hk,
+                            &format!("round-{round}/shard-{s}/grad.bin"),
+                            &format!("cred-{hk}"),
+                        )?;
+                        slice_payloads.push(envelope::decode_compat(&wire)?);
+                    }
+                    let slice_refs: Vec<&Payload> = slice_payloads.iter().collect();
+                    aggregate_weighted_range_into(
+                        &mut rebuilt,
+                        &slice_refs,
+                        &weights,
+                        0,
+                        spec.n_chunks(),
+                    )?;
+                    let range = spec.dense_range();
+                    debug_assert_eq!(
+                        rebuilt.as_slice(),
+                        &shard_round.delta[range.clone()],
+                        "store rebuild of shard {s} diverged from the in-memory aggregate"
+                    );
+                    shard_round.delta[range].copy_from_slice(&rebuilt);
+                }
             }
             // Publish each shard's round record to its bucket (what
             // peers poll in a real multi-coordinator deployment): who
@@ -1031,8 +1282,22 @@ impl<'e> Network<'e> {
                     record.to_string().into_bytes(),
                 )?;
             }
+            // Fold the round delta through the split outer-momentum
+            // state (each shard owns exactly its own slice; `mu = 0`
+            // leaves the delta bit-untouched), apply the outer step,
+            // then checkpoint every shard's momentum slice to its bucket
+            // — the state a takeover host fetches during fail-over.
+            let mut delta = std::mem::take(&mut shard_round.delta);
+            self.shard_set.apply_momentum(&mut delta);
             self.global_params =
-                ops::outer_step(self.eng, &global_snapshot, &shard_round.delta, alpha as f32)?;
+                ops::outer_step(self.eng, &global_snapshot, &delta, alpha as f32)?;
+            for s in 0..self.shard_set.n_shards() {
+                self.store.put(
+                    &format!("shard-{s}"),
+                    &format!("round-{round}/momentum.bin"),
+                    checkpoint::to_bytes(self.shard_set.momentum_slice(s)),
+                )?;
+            }
             let selected_bytes: Vec<usize> =
                 verdict.selected.iter().map(|&i| submissions[i].wire_bytes).collect();
             let total_sel: usize = selected_bytes.iter().sum();
@@ -1201,6 +1466,9 @@ impl<'e> Network<'e> {
             mean_loss: losses.iter().sum::<f64>() / losses.len().max(1) as f64,
             bytes_up,
             bytes_down,
+            retried_uploads,
+            orphaned_slices,
+            recovered_shards,
             outer_alpha: alpha,
             rejections,
             lanes,

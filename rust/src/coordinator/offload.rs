@@ -157,8 +157,11 @@ impl OffloadManager {
     ///   (fresh joiners) are already in the compute phase; that is a
     ///   no-op, not an error.
     ///
-    /// Other events (uploads, deadline, chain blocks) don't move state
-    /// between GPU and host.
+    /// Other events (uploads and retries, deadline, chain blocks, and
+    /// the fault/placement traces — `HostCrash`, `ShardReassigned`,
+    /// `ShardAnnounce`, `UploadRetry`) don't move state between GPU and
+    /// host: coordinator-side fail-over is invisible to a peer's memory
+    /// phases, which is exactly why recovery never perturbs peer math.
     pub fn apply_event(&mut self, ev: &Event) -> Result<()> {
         match ev {
             Event::ComputeDone { .. } => {
@@ -283,10 +286,16 @@ mod tests {
             m.apply_event(&Event::ComputeDone { peer: 0 }).unwrap();
             assert_eq!(m.phase, Phase::Overlap);
             assert!(m.is_resident(StateKind::InnerOpt));
-            // timing-only events are no-ops for residency
+            // timing-only events are no-ops for residency — including
+            // the fault/fail-over traces: coordinator recovery never
+            // moves peer state between GPU and host.
             m.apply_event(&Event::UploadDone { peer: 0 }).unwrap();
             m.apply_event(&Event::DeadlineHit).unwrap();
             m.apply_event(&Event::ChainBlock { height: 1 }).unwrap();
+            m.apply_event(&Event::HostCrash { host: 0 }).unwrap();
+            m.apply_event(&Event::UploadRetry { peer: 0, shard: 0, attempt: 1 }).unwrap();
+            m.apply_event(&Event::ShardReassigned { shard: 0, from: 0, to: 1 }).unwrap();
+            m.apply_event(&Event::ShardAnnounce { shard: 0, host: 1 }).unwrap();
             assert_eq!(m.phase, Phase::Overlap);
             m.apply_event(&Event::DownloadDone { peer: 0 }).unwrap();
             assert_eq!(m.phase, Phase::Compute);

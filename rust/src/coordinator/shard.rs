@@ -35,6 +35,36 @@
 //! upload does in the single-coordinator path. (With one shard the
 //! barrier degenerates to "the last selected upload landed", the
 //! historical round-turnover condition.)
+//!
+//! ## Placed hosts, measured barriers, and fail-over
+//!
+//! Shards are *placed* on simulated hosts (round-robin, spare hosts
+//! allowed) with an inter-host link ([`HostLink`]): when the shard set
+//! spans more than one host, each shard's barrier announcement pays the
+//! link's announce cost, so the cross-shard barrier is measured rather
+//! than a free `max()`. The default placement (one host per shard,
+//! zero-cost link) adds nothing and stays bit-identical to the
+//! historical barrier.
+//!
+//! Hosts can die ([`crate::netsim::faults`]). A dead host's shard misses
+//! its barrier announcement; once the detection timeout passes
+//! (`RoundFaults::t_detect`), the chunk range is reassigned to the
+//! lowest-index surviving host, which rebuilds the shard's state
+//! deterministically from the object store: the already-uploaded
+//! selected slices re-aggregate under the same pinned accumulation
+//! order, and the shard's outer-momentum slice is fetched from its
+//! bucket checkpoint. Because the store outlives hosts and the
+//! accumulation order is pinned, a faulted run whose selected slices all
+//! survive produces a final model **byte-identical** to the fault-free
+//! run (`tests/failover.rs`).
+//!
+//! ## Split outer-optimizer state
+//!
+//! Each shard keeps only the momentum slice for its own chunk range
+//! ([`ShardSet::apply_momentum`]) — no host ever holds the full flat
+//! optimizer vector, and a takeover host fetches exactly the dead
+//! shard's slice. `outer_momentum = 0` is the degenerate plain-delta
+//! outer step, bit-identical to the pre-momentum rounds.
 
 use std::ops::Range;
 
@@ -171,6 +201,43 @@ impl ShardCoordinator {
     }
 }
 
+/// The inter-host link shape for placed shard coordinators: carries
+/// barrier announcements between shard hosts and state fetches during
+/// fail-over. `bps = 0.0` means infinitely fast (zero transfer time);
+/// the all-zero default is the zero-cost link that keeps the placed
+/// barrier bit-identical to the historical free `max()`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HostLink {
+    /// Bits per second between hosts (`0.0` = infinite).
+    pub bps: f64,
+    /// Per-message latency floor, seconds.
+    pub latency_s: f64,
+    /// Size of one shard-ready announcement, bytes.
+    pub announce_bytes: usize,
+}
+
+impl Default for HostLink {
+    fn default() -> Self {
+        Self { bps: 0.0, latency_s: 0.0, announce_bytes: 256 }
+    }
+}
+
+impl HostLink {
+    /// Seconds a `bytes`-sized message spends on this link.
+    pub fn cost(&self, bytes: usize) -> f64 {
+        if self.bps > 0.0 {
+            self.latency_s + bytes as f64 * 8.0 / self.bps
+        } else {
+            self.latency_s
+        }
+    }
+
+    /// Cost of one barrier announcement.
+    pub fn announce_cost(&self) -> f64 {
+        self.cost(self.announce_bytes)
+    }
+}
+
 /// One shard's per-round timing/byte record (the per-shard analogue of
 /// [`PeerLane`](super::network::PeerLane); feeds the timeline renderer).
 #[derive(Debug, Clone)]
@@ -185,10 +252,34 @@ pub struct ShardLane {
     /// when the shard's aggregation became ready.
     pub ready_at: f64,
     /// Virtual time the outer step applied: the cross-shard barrier,
-    /// `max` of every shard's `ready_at` (identical across lanes).
+    /// `max` of every shard's announce arrival (identical across lanes).
     pub applied_at: f64,
     /// Selected-slice wire bytes this shard received this round.
     pub bytes: u64,
+    /// Host this shard's coordinator ran on (after any fail-over this
+    /// round).
+    pub host: usize,
+    /// Fail-over record when this shard's original host was dead:
+    /// `(dead host, detection time, recovery-complete time)` — the
+    /// takeover span for the timeline renderer. `None` in healthy
+    /// rounds.
+    pub takeover: Option<(usize, f64, f64)>,
+}
+
+/// One shard fail-over performed during a round.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ShardRecovery {
+    /// The shard whose chunk range moved.
+    pub shard: usize,
+    /// The dead host it moved off.
+    pub from: usize,
+    /// The surviving host that took over.
+    pub to: usize,
+    /// Bytes the takeover host fetched (momentum-slice checkpoint plus
+    /// the round's selected slice bytes for this shard).
+    pub fetch_bytes: u64,
+    /// Virtual time the rebuild finished (detection timeout + fetch).
+    pub recovered_at: f64,
 }
 
 /// The result of one sharded aggregation round.
@@ -199,9 +290,45 @@ pub struct ShardRound {
     pub delta: Vec<f32>,
     /// Per-shard timing/byte lanes, in shard order.
     pub lanes: Vec<ShardLane>,
-    /// The cross-shard barrier time: `max` over shards of `ready_at`.
-    /// The outer step applies here and not a moment earlier.
+    /// The cross-shard barrier time: `max` over shards of their announce
+    /// arrival (with zero-cost placement and no faults this degenerates
+    /// to the max `ready_at`). The outer step applies here and not a
+    /// moment earlier.
     pub applied_at: f64,
+    /// Fail-overs performed this round, in shard order.
+    pub recoveries: Vec<ShardRecovery>,
+    /// Placement/fault trace events (announce arrivals that cost time,
+    /// reassignments), in shard order. Empty in the degenerate config,
+    /// so healthy event traces stay bit-identical.
+    pub events: Vec<(f64, Event)>,
+}
+
+/// The per-round fault context the round engine hands to
+/// [`ShardSet::aggregate_round_faulted`]: which hosts stall this round
+/// and when a missing barrier announcement is declared a failure.
+#[derive(Debug, Clone)]
+pub struct RoundFaults {
+    /// `(host, delay_s)` announce stalls for this round.
+    pub stalls: Vec<(usize, f64)>,
+    /// Virtual time a missing announcement is declared a host failure
+    /// (round deadline + detection timeout). Must be finite if any
+    /// assigned host is dead.
+    pub t_detect: f64,
+}
+
+impl RoundFaults {
+    /// The fault-free context (no stalls; detection never fires).
+    pub fn none() -> Self {
+        Self { stalls: Vec::new(), t_detect: f64::INFINITY }
+    }
+
+    /// The announce delay for `host` this round (0.0 when not stalled).
+    pub fn stall_of(&self, host: usize) -> f64 {
+        self.stalls
+            .iter()
+            .find(|&&(h, _)| h == host)
+            .map_or(0.0, |&(_, d)| d)
+    }
 }
 
 /// The full set of shard coordinators covering the flat vector with
@@ -214,27 +341,133 @@ pub struct ShardSet {
     chunk: usize,
     /// Total chunks across all shards.
     n_chunks: usize,
+    /// Liveness per simulated host (crashes are permanent).
+    hosts_alive: Vec<bool>,
+    /// Host each shard currently runs on (`shard -> host`; fail-over
+    /// rewrites entries permanently).
+    assignment: Vec<usize>,
+    /// Inter-host link shape (announcements + takeover fetches).
+    link: HostLink,
+    /// Per-shard outer-momentum slices (each exactly the shard's dense
+    /// length — no host ever holds the full flat optimizer vector).
+    momentum: Vec<Vec<f32>>,
+    /// Outer-momentum coefficient (`0.0` = plain-delta outer step).
+    mu: f32,
 }
 
 impl ShardSet {
     /// Split `n_chunks` chunks of `chunk` elements across `n_shards`
     /// coordinators (clamped to `[1, n_chunks]`; see
-    /// [`shard_chunk_ranges`]).
+    /// [`shard_chunk_ranges`]). Default placement: one host per shard,
+    /// zero-cost inter-host link, momentum off.
     pub fn new(n_chunks: usize, chunk: usize, n_shards: usize) -> Result<Self> {
         ensure!(n_chunks > 0 && chunk > 0, "bad shard geometry ({n_chunks} x {chunk})");
-        let shards = shard_chunk_ranges(n_chunks, n_shards)
+        let shards: Vec<ShardCoordinator> = shard_chunk_ranges(n_chunks, n_shards)
             .into_iter()
             .enumerate()
             .map(|(index, (chunk0, chunk1))| {
                 ShardCoordinator::new(ShardSpec { index, chunk0, chunk1, chunk })
             })
             .collect();
-        Ok(Self { shards, chunk, n_chunks })
+        let n = shards.len();
+        let momentum = shards.iter().map(|sh| vec![0f32; sh.spec.dense_len()]).collect();
+        Ok(Self {
+            shards,
+            chunk,
+            n_chunks,
+            hosts_alive: vec![true; n],
+            assignment: (0..n).collect(),
+            link: HostLink::default(),
+            momentum,
+            mu: 0.0,
+        })
+    }
+
+    /// Place the shards on `n_hosts` simulated hosts (round-robin;
+    /// `0` means one host per shard; spare hosts stay idle until a
+    /// fail-over lands on them) over the given inter-host link. Resets
+    /// liveness — call before the first round.
+    pub fn configure_placement(&mut self, n_hosts: usize, link: HostLink) {
+        let n = if n_hosts == 0 { self.shards.len() } else { n_hosts };
+        self.hosts_alive = vec![true; n];
+        self.assignment = (0..self.shards.len()).map(|s| s % n).collect();
+        self.link = link;
+    }
+
+    /// Set the per-shard outer-momentum coefficient (`0.0` disables).
+    pub fn set_outer_momentum(&mut self, mu: f32) {
+        self.mu = mu;
     }
 
     /// Number of shard coordinators (after clamping).
     pub fn n_shards(&self) -> usize {
         self.shards.len()
+    }
+
+    /// Per-host liveness, indexed by host.
+    pub fn hosts_alive(&self) -> &[bool] {
+        &self.hosts_alive
+    }
+
+    /// Current `shard -> host` assignment.
+    pub fn assignment(&self) -> &[usize] {
+        &self.assignment
+    }
+
+    /// Kill the given hosts (permanently), refusing to kill the last
+    /// survivor — the defense-in-depth twin of the fault model's
+    /// survivor rule. Returns the hosts that actually died just now.
+    pub fn apply_crashes(&mut self, crashes: &[usize]) -> Vec<usize> {
+        let mut newly = Vec::new();
+        for &h in crashes {
+            if h >= self.hosts_alive.len() || !self.hosts_alive[h] {
+                continue;
+            }
+            if self.hosts_alive.iter().filter(|&&a| a).count() <= 1 {
+                continue; // never kill the last surviving host
+            }
+            self.hosts_alive[h] = false;
+            newly.push(h);
+        }
+        newly
+    }
+
+    /// The momentum slice for shard `s` (exactly `dense_len` elements).
+    pub fn momentum_slice(&self, s: usize) -> &[f32] {
+        &self.momentum[s]
+    }
+
+    /// Install a momentum slice fetched from the shard's bucket
+    /// checkpoint (fail-over state rebuild).
+    pub fn install_momentum_slice(&mut self, s: usize, slice: Vec<f32>) -> Result<()> {
+        ensure!(
+            slice.len() == self.shards[s].spec.dense_len(),
+            "momentum slice for shard {s}: {} elements, expected {}",
+            slice.len(),
+            self.shards[s].spec.dense_len()
+        );
+        self.momentum[s] = slice;
+        Ok(())
+    }
+
+    /// Fold the round delta through the split outer-momentum state, in
+    /// place: for each shard's dense range, `m = mu * m + delta` and the
+    /// effective delta becomes `m`. With `mu == 0` the momentum slices
+    /// simply track the delta (bit-for-bit) and **the delta is left
+    /// untouched** — no `0.0 * x` round-trips, so the degenerate outer
+    /// step stays bit-identical to the plain-delta path.
+    pub fn apply_momentum(&mut self, delta: &mut [f32]) {
+        for (sh, m) in self.shards.iter().zip(self.momentum.iter_mut()) {
+            let d = &mut delta[sh.spec.dense_range()];
+            if self.mu == 0.0 {
+                m.copy_from_slice(d);
+            } else {
+                for (mi, di) in m.iter_mut().zip(d.iter_mut()) {
+                    *mi = self.mu * *mi + *di;
+                    *di = *mi;
+                }
+            }
+        }
     }
 
     /// The shard geometries, in shard order.
@@ -296,12 +529,35 @@ impl ShardSet {
     /// `slice_bytes[i][s]` its wire size; both are in submission order,
     /// matching `payloads`. Each shard becomes ready at the max arrival
     /// over its selected slices; the outer step applies at the max over
-    /// shards (the cross-shard barrier).
+    /// shards (the cross-shard barrier). This is the fault-free path —
+    /// equivalent to [`Self::aggregate_round_faulted`] with
+    /// [`RoundFaults::none`].
     pub fn aggregate_round(
         &mut self,
         payloads: &[&Payload],
         arrivals: &[&[f64]],
         slice_bytes: &[&[usize]],
+    ) -> Result<ShardRound> {
+        self.aggregate_round_faulted(payloads, arrivals, slice_bytes, &RoundFaults::none())
+    }
+
+    /// [`Self::aggregate_round`] under placement and faults: barrier
+    /// announcements pay the inter-host link cost when the shard set
+    /// spans more than one host, stalled hosts delay their announcement,
+    /// and a shard whose assigned host is dead fails over — at
+    /// `faults.t_detect` its chunk range is reassigned (permanently) to
+    /// the lowest-index surviving host, which refetches the shard's
+    /// state (momentum checkpoint + this round's selected slices) over
+    /// the link before announcing. The *math* is identical in every
+    /// case: `delta` depends only on the selected payloads and the
+    /// pinned accumulation order, never on placement or faults, which is
+    /// the heart of the recovery byte-identity contract.
+    pub fn aggregate_round_faulted(
+        &mut self,
+        payloads: &[&Payload],
+        arrivals: &[&[f64]],
+        slice_bytes: &[&[usize]],
+        faults: &RoundFaults,
     ) -> Result<ShardRound> {
         ensure!(
             arrivals.len() == payloads.len() && slice_bytes.len() == payloads.len(),
@@ -315,14 +571,74 @@ impl ShardSet {
             );
         }
         let delta = self.aggregate_selected(payloads)?;
+        // Resolve fail-overs first so the span test below sees the
+        // post-recovery assignment.
+        let mut takeover_to: Vec<Option<(usize, usize)>> = vec![None; n];
+        for s in 0..n {
+            let h = self.assignment[s];
+            if self.hosts_alive[h] {
+                continue;
+            }
+            ensure!(
+                faults.t_detect.is_finite(),
+                "shard {s}'s host {h} is dead but no detection timeout was provided"
+            );
+            let to = self
+                .hosts_alive
+                .iter()
+                .position(|&a| a)
+                .ok_or_else(|| anyhow::anyhow!("shard {s}: no surviving host to take over"))?;
+            takeover_to[s] = Some((h, to));
+            self.assignment[s] = to;
+        }
+        let spans_hosts = {
+            let mut hs = self.assignment.clone();
+            hs.sort_unstable();
+            hs.dedup();
+            hs.len() > 1
+        };
+        let announce = self.link.announce_cost();
         let mut lanes = Vec::with_capacity(n);
+        let mut recoveries = Vec::new();
+        let mut events = Vec::new();
         let mut applied_at = f64::NEG_INFINITY;
         for (s, sh) in self.shards.iter_mut().enumerate() {
             let ready_at = arrivals.iter().map(|a| a[s]).fold(f64::NEG_INFINITY, f64::max);
             let bytes: u64 = slice_bytes.iter().map(|b| b[s] as u64).sum();
             sh.ready_at = ready_at;
             sh.bytes_received += bytes;
-            applied_at = applied_at.max(ready_at);
+            let host = self.assignment[s];
+            let (arrival, takeover) = if let Some((from, to)) = takeover_to[s] {
+                // Fail-over: the takeover host learns of the failure at
+                // t_detect, then refetches the shard's state — its
+                // momentum-slice checkpoint plus the selected slice
+                // bytes that already landed in the object store.
+                let fetch_bytes = (sh.spec.dense_len() * 4) as u64 + bytes;
+                let recovered_at = faults.t_detect + self.link.cost(fetch_bytes as usize);
+                let arrival =
+                    if spans_hosts && announce > 0.0 { recovered_at + announce } else { recovered_at };
+                events.push((faults.t_detect, Event::ShardReassigned { shard: s, from, to }));
+                events.push((arrival, Event::ShardAnnounce { shard: s, host: to }));
+                recoveries.push(ShardRecovery { shard: s, from, to, fetch_bytes, recovered_at });
+                (arrival, Some((from, faults.t_detect, recovered_at)))
+            } else {
+                let stall = faults.stall_of(host);
+                let mut arrival = ready_at;
+                if stall > 0.0 {
+                    arrival += stall;
+                }
+                if spans_hosts && announce > 0.0 {
+                    arrival += announce;
+                }
+                // Emit the announce event only when it carries
+                // information (cost or stall); the degenerate config
+                // emits nothing, keeping healthy traces bit-identical.
+                if arrival != ready_at {
+                    events.push((arrival, Event::ShardAnnounce { shard: s, host }));
+                }
+                (arrival, None)
+            };
+            applied_at = applied_at.max(arrival);
             lanes.push(ShardLane {
                 shard: s,
                 chunk0: sh.spec.chunk0,
@@ -330,12 +646,14 @@ impl ShardSet {
                 ready_at,
                 applied_at: 0.0, // filled below once the barrier is known
                 bytes,
+                host,
+                takeover,
             });
         }
         for l in &mut lanes {
             l.applied_at = applied_at;
         }
-        Ok(ShardRound { delta, lanes, applied_at })
+        Ok(ShardRound { delta, lanes, applied_at, recoveries, events })
     }
 
     /// Record one authentication-rejected submission: `slice_bytes[s]`
@@ -537,5 +855,160 @@ mod tests {
         let mut set = ShardSet::new(8, 64, 2).unwrap();
         assert!(set.aggregate_selected(&[&p]).is_err());
         assert!(set.aggregate_selected(&[]).is_err());
+    }
+
+    fn round_inputs(
+        n: usize,
+        n_shards: usize,
+    ) -> (Vec<Payload>, Vec<Vec<f64>>, Vec<Vec<usize>>) {
+        let payloads: Vec<Payload> = (0..n as u64).map(|i| payload(i, 6, 16)).collect();
+        let arrivals = vec![vec![10.0; n_shards]; n];
+        let bytes = vec![vec![100; n_shards]; n];
+        (payloads, arrivals, bytes)
+    }
+
+    fn run_round(
+        set: &mut ShardSet,
+        payloads: &[Payload],
+        arrivals: &[Vec<f64>],
+        bytes: &[Vec<usize>],
+        faults: &RoundFaults,
+    ) -> ShardRound {
+        let refs: Vec<&Payload> = payloads.iter().collect();
+        let ar: Vec<&[f64]> = arrivals.iter().map(|a| a.as_slice()).collect();
+        let br: Vec<&[usize]> = bytes.iter().map(|b| b.as_slice()).collect();
+        set.aggregate_round_faulted(&refs, &ar, &br, faults).unwrap()
+    }
+
+    #[test]
+    fn zero_cost_placement_changes_nothing() {
+        // Explicit placement with spare hosts over a zero-cost link must
+        // be bit-identical to the default barrier: same applied_at bits,
+        // no events, no recoveries.
+        let (payloads, arrivals, bytes) = round_inputs(3, 2);
+        let mut plain = ShardSet::new(6, 16, 2).unwrap();
+        let r0 = run_round(&mut plain, &payloads, &arrivals, &bytes, &RoundFaults::none());
+        let mut placed = ShardSet::new(6, 16, 2).unwrap();
+        placed.configure_placement(5, HostLink::default());
+        let r1 = run_round(&mut placed, &payloads, &arrivals, &bytes, &RoundFaults::none());
+        assert_eq!(r0.applied_at.to_bits(), r1.applied_at.to_bits());
+        assert_eq!(r0.delta, r1.delta);
+        assert!(r1.events.is_empty(), "zero-cost placement emits no events");
+        assert!(r1.recoveries.is_empty());
+        assert_eq!(r1.lanes[0].host, 0);
+        assert_eq!(r1.lanes[1].host, 1);
+    }
+
+    #[test]
+    fn placed_barrier_pays_the_announce_cost() {
+        let (payloads, arrivals, bytes) = round_inputs(3, 2);
+        let link = HostLink { bps: 8e6, latency_s: 0.5, announce_bytes: 1000 };
+        let cost = link.announce_cost(); // 0.5 + 0.001 = 0.501s
+        assert!((cost - 0.501).abs() < 1e-12);
+        let mut set = ShardSet::new(6, 16, 2).unwrap();
+        set.configure_placement(2, link);
+        let r = run_round(&mut set, &payloads, &arrivals, &bytes, &RoundFaults::none());
+        assert_eq!(r.applied_at, 10.0 + cost, "announce travels over the link");
+        assert!(r.lanes.iter().all(|l| l.ready_at == 10.0));
+        assert_eq!(r.events.len(), 2, "both announces cost time -> both traced");
+        assert!(matches!(r.events[0], (_, Event::ShardAnnounce { shard: 0, host: 0 })));
+        // A single-host placement of the same two shards pays nothing:
+        // announcements never leave the host.
+        let mut colocated = ShardSet::new(6, 16, 2).unwrap();
+        colocated.configure_placement(1, link);
+        let r1 = run_round(&mut colocated, &payloads, &arrivals, &bytes, &RoundFaults::none());
+        assert_eq!(r1.applied_at, 10.0);
+        assert!(r1.events.is_empty());
+    }
+
+    #[test]
+    fn stalled_host_delays_the_barrier_only() {
+        let (payloads, arrivals, bytes) = round_inputs(3, 2);
+        let mut set = ShardSet::new(6, 16, 2).unwrap();
+        set.configure_placement(2, HostLink::default());
+        let faults = RoundFaults { stalls: vec![(1, 120.0)], t_detect: f64::INFINITY };
+        let r = run_round(&mut set, &payloads, &arrivals, &bytes, &faults);
+        assert_eq!(r.applied_at, 130.0, "stalled announce moves the barrier");
+        assert_eq!(r.lanes[1].ready_at, 10.0, "slice arrivals are unaffected");
+        assert!(r.recoveries.is_empty(), "a stall within the timeout is not a failure");
+        assert_eq!(r.events.len(), 1);
+        assert!(matches!(r.events[0], (_, Event::ShardAnnounce { shard: 1, host: 1 })));
+        // And the math is oblivious: same delta as an unfaulted set.
+        let mut clean = ShardSet::new(6, 16, 2).unwrap();
+        let rc = run_round(&mut clean, &payloads, &arrivals, &bytes, &RoundFaults::none());
+        assert_eq!(r.delta, rc.delta);
+    }
+
+    #[test]
+    fn dead_host_fails_over_to_the_lowest_survivor() {
+        let (payloads, arrivals, bytes) = round_inputs(3, 2);
+        let mut set = ShardSet::new(6, 16, 2).unwrap();
+        set.configure_placement(2, HostLink::default());
+        assert_eq!(set.apply_crashes(&[1]), vec![1]);
+        let faults = RoundFaults { stalls: vec![], t_detect: 500.0 };
+        let r = run_round(&mut set, &payloads, &arrivals, &bytes, &faults);
+        assert_eq!(set.assignment(), &[0, 0], "shard 1 moved to host 0 permanently");
+        assert_eq!(r.recoveries.len(), 1);
+        let rec = r.recoveries[0];
+        assert_eq!((rec.shard, rec.from, rec.to), (1, 1, 0));
+        assert_eq!(rec.recovered_at, 500.0, "zero-cost fetch completes at t_detect");
+        assert_eq!(rec.fetch_bytes, (3 * 16 * 4 + 300) as u64, "momentum slice + stored slices");
+        assert_eq!(r.applied_at, 500.0, "barrier waits for the recovery");
+        assert_eq!(r.lanes[1].host, 0);
+        assert_eq!(r.lanes[1].takeover, Some((1, 500.0, 500.0)));
+        assert!(r
+            .events
+            .iter()
+            .any(|&(t, e)| t == 500.0 && e == Event::ShardReassigned { shard: 1, from: 1, to: 0 }));
+        // The recovered delta is bit-identical to a clean set's.
+        let mut clean = ShardSet::new(6, 16, 2).unwrap();
+        let rc = run_round(&mut clean, &payloads, &arrivals, &bytes, &RoundFaults::none());
+        assert_eq!(r.delta, rc.delta);
+        // Next round: no host is dead anymore (the assignment moved), so
+        // no new recovery fires.
+        let r2 = run_round(&mut set, &payloads, &arrivals, &bytes, &RoundFaults::none());
+        assert!(r2.recoveries.is_empty());
+        assert_eq!(r2.applied_at, 10.0);
+    }
+
+    #[test]
+    fn apply_crashes_enforces_the_survivor_rule() {
+        let mut set = ShardSet::new(6, 16, 3).unwrap();
+        assert_eq!(set.apply_crashes(&[0]), vec![0]);
+        assert_eq!(set.apply_crashes(&[0]), Vec::<usize>::new(), "already dead");
+        assert_eq!(set.apply_crashes(&[7]), Vec::<usize>::new(), "out of range");
+        assert_eq!(set.apply_crashes(&[1, 2]), vec![1], "host 2 is the last survivor");
+        assert_eq!(set.hosts_alive(), &[false, false, true]);
+    }
+
+    #[test]
+    fn momentum_zero_tracks_delta_without_touching_it() {
+        let mut set = ShardSet::new(6, 16, 2).unwrap();
+        let mut delta: Vec<f32> = (0..6 * 16).map(|i| (i as f32 - 40.0) * 0.25).collect();
+        let orig = delta.clone();
+        set.apply_momentum(&mut delta);
+        assert_eq!(delta, orig, "mu = 0 must not perturb the delta");
+        assert_eq!(set.momentum_slice(0), &orig[..3 * 16]);
+        assert_eq!(set.momentum_slice(1), &orig[3 * 16..]);
+    }
+
+    #[test]
+    fn momentum_accumulates_per_shard_slice() {
+        let mut set = ShardSet::new(6, 16, 2).unwrap();
+        set.set_outer_momentum(0.5);
+        let base: Vec<f32> = vec![2.0; 6 * 16];
+        let mut delta = base.clone();
+        set.apply_momentum(&mut delta);
+        assert!(delta.iter().all(|&d| d == 2.0), "first round: m = delta");
+        let mut delta = base.clone();
+        set.apply_momentum(&mut delta);
+        assert!(delta.iter().all(|&d| d == 3.0), "second round: m = 0.5*2 + 2");
+        // A slice installed from a checkpoint replaces the in-memory state.
+        set.install_momentum_slice(0, vec![0.0; 3 * 16]).unwrap();
+        let mut delta = base.clone();
+        set.apply_momentum(&mut delta);
+        assert!(delta[..3 * 16].iter().all(|&d| d == 2.0));
+        assert!(delta[3 * 16..].iter().all(|&d| d == 3.5));
+        assert!(set.install_momentum_slice(0, vec![0.0; 5]).is_err(), "length checked");
     }
 }

@@ -19,6 +19,12 @@ pub enum FastCheck {
     /// signer key's replay window, or it was signed for a different
     /// round — a verbatim replay of someone's (or one's own) old bytes.
     ReplayedPayload,
+    /// Upload abandoned: the peer's link kept flapping and its bounded
+    /// retry budget ran out, so the submission never fully landed
+    /// (sibling slices that did land are *orphaned* in the object
+    /// store). Delivered as a pre-verdict by the round engine — there is
+    /// nothing complete to authenticate or decode.
+    OrphanedUpload,
     /// Upload arrived after the round deadline.
     Late,
     /// Upload stalled mid-transfer and was cut off by the deadline event —
@@ -41,12 +47,15 @@ pub enum FastCheck {
 /// The order checks fire in: the first failing check in this list is the
 /// submission's verdict. Authentication outranks everything (a forged
 /// submission is never decoded, so nothing downstream of it is even
-/// defined), duplicates outrank liveness (a copied payload is damning
-/// regardless of when it arrived), and the norm checks come last because
-/// they depend on the round's norm population.
-pub const PRECEDENCE: [FastCheck; 9] = [
+/// defined), an abandoned upload outranks duplicates (its bytes never
+/// fully landed, so there is nothing to compare), duplicates outrank
+/// liveness (a copied payload is damning regardless of when it arrived),
+/// and the norm checks come last because they depend on the round's norm
+/// population.
+pub const PRECEDENCE: [FastCheck; 10] = [
     FastCheck::BadSignature,
     FastCheck::ReplayedPayload,
+    FastCheck::OrphanedUpload,
     FastCheck::Duplicate,
     FastCheck::LateUpload,
     FastCheck::Late,
@@ -372,26 +381,31 @@ mod tests {
         // rank 1: ReplayedPayload likewise
         let pre = vec![Some(FastCheck::ReplayedPayload), None];
         assert_eq!(run_fast_checks_pre(&subs, &p, &prev, &pre)[0], FastCheck::ReplayedPayload);
-        // rank 2: authenticated -> Duplicate fires before liveness
+        // rank 2: OrphanedUpload (abandoned after the retry budget) is
+        // also a pre-verdict — the bytes never fully landed, so it fires
+        // before Duplicate can even look at them
+        let pre = vec![Some(FastCheck::OrphanedUpload), None];
+        assert_eq!(run_fast_checks_pre(&subs, &p, &prev, &pre)[0], FastCheck::OrphanedUpload);
+        // rank 3: authenticated -> Duplicate fires before liveness
         assert_eq!(run_fast_checks(&subs, &p, &prev)[0], FastCheck::Duplicate);
-        // rank 3: not a duplicate -> the stalled upload (LateUpload)
+        // rank 4: not a duplicate -> the stalled upload (LateUpload)
         let subs = vec![make_worst(), honest.clone()];
         assert_eq!(run_fast_checks(&subs, &p, &Default::default())[0], FastCheck::LateUpload);
-        // rank 4: upload completed, but late
+        // rank 5: upload completed, but late
         let mut s = make_worst();
         s.uploaded_at = p.deadline + 1.0;
         assert_eq!(
             run_fast_checks(&[s, honest.clone()], &p, &Default::default())[0],
             FastCheck::Late
         );
-        // rank 5: punctual, but out of sync
+        // rank 6: punctual, but out of sync
         let mut s = make_worst();
         s.uploaded_at = 50.0;
         assert_eq!(
             run_fast_checks(&[s, honest.clone()], &p, &Default::default())[0],
             FastCheck::OutOfSync
         );
-        // rank 6: synced, but malformed
+        // rank 7: synced, but malformed
         let mut s = make_worst();
         s.uploaded_at = 50.0;
         s.base_round = 5;
@@ -399,14 +413,14 @@ mod tests {
             run_fast_checks(&[s, honest.clone()], &p, &Default::default())[0],
             FastCheck::Malformed
         );
-        // rank 7: well-formed, but empty
+        // rank 8: well-formed, but empty
         let mut s = sub("worst", 0, 0.01, 5, 50.0);
         s.payload.scales.iter_mut().for_each(|x| *x = 0.0);
         assert_eq!(
             run_fast_checks(&[s, honest.clone()], &p, &Default::default())[0],
             FastCheck::Empty
         );
-        // rank 8: non-empty, but out of the norm family
+        // rank 9: non-empty, but out of the norm family
         let s = sub("worst", 0, 50.0, 5, 50.0);
         assert_eq!(
             run_fast_checks(&[s, honest.clone()], &p, &Default::default())[0],
@@ -429,6 +443,7 @@ mod tests {
         let all = [
             FastCheck::BadSignature,
             FastCheck::ReplayedPayload,
+            FastCheck::OrphanedUpload,
             FastCheck::Duplicate,
             FastCheck::LateUpload,
             FastCheck::Late,

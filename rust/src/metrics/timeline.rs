@@ -17,6 +17,12 @@
 //!   shard's aggregation-ready time) and the cross-shard barrier column
 //!   (`B`) where the outer step applied. A shard whose `g` run stretches
 //!   to the barrier is the round's critical shard.
+//!
+//! Fail-over is visible in both renderings: peer lanes draw a retry tick
+//! (`r`) at each backoff-delayed re-upload after a link flap, and shard
+//! lanes draw the host-crash detection marker (`X`), the takeover span
+//! (`t`, detection until the replacement host rebuilt the shard's state
+//! from the object store), and a `REASSIGNED from->to` annotation.
 
 use crate::coordinator::{PeerLane, RoundReport, ShardLane};
 
@@ -110,7 +116,8 @@ fn paint(row: &mut [char], t0: f64, t1: f64, a: f64, b: f64, c: char) {
 }
 
 /// Per-peer lane rendering of one round: `#` compute, `^` upload,
-/// `v` download, `*` overlapping segments, `|` the upload deadline.
+/// `v` download, `*` overlapping segments, `r` a retried upload (the
+/// backoff-delayed re-send after a link flap), `|` the upload deadline.
 /// The window spans the round start to the latest finite segment end
 /// (so overlap-mode tails that cross into the next round stay visible).
 /// Stalled uploads (infinite end) are drawn up to the deadline; lanes the
@@ -130,7 +137,7 @@ pub fn render_lanes_ascii(rep: &RoundReport, width: usize) -> String {
     }
     let mut out = String::new();
     out.push_str(&format!(
-        "round {} [{:.0}s..{:.0}s]  # compute  ^ upload  v download  * overlap  | deadline\n",
+        "round {} [{:.0}s..{:.0}s]  # compute  ^ upload  v download  * overlap  r retry  | deadline\n",
         rep.round, t0, t1
     ));
     for l in &rep.lanes {
@@ -144,6 +151,14 @@ pub fn render_lanes_ascii(rep: &RoundReport, width: usize) -> String {
         }
         if let Some((a, b)) = l.download {
             paint(&mut row, t0, t1, a, b, 'v');
+        }
+        // retried-upload ticks: drawn over the segments (the retry *is*
+        // part of the upload) but under the deadline marker
+        for &rt in &l.retry_at {
+            if t1 > t0 && rt.is_finite() && rt >= t0 {
+                let c = (((rt - t0) / (t1 - t0) * width as f64) as usize).min(width - 1);
+                row[c] = 'r';
+            }
         }
         // deadline marker (overwrites whatever is under it); when the
         // deadline is the latest time in the window it lands on the
@@ -169,9 +184,13 @@ pub fn render_lanes_ascii(rep: &RoundReport, width: usize) -> String {
 /// shard's gather window (from the nominal compute end until its last
 /// selected slice arrived and aggregation became ready), `B` the
 /// cross-shard barrier column where the outer step applied (identical
-/// for every shard — that's the barrier). Rows are annotated with the
-/// shard's chunk range and received bytes. Empty string when the round
-/// selected nothing (no shard aggregated).
+/// for every shard — that's the barrier). Fail-over rounds additionally
+/// draw `X` where the shard's dead host was detected and a `t` span
+/// while the takeover host rebuilt the shard's state from the object
+/// store, with a trailing `REASSIGNED from->to` annotation. Rows are
+/// annotated with the shard's chunk range, received bytes, and current
+/// host. Empty string when the round selected nothing (no shard
+/// aggregated).
 pub fn render_shard_lanes_ascii(rep: &RoundReport, width: usize) -> String {
     if rep.shard_lanes.is_empty() || width == 0 {
         return String::new();
@@ -184,9 +203,16 @@ pub fn render_shard_lanes_ascii(rep: &RoundReport, width: usize) -> String {
     if barrier.is_finite() {
         t1 = t1.max(barrier);
     }
+    for l in &rep.shard_lanes {
+        if let Some((_, _, recovered_at)) = l.takeover {
+            if recovered_at.is_finite() {
+                t1 = t1.max(recovered_at);
+            }
+        }
+    }
     let mut out = String::new();
     out.push_str(&format!(
-        "round {} [{:.0}s..{:.0}s]  g gather  B outer-step barrier\n",
+        "round {} [{:.0}s..{:.0}s]  g gather  B outer-step barrier  X crash detected  t takeover\n",
         rep.round, t0, t1
     ));
     for l in &rep.shard_lanes {
@@ -199,18 +225,37 @@ pub fn render_shard_lanes_ascii(rep: &RoundReport, width: usize) -> String {
             let b = l.ready_at.max(a + (t1 - t0) / width as f64);
             paint(&mut row, t0, t1, a, b, 'g');
         }
+        if let Some((_, t_detect, recovered_at)) = l.takeover {
+            // Takeover span: detection until the replacement host has the
+            // shard's state rebuilt (one-cell minimum so a zero-cost
+            // rebuild stays visible), with the crash-detection marker on
+            // its leading edge.
+            let b = recovered_at.max(t_detect + (t1 - t0) / width as f64);
+            paint(&mut row, t0, t1, t_detect, b, 't');
+            if t1 > t0 && t_detect.is_finite() && t_detect >= t0 {
+                let x = (((t_detect - t0) / (t1 - t0) * width as f64) as usize)
+                    .min(width - 1);
+                row[x] = 'X';
+            }
+        }
         if t1 > t0 && barrier.is_finite() && barrier >= t0 {
             let b = (((barrier - t0) / (t1 - t0) * width as f64) as usize).min(width - 1);
             row[b] = 'B';
         }
+        let fail = match l.takeover {
+            Some((from, ..)) => format!("  REASSIGNED {}->{}", from, l.host),
+            None => String::new(),
+        };
         out.push_str(&format!(
-            "shard {:<3} chunks [{:>4}, {:>4}) |{}| {:>9} B ready {:>8.1}s\n",
+            "shard {:<3} chunks [{:>4}, {:>4}) |{}| {:>9} B ready {:>8.1}s host {}{}\n",
             l.shard,
             l.chunk0,
             l.chunk1,
             row.iter().collect::<String>(),
             l.bytes,
             l.ready_at,
+            l.host,
+            fail,
         ));
     }
     out
@@ -293,6 +338,9 @@ mod tests {
             mean_loss: 0.0,
             bytes_up: 0,
             bytes_down: 0,
+            retried_uploads: 0,
+            orphaned_slices: 0,
+            recovered_shards: 0,
             outer_alpha: 1.0,
             rejections: Vec::new(),
             lanes: vec![
@@ -304,6 +352,7 @@ mod tests {
                     upload: Some((100.0, 104.0)),
                     download: Some((108.0, 110.0)),
                     late: false,
+                    retry_at: Vec::new(),
                 },
                 PeerLane {
                     uid: 1,
@@ -313,6 +362,7 @@ mod tests {
                     upload: Some((150.0, f64::INFINITY)),
                     download: Some((108.0, 110.0)),
                     late: true,
+                    retry_at: Vec::new(),
                 },
             ],
             shard_lanes: vec![
@@ -323,6 +373,8 @@ mod tests {
                     ready_at: 104.0,
                     applied_at: 107.0,
                     bytes: 1200,
+                    host: 0,
+                    takeover: None,
                 },
                 ShardLane {
                     shard: 1,
@@ -331,6 +383,8 @@ mod tests {
                     ready_at: 107.0,
                     applied_at: 107.0,
                     bytes: 900,
+                    host: 1,
+                    takeover: None,
                 },
             ],
         }
@@ -384,5 +438,61 @@ mod tests {
         rep.shard_lanes.clear();
         assert_eq!(render_shard_lanes_ascii(&rep, 60), "");
         assert_eq!(render_shard_lanes_ascii(&lane_report(), 0), "");
+    }
+
+    #[test]
+    fn retry_ticks_mark_flapped_uploads() {
+        let mut rep = lane_report();
+        rep.lanes[0].retry_at = vec![101.0, 103.0];
+        let s = render_lanes_ascii(&rep, 60);
+        assert!(s.lines().next().unwrap().contains("r retry"), "legend: {s}");
+        let body: Vec<&str> = s.lines().skip(1).collect();
+        assert!(body[0].matches('r').count() >= 1, "retry ticks drawn: {s}");
+        assert!(!body[1].contains('r'), "no phantom ticks on clean lanes");
+        // out-of-window / infinite retry times never panic or paint
+        rep.lanes[0].retry_at = vec![f64::INFINITY, -5.0];
+        render_lanes_ascii(&rep, 60);
+    }
+
+    /// The mass-failure edge: every shard's host but one dies, all chunk
+    /// ranges pile onto the lone survivor. Every dead lane shows the
+    /// crash marker, takeover span, and reassignment annotation; the
+    /// survivor's lane stays clean.
+    #[test]
+    fn shard_lanes_render_mass_failover() {
+        let mut rep = lane_report();
+        rep.t_comm_end = 400.0;
+        rep.recovered_shards = 3;
+        rep.shard_lanes = (0..4)
+            .map(|s| ShardLane {
+                shard: s,
+                chunk0: s,
+                chunk1: s + 1,
+                ready_at: 104.0,
+                applied_at: 380.0,
+                bytes: 100,
+                host: 3,
+                takeover: if s < 3 { Some((s, 180.0, 350.0)) } else { None },
+            })
+            .collect();
+        let s = render_shard_lanes_ascii(&rep, 60);
+        assert!(s.lines().next().unwrap().contains("X crash detected"));
+        let body: Vec<&str> = s.lines().skip(1).collect();
+        assert_eq!(body.len(), 4);
+        // inspect the painted bar between the pipes, not the annotations
+        // (the word "host" contains a 't')
+        let bar = |row: &str| row.split('|').nth(1).unwrap().to_string();
+        for (i, row) in body.iter().take(3).enumerate() {
+            assert!(bar(row).contains('X'), "crash marker in dead lane {i}: {s}");
+            assert!(bar(row).contains('t'), "takeover span in dead lane {i}: {s}");
+            assert!(
+                row.contains(&format!("REASSIGNED {i}->3")),
+                "annotation in dead lane {i}: {s}"
+            );
+        }
+        assert!(!bar(body[3]).contains('X') && !bar(body[3]).contains('t'));
+        assert!(!body[3].contains("REASSIGNED"));
+        assert!(body[3].contains("host 3"));
+        assert!(body.iter().all(|r| bar(r).contains('B')), "barrier survives fail-over: {s}");
     }
 }

@@ -76,8 +76,11 @@ pub struct ComputeModel {
 
 /// FNV-style mix of (seed, hotkey, tag) -> u64, matching the spirit of the
 /// round engine's per-peer round seeds: stable across scheduling order and
-/// population size.
-fn mix(seed: u64, hotkey: &str, tag: u64) -> u64 {
+/// population size. Shared with the fault-injection layer
+/// (`netsim::faults`), which draws host-crash/stall/link-flap decisions
+/// from the same pure hash so faults, like hardware tiers, never consume
+/// a shared RNG stream.
+pub(crate) fn mix(seed: u64, hotkey: &str, tag: u64) -> u64 {
     let mut h = 0xcbf29ce484222325u64 ^ seed.wrapping_mul(0x9E3779B97F4A7C15);
     for b in hotkey.bytes() {
         h ^= b as u64;
@@ -90,7 +93,7 @@ fn mix(seed: u64, hotkey: &str, tag: u64) -> u64 {
 }
 
 /// Map a mixed hash to a uniform f64 in [0, 1).
-fn unit(z: u64) -> f64 {
+pub(crate) fn unit(z: u64) -> f64 {
     (z >> 11) as f64 / (1u64 << 53) as f64
 }
 

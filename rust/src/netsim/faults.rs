@@ -1,0 +1,451 @@
+//! Deterministic fault injection for placed shard hosts.
+//!
+//! Coordinator-side failures — a shard host crashing, stalling, or
+//! sitting behind a flapping link — dominated real WAN runs (INTELLECT-1
+//! reports orchestrator faults outweighing peer churn), so the simulator
+//! injects them as first-class, *reproducible* events. Every decision is
+//! a pure function of `(run seed, host or hotkey, round, attempt)` via
+//! the same FNV-style hash the compute model uses: no shared RNG stream
+//! is consumed, so enabling faults perturbs only the simulated timeline
+//! and the recovery path, never the training math or the peers'
+//! behavioural randomness.
+//!
+//! Three fault kinds exist:
+//!
+//! - **Host crash** — the host dies at round start, permanently. Shards
+//!   assigned to it miss their barrier announcement; the round engine
+//!   detects this after a timeout and reassigns the chunk range to a
+//!   surviving host (see `coordinator::shard`). The last surviving host
+//!   can never crash (the *survivor rule*), so a run always terminates.
+//! - **Host stall** — the host pauses for a fixed interval; its barrier
+//!   announcement is delayed but arrives. If the delay stays inside the
+//!   detection timeout the barrier simply moves; no recovery fires.
+//! - **Link flap** — a peer's upload link drops mid-transfer. The peer
+//!   retries with bounded exponential backoff
+//!   ([`crate::peer::worker::upload_backoff_s`]); exhausting the budget
+//!   abandons the submission and orphans any slices that already landed
+//!   in the object store.
+//!
+//! Scenarios: [`FaultScenario::Probabilistic`] draws from the configured
+//! rates; [`FaultScenario::Scripted`] fires an exact list (tests);
+//! [`FaultScenario::CiCrashy`] is the canned CI sweep — it crashes host
+//! `round % n_hosts` and stalls host `(round + 1) % n_hosts` each round,
+//! and is a complete no-op for single-host deployments (one host has no
+//! failure domain), so default-config timing pins stay bit-exact when CI
+//! re-runs the whole suite under `COVENANT_FAULT_SCENARIO=ci-crashy`.
+//!
+//! With `FaultConfig::default()` (disabled, all rates zero) the layer is
+//! inert: zero hash draws, zero events, bit-identical rounds.
+
+use super::compute_model::{mix, unit};
+
+/// One scripted fault: `kind` hits `host` at the start of `round`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScriptedFault {
+    /// Round index (0-based) the fault fires in.
+    pub round: usize,
+    /// Host index the fault targets.
+    pub host: usize,
+    /// What happens to the host.
+    pub kind: FaultKind,
+}
+
+/// The kind of a scripted fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Permanent host crash at round start.
+    HostCrash,
+    /// Transient stall: the host's barrier announcement is delayed by
+    /// `FaultConfig::stall_s`.
+    HostStall,
+}
+
+/// How per-round faults are chosen.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultScenario {
+    /// Draw crashes/stalls/flaps from the configured probabilities via
+    /// the pure `(seed, host, round)` hash.
+    Probabilistic,
+    /// The canned CI scenario: each round `r >= 1` crashes host
+    /// `r % n_hosts` (survivor rule permitting) and stalls host
+    /// `(r + 1) % n_hosts`. No-op when the deployment has at most one
+    /// host.
+    CiCrashy,
+    /// Fire exactly these faults (unit/integration tests). An explicit
+    /// empty script pins a run as fault-free even when the
+    /// `COVENANT_FAULT_SCENARIO` env var is set.
+    Scripted(Vec<ScriptedFault>),
+}
+
+/// Fault-injection knobs (configured via `config::run::RunConfig`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Master switch. Off = inert layer: no draws, no events.
+    pub enabled: bool,
+    /// Per-round, per-host crash probability (probabilistic scenario).
+    pub p_host_crash: f64,
+    /// Per-round, per-host stall probability (probabilistic scenario).
+    pub p_host_stall: f64,
+    /// Stall duration in simulated seconds.
+    pub stall_s: f64,
+    /// Per-attempt probability that a peer's upload link flaps
+    /// mid-transfer.
+    pub p_link_flap: f64,
+    /// Upload retry budget after the first attempt; exceeding it
+    /// abandons the submission (`FastCheck::OrphanedUpload`).
+    pub max_upload_retries: u32,
+    /// Base backoff before the first retry; attempt `k` waits
+    /// `retry_backoff_s * 2^k` simulated seconds.
+    pub retry_backoff_s: f64,
+    /// How long past the round deadline the barrier waits for a missing
+    /// shard announcement before declaring the host dead and reassigning
+    /// its chunk range.
+    pub failover_timeout_s: f64,
+    /// How faults are chosen each round.
+    pub scenario: FaultScenario,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            p_host_crash: 0.0,
+            p_host_stall: 0.0,
+            stall_s: 300.0,
+            p_link_flap: 0.0,
+            max_upload_retries: 3,
+            retry_backoff_s: 5.0,
+            failover_timeout_s: 60.0,
+            scenario: FaultScenario::Probabilistic,
+        }
+    }
+}
+
+impl FaultConfig {
+    /// Resolve the ambient `COVENANT_FAULT_SCENARIO` env var against this
+    /// config. An *explicitly configured* fault setup (anything that
+    /// differs from the pristine default — including an empty scripted
+    /// scenario) always wins, so tests that pin exact fault behaviour
+    /// stay deterministic under CI's env-driven third pass. Only a
+    /// pristine default config picks up the env scenario; unknown names
+    /// are ignored.
+    pub fn with_env(self, env: Option<&str>) -> Self {
+        if self != FaultConfig::default() {
+            return self;
+        }
+        match env {
+            Some("ci-crashy") => Self {
+                enabled: true,
+                scenario: FaultScenario::CiCrashy,
+                ..self
+            },
+            _ => self,
+        }
+    }
+}
+
+/// The faults chosen for one round, before any recovery reaction.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// Hosts that crash at the start of this round (already-dead hosts
+    /// and the last survivor are never listed).
+    pub crashes: Vec<usize>,
+    /// `(host, delay_s)` stalls applied to this round's barrier
+    /// announcements.
+    pub stalls: Vec<(usize, f64)>,
+}
+
+impl FaultPlan {
+    /// The announce delay for `host` this round (0.0 when not stalled).
+    pub fn stall_of(&self, host: usize) -> f64 {
+        self.stalls
+            .iter()
+            .find(|&&(h, _)| h == host)
+            .map_or(0.0, |&(_, d)| d)
+    }
+}
+
+/// Stateless fault model seeded from the run seed.
+#[derive(Debug, Clone)]
+pub struct FaultModel {
+    seed: u64,
+    /// The fault knobs in effect (env-resolved).
+    pub cfg: FaultConfig,
+}
+
+/// Domain-separation tags so crash/stall/flap draws never collide.
+const TAG_CRASH: u64 = 0xC4A5;
+const TAG_STALL: u64 = 0x57A1;
+const TAG_FLAP: u64 = 0xF1A9;
+
+impl FaultModel {
+    /// A fault model for the given run seed and (env-resolved) knobs.
+    pub fn new(seed: u64, cfg: FaultConfig) -> Self {
+        Self { seed, cfg }
+    }
+
+    /// Whether upload-link flaps can fire at all (cheap gate so the
+    /// round engine's transfer loop stays draw-free when flaps are off).
+    pub fn flaps_enabled(&self) -> bool {
+        self.cfg.enabled && self.cfg.p_link_flap > 0.0
+    }
+
+    /// Pure per-host draw in [0, 1) for (host, round, tag).
+    fn host_unit(&self, host: usize, round: usize, tag: u64) -> f64 {
+        let t = tag
+            ^ (round as u64).wrapping_mul(0x9E3779B97F4A7C15)
+            ^ (host as u64).wrapping_mul(0xD1B54A32D192ED03);
+        unit(mix(self.seed, "host", t))
+    }
+
+    /// The fault plan for `round` given which hosts are still alive.
+    /// Crashes obey the survivor rule: the plan never kills the last
+    /// living host, so every run can finish.
+    pub fn round_plan(&self, round: usize, alive: &[bool]) -> FaultPlan {
+        let mut plan = FaultPlan::default();
+        if !self.cfg.enabled {
+            return plan;
+        }
+        let n_hosts = alive.len();
+        let mut living = alive.iter().filter(|&&a| a).count();
+        match &self.cfg.scenario {
+            FaultScenario::Probabilistic => {
+                for h in 0..n_hosts {
+                    if !alive[h] {
+                        continue;
+                    }
+                    if living > 1
+                        && self.cfg.p_host_crash > 0.0
+                        && self.host_unit(h, round, TAG_CRASH) < self.cfg.p_host_crash
+                    {
+                        plan.crashes.push(h);
+                        living -= 1;
+                        continue;
+                    }
+                    if self.cfg.p_host_stall > 0.0
+                        && self.host_unit(h, round, TAG_STALL) < self.cfg.p_host_stall
+                    {
+                        plan.stalls.push((h, self.cfg.stall_s));
+                    }
+                }
+            }
+            FaultScenario::CiCrashy => {
+                // A single-host deployment has no failure domain: the one
+                // host is always the last survivor, so the canned sweep
+                // is a complete no-op and default-config timing pins
+                // stay bit-exact under the env-driven CI pass.
+                if n_hosts <= 1 || round == 0 {
+                    return plan;
+                }
+                let c = round % n_hosts;
+                if alive[c] && living > 1 {
+                    plan.crashes.push(c);
+                    living -= 1;
+                }
+                let s = (round + 1) % n_hosts;
+                if alive[s] && !plan.crashes.contains(&s) {
+                    plan.stalls.push((s, self.cfg.stall_s));
+                }
+            }
+            FaultScenario::Scripted(script) => {
+                for f in script {
+                    if f.round != round || f.host >= n_hosts || !alive[f.host] {
+                        continue;
+                    }
+                    match f.kind {
+                        FaultKind::HostCrash => {
+                            if living > 1 && !plan.crashes.contains(&f.host) {
+                                plan.crashes.push(f.host);
+                                living -= 1;
+                            }
+                        }
+                        FaultKind::HostStall => {
+                            if !plan.crashes.contains(&f.host) {
+                                plan.stalls.push((f.host, self.cfg.stall_s));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        plan
+    }
+
+    /// Whether `hotkey`'s upload of slice `shard` flaps on `attempt`
+    /// (0-based) in `round`. Pure; consumes no RNG stream.
+    pub fn link_flaps(&self, hotkey: &str, shard: usize, round: usize, attempt: u32) -> bool {
+        if !self.flaps_enabled() {
+            return false;
+        }
+        let t = TAG_FLAP
+            ^ (round as u64).wrapping_mul(0x9E3779B97F4A7C15)
+            ^ (shard as u64).wrapping_mul(0xD1B54A32D192ED03)
+            ^ (attempt as u64).wrapping_mul(0xBF58476D1CE4E5B9);
+        unit(mix(self.seed, hotkey, t)) < self.cfg.p_link_flap
+    }
+
+    /// How far into a flapped transfer the cut lands, as a fraction of
+    /// the transfer's span in [0.25, 0.75). Pure per (hotkey, shard,
+    /// round, attempt).
+    pub fn flap_cut_frac(&self, hotkey: &str, shard: usize, round: usize, attempt: u32) -> f64 {
+        let t = TAG_FLAP
+            ^ 0x00FF_0000
+            ^ (round as u64).wrapping_mul(0x9E3779B97F4A7C15)
+            ^ (shard as u64).wrapping_mul(0xD1B54A32D192ED03)
+            ^ (attempt as u64).wrapping_mul(0xBF58476D1CE4E5B9);
+        0.25 + 0.5 * unit(mix(self.seed, hotkey, t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn crashy(n: usize) -> Vec<bool> {
+        vec![true; n]
+    }
+
+    #[test]
+    fn default_config_is_inert() {
+        let m = FaultModel::new(7, FaultConfig::default());
+        for r in 0..30 {
+            assert_eq!(m.round_plan(r, &crashy(4)), FaultPlan::default());
+        }
+        assert!(!m.flaps_enabled());
+        assert!(!m.link_flaps("hk-00001", 0, 3, 0));
+    }
+
+    #[test]
+    fn plans_are_deterministic_across_models() {
+        let cfg = FaultConfig {
+            enabled: true,
+            p_host_crash: 0.3,
+            p_host_stall: 0.3,
+            ..Default::default()
+        };
+        let a = FaultModel::new(42, cfg.clone());
+        let b = FaultModel::new(42, cfg);
+        for r in 0..50 {
+            assert_eq!(a.round_plan(r, &crashy(6)), b.round_plan(r, &crashy(6)));
+        }
+    }
+
+    #[test]
+    fn survivor_rule_never_kills_the_last_host() {
+        let cfg = FaultConfig {
+            enabled: true,
+            p_host_crash: 1.0,
+            ..Default::default()
+        };
+        let m = FaultModel::new(1, cfg);
+        let mut alive = crashy(5);
+        for r in 0..20 {
+            for h in m.round_plan(r, &alive).crashes {
+                alive[h] = false;
+            }
+            assert!(alive.iter().any(|&a| a), "round {r} killed every host");
+        }
+        assert_eq!(alive.iter().filter(|&&a| a).count(), 1);
+    }
+
+    #[test]
+    fn ci_crashy_is_a_no_op_on_a_single_host() {
+        let cfg = FaultConfig {
+            enabled: true,
+            scenario: FaultScenario::CiCrashy,
+            ..Default::default()
+        };
+        let m = FaultModel::new(9, cfg);
+        for r in 0..20 {
+            assert_eq!(m.round_plan(r, &crashy(1)), FaultPlan::default());
+        }
+    }
+
+    #[test]
+    fn ci_crashy_crashes_round_mod_hosts_and_stalls_the_next() {
+        let cfg = FaultConfig {
+            enabled: true,
+            scenario: FaultScenario::CiCrashy,
+            ..Default::default()
+        };
+        let m = FaultModel::new(9, cfg.clone());
+        assert_eq!(m.round_plan(0, &crashy(3)), FaultPlan::default());
+        let p1 = m.round_plan(1, &crashy(3));
+        assert_eq!(p1.crashes, vec![1]);
+        assert_eq!(p1.stalls, vec![(2, cfg.stall_s)]);
+        // With hosts 1 and 2 dead, host 0 is the last survivor: no more
+        // crashes, and only host 0 can still stall.
+        let alive = vec![true, false, false];
+        for r in 2..10 {
+            let p = m.round_plan(r, &alive);
+            assert!(p.crashes.is_empty(), "round {r} broke the survivor rule");
+            for (h, _) in p.stalls {
+                assert_eq!(h, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn scripted_faults_fire_exactly_once() {
+        let cfg = FaultConfig {
+            enabled: true,
+            scenario: FaultScenario::Scripted(vec![
+                ScriptedFault { round: 2, host: 1, kind: FaultKind::HostCrash },
+                ScriptedFault { round: 3, host: 0, kind: FaultKind::HostStall },
+            ]),
+            ..Default::default()
+        };
+        let m = FaultModel::new(0, cfg.clone());
+        assert_eq!(m.round_plan(1, &crashy(2)), FaultPlan::default());
+        assert_eq!(m.round_plan(2, &crashy(2)).crashes, vec![1]);
+        let alive = vec![true, false];
+        assert_eq!(
+            m.round_plan(3, &alive).stalls,
+            vec![(0, cfg.stall_s)]
+        );
+        assert_eq!(m.round_plan(4, &alive), FaultPlan::default());
+    }
+
+    #[test]
+    fn env_scenario_applies_only_to_pristine_defaults() {
+        let pristine = FaultConfig::default().with_env(Some("ci-crashy"));
+        assert!(pristine.enabled);
+        assert_eq!(pristine.scenario, FaultScenario::CiCrashy);
+        // An explicit (even empty) script is an opt-out.
+        let pinned = FaultConfig {
+            scenario: FaultScenario::Scripted(vec![]),
+            ..Default::default()
+        };
+        let resolved = pinned.clone().with_env(Some("ci-crashy"));
+        assert_eq!(resolved, pinned);
+        // Unknown names and absence leave the config alone.
+        assert_eq!(FaultConfig::default().with_env(Some("nope")), FaultConfig::default());
+        assert_eq!(FaultConfig::default().with_env(None), FaultConfig::default());
+    }
+
+    #[test]
+    fn flap_draws_are_pure_and_rate_respecting() {
+        let cfg = FaultConfig {
+            enabled: true,
+            p_link_flap: 0.25,
+            ..Default::default()
+        };
+        let m = FaultModel::new(11, cfg);
+        assert!(m.flaps_enabled());
+        let n = 4000;
+        let mut flaps = 0;
+        for i in 0..n {
+            let hk = format!("hk-{i:05}");
+            let f = m.link_flaps(&hk, 0, 3, 0);
+            assert_eq!(f, m.link_flaps(&hk, 0, 3, 0));
+            if f {
+                flaps += 1;
+            }
+        }
+        let rate = flaps as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.03, "flap rate = {rate}");
+        let fr = m.flap_cut_frac("hk-00001", 0, 3, 0);
+        assert!((0.25..0.75).contains(&fr));
+        assert_eq!(fr.to_bits(), m.flap_cut_frac("hk-00001", 0, 3, 0).to_bits());
+    }
+}

@@ -53,6 +53,26 @@ impl Link {
     pub fn release_at(&mut self, t: f64) {
         self.busy_until = self.busy_until.max(t);
     }
+
+    /// The link fails at time `t`, aborting whatever is in flight.
+    ///
+    /// `release_at` models a link that lives forever (busy time only ever
+    /// grows); a *flap* is the opposite: if a transfer is still in flight
+    /// at `t` (`busy_until > t`) the tail of that transfer is cancelled,
+    /// the link is free again from `t`, and the caller re-queues the
+    /// whole transfer (partial uploads are worthless — the object store
+    /// only sees complete objects). Returns `true` if a transfer was
+    /// actually cut. Bytes already charged stay charged: the wasted
+    /// bandwidth of the aborted attempt is real traffic and shows up in
+    /// utilization accounting.
+    pub fn cut_at(&mut self, t: f64) -> bool {
+        if self.busy_until > t {
+            self.busy_until = t;
+            true
+        } else {
+            false
+        }
+    }
 }
 
 /// A peer's full connection: uplink + downlink, sharing the virtual clock.
@@ -179,5 +199,48 @@ mod tests {
         let mut l = Link::new(1e6, 0.0);
         l.release_at(100.0);
         assert_eq!(l.bytes_total, 0);
+    }
+
+    #[test]
+    fn cut_mid_transfer_frees_the_link() {
+        let mut l = Link::new(8e6, 0.0); // 1 MB/s
+        let done = l.transfer(0.0, 1_000_000); // in flight until 1.0
+        assert!((done - 1.0).abs() < 1e-9);
+        assert!(l.cut_at(0.4), "an in-flight transfer must report as cut");
+        assert!((l.busy_until() - 0.4).abs() < 1e-9);
+        // The aborted attempt's bytes stay charged (wasted bandwidth).
+        assert_eq!(l.bytes_total, 1_000_000);
+    }
+
+    #[test]
+    fn cut_on_an_idle_link_is_a_no_op() {
+        let mut l = Link::new(8e6, 0.0);
+        l.transfer(0.0, 1_000_000); // done at 1.0
+        assert!(!l.cut_at(1.0), "boundary: nothing in flight at busy_until");
+        assert!(!l.cut_at(5.0));
+        assert!((l.busy_until() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn requeue_after_cut_completes_later() {
+        // Flap at 0.4, retry after a 0.6s backoff: the full transfer is
+        // re-sent and completes at 2.0, not at the original 1.0.
+        let mut l = Link::new(8e6, 0.0);
+        l.transfer(0.0, 1_000_000);
+        assert!(l.cut_at(0.4));
+        let done = l.transfer(0.4 + 0.6, 1_000_000);
+        assert!((done - 2.0).abs() < 1e-9, "done={done}");
+        assert_eq!(l.bytes_total, 2_000_000);
+    }
+
+    #[test]
+    fn release_at_stays_monotone_after_a_cut() {
+        let mut l = Link::new(8e6, 0.0);
+        l.transfer(0.0, 1_000_000);
+        assert!(l.cut_at(0.25));
+        l.release_at(0.1); // earlier than the cut: no-op
+        assert!((l.busy_until() - 0.25).abs() < 1e-9);
+        l.release_at(2.0);
+        assert!((l.busy_until() - 2.0).abs() < 1e-9);
     }
 }

@@ -25,16 +25,26 @@
 //! Every timing model here is deterministic, so the sharded rounds stay
 //! bit-reproducible: disjoint chunk ranges + fixed accumulation order
 //! on the coordinator side, pure-hash durations on this side.
+//!
+//! Coordinator-side *faults* ride the same spine: [`faults::FaultModel`]
+//! draws host crashes, host stalls, and upload-link flaps from a pure
+//! hash of `(run seed, host or hotkey, round)`, and the round engine
+//! turns them into [`Event::HostCrash`] / [`Event::ShardReassigned`] /
+//! [`Event::UploadRetry`] trace events plus the recovery behaviour in
+//! `coordinator::shard`. With faults off the layer draws nothing and
+//! emits nothing, so degenerate rounds stay bit-identical.
 
 #![deny(missing_docs)]
 
 pub mod clock;
 pub mod compute_model;
+pub mod faults;
 pub mod link;
 pub mod sched;
 pub mod testkit;
 
 pub use clock::VirtualClock;
 pub use compute_model::{ComputeModel, ComputeTier, HeterogeneityConfig};
+pub use faults::{FaultConfig, FaultKind, FaultModel, FaultPlan, FaultScenario, ScriptedFault};
 pub use link::{Link, LinkPair};
 pub use sched::{Event, Scheduler};

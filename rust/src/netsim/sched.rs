@@ -53,6 +53,26 @@ pub enum Event {
     DeadlineHit,
     /// The chain produced a block (emissions tick).
     ChainBlock { height: u64 },
+    /// A shard coordinator's barrier announcement landed on the other
+    /// shard hosts (emitted only when the announcement actually costs
+    /// time: a stalled host or a nonzero-cost inter-host link — the
+    /// degenerate zero-cost single-host config never sees it).
+    ShardAnnounce { shard: usize, host: usize },
+    /// A simulated shard host died at round start (permanent; injected
+    /// by `netsim::faults`). Trace-only: recovery reacts at the
+    /// detection timeout, not here.
+    HostCrash { host: usize },
+    /// A dead host's shard was reassigned: host `from` missed its
+    /// barrier announcement past the detection timeout and host `to`
+    /// took over the chunk range, rebuilding state from the object
+    /// store.
+    ShardReassigned { shard: usize, from: usize, to: usize },
+    /// A peer's upload of slice `shard` flapped mid-transfer on
+    /// `attempt` and will be retried after deterministic exponential
+    /// backoff (the final, budget-exhausting flap emits no retry —
+    /// the submission is abandoned and fast-checked as
+    /// `OrphanedUpload`).
+    UploadRetry { peer: usize, shard: usize, attempt: u32 },
 }
 
 #[derive(Debug)]

@@ -60,6 +60,18 @@ pub fn seal_payload_slices(
         .collect())
 }
 
+/// The peer-side upload retry policy: how long a peer waits before
+/// re-sending a slice whose transfer was cut by a link flap. Attempt `k`
+/// (0-based) waits `base_s * 2^k` — bounded deterministic exponential
+/// backoff, a pure function with no RNG so retried rounds stay
+/// bit-reproducible. The round engine charges the wait against the
+/// peer's own timeline; the retry budget
+/// (`FaultConfig::max_upload_retries`) caps total attempts, after which
+/// the submission is abandoned (`FastCheck::OrphanedUpload`).
+pub fn upload_backoff_s(base_s: f64, attempt: u32) -> f64 {
+    base_s * (1u64 << attempt.min(62)) as f64
+}
+
 /// Peer behaviour. Adversarial variants exercise Gauntlet's defenses:
 /// copiers are caught by assigned-vs-unassigned LossScore, whales by
 /// median-norm checks, stale peers by the sync check, free-riders by the
@@ -507,6 +519,15 @@ mod tests {
                 "{b:?} must not enter the churn roll distribution"
             );
         }
+    }
+
+    #[test]
+    fn upload_backoff_doubles_and_never_overflows() {
+        assert_eq!(upload_backoff_s(5.0, 0), 5.0);
+        assert_eq!(upload_backoff_s(5.0, 1), 10.0);
+        assert_eq!(upload_backoff_s(5.0, 3), 40.0);
+        // absurd attempt counts clamp instead of overflowing the shift
+        assert!(upload_backoff_s(1.0, 200).is_finite());
     }
 
     #[test]

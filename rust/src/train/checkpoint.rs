@@ -1,6 +1,22 @@
 //! Checkpoint I/O: flat parameter vectors as little-endian f32 files with
 //! a small header (the paper open-sources intermediate + final checkpoints;
 //! ours serve the anneal/SFT pipeline and the examples).
+//!
+//! Two formats exist:
+//!
+//! - `CVNTCKPT` — a bare parameter vector ([`save`]/[`load`], with
+//!   in-memory twins [`to_bytes`]/[`from_bytes`] used by the shard
+//!   coordinators to checkpoint outer-momentum slices into the object
+//!   store).
+//! - `CVNTSTAT` — a combined training state: the parameter vector plus
+//!   the per-shard outer-momentum slices ([`save_state`]/[`load_state`]),
+//!   what a resuming or fail-over coordinator needs to continue
+//!   bit-identically.
+//!
+//! Both loaders are hostile-input safe: every length field is
+//! bounds-checked (`checked_mul`, explicit remaining-byte checks), so a
+//! truncated, corrupt, or adversarial file is always a clean `Err`, never
+//! a panic or an absurd allocation. `tests` pin this.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -8,6 +24,58 @@ use std::path::Path;
 use anyhow::{bail, ensure, Context, Result};
 
 const MAGIC: &[u8; 8] = b"CVNTCKPT";
+const STATE_MAGIC: &[u8; 8] = b"CVNTSTAT";
+
+/// Serialize a flat parameter vector to checkpoint bytes.
+pub fn to_bytes(params: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + params.len() * 4);
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(params.len() as u64).to_le_bytes());
+    for x in params {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Take `n` bytes off the front of `rest`, or a clean `Err`.
+fn take<'a>(rest: &mut &'a [u8], n: usize, what: &str) -> Result<&'a [u8]> {
+    ensure!(rest.len() >= n, "checkpoint truncated reading {what}: {} < {n} bytes", rest.len());
+    let (head, tail) = rest.split_at(n);
+    *rest = tail;
+    Ok(head)
+}
+
+/// Read a u64 length field and the f32 vector it describes.
+fn take_f32_vec(rest: &mut &[u8], what: &str) -> Result<Vec<f32>> {
+    let lenb = take(rest, 8, what)?;
+    let n = u64::from_le_bytes(lenb.try_into().unwrap());
+    // A hostile length field must not overflow the byte-count math (a
+    // debug-build panic) or trigger an absurd allocation: check against
+    // what is actually present before allocating anything.
+    let need = n
+        .checked_mul(4)
+        .filter(|&b| b <= rest.len() as u64)
+        .ok_or_else(|| anyhow::anyhow!("checkpoint {what} length {n} exceeds file size"))?
+        as usize;
+    let bytes = take(rest, need, what)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+/// Parse checkpoint bytes back into a flat parameter vector
+/// (bit-identical round trip with [`to_bytes`]).
+pub fn from_bytes(bytes: &[u8]) -> Result<Vec<f32>> {
+    let mut rest = bytes;
+    let magic = take(&mut rest, 8, "magic")?;
+    if magic != MAGIC {
+        bail!("not a covenant checkpoint (bad magic)");
+    }
+    let params = take_f32_vec(&mut rest, "params")?;
+    ensure!(rest.is_empty(), "checkpoint has {} trailing bytes", rest.len());
+    Ok(params)
+}
 
 /// Save a flat parameter vector.
 pub fn save(path: impl AsRef<Path>, params: &[f32]) -> Result<()> {
@@ -17,11 +85,7 @@ pub fn save(path: impl AsRef<Path>, params: &[f32]) -> Result<()> {
     }
     let mut f = std::fs::File::create(path)
         .with_context(|| format!("creating {}", path.display()))?;
-    f.write_all(MAGIC)?;
-    f.write_all(&(params.len() as u64).to_le_bytes())?;
-    // bulk write
-    let bytes: Vec<u8> = params.iter().flat_map(|x| x.to_le_bytes()).collect();
-    f.write_all(&bytes)?;
+    f.write_all(&to_bytes(params))?;
     Ok(())
 }
 
@@ -30,32 +94,86 @@ pub fn load(path: impl AsRef<Path>) -> Result<Vec<f32>> {
     let path = path.as_ref();
     let mut f = std::fs::File::open(path)
         .with_context(|| format!("opening checkpoint {}", path.display()))?;
-    let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("{} is not a covenant checkpoint", path.display());
-    }
-    let mut lenb = [0u8; 8];
-    f.read_exact(&mut lenb)?;
-    let n = u64::from_le_bytes(lenb) as usize;
     let mut bytes = Vec::new();
     f.read_to_end(&mut bytes)?;
-    ensure!(bytes.len() == n * 4, "checkpoint truncated: {} != {}", bytes.len(), n * 4);
-    Ok(bytes
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect())
+    from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Serialize combined training state: the parameter vector plus the
+/// per-shard outer-momentum slices (in shard order).
+pub fn state_to_bytes(params: &[f32], momentum: &[&[f32]]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(STATE_MAGIC);
+    out.extend_from_slice(&(params.len() as u64).to_le_bytes());
+    for x in params {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out.extend_from_slice(&(momentum.len() as u64).to_le_bytes());
+    for m in momentum {
+        out.extend_from_slice(&(m.len() as u64).to_le_bytes());
+        for x in *m {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+    out
+}
+
+/// Parse combined training state (bit-identical round trip with
+/// [`state_to_bytes`]). Returns `(params, momentum slices)`.
+pub fn state_from_bytes(bytes: &[u8]) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+    let mut rest = bytes;
+    let magic = take(&mut rest, 8, "magic")?;
+    if magic != STATE_MAGIC {
+        bail!("not a covenant state checkpoint (bad magic)");
+    }
+    let params = take_f32_vec(&mut rest, "params")?;
+    let nsb = take(&mut rest, 8, "slice count")?;
+    let n_slices = u64::from_le_bytes(nsb.try_into().unwrap());
+    // Each slice needs at least its 8-byte length header.
+    ensure!(
+        n_slices.checked_mul(8).is_some_and(|b| b <= rest.len() as u64),
+        "state checkpoint slice count {n_slices} exceeds file size"
+    );
+    let mut momentum = Vec::with_capacity(n_slices as usize);
+    for s in 0..n_slices {
+        momentum.push(take_f32_vec(&mut rest, &format!("momentum slice {s}"))?);
+    }
+    ensure!(rest.is_empty(), "state checkpoint has {} trailing bytes", rest.len());
+    Ok((params, momentum))
+}
+
+/// Save combined training state (params + per-shard momentum slices).
+pub fn save_state(path: impl AsRef<Path>, params: &[f32], momentum: &[&[f32]]) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, state_to_bytes(params, momentum))
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(())
+}
+
+/// Load combined training state. Returns `(params, momentum slices)`.
+pub fn load_state(path: impl AsRef<Path>) -> Result<(Vec<f32>, Vec<Vec<f32>>)> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("opening state checkpoint {}", path.display()))?;
+    state_from_bytes(&bytes).with_context(|| format!("parsing {}", path.display()))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn params(n: usize, seed: f32) -> Vec<f32> {
+        (0..n).map(|i| (i as f32 * 0.5 - 3.0) * (1.0 + seed)).collect()
+    }
+
     #[test]
     fn roundtrip() {
         let dir = std::env::temp_dir().join("covenant-ckpt-test");
         let path = dir.join("p.ckpt");
-        let params: Vec<f32> = (0..1000).map(|i| i as f32 * 0.5 - 3.0).collect();
+        let params = params(1000, 0.0);
         save(&path, &params).unwrap();
         assert_eq!(load(&path).unwrap(), params);
         std::fs::remove_dir_all(dir).ok();
@@ -69,5 +187,83 @@ mod tests {
         std::fs::write(&path, b"not a checkpoint").unwrap();
         assert!(load(&path).is_err());
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn bytes_roundtrip_is_bit_identical() {
+        // Includes awkward values: -0.0, subnormals, inf, NaN payloads
+        // must all survive byte-for-byte.
+        let mut p = params(257, 1.0);
+        p.extend_from_slice(&[-0.0, f32::MIN_POSITIVE / 2.0, f32::INFINITY, f32::NAN]);
+        let back = from_bytes(&to_bytes(&p)).unwrap();
+        assert_eq!(back.len(), p.len());
+        for (a, b) in p.iter().zip(&back) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(from_bytes(&to_bytes(&[])).unwrap(), Vec::<f32>::new());
+    }
+
+    #[test]
+    fn state_roundtrip_is_bit_identical() {
+        let dir = std::env::temp_dir().join("covenant-ckpt-test3");
+        let path = dir.join("s.ckpt");
+        let p = params(300, 2.0);
+        let m0 = params(100, 3.0);
+        let m1 = params(200, 4.0);
+        save_state(&path, &p, &[&m0, &m1]).unwrap();
+        let (p2, m2) = load_state(&path).unwrap();
+        assert_eq!(p2, p);
+        assert_eq!(m2, vec![m0, m1]);
+        // no momentum slices is a valid state (momentum off)
+        let (p3, m3) = state_from_bytes(&state_to_bytes(&p, &[])).unwrap();
+        assert_eq!(p3, p);
+        assert!(m3.is_empty());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn truncated_and_corrupt_files_err_cleanly() {
+        // Every prefix of a valid checkpoint must be a clean Err (except
+        // the full file); same for the combined state format.
+        let p = params(10, 0.0);
+        let ck = to_bytes(&p);
+        for cut in 0..ck.len() {
+            assert!(from_bytes(&ck[..cut]).is_err(), "prefix of {cut} bytes accepted");
+        }
+        let st = state_to_bytes(&p, &[&p[..4], &p[4..]]);
+        for cut in 0..st.len() {
+            assert!(state_from_bytes(&st[..cut]).is_err(), "state prefix of {cut} bytes accepted");
+        }
+        // trailing junk is also rejected
+        let mut long = ck.clone();
+        long.push(0);
+        assert!(from_bytes(&long).is_err());
+        // wrong magic for the right shape
+        let mut swapped = st.clone();
+        swapped[..8].copy_from_slice(MAGIC);
+        assert!(state_from_bytes(&swapped).is_err());
+    }
+
+    #[test]
+    fn hostile_length_fields_never_panic() {
+        // A length field of u64::MAX must not overflow the `n * 4`
+        // byte-count math or attempt a huge allocation.
+        let mut evil = Vec::new();
+        evil.extend_from_slice(MAGIC);
+        evil.extend_from_slice(&u64::MAX.to_le_bytes());
+        evil.extend_from_slice(&[0u8; 64]);
+        assert!(from_bytes(&evil).is_err());
+        // Same for the state format's slice count and slice lengths.
+        let mut evil = Vec::new();
+        evil.extend_from_slice(STATE_MAGIC);
+        evil.extend_from_slice(&0u64.to_le_bytes()); // empty params
+        evil.extend_from_slice(&u64::MAX.to_le_bytes()); // absurd slice count
+        assert!(state_from_bytes(&evil).is_err());
+        let mut evil = Vec::new();
+        evil.extend_from_slice(STATE_MAGIC);
+        evil.extend_from_slice(&0u64.to_le_bytes());
+        evil.extend_from_slice(&1u64.to_le_bytes());
+        evil.extend_from_slice(&(u64::MAX / 2).to_le_bytes()); // absurd slice len
+        assert!(state_from_bytes(&evil).is_err());
     }
 }

@@ -6,6 +6,7 @@
 
 use anyhow::Result;
 
+use super::checkpoint;
 use crate::runtime::{ops, Engine};
 
 /// One replica's training state.
@@ -86,5 +87,18 @@ impl<'e> Trainer<'e> {
     /// Evaluate mean loss on a batch without touching state.
     pub fn eval(&self, tokens: &[i32], mask: &[f32]) -> Result<f32> {
         ops::eval_loss(self.eng, &self.params, tokens, mask)
+    }
+
+    /// Save this replica's parameters as a checkpoint file.
+    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        checkpoint::save(path, &self.params)
+    }
+
+    /// Replica resumed from a checkpoint file (fresh inner optimizer —
+    /// SparseLoCo peers do not checkpoint inner moments; the bit-exact
+    /// resume surface is the *outer* state, see
+    /// [`checkpoint::save_state`]).
+    pub fn from_checkpoint(eng: &'e Engine, path: impl AsRef<std::path::Path>) -> Result<Self> {
+        Ok(Self::from_params(eng, checkpoint::load(path)?))
     }
 }
