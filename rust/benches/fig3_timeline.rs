@@ -148,6 +148,7 @@ fn paper_accounting(smoke: bool) {
                 rejections: Vec::new(),
                 lanes: Vec::new(),
                 shard_lanes: Vec::new(),
+                lane_population: Default::default(),
             });
             t += s.compute_s + s.paper_tcomm_s;
         }

@@ -38,6 +38,7 @@ use covenant::netsim::{FaultConfig, FaultKind, FaultScenario, ScriptedFault};
 use covenant::runtime::kernels::KernelMode;
 use covenant::runtime::{kernels, ops, Engine};
 use covenant::sparseloco::{codec, envelope, quant, topk, Payload};
+use covenant::telemetry::{Telemetry, TelemetryConfig};
 use covenant::train::{OuterAlphaSchedule, Schedule, Segment};
 use covenant::util::cli::Args;
 use covenant::util::rng::Rng;
@@ -580,6 +581,82 @@ fn main() -> Result<()> {
         }));
     }
 
+    // ---- telemetry spine: record-path overhead + snapshot throughput -------
+    // The observation-only contract has a perf side: a disabled handle
+    // must cost a branch (the round engine calls it on every peer, every
+    // event), and the enabled path must stay cheap enough to leave on.
+    // The correctness pins (exact counts, empty disabled snapshot) run
+    // in smoke mode too; the wall-clock threshold only off-smoke.
+    println!("\n== telemetry spine (registry record path; disabled must be ~free) ==");
+    let tele_off = Telemetry::default();
+    let tele_on =
+        Telemetry::new(TelemetryConfig { enabled: true, ..TelemetryConfig::default() });
+    assert!(!tele_off.enabled() && tele_on.enabled());
+    // exact-count determinism: three adds are exactly three
+    let t_check = Telemetry::new(TelemetryConfig { enabled: true, ..TelemetryConfig::default() });
+    for _ in 0..3 {
+        t_check.count("bench.check", 1);
+    }
+    assert_eq!(t_check.snapshot().counter("bench.check"), 3);
+    assert_eq!(
+        tele_off.snapshot().to_json(),
+        covenant::telemetry::RegistrySnapshot::default().to_json(),
+        "disabled handle must snapshot empty"
+    );
+    const TELE_OPS: usize = 1 << 14;
+    let per_op_ns = |mean_s: f64| mean_s / TELE_OPS as f64 * 1e9;
+    let s_count_off = bench(wu, it(20), || {
+        for _ in 0..TELE_OPS {
+            std::hint::black_box(&tele_off).count("bench.counter", 1);
+        }
+    });
+    let s_count_on = bench(wu, it(20), || {
+        for _ in 0..TELE_OPS {
+            std::hint::black_box(&tele_on).count("bench.counter", 1);
+        }
+    });
+    let s_observe_on = bench(wu, it(20), || {
+        for i in 0..TELE_OPS {
+            std::hint::black_box(&tele_on).observe("bench.histogram", i as u64);
+        }
+    });
+    let s_span_on = bench(wu, it(20), || {
+        for _ in 0..TELE_OPS {
+            std::hint::black_box(std::hint::black_box(&tele_on).span("bench.span"));
+        }
+    });
+    println!(
+        "  count    disabled {:>7.1} ns/op, enabled {:>7.1} ns/op",
+        per_op_ns(s_count_off.mean),
+        per_op_ns(s_count_on.mean)
+    );
+    println!(
+        "  observe  enabled  {:>7.1} ns/op; span enter+drop {:>7.1} ns/op",
+        per_op_ns(s_observe_on.mean),
+        per_op_ns(s_span_on.mean)
+    );
+    // snapshot throughput over a realistically-sized registry
+    let snap_metrics = 64usize;
+    for k in 0..snap_metrics {
+        tele_on.count(&format!("bench.fleet.counter.{k}"), k as u64);
+        tele_on.observe(&format!("bench.fleet.histogram.{k}"), 1 << (k % 30));
+    }
+    let s_snapshot = bench(wu, it(20), || {
+        std::hint::black_box(tele_on.snapshot().to_json());
+    });
+    println!(
+        "  snapshot+json over ~{} metrics: {:.3} ms",
+        2 * snap_metrics + 2,
+        s_snapshot.mean * 1e3
+    );
+    if !smoke {
+        assert!(
+            per_op_ns(s_count_off.mean) < 50.0,
+            "disabled telemetry path must stay branch-cheap ({:.1} ns/op)",
+            per_op_ns(s_count_off.mean)
+        );
+    }
+
     if smoke {
         println!("\nsmoke mode: skipping BENCH_hotpath.json write");
         println!("hotpath smoke OK");
@@ -668,6 +745,15 @@ fn main() -> Result<()> {
             "train_step_simd_vs_blocked": s_step.mean / s_step_simd.mean,
             "eval_loss_simd_s": s_eval_simd.mean,
             "eval_loss_simd_vs_blocked": s_eval.mean / s_eval_simd.mean,
+        },
+        "telemetry": {
+            "note": "Registry record-path overhead (per op, averaged over a 16k-op loop) and snapshot-to-JSON latency. The disabled path is the cost every instrumented call site pays in a default-off run.",
+            "count_disabled_ns_per_op": per_op_ns(s_count_off.mean),
+            "count_enabled_ns_per_op": per_op_ns(s_count_on.mean),
+            "observe_enabled_ns_per_op": per_op_ns(s_observe_on.mean),
+            "span_enabled_ns_per_op": per_op_ns(s_span_on.mean),
+            "snapshot_json_ms": s_snapshot.mean * 1e3,
+            "snapshot_metrics": 2 * snap_metrics + 2,
         },
     });
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hotpath.json");

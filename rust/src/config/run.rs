@@ -12,6 +12,7 @@ use anyhow::{Context, Result};
 
 use crate::netsim::{FaultConfig, FaultScenario, HeterogeneityConfig};
 use crate::runtime::kernels::{self, KernelMode};
+use crate::telemetry::TelemetryConfig;
 use crate::util::json::Json;
 
 /// Top-level run configuration.
@@ -80,6 +81,15 @@ pub struct RunConfig {
     pub network: NetworkConfig,
     /// Validator (Gauntlet) knobs.
     pub gauntlet: GauntletConfig,
+    /// Telemetry spine (pure observation): typed metric registry,
+    /// Perfetto trace export, JSONL run log, deterministic lane
+    /// sampling. Disabled by default — default-off runs are
+    /// byte-identical to pre-telemetry behavior, and enabling changes
+    /// only what is *recorded* (`tests/telemetry_determinism.rs`). The
+    /// `COVENANT_TELEMETRY` env var can switch a *pristine* default on
+    /// (an explicitly configured block always wins — see
+    /// `TelemetryConfig::with_env`).
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for RunConfig {
@@ -101,6 +111,7 @@ impl Default for RunConfig {
             adversary: AdversaryConfig::default(),
             network: NetworkConfig::default(),
             gauntlet: GauntletConfig::default(),
+            telemetry: TelemetryConfig::default(),
         }
     }
 }
@@ -443,6 +454,20 @@ impl RunConfig {
                 c.gauntlet.parallel_eval = v.as_bool()?;
             }
         }
+        if let Some(t) = j.opt("telemetry") {
+            if let Some(v) = t.opt("enabled") {
+                c.telemetry.enabled = v.as_bool()?;
+            }
+            if let Some(v) = t.opt("sample_lanes") {
+                c.telemetry.sample_lanes = v.as_usize()?;
+            }
+            if let Some(v) = t.opt("trace") {
+                c.telemetry.trace = v.as_bool()?;
+            }
+            if let Some(v) = t.opt("run_log") {
+                c.telemetry.run_log = v.as_bool()?;
+            }
+        }
         Ok(c)
     }
 }
@@ -591,6 +616,31 @@ mod tests {
         let c = RunConfig::default();
         assert!(!c.network.overlap);
         assert!(!c.network.heterogeneity.enabled);
+    }
+
+    #[test]
+    fn telemetry_defaults_off_and_degenerate() {
+        // Observation-only contract: the default config records nothing
+        // and keeps runs byte-identical to pre-telemetry behavior
+        // (pinned end-to-end in tests/telemetry_determinism.rs).
+        let c = RunConfig::default();
+        assert_eq!(c.telemetry, TelemetryConfig::default());
+        assert!(!c.telemetry.enabled);
+        assert_eq!(c.telemetry.sample_lanes, 0, "0 = keep every lane");
+    }
+
+    #[test]
+    fn json_telemetry_overrides() {
+        let j = Json::parse(
+            r#"{"telemetry": {"enabled": true, "sample_lanes": 64,
+                              "trace": false, "run_log": true}}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert!(c.telemetry.enabled);
+        assert_eq!(c.telemetry.sample_lanes, 64);
+        assert!(!c.telemetry.trace);
+        assert!(c.telemetry.run_log);
     }
 
     #[test]

@@ -120,6 +120,7 @@ use crate::runtime::{ops, Engine, Manifest};
 use crate::sparseloco::envelope::{self, SigningKey};
 use crate::sparseloco::Payload;
 use crate::storage::ObjectStore;
+use crate::telemetry::{self, Telemetry};
 use crate::train::{checkpoint, OuterAlphaSchedule, Schedule};
 use crate::util::rng::Rng;
 
@@ -276,6 +277,13 @@ pub struct RoundReport {
     /// applied. Empty when nothing was selected. One lane with
     /// `n_shards = 1`.
     pub shard_lanes: Vec<ShardLane>,
+    /// Exact whole-population lane counters, computed over the *full*
+    /// lane set before any telemetry sampling truncates `lanes` — so
+    /// accounting stays exact even when only a sampled lane subset is
+    /// kept (`telemetry::sample`). Always populated regardless of the
+    /// telemetry switch (a pure function of the full lanes, a few
+    /// integer adds), so reports compare identically across configs.
+    pub lane_population: telemetry::LanePopulation,
 }
 
 impl RoundReport {
@@ -358,6 +366,10 @@ struct RoundCtx<'a> {
     prev_sealed: &'a [Vec<Vec<u8>>],
     /// Shard index targeted by `ShardSpammer` peers (already clamped).
     spam_shard: usize,
+    /// Telemetry handle (disabled = single branch per record call).
+    /// Only commutative counter/histogram adds happen inside the
+    /// fan-out, so recording cannot perturb determinism.
+    tele: &'a Telemetry,
 }
 
 /// What one peer's round work produces (merged serially afterwards).
@@ -458,6 +470,13 @@ fn peer_round(
         }
     };
     sub.wire_bytes = slices.iter().map(Vec::len).sum();
+    crate::peer::worker::record_peer_round(
+        ctx.tele,
+        behavior,
+        loss.is_some(),
+        sub.wire_bytes as u64,
+        slices.len() as u64,
+    );
     Ok(Some(PeerOutcome {
         sub,
         slices,
@@ -502,6 +521,14 @@ pub struct Network<'e> {
     /// barrier. `run.n_shards = 1` (the default) is the degenerate
     /// single-coordinator case, bit-identical to the pre-sharding path.
     pub shard_set: ShardSet,
+    /// Telemetry spine handle (pure observation), with the
+    /// `COVENANT_TELEMETRY` env override already resolved. Disabled by
+    /// default: every record call is a single branch and the run is
+    /// byte-identical to pre-telemetry behavior
+    /// (`tests/telemetry_determinism.rs`). Clones of this handle are
+    /// threaded into the validator, the shard set, and the peer
+    /// fan-out.
+    pub telemetry: Telemetry,
     peers: Vec<PeerSlot>,
     /// The global flat parameter vector (every shard's slices stitched).
     pub global_params: Vec<f32>,
@@ -573,6 +600,18 @@ impl<'e> Network<'e> {
         // run (`parallel: false`) keeps Gauntlet scoring serial too.
         // Either way the verdicts are bit-identical.
         validator.cfg.parallel_eval &= p.parallel;
+        // Telemetry: explicit config wins; only the pristine default
+        // picks up the ambient COVENANT_TELEMETRY env var (CI's
+        // telemetry byte-identity pass). One handle, cloned into every
+        // layer that records.
+        let tele = Telemetry::new(
+            p.run
+                .telemetry
+                .clone()
+                .with_env(std::env::var("COVENANT_TELEMETRY").ok().as_deref()),
+        );
+        validator.tele = tele.clone();
+        shard_set.set_telemetry(tele.clone());
         let compute_model =
             ComputeModel::new(p.run.seed, p.run.network.heterogeneity.clone());
 
@@ -587,6 +626,7 @@ impl<'e> Network<'e> {
             compute_model,
             faults,
             shard_set,
+            telemetry: tele,
             peers: Vec::new(),
             global_params,
             round: 0,
@@ -735,6 +775,10 @@ impl<'e> Network<'e> {
         let t_start = self.clock.now();
         let round = self.round;
         self.event_log.clear();
+        // Pure observation: the handle is cloned once per round and only
+        // ever *adds* to counters/histograms — nothing below reads it.
+        let tele = self.telemetry.clone();
+        let _round_span = tele.span("round");
 
         // ---- 1. churn ----------------------------------------------------
         let active_hotkeys: Vec<String> =
@@ -750,6 +794,8 @@ impl<'e> Network<'e> {
         for _ in 0..ev.joins {
             self.add_peer(None)?;
         }
+        tele.count("churn.leaves", ev.leaves.len() as u64);
+        tele.count("churn.joins", ev.joins as u64);
 
         // ---- 2+3. compute + compress (peer fan-out; timing-free) ---------
         let inner_step0 = round * h;
@@ -799,6 +845,7 @@ impl<'e> Network<'e> {
             sign_payloads: sign,
             prev_sealed: &self.prev_sealed,
             spam_shard,
+            tele: &tele,
         };
         let mut outcomes: Vec<Option<PeerOutcome>> = if self.p.parallel {
             self.peers
@@ -1009,6 +1056,7 @@ impl<'e> Network<'e> {
                 Event::DeadlineHit => {}
                 _ => {}
             }
+            tele.count_event(&evt);
             self.event_log.push((t, evt));
         }
 
@@ -1379,6 +1427,7 @@ impl<'e> Network<'e> {
                 Event::ChainBlock { .. } => self.chain.sync_to_time(t),
                 _ => {}
             }
+            tele.count_event(&evt);
             self.event_log.push((t, evt));
         }
         self.prev_payloads = verdict
@@ -1450,6 +1499,15 @@ impl<'e> Network<'e> {
                     .unwrap_or(false)
             })
             .count();
+        // Exact whole-population lane counters are taken over the FULL
+        // lane set; only afterwards may telemetry sampling truncate
+        // `lanes` to the deterministic bottom-k cohort (O(sample) report
+        // cost at swarm scale). With sampling off, lanes are untouched.
+        let lane_population = telemetry::lane_population(&lanes);
+        let lanes = match tele.sample_lanes() {
+            Some(k) => telemetry::sample_lanes(run_seed, lanes, k),
+            None => lanes,
+        };
         let report = RoundReport {
             round,
             t_start,
@@ -1473,7 +1531,23 @@ impl<'e> Network<'e> {
             rejections,
             lanes,
             shard_lanes,
+            lane_population,
         };
+        // Round-level accounting into the registry + one run-log record
+        // and one trace replay (each lane gated by its config flag).
+        tele.count("round.rounds", 1);
+        tele.count("round.submitted", report.submitted as u64);
+        tele.count("round.selected", report.contributing as u64);
+        tele.count("round.late", report.late_submissions as u64);
+        tele.count("round.rejected_pre_decode", report.rejected_pre_decode as u64);
+        tele.count("round.retried_uploads", report.retried_uploads);
+        tele.count("round.orphaned_slices", report.orphaned_slices);
+        tele.count("round.recovered_shards", report.recovered_shards as u64);
+        tele.count("round.bytes_up", report.bytes_up);
+        tele.count("round.bytes_down", report.bytes_down);
+        tele.observe_virtual_s("round.wall_clock", report.wall_clock());
+        tele.observe_virtual_s("round.comm", report.t_comm());
+        tele.record_round(&report, &self.event_log);
         self.reports.push(report.clone());
         self.round += 1;
         Ok(report)

@@ -75,6 +75,7 @@ use anyhow::{ensure, Context, Result};
 use super::aggregator::{aggregate_weighted_range_into, median_norm_weights, PAR_MIN_UNITS};
 use crate::netsim::sched::Event;
 use crate::sparseloco::Payload;
+use crate::telemetry::Telemetry;
 
 /// One shard's geometry: a contiguous chunk range `[chunk0, chunk1)` of
 /// the flat parameter vector.
@@ -353,6 +354,9 @@ pub struct ShardSet {
     momentum: Vec<Vec<f32>>,
     /// Outer-momentum coefficient (`0.0` = plain-delta outer step).
     mu: f32,
+    /// Telemetry handle (disabled by default; pure observation — never
+    /// read back into aggregation decisions).
+    tele: Telemetry,
 }
 
 impl ShardSet {
@@ -380,7 +384,16 @@ impl ShardSet {
             link: HostLink::default(),
             momentum,
             mu: 0.0,
+            tele: Telemetry::default(),
         })
+    }
+
+    /// Attach a telemetry handle (cheap `Arc` clone). The shard set only
+    /// *writes* counters/histograms through it — aggregation math and
+    /// fail-over decisions never read it, so attaching a live handle
+    /// cannot change any round outcome.
+    pub fn set_telemetry(&mut self, tele: Telemetry) {
+        self.tele = tele;
     }
 
     /// Place the shards on `n_hosts` simulated hosts (round-robin;
@@ -653,6 +666,19 @@ impl ShardSet {
         for l in &mut lanes {
             l.applied_at = applied_at;
         }
+        if self.tele.enabled() {
+            self.tele.count("shard.rounds", 1);
+            for l in &lanes {
+                self.tele.observe("shard.gather.bytes", l.bytes);
+            }
+            let max_ready = lanes.iter().map(|l| l.ready_at).fold(f64::NEG_INFINITY, f64::max);
+            self.tele.observe_virtual_s("shard.barrier.lag", applied_at - max_ready);
+            self.tele.count("shard.takeovers", recoveries.len() as u64);
+            for r in &recoveries {
+                self.tele.observe("shard.takeover.fetch_bytes", r.fetch_bytes);
+                self.tele.observe_virtual_s("shard.takeover.latency", r.recovered_at - faults.t_detect);
+            }
+        }
         Ok(ShardRound { delta, lanes, applied_at, recoveries, events })
     }
 
@@ -663,9 +689,11 @@ impl ShardSet {
     /// accounting, which is how the per-shard record answers "who was
     /// selected and who was rejected".
     pub fn record_rejected(&mut self, slice_bytes: &[usize]) {
+        self.tele.count("shard.rejected.submissions", 1);
         for (sh, &b) in self.shards.iter_mut().zip(slice_bytes) {
             sh.rejected_slices += 1;
             sh.rejected_bytes += b as u64;
+            self.tele.observe("shard.rejected.bytes", b as u64);
         }
     }
 

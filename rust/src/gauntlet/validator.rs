@@ -22,6 +22,7 @@ use crate::gauntlet::loss_score::{loss_score, mean_loss, EvalBatch, LossScoreRes
 use crate::gauntlet::openskill::RatingBook;
 use crate::gauntlet::Submission;
 use crate::runtime::Engine;
+use crate::telemetry::Telemetry;
 use crate::util::rng::Rng;
 
 /// Provides evaluation data for LossScore (assigned per peer + shared
@@ -58,6 +59,9 @@ pub struct RoundVerdict {
 /// Persistent validator state.
 pub struct Validator {
     pub cfg: GauntletConfig,
+    /// Telemetry handle (disabled by default; the network attaches its
+    /// own at construction). Pure observation — scoring never reads it.
+    pub tele: Telemetry,
     pub book: RatingBook,
     rng: Rng,
     /// Payload hashes from the previous round (duplicate detection).
@@ -76,6 +80,7 @@ impl Validator {
     pub fn new(cfg: GauntletConfig, seed: u64) -> Self {
         Self {
             cfg,
+            tele: Telemetry::default(),
             book: RatingBook::new(),
             rng: Rng::new(seed),
             prev_hashes: Default::default(),
@@ -127,6 +132,8 @@ impl Validator {
         max_contributors: usize,
         data: &mut dyn EvalDataProvider,
     ) -> Result<RoundVerdict> {
+        let _span = self.tele.span("gauntlet.score_round");
+        self.tele.count("gauntlet.submissions", subs.len() as u64);
         let man = eng.manifest();
         let fast = run_fast_checks_pre(
             subs,
@@ -171,6 +178,7 @@ impl Validator {
             }
         }
 
+        self.tele.count("gauntlet.loss_evals", eval_ids.len() as u64);
         let unassigned = data.unassigned_batches(self.cfg.eval_batches);
         let base_unassigned = mean_loss(eng, base_params, &unassigned)?;
         // Serial prologue: the data provider is `&mut`, so assigned
@@ -295,6 +303,14 @@ impl Validator {
             .collect();
         for &i in &selected {
             per_peer[i].selected = true;
+        }
+        self.tele.count("gauntlet.selected", selected.len() as u64);
+        if self.tele.enabled() {
+            // Per-verdict tally — the format! is behind the enabled gate
+            // so disabled runs never allocate here.
+            for v in &per_peer {
+                self.tele.count(&format!("gauntlet.verdict.{:?}", v.fast), 1);
+            }
         }
         // ---- chain weights ------------------------------------------------
         let total: f64 = selected.iter().map(|&i| per_peer[i].score).sum();

@@ -51,5 +51,6 @@ pub mod peer;
 pub mod runtime;
 pub mod sparseloco;
 pub mod storage;
+pub mod telemetry;
 pub mod train;
 pub mod util;

@@ -13,6 +13,9 @@ USAGE:
 COMMANDS:
     smoke      Run every model op of a config end-to-end (--artifacts DIR|PRESET)
     config     Show a model preset and its parameter count (--name NAME)
+    run        Drive full network rounds and emit run artifacts
+               (--rounds N --peers N --seed S --n-shards N --artifacts DIR
+                --telemetry [--sample-lanes K] --out-dir DIR)
     help       Show this message
 "
     );
@@ -24,8 +27,77 @@ fn main() -> Result<()> {
     match args.command.as_deref() {
         Some("smoke") => smoke(&args),
         Some("config") => config_show(&args),
+        Some("run") => run_rounds(&args),
         _ => usage(),
     }
+}
+
+/// Drive `--rounds` full network rounds (churn, Gauntlet, sharded
+/// aggregation, outer steps) and write the run artifacts: the per-round
+/// CSV + loss sparkline always, plus — with `--telemetry` — the metric
+/// registry snapshot, the structured JSONL run log, and a Chrome/Perfetto
+/// `trace.json` replay of the round event spine.
+fn run_rounds(args: &Args) -> Result<()> {
+    use covenant::coordinator::network::{Network, NetworkParams};
+    use covenant::runtime::Engine;
+    use covenant::{metrics, telemetry};
+
+    let mut run = covenant::config::run::RunConfig::default();
+    run.artifacts = args.get_or("artifacts", "artifacts/tiny");
+    run.rounds = args.get_usize("rounds", 4)?;
+    run.seed = args.get_u64("seed", run.seed)?;
+    run.n_shards = args.get_usize("n-shards", run.n_shards)?;
+    let peers = args.get_usize("peers", run.target_active)?.max(1);
+    run.target_active = peers;
+    run.max_contributors = run.max_contributors.min(peers);
+    if args.has_flag("telemetry") {
+        run.telemetry.enabled = true;
+    }
+    run.telemetry.sample_lanes = args.get_usize("sample-lanes", run.telemetry.sample_lanes)?;
+    let out_dir = std::path::PathBuf::from(args.get_or("out-dir", "target/covenant-run"));
+
+    let eng = Engine::new(&run.artifacts)?;
+    let h = eng.manifest().config.inner_steps;
+    let rounds = run.rounds;
+    let mut p = NetworkParams::quick(run, h, rounds);
+    p.initial_peers = peers;
+    let mut net = Network::new(&eng, p)?;
+    for _ in 0..rounds {
+        let r = net.run_round()?;
+        println!(
+            "round {:>4}  active {:>3}  submitted {:>3}  selected {:>3}  late {:>2}  loss {:>8.4}  wall {:>7.1}s  util {:>5.1}%",
+            r.round,
+            r.active,
+            r.submitted,
+            r.contributing,
+            r.late_submissions,
+            r.mean_loss,
+            r.wall_clock(),
+            100.0 * r.utilization(),
+        );
+    }
+
+    let csv_path = out_dir.join("rounds.csv");
+    metrics::write_csv(
+        &csv_path,
+        telemetry::runlog::csv_header(),
+        &telemetry::runlog::csv_rows(&net.reports),
+    )?;
+    println!("wrote {}", csv_path.display());
+    let losses: Vec<f64> = net.reports.iter().map(|r| r.mean_loss).collect();
+    println!("loss  {}", metrics::sparkline(&losses));
+
+    for p in net.telemetry.write_artifacts(&out_dir)? {
+        println!("wrote {}", p.display());
+    }
+    if net.telemetry.enabled() {
+        println!("{}", net.telemetry.snapshot().render());
+        println!(
+            "open {} at https://ui.perfetto.dev to browse the round timeline",
+            out_dir.join("trace.json").display()
+        );
+    }
+    Ok(())
 }
 
 fn config_show(args: &Args) -> Result<()> {

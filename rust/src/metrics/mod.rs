@@ -23,17 +23,28 @@ pub fn write_csv(path: impl AsRef<Path>, header: &str, rows: &[Vec<String>]) -> 
 }
 
 /// Simple inline ASCII sparkline for loss curves in reports.
+///
+/// The scale is fit over the *finite* values only; NaN/±inf entries
+/// render as `?` instead of poisoning the range (a `-inf` low used to
+/// push the bar index to `usize::MAX` and panic). The bar index is
+/// clamped, so even adversarial inputs cannot go out of bounds.
 pub fn sparkline(values: &[f64]) -> String {
     if values.is_empty() {
         return String::new();
     }
     const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
-    let lo = values.iter().copied().fold(f64::INFINITY, f64::min);
-    let hi = values.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+    let finite = values.iter().copied().filter(|v| v.is_finite());
+    let lo = finite.clone().fold(f64::INFINITY, f64::min);
+    let hi = finite.fold(f64::NEG_INFINITY, f64::max);
     let span = (hi - lo).max(1e-12);
     values
         .iter()
-        .map(|v| BARS[(((v - lo) / span) * 7.0).round() as usize])
+        .map(|v| {
+            if !v.is_finite() {
+                return '?';
+            }
+            BARS[(((v - lo) / span) * 7.0).round().clamp(0.0, 7.0) as usize]
+        })
         .collect()
 }
 
@@ -50,12 +61,58 @@ mod tests {
     }
 
     #[test]
+    fn sparkline_non_finite_inputs_never_panic() {
+        // -inf used to drag the low end to -inf and index out of bounds
+        let s = sparkline(&[f64::NEG_INFINITY, 1.0, 2.0, f64::INFINITY, f64::NAN]);
+        assert_eq!(s.chars().count(), 5);
+        let chars: Vec<char> = s.chars().collect();
+        assert_eq!(chars[0], '?');
+        assert_eq!(chars[3], '?');
+        assert_eq!(chars[4], '?');
+        // the finite values still scale over their own range
+        assert_eq!(chars[1], '▁');
+        assert_eq!(chars[2], '█');
+    }
+
+    #[test]
+    fn sparkline_all_non_finite_and_single_value() {
+        assert_eq!(sparkline(&[f64::NAN, f64::INFINITY]), "??");
+        assert_eq!(sparkline(&[]), "");
+        // a single finite value sits on the bottom bar, no divide blowup
+        assert_eq!(sparkline(&[3.5]), "▁");
+    }
+
+    #[test]
     fn csv_write() {
         let dir = std::env::temp_dir().join("covenant-test-csv");
         let path = dir.join("x.csv");
         write_csv(&path, "a,b", &[vec!["1".into(), "2".into()]]).unwrap();
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text, "a,b\n1,2\n");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn csv_write_creates_nested_parent_dirs() {
+        let dir = std::env::temp_dir().join("covenant-test-csv-nested");
+        std::fs::remove_dir_all(&dir).ok();
+        let path = dir.join("a/b/c.csv");
+        write_csv(&path, "h", &[vec!["v".into()]]).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "h\nv\n");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn csv_write_unwritable_path_is_clean_err() {
+        // a path whose "parent directory" is an existing regular file:
+        // create_dir_all (or the create) must fail as an Err, not panic
+        let dir = std::env::temp_dir().join("covenant-test-csv-unwritable");
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::create_dir_all(&dir).unwrap();
+        let blocker = dir.join("blocker");
+        std::fs::write(&blocker, "not a directory").unwrap();
+        let err = write_csv(blocker.join("x.csv"), "h", &[]).unwrap_err();
+        assert!(!err.to_string().is_empty());
         std::fs::remove_dir_all(dir).ok();
     }
 }

@@ -75,6 +75,29 @@ pub enum Event {
     UploadRetry { peer: usize, shard: usize, attempt: u32 },
 }
 
+impl Event {
+    /// Stable snake_case name of the event variant, used as the metric
+    /// key suffix by the telemetry spine (`sched.event.<kind>`). Pure
+    /// and allocation-free, so counting events stays cheap and the
+    /// resulting metric names are identical across runs.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::ComputeDone { .. } => "compute_done",
+            Event::UploadDone { .. } => "upload_done",
+            Event::ShardUploadDone { .. } => "shard_upload_done",
+            Event::ShardAggregated { .. } => "shard_aggregated",
+            Event::DownloadDone { .. } => "download_done",
+            Event::AdversarySpam { .. } => "adversary_spam",
+            Event::DeadlineHit => "deadline_hit",
+            Event::ChainBlock { .. } => "chain_block",
+            Event::ShardAnnounce { .. } => "shard_announce",
+            Event::HostCrash { .. } => "host_crash",
+            Event::ShardReassigned { .. } => "shard_reassigned",
+            Event::UploadRetry { .. } => "upload_retry",
+        }
+    }
+}
+
 #[derive(Debug)]
 struct Entry {
     t: f64,
@@ -198,6 +221,34 @@ mod tests {
             })
             .collect();
         assert_eq!(peers, vec![7, 3, 9], "FIFO among simultaneous events");
+    }
+
+    #[test]
+    fn event_kinds_are_stable_and_distinct() {
+        let events = [
+            Event::ComputeDone { peer: 0 },
+            Event::UploadDone { peer: 0 },
+            Event::ShardUploadDone { peer: 0, shard: 0 },
+            Event::ShardAggregated { shard: 0 },
+            Event::DownloadDone { peer: 0 },
+            Event::AdversarySpam { peer: 0, shard: 0 },
+            Event::DeadlineHit,
+            Event::ChainBlock { height: 0 },
+            Event::ShardAnnounce { shard: 0, host: 0 },
+            Event::HostCrash { host: 0 },
+            Event::ShardReassigned { shard: 0, from: 0, to: 1 },
+            Event::UploadRetry { peer: 0, shard: 0, attempt: 1 },
+        ];
+        let kinds: std::collections::BTreeSet<&str> =
+            events.iter().map(|e| e.kind()).collect();
+        assert_eq!(kinds.len(), events.len(), "every variant has a distinct kind");
+        assert_eq!(Event::DeadlineHit.kind(), "deadline_hit");
+        assert_eq!(Event::HostCrash { host: 3 }.kind(), "host_crash");
+        // payload fields don't leak into the kind
+        assert_eq!(
+            Event::ComputeDone { peer: 1 }.kind(),
+            Event::ComputeDone { peer: 9 }.kind()
+        );
     }
 
     #[test]

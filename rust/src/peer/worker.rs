@@ -72,6 +72,32 @@ pub fn upload_backoff_s(base_s: f64, attempt: u32) -> f64 {
     base_s * (1u64 << attempt.min(62)) as f64
 }
 
+/// Tally one peer's completed round into the telemetry registry. Called
+/// by the round engine from inside the (possibly rayon-parallel) peer
+/// fan-out, so it must use only commutative counter adds — order across
+/// peers must not matter. Free on the disabled path (single branch).
+pub fn record_peer_round(
+    tele: &crate::telemetry::Telemetry,
+    behavior: Behavior,
+    computed: bool,
+    wire_bytes: u64,
+    n_slices: u64,
+) {
+    if !tele.enabled() {
+        return;
+    }
+    tele.count("peer.rounds", 1);
+    tele.count(&format!("peer.behavior.{behavior:?}"), 1);
+    if computed {
+        tele.count("peer.compute.calls", 1);
+    }
+    if behavior.is_adversarial() {
+        tele.count("peer.adversarial", 1);
+    }
+    tele.count("peer.encode.slices", n_slices);
+    tele.observe("peer.wire.bytes", wire_bytes);
+}
+
 /// Peer behaviour. Adversarial variants exercise Gauntlet's defenses:
 /// copiers are caught by assigned-vs-unassigned LossScore, whales by
 /// median-norm checks, stale peers by the sync check, free-riders by the

@@ -1,0 +1,404 @@
+//! Deterministic telemetry spine: structured counters/histograms,
+//! Perfetto trace export, JSONL run logs, and sampled metrics lanes.
+//!
+//! The whole subsystem is **pure observation**. The hard contract,
+//! pinned by `tests/telemetry_determinism.rs` and a dedicated CI pass:
+//!
+//! * With [`TelemetryConfig`] default-off (the default), every model
+//!   byte, verdict, and event trace is byte-identical to a run without
+//!   this module compiled in at all — the disabled handle is a `None`
+//!   and every record call is a single branch.
+//! * Enabling telemetry changes only what is *recorded*, never what is
+//!   computed: no RNG draws, no timing contributions, no control flow.
+//! * Snapshots and exports are **bit-deterministic** across serial and
+//!   parallel execution and across reruns. This falls out of two rules:
+//!   the registry performs only commutative atomic adds (order under
+//!   rayon cannot matter), and nothing derived from wall-clock time is
+//!   ever recorded — histograms hold counts, byte sizes, and *virtual*
+//!   time in integer microseconds ([`registry::log2_bucket`] is pure
+//!   integer math, no float bucket boundaries to accumulate error).
+//!
+//! Layout:
+//!
+//! * [`registry`] — typed metric registry: counters, gauges, fixed
+//!   65-bucket log2 histograms; `RegistrySnapshot` with stable JSON.
+//! * [`span`] — scoped spans around hot paths (round engine phases,
+//!   gauntlet scoring, shard aggregation). A span is a pair of named
+//!   counters (`span.<name>.calls` / `.completed`); wall-clock timing is
+//!   deliberately excluded from the deterministic registry (the engine's
+//!   `exec_stats` remains the wall-clock profile lane).
+//! * [`trace`] — Chrome/Perfetto `trace.json` exporter replaying the
+//!   netsim event spine into per-peer and per-host tracks in virtual
+//!   time; open the file at `ui.perfetto.dev`.
+//! * [`runlog`] — JSONL structured run log, one record per round, plus
+//!   the CSV bridge for `metrics::write_csv`.
+//! * [`sample`] — deterministic lane sampling keyed by a pure hash of
+//!   (run seed, hotkey), with exact [`LanePopulation`] counters kept
+//!   alongside so `RoundReport` lane cost is O(sample), not O(peers).
+
+pub mod registry;
+pub mod runlog;
+pub mod sample;
+pub mod span;
+pub mod trace;
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::network::RoundReport;
+use crate::netsim::sched::Event;
+
+pub use registry::{MetricRegistry, MetricValue, RegistrySnapshot};
+pub use sample::{lane_hash, lane_population, sample_lanes, LanePopulation};
+pub use span::SpanGuard;
+pub use trace::TraceBuilder;
+
+/// Telemetry configuration (a `RunConfig` block; also settable from JSON
+/// under `"telemetry"`). Default-off: the degenerate config records
+/// nothing and costs one branch per call site.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TelemetryConfig {
+    /// Master switch. Off (the default) keeps runs byte-identical to
+    /// pre-telemetry behavior; the handle holds no state at all.
+    pub enabled: bool,
+    /// Keep only this many peer lanes per `RoundReport`, chosen by the
+    /// deterministic bottom-k of `lane_hash(run seed, hotkey)`. `0`
+    /// (the default) keeps every lane. Exact population counters are
+    /// recorded in `RoundReport::lane_population` either way, so the
+    /// sampled report loses rendering detail, never accounting.
+    pub sample_lanes: usize,
+    /// Build the Perfetto `trace.json` event stream.
+    pub trace: bool,
+    /// Build the JSONL structured run log (one record per round).
+    pub run_log: bool,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        Self { enabled: false, sample_lanes: 0, trace: true, run_log: true }
+    }
+}
+
+impl TelemetryConfig {
+    /// Resolve the ambient `COVENANT_TELEMETRY` env var: an explicitly
+    /// configured (non-pristine-default) config always wins; only the
+    /// pristine default picks up the env switch (`"1"`/`"true"`/`"on"`).
+    /// Same precedence rule as `FaultConfig::with_env`.
+    pub fn with_env(self, env: Option<&str>) -> Self {
+        if self != TelemetryConfig::default() {
+            return self;
+        }
+        match env {
+            Some("1") | Some("true") | Some("on") => Self { enabled: true, ..self },
+            _ => self,
+        }
+    }
+}
+
+/// Shared state behind an enabled handle.
+struct Inner {
+    cfg: TelemetryConfig,
+    registry: MetricRegistry,
+    trace: Mutex<TraceBuilder>,
+    run_log: Mutex<Vec<serde_json::Value>>,
+}
+
+/// The telemetry handle threaded through the stack (network, validator,
+/// shard set, peer fan-out). Cheap to clone (an `Option<Arc>`); the
+/// disabled handle — [`Telemetry::default`] — is a `None`, so every
+/// record call on the hot path is a single branch. `Send + Sync`:
+/// counter/histogram updates are commutative atomic adds, safe (and
+/// bit-deterministic) from inside the rayon fan-out.
+#[derive(Clone, Default)]
+pub struct Telemetry {
+    inner: Option<Arc<Inner>>,
+}
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Telemetry").field("enabled", &self.enabled()).finish()
+    }
+}
+
+/// Convert a *virtual-time* duration (seconds) to integer microseconds
+/// for histogram observation. Non-finite or negative durations yield
+/// `None` (never recorded): stalled uploads carry `+inf` sentinels that
+/// must not poison a histogram.
+pub(crate) fn virtual_us(dt_s: f64) -> Option<u64> {
+    if dt_s.is_finite() && dt_s >= 0.0 {
+        Some((dt_s * 1e6).round() as u64)
+    } else {
+        None
+    }
+}
+
+impl Telemetry {
+    /// Build a handle from a resolved config. A disabled config returns
+    /// the stateless disabled handle.
+    pub fn new(cfg: TelemetryConfig) -> Self {
+        if !cfg.enabled {
+            return Self::default();
+        }
+        Self {
+            inner: Some(Arc::new(Inner {
+                cfg,
+                registry: MetricRegistry::new(),
+                trace: Mutex::new(TraceBuilder::new()),
+                run_log: Mutex::new(Vec::new()),
+            })),
+        }
+    }
+
+    /// The stateless disabled handle (same as `Telemetry::default()`).
+    pub fn disabled() -> Self {
+        Self::default()
+    }
+
+    /// Whether this handle records anything at all.
+    pub fn enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// The resolved config, when enabled.
+    pub fn config(&self) -> Option<&TelemetryConfig> {
+        self.inner.as_deref().map(|i| &i.cfg)
+    }
+
+    /// `Some(k)` when lane sampling is active (enabled and
+    /// `sample_lanes > 0`), else `None` (keep full lanes).
+    pub fn sample_lanes(&self) -> Option<usize> {
+        match self.inner.as_deref() {
+            Some(i) if i.cfg.sample_lanes > 0 => Some(i.cfg.sample_lanes),
+            _ => None,
+        }
+    }
+
+    /// Add `n` to the named counter (commutative atomic add — safe from
+    /// the rayon fan-out without affecting determinism).
+    pub fn count(&self, name: &str, n: u64) {
+        if let Some(i) = self.inner.as_deref() {
+            i.registry.count(name, n);
+        }
+    }
+
+    /// Set the named gauge. Serial call sites only: last-writer-wins is
+    /// order-dependent, so gauges must never be set from the fan-out.
+    pub fn gauge_set(&self, name: &str, v: i64) {
+        if let Some(i) = self.inner.as_deref() {
+            i.registry.gauge_set(name, v);
+        }
+    }
+
+    /// Observe a value into the named log2 histogram (commutative:
+    /// bucket/count/sum adds only).
+    pub fn observe(&self, name: &str, v: u64) {
+        if let Some(i) = self.inner.as_deref() {
+            i.registry.observe(name, v);
+        }
+    }
+
+    /// Observe a *virtual-time* duration (seconds -> integer
+    /// microseconds); non-finite or negative durations are skipped.
+    pub fn observe_virtual_s(&self, name: &str, dt_s: f64) {
+        if let Some(i) = self.inner.as_deref() {
+            if let Some(us) = virtual_us(dt_s) {
+                i.registry.observe(name, us);
+            }
+        }
+    }
+
+    /// Count one popped scheduler event under `sched.event.<kind>`.
+    pub fn count_event(&self, ev: &Event) {
+        if let Some(i) = self.inner.as_deref() {
+            i.registry.count(&format!("sched.event.{}", ev.kind()), 1);
+        }
+    }
+
+    /// Open a scoped span: counts `span.<name>.calls` now and
+    /// `span.<name>.completed` when the guard drops.
+    pub fn span(&self, name: &'static str) -> SpanGuard {
+        SpanGuard::enter(self.clone(), name)
+    }
+
+    /// Deterministic snapshot of every metric (sorted by name).
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        match self.inner.as_deref() {
+            Some(i) => i.registry.snapshot(),
+            None => RegistrySnapshot::default(),
+        }
+    }
+
+    /// Record a completed round: one run-log record and one trace
+    /// replay of the round's event spine (each gated by its config
+    /// flag). Serial call site (end of `Network::run_round`).
+    pub fn record_round(&self, rep: &RoundReport, events: &[(f64, Event)]) {
+        let Some(i) = self.inner.as_deref() else { return };
+        if i.cfg.run_log {
+            i.run_log.lock().unwrap().push(runlog::round_record(rep));
+        }
+        if i.cfg.trace {
+            i.trace.lock().unwrap().add_round(rep, events);
+        }
+    }
+
+    /// The Perfetto trace as a JSON string (`None` when disabled or the
+    /// trace lane is off). Bit-deterministic: sorted object keys,
+    /// integer virtual-time microseconds.
+    pub fn trace_json(&self) -> Option<String> {
+        let i = self.inner.as_deref()?;
+        if !i.cfg.trace {
+            return None;
+        }
+        Some(i.trace.lock().unwrap().to_json())
+    }
+
+    /// The structured run log as JSONL (one JSON object per line;
+    /// `None` when disabled or the run-log lane is off).
+    pub fn run_log_jsonl(&self) -> Option<String> {
+        let i = self.inner.as_deref()?;
+        if !i.cfg.run_log {
+            return None;
+        }
+        let records = i.run_log.lock().unwrap();
+        let mut out = String::new();
+        for r in records.iter() {
+            out.push_str(&r.to_string());
+            out.push('\n');
+        }
+        Some(out)
+    }
+
+    /// Write the run artifacts into `dir` (`trace.json`,
+    /// `runlog.jsonl`, `registry.json` — each only when its lane is on)
+    /// and return the paths written. A disabled handle writes nothing.
+    pub fn write_artifacts(&self, dir: &Path) -> Result<Vec<PathBuf>> {
+        if !self.enabled() {
+            return Ok(Vec::new());
+        }
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let mut written = Vec::new();
+        if let Some(trace) = self.trace_json() {
+            let p = dir.join("trace.json");
+            std::fs::write(&p, trace).with_context(|| format!("writing {}", p.display()))?;
+            written.push(p);
+        }
+        if let Some(log) = self.run_log_jsonl() {
+            let p = dir.join("runlog.jsonl");
+            std::fs::write(&p, log).with_context(|| format!("writing {}", p.display()))?;
+            written.push(p);
+        }
+        let p = dir.join("registry.json");
+        std::fs::write(&p, self.snapshot().to_json())
+            .with_context(|| format!("writing {}", p.display()))?;
+        written.push(p);
+        Ok(written)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_off_and_degenerate() {
+        let c = TelemetryConfig::default();
+        assert!(!c.enabled);
+        assert_eq!(c.sample_lanes, 0, "0 = keep every lane");
+        let t = Telemetry::new(c);
+        assert!(!t.enabled());
+        assert!(t.sample_lanes().is_none());
+        assert!(t.trace_json().is_none());
+        assert!(t.run_log_jsonl().is_none());
+        // recording into a disabled handle is a no-op, not an error
+        t.count("x", 1);
+        t.observe("y", 2);
+        t.gauge_set("z", 3);
+        assert!(t.snapshot().metrics.is_empty());
+    }
+
+    #[test]
+    fn env_override_pristine_default_only() {
+        // pristine default + env -> enabled
+        let on = TelemetryConfig::default().with_env(Some("1"));
+        assert!(on.enabled);
+        assert!(TelemetryConfig::default().with_env(Some("true")).enabled);
+        assert!(TelemetryConfig::default().with_env(Some("on")).enabled);
+        // unknown values and absence leave the default untouched
+        assert_eq!(TelemetryConfig::default().with_env(Some("nope")), TelemetryConfig::default());
+        assert_eq!(TelemetryConfig::default().with_env(None), TelemetryConfig::default());
+        // an explicitly configured (non-pristine) config always wins —
+        // including an explicit off (run_log flipped marks it explicit)
+        let pinned_off = TelemetryConfig { run_log: false, ..TelemetryConfig::default() };
+        assert!(!pinned_off.clone().with_env(Some("1")).enabled);
+        let pinned_on = TelemetryConfig { enabled: true, ..TelemetryConfig::default() };
+        assert!(pinned_on.with_env(None).enabled);
+    }
+
+    #[test]
+    fn enabled_handle_records_and_snapshots() {
+        let t = Telemetry::new(TelemetryConfig { enabled: true, ..Default::default() });
+        t.count("a.calls", 2);
+        t.count("a.calls", 3);
+        t.observe("a.bytes", 1500);
+        t.gauge_set("a.active", 7);
+        let s = t.snapshot();
+        assert_eq!(s.counter("a.calls"), 5);
+        assert_eq!(s.metrics.get("a.active"), Some(&MetricValue::Gauge(7)));
+        match s.metrics.get("a.bytes") {
+            Some(MetricValue::Histogram { count, sum, .. }) => {
+                assert_eq!((*count, *sum), (1, 1500));
+            }
+            other => panic!("histogram expected, got {other:?}"),
+        }
+        // clones share state
+        let t2 = t.clone();
+        t2.count("a.calls", 1);
+        assert_eq!(t.snapshot().counter("a.calls"), 6);
+    }
+
+    #[test]
+    fn virtual_us_skips_non_finite_and_negative() {
+        assert_eq!(virtual_us(1.5), Some(1_500_000));
+        assert_eq!(virtual_us(0.0), Some(0));
+        assert_eq!(virtual_us(-1.0), None);
+        assert_eq!(virtual_us(f64::INFINITY), None);
+        assert_eq!(virtual_us(f64::NAN), None);
+    }
+
+    #[test]
+    fn span_counts_calls_and_completions() {
+        let t = Telemetry::new(TelemetryConfig { enabled: true, ..Default::default() });
+        {
+            let _g = t.span("phase");
+            assert_eq!(t.snapshot().counter("span.phase.calls"), 1);
+            assert_eq!(t.snapshot().counter("span.phase.completed"), 0);
+        }
+        assert_eq!(t.snapshot().counter("span.phase.completed"), 1);
+        // disabled spans record nothing and cost only the branch
+        let off = Telemetry::default();
+        drop(off.span("phase"));
+        assert!(off.snapshot().metrics.is_empty());
+    }
+
+    #[test]
+    fn artifacts_roundtrip() {
+        let t = Telemetry::new(TelemetryConfig { enabled: true, ..Default::default() });
+        t.count("k", 1);
+        let dir = std::env::temp_dir().join("covenant-telemetry-artifacts");
+        let written = t.write_artifacts(&dir).unwrap();
+        assert_eq!(written.len(), 3, "trace + runlog + registry");
+        for p in &written {
+            assert!(p.exists(), "{}", p.display());
+        }
+        let reg: serde_json::Value =
+            serde_json::from_str(&std::fs::read_to_string(dir.join("registry.json")).unwrap())
+                .unwrap();
+        assert!(reg.get("metrics").is_some());
+        // disabled handle writes nothing
+        assert!(Telemetry::default().write_artifacts(&dir).unwrap().is_empty());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,352 @@
+//! Typed metric registry: counters, gauges, and fixed-bucket log2
+//! histograms with **no floating-point bucket math**.
+//!
+//! Determinism rules:
+//!
+//! * Counters and histograms only ever *add* (relaxed atomics). Addition
+//!   of `u64`s is commutative and associative, so the final totals are
+//!   independent of the interleaving the rayon fan-out happened to take.
+//! * Histogram buckets are powers of two selected by
+//!   [`log2_bucket`] — pure integer math on the observed value, so the
+//!   same value always lands in the same bucket on every platform.
+//! * Gauges are last-writer-wins and therefore **serial-only** by
+//!   convention (documented on `Telemetry::gauge_set`).
+//! * Snapshots iterate names in sorted order ([`RegistrySnapshot`] is a
+//!   `BTreeMap`), so rendering and JSON export are byte-stable.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Number of log2 histogram buckets: bucket 0 holds exactly `0`, bucket
+/// `i >= 1` holds values in `[2^(i-1), 2^i)`, up to bucket 64 for the
+/// top half of the `u64` range.
+pub const N_BUCKETS: usize = 65;
+
+/// The bucket index for an observed value — pure integer math.
+pub fn log2_bucket(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros()) as usize
+    }
+}
+
+/// Inclusive lower bound of bucket `i` (for rendering/export).
+pub fn bucket_floor(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << (i - 1)
+    }
+}
+
+enum Metric {
+    Counter(AtomicU64),
+    Gauge(AtomicI64),
+    Histogram {
+        buckets: [AtomicU64; N_BUCKETS],
+        count: AtomicU64,
+        sum: AtomicU64,
+    },
+}
+
+impl Metric {
+    fn new_histogram() -> Self {
+        Metric::Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Concurrent metric store. Lookup takes a read lock (the common case
+/// once a name exists); first use of a name takes the write lock once.
+pub struct MetricRegistry {
+    metrics: RwLock<HashMap<String, Arc<Metric>>>,
+}
+
+impl Default for MetricRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricRegistry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Self { metrics: RwLock::new(HashMap::new()) }
+    }
+
+    fn get_or_insert(&self, name: &str, make: fn() -> Metric) -> Arc<Metric> {
+        if let Some(m) = self.metrics.read().unwrap().get(name) {
+            return m.clone();
+        }
+        self.metrics
+            .write()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(make()))
+            .clone()
+    }
+
+    /// Add `n` to the counter `name`.
+    pub fn count(&self, name: &str, n: u64) {
+        let m = self.get_or_insert(name, || Metric::Counter(AtomicU64::new(0)));
+        match &*m {
+            Metric::Counter(c) => {
+                c.fetch_add(n, Ordering::Relaxed);
+            }
+            _ => debug_assert!(false, "metric kind mismatch: {name} is not a counter"),
+        }
+    }
+
+    /// Set the gauge `name` (serial call sites only).
+    pub fn gauge_set(&self, name: &str, v: i64) {
+        let m = self.get_or_insert(name, || Metric::Gauge(AtomicI64::new(0)));
+        match &*m {
+            Metric::Gauge(g) => g.store(v, Ordering::Relaxed),
+            _ => debug_assert!(false, "metric kind mismatch: {name} is not a gauge"),
+        }
+    }
+
+    /// Observe `v` into the histogram `name`.
+    pub fn observe(&self, name: &str, v: u64) {
+        let m = self.get_or_insert(name, Metric::new_histogram);
+        match &*m {
+            Metric::Histogram { buckets, count, sum } => {
+                buckets[log2_bucket(v)].fetch_add(1, Ordering::Relaxed);
+                count.fetch_add(1, Ordering::Relaxed);
+                sum.fetch_add(v, Ordering::Relaxed);
+            }
+            _ => debug_assert!(false, "metric kind mismatch: {name} is not a histogram"),
+        }
+    }
+
+    /// Deterministic point-in-time snapshot, sorted by metric name.
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        let metrics = self.metrics.read().unwrap();
+        let mut out = BTreeMap::new();
+        for (name, m) in metrics.iter() {
+            let v = match &**m {
+                Metric::Counter(c) => MetricValue::Counter(c.load(Ordering::Relaxed)),
+                Metric::Gauge(g) => MetricValue::Gauge(g.load(Ordering::Relaxed)),
+                Metric::Histogram { buckets, count, sum } => {
+                    let mut nonzero = Vec::new();
+                    for (i, b) in buckets.iter().enumerate() {
+                        let n = b.load(Ordering::Relaxed);
+                        if n > 0 {
+                            nonzero.push((i as u32, n));
+                        }
+                    }
+                    MetricValue::Histogram {
+                        count: count.load(Ordering::Relaxed),
+                        sum: sum.load(Ordering::Relaxed),
+                        buckets: nonzero,
+                    }
+                }
+            };
+            out.insert(name.clone(), v);
+        }
+        RegistrySnapshot { metrics: out }
+    }
+}
+
+/// One metric's snapshotted value.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MetricValue {
+    /// Monotonic event count.
+    Counter(u64),
+    /// Last-written level.
+    Gauge(i64),
+    /// Log2 histogram: total count, exact integer sum (wrapping at
+    /// `u64`), and the non-zero `(bucket index, count)` pairs.
+    Histogram {
+        /// Number of observations.
+        count: u64,
+        /// Exact sum of observed values.
+        sum: u64,
+        /// Non-zero buckets as `(log2 bucket index, count)`.
+        buckets: Vec<(u32, u64)>,
+    },
+}
+
+/// A deterministic snapshot of every metric, sorted by name. Two
+/// snapshots of equivalent runs compare equal (`Eq`) and serialize to
+/// identical JSON.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RegistrySnapshot {
+    /// Metric name -> value, in sorted (BTreeMap) order.
+    pub metrics: BTreeMap<String, MetricValue>,
+}
+
+impl RegistrySnapshot {
+    /// Counter value by name (0 when absent or not a counter) — the
+    /// convenient form for test assertions.
+    pub fn counter(&self, name: &str) -> u64 {
+        match self.metrics.get(name) {
+            Some(MetricValue::Counter(n)) => *n,
+            _ => 0,
+        }
+    }
+
+    /// Histogram `(count, sum)` by name (`None` when absent or not a
+    /// histogram).
+    pub fn histogram(&self, name: &str) -> Option<(u64, u64)> {
+        match self.metrics.get(name) {
+            Some(MetricValue::Histogram { count, sum, .. }) => Some((*count, *sum)),
+            _ => None,
+        }
+    }
+
+    /// Stable JSON: `{"metrics": {name: {...}, ...}}` with sorted keys
+    /// (serde_json maps are BTreeMaps) — byte-identical across reruns.
+    pub fn to_json(&self) -> String {
+        let mut metrics = serde_json::Map::new();
+        for (name, v) in &self.metrics {
+            let jv = match v {
+                MetricValue::Counter(n) => serde_json::json!({"type": "counter", "value": n}),
+                MetricValue::Gauge(g) => serde_json::json!({"type": "gauge", "value": g}),
+                MetricValue::Histogram { count, sum, buckets } => {
+                    let b: Vec<serde_json::Value> = buckets
+                        .iter()
+                        .map(|(i, n)| {
+                            serde_json::json!({
+                                "ge": bucket_floor(*i as usize),
+                                "count": n,
+                            })
+                        })
+                        .collect();
+                    serde_json::json!({
+                        "type": "histogram",
+                        "count": count,
+                        "sum": sum,
+                        "buckets": b,
+                    })
+                }
+            };
+            metrics.insert(name.clone(), jv);
+        }
+        serde_json::Value::Object(
+            [("metrics".to_string(), serde_json::Value::Object(metrics))].into_iter().collect(),
+        )
+        .to_string()
+    }
+
+    /// Compact human-readable rendering (sorted), for the end-of-run
+    /// summary.
+    pub fn render(&self) -> String {
+        let mut out = String::from("telemetry registry:\n");
+        for (name, v) in &self.metrics {
+            match v {
+                MetricValue::Counter(n) => {
+                    out.push_str(&format!("  {name:<42} {n}\n"));
+                }
+                MetricValue::Gauge(g) => {
+                    out.push_str(&format!("  {name:<42} {g} (gauge)\n"));
+                }
+                MetricValue::Histogram { count, sum, .. } => {
+                    let mean = if *count > 0 { *sum as f64 / *count as f64 } else { 0.0 };
+                    out.push_str(&format!(
+                        "  {name:<42} n={count} sum={sum} mean={mean:.1}\n"
+                    ));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges_pure_integer() {
+        assert_eq!(log2_bucket(0), 0);
+        assert_eq!(log2_bucket(1), 1);
+        assert_eq!(log2_bucket(2), 2);
+        assert_eq!(log2_bucket(3), 2);
+        assert_eq!(log2_bucket(4), 3);
+        assert_eq!(log2_bucket(1023), 10);
+        assert_eq!(log2_bucket(1024), 11);
+        assert_eq!(log2_bucket(u64::MAX), 64);
+        assert!(log2_bucket(u64::MAX) < N_BUCKETS);
+        assert_eq!(bucket_floor(0), 0);
+        assert_eq!(bucket_floor(1), 1);
+        assert_eq!(bucket_floor(11), 1024);
+        assert_eq!(bucket_floor(64), 1u64 << 63);
+        // every value lands in the bucket whose floor it is >= to
+        for v in [0u64, 1, 2, 7, 1000, 1 << 40, u64::MAX] {
+            assert!(v >= bucket_floor(log2_bucket(v)));
+        }
+    }
+
+    #[test]
+    fn counts_accumulate_and_snapshot_sorted() {
+        let r = MetricRegistry::new();
+        r.count("b.second", 2);
+        r.count("a.first", 1);
+        r.count("b.second", 3);
+        let s = r.snapshot();
+        assert_eq!(s.counter("a.first"), 1);
+        assert_eq!(s.counter("b.second"), 5);
+        let names: Vec<&String> = s.metrics.keys().collect();
+        assert_eq!(names, ["a.first", "b.second"]);
+    }
+
+    #[test]
+    fn histogram_tracks_exact_sum_and_buckets() {
+        let r = MetricRegistry::new();
+        for v in [0u64, 1, 1, 5, 1024] {
+            r.observe("h", v);
+        }
+        let s = r.snapshot();
+        assert_eq!(s.histogram("h"), Some((5, 1031)));
+        match s.metrics.get("h").unwrap() {
+            MetricValue::Histogram { buckets, .. } => {
+                // 0 -> bucket 0; 1,1 -> bucket 1; 5 -> bucket 3; 1024 -> bucket 11
+                assert_eq!(buckets, &vec![(0, 1), (1, 2), (3, 1), (11, 1)]);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn parallel_adds_are_order_independent() {
+        use rayon::prelude::*;
+        let serial = MetricRegistry::new();
+        for i in 0..100u64 {
+            serial.count("c", i);
+            serial.observe("h", i * 31);
+        }
+        let par = MetricRegistry::new();
+        (0..100u64).into_par_iter().for_each(|i| {
+            par.count("c", i);
+            par.observe("h", i * 31);
+        });
+        assert_eq!(serial.snapshot(), par.snapshot());
+        assert_eq!(serial.snapshot().to_json(), par.snapshot().to_json());
+    }
+
+    #[test]
+    fn json_shape_is_stable() {
+        let r = MetricRegistry::new();
+        r.count("c", 7);
+        r.gauge_set("g", -3);
+        r.observe("h", 9);
+        let j = r.snapshot().to_json();
+        let v: serde_json::Value = serde_json::from_str(&j).unwrap();
+        assert_eq!(v["metrics"]["c"]["type"], "counter");
+        assert_eq!(v["metrics"]["c"]["value"], 7);
+        assert_eq!(v["metrics"]["g"]["value"], -3);
+        assert_eq!(v["metrics"]["h"]["count"], 1);
+        assert_eq!(v["metrics"]["h"]["buckets"][0]["ge"], 8);
+        // rendering includes every name
+        let rendered = r.snapshot().render();
+        for name in ["c", "g", "h"] {
+            assert!(rendered.contains(name));
+        }
+    }
+}

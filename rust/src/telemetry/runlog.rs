@@ -1,0 +1,225 @@
+//! JSONL structured run log: one self-describing record per round, so
+//! downstream tooling (jq, pandas, dashboards) reads accounting
+//! directly instead of spelunking `RoundReport` fields — plus the CSV
+//! bridge feeding `metrics::write_csv` for the per-round series.
+
+use serde_json::{json, Value};
+
+use crate::coordinator::network::RoundReport;
+
+/// Schema tag carried by every record (bump on breaking field changes).
+pub const SCHEMA: &str = "covenant.runlog.v1";
+
+/// Outer-step barrier cost for a round: how long the earliest-ready
+/// shard waited for the barrier (`applied_at - max(ready_at)`), `0.0`
+/// for unsharded/degenerate rounds or non-finite inputs.
+pub fn barrier_cost_s(rep: &RoundReport) -> f64 {
+    if rep.shard_lanes.is_empty() {
+        return 0.0;
+    }
+    let applied = rep.shard_lanes[0].applied_at;
+    let max_ready = rep
+        .shard_lanes
+        .iter()
+        .map(|l| l.ready_at)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let cost = applied - max_ready;
+    if cost.is_finite() && cost >= 0.0 {
+        cost
+    } else {
+        0.0
+    }
+}
+
+/// Finite float or JSON null (stalled-upload sentinels are `+inf`).
+fn fin(v: f64) -> Value {
+    if v.is_finite() {
+        json!(v)
+    } else {
+        Value::Null
+    }
+}
+
+/// Build the JSON record for one completed round. Field values are
+/// drawn from the report only (no wall clock, no environment), so the
+/// record is bit-deterministic; serde_json sorts object keys.
+pub fn round_record(rep: &RoundReport) -> Value {
+    let pop = &rep.lane_population;
+    json!({
+        "schema": SCHEMA,
+        "round": rep.round,
+        "t_start_s": fin(rep.t_start),
+        "t_compute_end_s": fin(rep.t_compute_end),
+        "t_comm_end_s": fin(rep.t_comm_end),
+        "deadline_s": fin(rep.deadline),
+        "wall_clock_s": fin(rep.wall_clock()),
+        "utilization": fin(rep.utilization()),
+        "active": rep.active,
+        "submitted": rep.submitted,
+        "contributing": rep.contributing,
+        "adversarial_submitted": rep.adversarial_submitted,
+        "adversarial_selected": rep.adversarial_selected,
+        "late_submissions": rep.late_submissions,
+        "rejected_pre_decode": rep.rejected_pre_decode,
+        "rejections": rep.rejections.len(),
+        "retried_uploads": rep.retried_uploads,
+        "orphaned_slices": rep.orphaned_slices,
+        "recovered_shards": rep.recovered_shards,
+        "mean_loss": fin(rep.mean_loss),
+        "outer_alpha": fin(rep.outer_alpha),
+        "bytes_up": rep.bytes_up,
+        "bytes_down": rep.bytes_down,
+        "barrier_cost_s": json!(barrier_cost_s(rep)),
+        "shards": rep.shard_lanes.iter().map(|l| json!({
+            "shard": l.shard,
+            "host": l.host,
+            "bytes": l.bytes,
+            "ready_at_s": fin(l.ready_at),
+            "applied_at_s": fin(l.applied_at),
+            "takeover": l.takeover.map(|(from, t_detect, recovered_at)| json!({
+                "from": from,
+                "t_detect_s": fin(t_detect),
+                "recovered_at_s": fin(recovered_at),
+            })),
+        })).collect::<Vec<_>>(),
+        "lanes": {
+            "sampled": rep.lanes.len(),
+            "population": {
+                "peers": pop.peers,
+                "computed": pop.computed,
+                "uploaded": pop.uploaded,
+                "stalled": pop.stalled,
+                "downloaded": pop.downloaded,
+                "late": pop.late,
+                "retries": pop.retries,
+                "compute_us": pop.compute_us,
+                "upload_us": pop.upload_us,
+                "download_us": pop.download_us,
+            },
+        },
+    })
+}
+
+/// Header row for the per-round CSV series (see [`csv_rows`]).
+pub fn csv_header() -> &'static str {
+    "round,wall_clock_s,utilization,active,submitted,contributing,late,\
+     rejected_pre_decode,retried_uploads,orphaned_slices,recovered_shards,\
+     barrier_cost_s,mean_loss,bytes_up,bytes_down"
+}
+
+/// Per-round CSV rows matching [`csv_header`], for `metrics::write_csv`.
+pub fn csv_rows(reports: &[RoundReport]) -> Vec<Vec<String>> {
+    reports
+        .iter()
+        .map(|r| {
+            vec![
+                r.round.to_string(),
+                format!("{:.3}", r.wall_clock()),
+                format!("{:.4}", r.utilization()),
+                r.active.to_string(),
+                r.submitted.to_string(),
+                r.contributing.to_string(),
+                r.late_submissions.to_string(),
+                r.rejected_pre_decode.to_string(),
+                r.retried_uploads.to_string(),
+                r.orphaned_slices.to_string(),
+                r.recovered_shards.to_string(),
+                format!("{:.3}", barrier_cost_s(r)),
+                format!("{:.6}", r.mean_loss),
+                r.bytes_up.to_string(),
+                r.bytes_down.to_string(),
+            ]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::shard::ShardLane;
+
+    fn report() -> RoundReport {
+        RoundReport {
+            round: 2,
+            t_start: 0.0,
+            t_compute_end: 100.0,
+            t_comm_end: 110.0,
+            deadline: 120.0,
+            active: 4,
+            submitted: 4,
+            contributing: 3,
+            adversarial_submitted: 1,
+            adversarial_selected: 0,
+            late_submissions: 1,
+            rejected_pre_decode: 1,
+            mean_loss: 2.5,
+            bytes_up: 4096,
+            bytes_down: 1024,
+            retried_uploads: 2,
+            orphaned_slices: 3,
+            recovered_shards: 1,
+            outer_alpha: 0.5,
+            rejections: vec!["hk-x: fast=Late".into()],
+            lanes: Vec::new(),
+            shard_lanes: vec![
+                ShardLane {
+                    shard: 0,
+                    chunk0: 0,
+                    chunk1: 8,
+                    ready_at: 104.0,
+                    applied_at: 107.0,
+                    bytes: 2048,
+                    host: 0,
+                    takeover: None,
+                },
+                ShardLane {
+                    shard: 1,
+                    chunk0: 8,
+                    chunk1: 16,
+                    ready_at: 106.0,
+                    applied_at: 107.0,
+                    bytes: 2048,
+                    host: 1,
+                    takeover: Some((0, 105.0, 106.5)),
+                },
+            ],
+            lane_population: Default::default(),
+        }
+    }
+
+    #[test]
+    fn record_carries_required_fields() {
+        let v = round_record(&report());
+        assert_eq!(v["schema"], SCHEMA);
+        assert_eq!(v["round"], 2);
+        assert_eq!(v["contributing"], 3);
+        assert_eq!(v["rejections"], 1);
+        assert_eq!(v["bytes_up"], 4096);
+        assert_eq!(v["shards"].as_array().unwrap().len(), 2);
+        assert_eq!(v["shards"][1]["takeover"]["from"], 0);
+        assert!(v["shards"][0]["takeover"].is_null());
+        // barrier cost: applied 107 - max ready 106
+        assert!((v["barrier_cost_s"].as_f64().unwrap() - 1.0).abs() < 1e-9);
+        // identical reports -> identical serialized records
+        assert_eq!(v.to_string(), round_record(&report()).to_string());
+    }
+
+    #[test]
+    fn barrier_cost_degenerate_cases() {
+        let mut r = report();
+        r.shard_lanes.clear();
+        assert_eq!(barrier_cost_s(&r), 0.0, "unsharded round");
+        let mut r2 = report();
+        r2.shard_lanes[0].ready_at = f64::INFINITY;
+        assert_eq!(barrier_cost_s(&r2), 0.0, "non-finite inputs never leak");
+    }
+
+    #[test]
+    fn csv_rows_match_header_arity() {
+        let rows = csv_rows(&[report()]);
+        let n_cols = csv_header().split(',').count();
+        assert_eq!(rows[0].len(), n_cols);
+        assert_eq!(rows[0][0], "2");
+        assert_eq!(rows[0][n_cols - 2], "4096");
+    }
+}

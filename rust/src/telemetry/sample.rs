@@ -1,0 +1,212 @@
+//! Deterministic lane sampling + exact population counters.
+//!
+//! `RoundReport::lanes` is the only O(peers) payload a round keeps
+//! around; at swarm scale (ROADMAP: 10k–1M peers) it must become
+//! O(sample). The sample is *deterministic*, not random: membership is
+//! the bottom-k of a pure hash of `(run seed, hotkey)`, so the same
+//! peers are sampled every round, every rerun, and on every machine —
+//! a stable cohort you can follow across a whole run. Exact
+//! whole-population counters ([`LanePopulation`]) are computed over the
+//! full lane set *before* truncation, so accounting never degrades,
+//! only rendering detail does.
+
+use crate::coordinator::network::PeerLane;
+
+/// Pure hash of `(run seed, hotkey)` — FNV-1a over the hotkey bytes
+/// folded with the run seed, finished with a splitmix64 mix (same
+/// construction as the round-engine's `round_seed`, minus the round).
+pub fn lane_hash(run_seed: u64, hotkey: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in hotkey.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h ^= run_seed.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94d0_49bb_1331_11eb);
+    h ^= h >> 31;
+    h
+}
+
+/// Keep the `k` lanes with the smallest `lane_hash(run_seed, hotkey)`
+/// (ties broken by position), preserving the original lane order.
+/// `k == 0` or `k >= lanes.len()` keeps everything. Membership depends
+/// only on the hotkey *set*, not on lane ordering.
+pub fn sample_lanes(run_seed: u64, lanes: Vec<PeerLane>, k: usize) -> Vec<PeerLane> {
+    if k == 0 || lanes.len() <= k {
+        return lanes;
+    }
+    let mut ranked: Vec<(u64, usize)> = lanes
+        .iter()
+        .enumerate()
+        .map(|(i, l)| (lane_hash(run_seed, &l.hotkey), i))
+        .collect();
+    ranked.sort_unstable();
+    let mut keep: Vec<usize> = ranked.into_iter().take(k).map(|(_, i)| i).collect();
+    keep.sort_unstable();
+    let mut out = Vec::with_capacity(k);
+    let mut lanes = lanes;
+    // drain from the back so earlier indices stay valid
+    for &i in keep.iter().rev() {
+        out.push(lanes.swap_remove(i));
+    }
+    out.reverse();
+    out
+}
+
+/// Exact whole-population counters over a round's peer lanes. All
+/// fields are integers (durations in virtual-time microseconds, summed
+/// over finite segments only), so equality is exact and the struct is
+/// `Eq` — the determinism tests compare it directly.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LanePopulation {
+    /// Total number of lanes (peers with any activity this round).
+    pub peers: u64,
+    /// Lanes with a compute segment.
+    pub computed: u64,
+    /// Lanes whose upload finished (finite end).
+    pub uploaded: u64,
+    /// Lanes whose upload never finished (stalled, `+inf` end).
+    pub stalled: u64,
+    /// Lanes with a download segment.
+    pub downloaded: u64,
+    /// Lanes flagged late by the deadline check.
+    pub late: u64,
+    /// Total upload retry ticks across all lanes.
+    pub retries: u64,
+    /// Summed compute time, virtual microseconds (finite segments).
+    pub compute_us: u64,
+    /// Summed upload time, virtual microseconds (finite segments).
+    pub upload_us: u64,
+    /// Summed download time, virtual microseconds (finite segments).
+    pub download_us: u64,
+}
+
+fn seg_us(seg: Option<(f64, f64)>) -> u64 {
+    match seg {
+        Some((a, b)) => super::virtual_us(b - a).unwrap_or(0),
+        None => 0,
+    }
+}
+
+/// Compute [`LanePopulation`] over a full (unsampled) lane set.
+pub fn lane_population(lanes: &[PeerLane]) -> LanePopulation {
+    let mut p = LanePopulation { peers: lanes.len() as u64, ..Default::default() };
+    for l in lanes {
+        if l.compute.is_some() {
+            p.computed += 1;
+        }
+        match l.upload {
+            Some((_, b)) if b.is_finite() => p.uploaded += 1,
+            Some(_) => p.stalled += 1,
+            None => {}
+        }
+        if l.download.is_some() {
+            p.downloaded += 1;
+        }
+        if l.late {
+            p.late += 1;
+        }
+        p.retries += l.retry_at.len() as u64;
+        p.compute_us += seg_us(l.compute);
+        p.upload_us += seg_us(l.upload);
+        p.download_us += seg_us(l.download);
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::ComputeTier;
+
+    fn lane(uid: usize, hotkey: &str) -> PeerLane {
+        PeerLane {
+            uid,
+            hotkey: hotkey.to_string(),
+            tier: ComputeTier::Median,
+            compute: Some((0.0, 10.0)),
+            upload: Some((10.0, 20.0)),
+            download: Some((20.0, 25.0)),
+            late: false,
+            retry_at: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn hash_is_stable_and_distinct() {
+        let a = lane_hash(7, "hk-00000");
+        assert_eq!(a, lane_hash(7, "hk-00000"), "pure function");
+        assert_ne!(a, lane_hash(7, "hk-00001"), "hotkey feeds the hash");
+        assert_ne!(a, lane_hash(8, "hk-00000"), "seed feeds the hash");
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_order_independent() {
+        let names = ["hk-a", "hk-b", "hk-c", "hk-d", "hk-e"];
+        let forward: Vec<PeerLane> =
+            names.iter().enumerate().map(|(i, n)| lane(i, n)).collect();
+        let mut reversed = forward.clone();
+        reversed.reverse();
+        let kept_f: Vec<String> =
+            sample_lanes(3, forward, 2).into_iter().map(|l| l.hotkey).collect();
+        let mut kept_r: Vec<String> =
+            sample_lanes(3, reversed, 2).into_iter().map(|l| l.hotkey).collect();
+        kept_r.sort();
+        let mut kept_f_sorted = kept_f.clone();
+        kept_f_sorted.sort();
+        assert_eq!(kept_f_sorted, kept_r, "membership depends on the hotkey set only");
+        assert_eq!(kept_f.len(), 2);
+        // different seed -> (very likely) different cohort; pinned here
+        // so any hash change shows up as a test diff, not silence
+        let again: Vec<String> = sample_lanes(
+            3,
+            names.iter().enumerate().map(|(i, n)| lane(i, n)).collect(),
+            2,
+        )
+        .into_iter()
+        .map(|l| l.hotkey)
+        .collect();
+        assert_eq!(kept_f, again, "same seed + same set -> identical sample");
+    }
+
+    #[test]
+    fn sampling_preserves_lane_order_and_degenerate_k() {
+        let lanes: Vec<PeerLane> =
+            (0..6).map(|i| lane(i, &format!("hk-{i:05}"))).collect();
+        let kept = sample_lanes(11, lanes.clone(), 4);
+        let uids: Vec<usize> = kept.iter().map(|l| l.uid).collect();
+        let mut sorted = uids.clone();
+        sorted.sort_unstable();
+        assert_eq!(uids, sorted, "original lane order preserved");
+        // k = 0 and k >= len keep everything
+        assert_eq!(sample_lanes(11, lanes.clone(), 0).len(), 6);
+        assert_eq!(sample_lanes(11, lanes, 10).len(), 6);
+    }
+
+    #[test]
+    fn population_counts_exactly() {
+        let mut lanes: Vec<PeerLane> =
+            (0..4).map(|i| lane(i, &format!("hk-{i:05}"))).collect();
+        lanes[1].upload = Some((10.0, f64::INFINITY)); // stalled
+        lanes[1].download = None;
+        lanes[2].late = true;
+        lanes[2].retry_at = vec![12.0, 14.0];
+        lanes[3].compute = None;
+        let p = lane_population(&lanes);
+        assert_eq!(p.peers, 4);
+        assert_eq!(p.computed, 3);
+        assert_eq!(p.uploaded, 3);
+        assert_eq!(p.stalled, 1);
+        assert_eq!(p.downloaded, 3);
+        assert_eq!(p.late, 1);
+        assert_eq!(p.retries, 2);
+        assert_eq!(p.compute_us, 3 * 10_000_000);
+        // stalled upload contributes nothing (non-finite duration)
+        assert_eq!(p.upload_us, 3 * 10_000_000);
+        assert_eq!(p.download_us, 3 * 5_000_000);
+        assert_eq!(lane_population(&[]), LanePopulation::default());
+    }
+}

@@ -1,0 +1,40 @@
+//! Scoped spans over the deterministic registry.
+//!
+//! A span is deliberately *not* a wall-clock timer: wall-clock durations
+//! differ across machines and runs, so they can never live in the
+//! bit-deterministic registry (the engine's `exec_stats` remains the
+//! wall-clock profiling lane). Instead a span is a pair of counters —
+//! `span.<name>.calls` at entry and `span.<name>.completed` when the
+//! guard drops — which makes early exits (error paths that skip the
+//! guard's scope end) visible as `calls != completed`, while staying
+//! byte-identical across thread counts and reruns. Virtual-time costs
+//! of the spanned work are recorded separately via
+//! `Telemetry::observe_virtual_s`.
+
+use super::Telemetry;
+
+/// RAII guard returned by [`Telemetry::span`]. Counts
+/// `span.<name>.calls` when created and `span.<name>.completed` on
+/// drop; on a disabled handle both are single-branch no-ops.
+#[must_use = "a span guard records its completion when dropped at scope end"]
+pub struct SpanGuard {
+    tele: Telemetry,
+    name: &'static str,
+}
+
+impl SpanGuard {
+    pub(crate) fn enter(tele: Telemetry, name: &'static str) -> Self {
+        if tele.enabled() {
+            tele.count(&format!("span.{name}.calls"), 1);
+        }
+        Self { tele, name }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if self.tele.enabled() {
+            self.tele.count(&format!("span.{}.completed", self.name), 1);
+        }
+    }
+}

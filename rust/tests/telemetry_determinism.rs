@@ -1,0 +1,187 @@
+//! The telemetry spine's two-sided determinism contract.
+//!
+//! Side one — **pure observation**: telemetry must never perturb the
+//! run. A default-off network and a telemetry-enabled network driven
+//! from the same seed produce byte-identical global models, identical
+//! round verdict accounting, and bit-identical event traces; enabling
+//! telemetry changes only what is *recorded*.
+//!
+//! Side two — **deterministic recording**: what is recorded is itself
+//! bit-reproducible. The registry snapshot, the Chrome-trace JSON, and
+//! the JSONL run log are byte-identical across rayon pool sizes and
+//! across reruns, because the registry uses only commutative u64 adds,
+//! snapshots sort keys, and the trace/run-log lanes replay the (already
+//! deterministic) event spine in virtual time.
+//!
+//! The sampled-lanes contract rides along: sampling truncates only the
+//! `RoundReport::lanes` detail vector, while `lane_population` carries
+//! exact full-population counters either way.
+//!
+//! Note on configs: an explicitly-constructed "off" config must differ
+//! from `TelemetryConfig::default()` — the `COVENANT_TELEMETRY` env var
+//! (set for a whole CI pass) flips only *pristine* defaults, and these
+//! tests must hold under that pass too.
+
+#![allow(clippy::field_reassign_with_default)]
+
+use covenant::config::run::RunConfig;
+use covenant::coordinator::network::{Network, NetworkParams, RoundReport};
+use covenant::netsim::sched::Event;
+use covenant::runtime::Engine;
+use covenant::telemetry::{lane_population, TelemetryConfig};
+use covenant::train::{OuterAlphaSchedule, Schedule, Segment};
+
+const ROUNDS: usize = 2;
+
+/// Telemetry off, but *not* the pristine default, so a CI-wide
+/// `COVENANT_TELEMETRY=1` cannot flip it on (see `TelemetryConfig::with_env`).
+fn explicit_off() -> TelemetryConfig {
+    TelemetryConfig { enabled: false, sample_lanes: 0, trace: false, run_log: false }
+}
+
+fn explicit_on(sample_lanes: usize) -> TelemetryConfig {
+    TelemetryConfig { enabled: true, sample_lanes, trace: true, run_log: true }
+}
+
+fn build_params(seed: u64, peers: usize, n_shards: usize, tcfg: TelemetryConfig) -> NetworkParams {
+    let mut run = RunConfig::default();
+    run.artifacts = "artifacts/tiny".into();
+    run.max_contributors = peers;
+    run.target_active = peers;
+    run.seed = seed;
+    run.n_shards = n_shards;
+    run.telemetry = tcfg;
+    let mut p = NetworkParams::quick(run, 4, 10);
+    p.initial_peers = peers;
+    p.churn.p_adversarial = 0.25;
+    p.schedule = Schedule::new(vec![Segment::Constant { lr: 2e-3, steps: 1 << 20 }]);
+    p.alpha = OuterAlphaSchedule::scaled(1.0, 4);
+    p.rust_compress = true;
+    p
+}
+
+struct RunOut {
+    global: Vec<f32>,
+    reports: Vec<RoundReport>,
+    /// Per-round event-spine clones (`event_log` is cleared each round).
+    traces: Vec<Vec<(f64, Event)>>,
+    snapshot_json: String,
+    trace_json: Option<String>,
+    run_log: Option<String>,
+}
+
+fn run_net(eng: &Engine, p: NetworkParams) -> RunOut {
+    let mut net = Network::new(eng, p).unwrap();
+    let mut traces = Vec::new();
+    for _ in 0..ROUNDS {
+        net.run_round().unwrap();
+        traces.push(net.event_log.clone());
+    }
+    RunOut {
+        global: net.global_params.clone(),
+        reports: net.reports.clone(),
+        traces,
+        snapshot_json: net.telemetry.snapshot().to_json(),
+        trace_json: net.telemetry.trace_json(),
+        run_log: net.telemetry.run_log_jsonl(),
+    }
+}
+
+/// The verdict-side accounting that must not move when telemetry turns
+/// on (lanes themselves may legitimately differ: sampling truncates).
+fn accounting(r: &RoundReport) -> impl PartialEq + std::fmt::Debug {
+    (
+        (r.round, r.active, r.submitted, r.contributing, r.late_submissions),
+        (r.rejected_pre_decode, r.adversarial_submitted, r.adversarial_selected),
+        (r.retried_uploads, r.orphaned_slices, r.recovered_shards),
+        (r.mean_loss.to_bits(), r.bytes_up, r.bytes_down),
+        r.rejections.clone(),
+        r.lane_population,
+    )
+}
+
+fn assert_traces_identical(a: &RunOut, b: &RunOut) {
+    assert_eq!(a.traces.len(), b.traces.len());
+    for (ta, tb) in a.traces.iter().zip(&b.traces) {
+        assert_eq!(ta.len(), tb.len(), "event counts differ");
+        for ((t0, e0), (t1, e1)) in ta.iter().zip(tb) {
+            assert_eq!(t0.to_bits(), t1.to_bits(), "event time drifted");
+            assert_eq!(e0, e1, "event payload drifted");
+        }
+    }
+}
+
+#[test]
+fn telemetry_off_vs_on_is_pure_observation() {
+    let eng = Engine::new("artifacts/tiny").unwrap();
+    for n_shards in [1, 3] {
+        let off = run_net(&eng, build_params(0x7E1E, 4, n_shards, explicit_off()));
+        let on = run_net(&eng, build_params(0x7E1E, 4, n_shards, explicit_on(0)));
+
+        // the run itself is untouched: model bytes, verdicts, spine
+        assert_eq!(off.global, on.global, "global model drifted (n_shards={n_shards})");
+        for (ro, rn) in off.reports.iter().zip(&on.reports) {
+            assert_eq!(accounting(ro), accounting(rn));
+            assert_eq!(ro.lanes.len(), rn.lanes.len(), "sampling off: lanes untouched");
+        }
+        assert_traces_identical(&off, &on);
+
+        // only what is *recorded* changes
+        assert_eq!(off.trace_json, None);
+        assert_eq!(off.run_log, None);
+        assert!(covenant::telemetry::RegistrySnapshot::default().to_json() == off.snapshot_json);
+        let trace = on.trace_json.expect("enabled run records a trace");
+        assert!(trace.contains("traceEvents"));
+        let log = on.run_log.expect("enabled run records a run log");
+        assert_eq!(log.lines().count(), ROUNDS, "one JSONL record per round");
+        assert_ne!(on.snapshot_json, off.snapshot_json, "registry saw the run");
+    }
+}
+
+#[test]
+fn recorded_artifacts_bit_identical_across_pools_and_reruns() {
+    let eng = Engine::new("artifacts/tiny").unwrap();
+    let runs: Vec<RunOut> = [1usize, 2, 4]
+        .iter()
+        .map(|&threads| {
+            let pool =
+                rayon::ThreadPoolBuilder::new().num_threads(threads).build().unwrap();
+            pool.install(|| run_net(&eng, build_params(0xAB5, 4, 3, explicit_on(0))))
+        })
+        .chain(std::iter::once(run_net(&eng, build_params(0xAB5, 4, 3, explicit_on(0)))))
+        .collect();
+    let first = &runs[0];
+    assert!(first.trace_json.is_some() && first.run_log.is_some());
+    for r in &runs[1..] {
+        assert_eq!(r.global, first.global);
+        assert_eq!(r.snapshot_json, first.snapshot_json, "snapshot depends on pool size");
+        assert_eq!(r.trace_json, first.trace_json, "trace depends on pool size");
+        assert_eq!(r.run_log, first.run_log, "run log depends on pool size");
+    }
+}
+
+#[test]
+fn sampled_lane_counters_match_full_population() {
+    let eng = Engine::new("artifacts/tiny").unwrap();
+    let full = run_net(&eng, build_params(0xFACE, 6, 1, explicit_on(0)));
+    let sampled = run_net(&eng, build_params(0xFACE, 6, 1, explicit_on(2)));
+    assert_eq!(full.global, sampled.global, "sampling is pure observation too");
+    for (rf, rs) in full.reports.iter().zip(&sampled.reports) {
+        assert!(rs.lanes.len() <= 2, "lane detail truncated to the sample");
+        // exact counters survive sampling: both runs carry the counters
+        // of the FULL population, and they agree with a recount over the
+        // unsampled run's complete lane set
+        assert_eq!(rs.lane_population, rf.lane_population);
+        assert_eq!(rf.lane_population, lane_population(&rf.lanes));
+        // the sampled cohort is a subset of the full lanes, in lane order
+        let full_keys: Vec<&str> = rf.lanes.iter().map(|l| l.hotkey.as_str()).collect();
+        let mut cursor = 0;
+        for l in &rs.lanes {
+            let pos = full_keys[cursor..]
+                .iter()
+                .position(|k| *k == l.hotkey)
+                .expect("sampled lane exists in full set, order preserved");
+            cursor += pos + 1;
+        }
+    }
+}
