@@ -10,8 +10,10 @@
 //! 8-lane matmul microkernels vs blocked, codec/quantizer GB/s for the
 //! SWAR wire paths vs scalar — with the byte-identity and tolerance
 //! contracts asserted in-process), Gauntlet `score_round` serial vs rayon
-//! fan-out, and the headline number for this repo's perf trajectory:
-//! serial vs parallel round-engine throughput at 16 simulated peers.
+//! fan-out, the headline number for this repo's perf trajectory:
+//! serial vs parallel round-engine throughput at 16 simulated peers —
+//! and the swarm axis: timing-only `SwarmSim` rounds at 1k/10k/100k
+//! peers (peer-rounds/s and retained bytes/peer of the SoA state).
 //!
 //! Results are printed and written to `BENCH_hotpath.json` at the repo
 //! root, so successive PRs can track the trajectory.
@@ -34,7 +36,8 @@ use covenant::coordinator::RoundReport;
 use covenant::gauntlet::testkit::{synthetic_submission, SyntheticEvalData};
 use covenant::gauntlet::validator::Validator;
 use covenant::gauntlet::Submission;
-use covenant::netsim::{FaultConfig, FaultKind, FaultScenario, ScriptedFault};
+use covenant::netsim::{FaultConfig, FaultKind, FaultScenario, ScriptedFault, WanConfig};
+use covenant::peer::{SwarmConfig, SwarmSim};
 use covenant::runtime::kernels::KernelMode;
 use covenant::runtime::{kernels, ops, Engine};
 use covenant::sparseloco::{codec, envelope, quant, topk, Payload};
@@ -657,6 +660,45 @@ fn main() -> Result<()> {
         );
     }
 
+    // ---- swarm scale: timing-only rounds at 1k/10k/100k peers --------------
+    // Peer count as a scaling axis (SoA peer state + WAN topology): the
+    // round timings themselves are virtual, so the numbers that matter
+    // are the simulator's own throughput (peer-rounds/s of wall clock)
+    // and the retained heap per peer. Every stochastic layer is on
+    // (tiers, WAN trunks, flaps, stalls) so the event volume is
+    // realistic, and the fault config is explicit (non-pristine) so the
+    // ambient COVENANT_FAULT_SCENARIO env var can never reshape it.
+    println!("\n== swarm scale (timing-only SwarmSim rounds, SoA peer state) ==");
+    let swarm_sizes: &[usize] = if smoke { &[1_000] } else { &[1_000, 10_000, 100_000] };
+    let mut swarm_rows: Vec<serde_json::Value> = Vec::new();
+    for &n in swarm_sizes {
+        let mut cfg = SwarmConfig::default();
+        cfg.heterogeneity.enabled = true;
+        cfg.wan = WanConfig { enabled: true, region_uplink_bps: 200e6, ..Default::default() };
+        cfg.faults = FaultConfig { enabled: true, p_link_flap: 0.05, ..Default::default() };
+        cfg.p_slow_upload = 0.01;
+        let mut sim = SwarmSim::new(cfg);
+        sim.spawn(n);
+        sim.run_round(); // warm-up round grows every capacity in place
+        let s_round = bench(wu, it(5), || {
+            std::hint::black_box(sim.run_round());
+        });
+        let peer_rounds_per_s = n as f64 / s_round.mean;
+        let bytes_per_peer = sim.heap_bytes() as f64 / n as f64;
+        println!(
+            "  {n:>7} peers: {:>12.0} peer-rounds/s  ({:>7.2} ms/round, {:>6.1} retained B/peer)",
+            peer_rounds_per_s,
+            s_round.mean * 1e3,
+            bytes_per_peer
+        );
+        swarm_rows.push(json!({
+            "peers": n,
+            "round_s": s_round.mean,
+            "peer_rounds_per_s": peer_rounds_per_s,
+            "retained_bytes_per_peer": bytes_per_peer,
+        }));
+    }
+
     if smoke {
         println!("\nsmoke mode: skipping BENCH_hotpath.json write");
         println!("hotpath smoke OK");
@@ -745,6 +787,10 @@ fn main() -> Result<()> {
             "train_step_simd_vs_blocked": s_step.mean / s_step_simd.mean,
             "eval_loss_simd_s": s_eval_simd.mean,
             "eval_loss_simd_vs_blocked": s_eval.mean / s_eval_simd.mean,
+        },
+        "swarm": {
+            "note": "Timing-only SwarmSim rounds (SoA peer state, WAN topology, flaps/stalls on): simulator throughput in peer-rounds of wall clock per second, and retained heap per peer.",
+            "scales": swarm_rows,
         },
         "telemetry": {
             "note": "Registry record-path overhead (per op, averaged over a 16k-op loop) and snapshot-to-JSON latency. The disabled path is the cost every instrumented call site pays in a default-off run.",

@@ -10,7 +10,7 @@
 
 use anyhow::{Context, Result};
 
-use crate::netsim::{FaultConfig, FaultScenario, HeterogeneityConfig};
+use crate::netsim::{FaultConfig, FaultScenario, HeterogeneityConfig, WanConfig};
 use crate::runtime::kernels::{self, KernelMode};
 use crate::telemetry::TelemetryConfig;
 use crate::util::json::Json;
@@ -209,6 +209,19 @@ pub struct NetworkConfig {
     /// by default, which makes the timing model degenerate and bit-equal
     /// to the historical barrier timings.
     pub heterogeneity: HeterogeneityConfig,
+    /// WAN topology layered over the per-peer links: pure-hash region
+    /// assignment, asymmetric per-peer bandwidth spread, an inter-region
+    /// latency hop, and optionally one oversubscribed FIFO uplink trunk
+    /// per region. Disabled by default — bitwise degenerate (no regions,
+    /// base link shapes pass through unchanged, no trunks).
+    pub wan: WanConfig,
+    /// Store per-peer link state in the struct-of-arrays bank
+    /// (`peer::swarm::SwarmLinks`) instead of one `LinkPair` per peer
+    /// slot. Timing is bit-identical either way (the bank replicates the
+    /// FIFO link arithmetic expression-for-expression, pinned by
+    /// `tests/swarm_scale.rs`); the flat layout is the swarm-scale
+    /// representation. Off by default.
+    pub soa_links: bool,
 }
 
 impl Default for NetworkConfig {
@@ -220,6 +233,8 @@ impl Default for NetworkConfig {
             compute_window_s: 20.0 * 60.0,
             overlap: false,
             heterogeneity: HeterogeneityConfig::default(),
+            wan: WanConfig::default(),
+            soa_links: false,
         }
     }
 }
@@ -429,6 +444,41 @@ impl RunConfig {
                 if let Some(v) = h.opt("stall_mult") {
                     het.stall_mult = v.as_f64()?;
                 }
+            }
+            if let Some(w) = n.opt("wan") {
+                let wan = &mut c.network.wan;
+                if let Some(v) = w.opt("enabled") {
+                    wan.enabled = v.as_bool()?;
+                }
+                if let Some(v) = w.opt("n_regions") {
+                    wan.n_regions = v.as_usize()?;
+                    anyhow::ensure!(wan.n_regions >= 1, "wan.n_regions must be >= 1 (got 0)");
+                }
+                if let Some(v) = w.opt("inter_region_latency_s") {
+                    wan.inter_region_latency_s = v.as_f64()?;
+                }
+                if let Some(v) = w.opt("uplink_spread") {
+                    wan.uplink_spread = v.as_f64()?;
+                    anyhow::ensure!(
+                        (0.0..1.0).contains(&wan.uplink_spread),
+                        "wan.uplink_spread must be in [0, 1) (got {})",
+                        wan.uplink_spread
+                    );
+                }
+                if let Some(v) = w.opt("downlink_spread") {
+                    wan.downlink_spread = v.as_f64()?;
+                    anyhow::ensure!(
+                        (0.0..1.0).contains(&wan.downlink_spread),
+                        "wan.downlink_spread must be in [0, 1) (got {})",
+                        wan.downlink_spread
+                    );
+                }
+                if let Some(v) = w.opt("region_uplink_bps") {
+                    wan.region_uplink_bps = v.as_f64()?;
+                }
+            }
+            if let Some(v) = n.opt("soa_links") {
+                c.network.soa_links = v.as_bool()?;
             }
         }
         if let Some(g) = j.opt("gauntlet") {
@@ -641,6 +691,50 @@ mod tests {
         assert_eq!(c.telemetry.sample_lanes, 64);
         assert!(!c.telemetry.trace);
         assert!(c.telemetry.run_log);
+    }
+
+    #[test]
+    fn wan_and_soa_links_default_degenerate() {
+        // WAN off + AoS links must be the default so existing runs keep
+        // bit-identical rounds (pinned end-to-end in
+        // tests/swarm_scale.rs).
+        let c = RunConfig::default();
+        assert_eq!(c.network.wan, WanConfig::default());
+        assert!(!c.network.wan.enabled);
+        assert_eq!(c.network.wan.region_uplink_bps, 0.0, "0.0 = no region trunks");
+        assert!(!c.network.soa_links);
+    }
+
+    #[test]
+    fn json_wan_and_soa_links_overrides() {
+        let j = Json::parse(
+            r#"{"network": {"soa_links": true,
+                "wan": {"enabled": true, "n_regions": 8,
+                        "inter_region_latency_s": 0.25, "uplink_spread": 0.6,
+                        "downlink_spread": 0.1, "region_uplink_bps": 2e9}}}"#,
+        )
+        .unwrap();
+        let c = RunConfig::from_json(&j).unwrap();
+        assert!(c.network.soa_links);
+        let w = &c.network.wan;
+        assert!(w.enabled);
+        assert_eq!(w.n_regions, 8);
+        assert_eq!(w.inter_region_latency_s, 0.25);
+        assert_eq!(w.uplink_spread, 0.6);
+        assert_eq!(w.downlink_spread, 0.1);
+        assert_eq!(w.region_uplink_bps, 2e9);
+        // untouched network fields keep defaults
+        assert_eq!(c.network.uplink_bps, 110e6);
+    }
+
+    #[test]
+    fn bad_wan_knobs_rejected() {
+        let j = Json::parse(r#"{"network": {"wan": {"n_regions": 0}}}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err(), "zero regions rejected");
+        let j = Json::parse(r#"{"network": {"wan": {"uplink_spread": 1.0}}}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err(), "spread >= 1 rejected");
+        let j = Json::parse(r#"{"network": {"wan": {"downlink_spread": -0.1}}}"#).unwrap();
+        assert!(RunConfig::from_json(&j).is_err(), "negative spread rejected");
     }
 
     #[test]

@@ -113,7 +113,8 @@ use crate::gauntlet::loss_score::EvalBatch;
 use crate::gauntlet::validator::{EvalDataProvider, Validator};
 use crate::gauntlet::Submission;
 use crate::netsim::sched::{Event, Scheduler};
-use crate::netsim::{ComputeModel, ComputeTier, FaultModel, LinkPair, VirtualClock};
+use crate::netsim::{ComputeModel, ComputeTier, FaultModel, Link, LinkPair, VirtualClock, WanModel};
+use crate::peer::swarm::{LaneTable, SwarmLinks};
 use crate::peer::worker::{encode_payload_slices, seal_payload_slices, upload_backoff_s};
 use crate::peer::{Behavior, ChurnConfig, ChurnModel, PeerState};
 use crate::runtime::{ops, Engine, Manifest};
@@ -306,7 +307,13 @@ impl RoundReport {
 
 struct PeerSlot {
     state: PeerState,
+    /// Per-peer link pair; inert when the struct-of-arrays bank
+    /// (`Network::swarm_links`) is active, which then carries the
+    /// identical FIFO state at this slot's index.
     link: LinkPair,
+    /// WAN region this peer's uplink drains through (0 when the WAN
+    /// model is off).
+    region: usize,
     joined_round: usize,
     /// Earliest virtual time this peer can begin its next compute phase:
     /// max of its latest compute completion and download completion
@@ -511,6 +518,19 @@ pub struct Network<'e> {
     pub shards: ShardStore,
     /// Per-peer compute-duration model (tiers assigned per hotkey).
     pub compute_model: ComputeModel,
+    /// WAN topology model: pure-hash region assignment, per-peer link
+    /// shaping, inter-region latency, optional per-region uplink
+    /// trunks. Disabled by default — bitwise degenerate (every shape
+    /// passes through unchanged, no regions, no trunks).
+    pub wan: WanModel,
+    /// One FIFO uplink trunk per region when the WAN model is
+    /// oversubscribed (`wan.region_uplink_bps > 0`); empty otherwise.
+    wan_trunks: Vec<Link>,
+    /// Struct-of-arrays link bank (`NetworkConfig::soa_links`): when
+    /// active it carries every peer's FIFO link state and the per-slot
+    /// `LinkPair`s are inert. Timing is bit-identical either way
+    /// (pinned by `tests/swarm_scale.rs`).
+    swarm_links: Option<SwarmLinks>,
     /// Deterministic fault model (host crashes, stalls, upload-link
     /// flaps), with its scenario already env-resolved
     /// (`COVENANT_FAULT_SCENARIO`). Every draw is a pure function of the
@@ -614,6 +634,12 @@ impl<'e> Network<'e> {
         shard_set.set_telemetry(tele.clone());
         let compute_model =
             ComputeModel::new(p.run.seed, p.run.network.heterogeneity.clone());
+        // WAN topology: region assignment + link shaping are pure
+        // hashes of (run seed, hotkey); disabled (the default) every
+        // draw passes through unchanged and there are no trunks.
+        let wan = WanModel::new(p.run.seed, p.run.network.wan.clone());
+        let wan_trunks = wan.trunks();
+        let swarm_links = p.run.network.soa_links.then(SwarmLinks::new);
 
         let mut net = Network {
             eng,
@@ -624,6 +650,9 @@ impl<'e> Network<'e> {
             auth: AuthVerifier::new(),
             shards,
             compute_model,
+            wan,
+            wan_trunks,
+            swarm_links,
             faults,
             shard_set,
             telemetry: tele,
@@ -696,17 +725,33 @@ impl<'e> Network<'e> {
         };
         self.chain.register_key(&hotkey, registered.verifying())?;
         self.store.create_bucket(&hotkey, &format!("cred-{hotkey}"))?;
-        let mut link = LinkPair::new(
+        // WAN shaping: with the model off the shape is the base config
+        // bit-for-bit and the region is 0, so default runs are
+        // unchanged; enabled, the peer gets its pure-hash region and
+        // asymmetric bandwidth draw.
+        let shape = self.wan.link_shape(
+            &hotkey,
             self.p.run.network.uplink_bps,
             self.p.run.network.downlink_bps,
             self.p.run.network.latency_s,
         );
+        let region = self.wan.region(&hotkey);
+        let mut link = LinkPair::new(shape.up_bps, shape.down_bps, shape.latency_s);
         // Joining peers download the dense model (and shards) in the
         // background; charge the downlink. The completion gates their
-        // first compute start in overlap mode.
+        // first compute start in overlap mode. The charge lands on
+        // whichever link representation is authoritative.
         let dense = self.global_params.len() * 4;
-        let synced_at = link
-            .download(&self.clock, dense + self.p.assigned_per_peer * self.shards.shard_bytes());
+        let join_bytes = dense + self.p.assigned_per_peer * self.shards.shard_bytes();
+        let now = self.clock.now();
+        let slot_idx = self.peers.len();
+        let synced_at = match &mut self.swarm_links {
+            Some(sl) => {
+                sl.push(shape.up_bps, shape.down_bps, shape.latency_s);
+                sl.down_transfer(slot_idx, now, join_bytes)
+            }
+            None => link.download(&self.clock, join_bytes),
+        };
         let tier = self.compute_model.tier(&hotkey);
         let state = PeerState::join(
             hotkey,
@@ -721,6 +766,7 @@ impl<'e> Network<'e> {
         self.peers.push(PeerSlot {
             state,
             link,
+            region,
             joined_round: self.round + 1,
             ready_at: synced_at,
             offload: OffloadManager::new(self.global_params.len(), 8),
@@ -789,6 +835,10 @@ impl<'e> Network<'e> {
                 self.chain.deregister(hk)?;
                 let _ = self.store.delete_bucket(hk);
                 self.peers.remove(i);
+                // keep the SoA bank index-aligned with the slot vec
+                if let Some(sl) = &mut self.swarm_links {
+                    sl.remove(i);
+                }
             }
         }
         for _ in 0..ev.joins {
@@ -872,20 +922,13 @@ impl<'e> Network<'e> {
         let compute_end = t_start + window;
         let deadline = compute_end + self.p.comm_deadline_s;
 
-        let mut lanes: Vec<PeerLane> = self
-            .peers
-            .iter()
-            .map(|s| PeerLane {
-                uid: s.state.uid,
-                hotkey: s.state.hotkey.clone(),
-                tier: s.state.tier,
-                compute: None,
-                upload: None,
-                download: None,
-                late: false,
-                retry_at: Vec::new(),
-            })
-            .collect();
+        // SoA lane table: segments land in flat arrays during the event
+        // waves; the exact whole-population counters come straight off
+        // the arrays, and `PeerLane`s (with their hotkey strings) are
+        // materialized only for the kept cohort at the end of the round.
+        // At swarm scale the one O(peers) metrics pass per round is the
+        // integer counter fold — never per-peer string assembly.
+        let mut lane_tab = LaneTable::with_len(n_peers);
 
         let mut sched = Scheduler::new(VirtualClock::at(t_start));
         // Fault plan for this round. Host crashes land at round start and
@@ -921,7 +964,7 @@ impl<'e> Network<'e> {
                 let dur =
                     self.compute_model.duration(&slot.state.hotkey, round, window);
                 sched.schedule_at(start + dur, Event::ComputeDone { peer: i });
-                lanes[i].compute = Some((start, start + dur));
+                lane_tab.set_compute(i, start, start + dur);
                 stalled[i] = o.slow;
                 if slot.offload.phase != Phase::Compute {
                     slot.offload.enter_compute()?;
@@ -941,9 +984,12 @@ impl<'e> Network<'e> {
                         // the DeadlineHit event is where it is cut off.
                         // The uplink stays occupied until then and the
                         // submission's arrival time is +inf -> LateUpload.
-                        slot.link.up.release_at(deadline.max(t));
+                        match &mut self.swarm_links {
+                            Some(sl) => sl.up_release_at(peer, deadline.max(t)),
+                            None => slot.link.up.release_at(deadline.max(t)),
+                        }
                         o.sub.uploaded_at = f64::INFINITY;
-                        lanes[peer].upload = Some((t, f64::INFINITY));
+                        lane_tab.set_upload(peer, t, f64::INFINITY);
                     } else if flaps_on {
                         // Flap-prone uplink: each slice transfer may be
                         // cut mid-flight (pure per-attempt draw); the
@@ -954,7 +1000,10 @@ impl<'e> Network<'e> {
                         // slices are never attempted, arrival is +inf,
                         // and the slices that *did* land are orphaned in
                         // the object store (`FastCheck::OrphanedUpload`).
-                        let up_begin = t.max(slot.link.up.busy_until());
+                        let up_begin = match &self.swarm_links {
+                            Some(sl) => t.max(sl.up_busy_until(peer)),
+                            None => t.max(slot.link.up.busy_until()),
+                        };
                         let n_slices = o.slices.len();
                         let hotkey = slot.state.hotkey.clone();
                         let mut done = t;
@@ -963,9 +1012,29 @@ impl<'e> Network<'e> {
                             let mut attempt: u32 = 0;
                             let mut req = t;
                             loop {
-                                let start = req.max(slot.link.up.busy_until());
-                                let fin = slot.link.up.transfer(req, wire.len());
+                                let (start, fin) = match &mut self.swarm_links {
+                                    Some(sl) => (
+                                        req.max(sl.up_busy_until(peer)),
+                                        sl.up_transfer(peer, req, wire.len()),
+                                    ),
+                                    None => (
+                                        req.max(slot.link.up.busy_until()),
+                                        slot.link.up.transfer(req, wire.len()),
+                                    ),
+                                };
                                 if !fault_model.link_flaps(&hotkey, s, round, attempt) {
+                                    // Oversubscribed region trunk: the
+                                    // slice drains through the region's
+                                    // shared FIFO uplink after the
+                                    // peer's own link (serializes; never
+                                    // reorders completions). Empty
+                                    // unless the WAN model says so.
+                                    let fin = if self.wan_trunks.is_empty() {
+                                        fin
+                                    } else {
+                                        let r = slot.region;
+                                        self.wan_trunks[r].transfer(fin, wire.len())
+                                    };
                                     slice_done[peer][s] = fin;
                                     done = fin;
                                     if s + 1 < n_slices {
@@ -979,7 +1048,14 @@ impl<'e> Network<'e> {
                                 let frac =
                                     fault_model.flap_cut_frac(&hotkey, s, round, attempt);
                                 let cut_t = start + frac * (fin - start);
-                                slot.link.up.cut_at(cut_t);
+                                match &mut self.swarm_links {
+                                    Some(sl) => {
+                                        sl.up_cut_at(peer, cut_t);
+                                    }
+                                    None => {
+                                        slot.link.up.cut_at(cut_t);
+                                    }
+                                }
                                 if attempt >= fault_model.cfg.max_upload_retries {
                                     abandoned = true;
                                     break 'slices;
@@ -991,7 +1067,7 @@ impl<'e> Network<'e> {
                                         fault_model.cfg.retry_backoff_s,
                                         attempt,
                                     );
-                                lanes[peer].retry_at.push(req);
+                                lane_tab.push_retry(peer, req);
                                 sched.schedule_at(
                                     req,
                                     Event::UploadRetry { peer, shard: s, attempt },
@@ -1001,9 +1077,9 @@ impl<'e> Network<'e> {
                         if abandoned {
                             orphans[peer] = true;
                             o.sub.uploaded_at = f64::INFINITY;
-                            lanes[peer].upload = Some((up_begin, f64::INFINITY));
+                            lane_tab.set_upload(peer, up_begin, f64::INFINITY);
                         } else {
-                            lanes[peer].upload = Some((up_begin, done));
+                            lane_tab.set_upload(peer, up_begin, done);
                             sched.schedule_at(done, Event::UploadDone { peer });
                             if sign
                                 && slot.state.behavior == Behavior::ShardSpammer
@@ -1021,11 +1097,26 @@ impl<'e> Network<'e> {
                         // historical UploadDone, so a single shard means a
                         // single transfer of the whole payload — the
                         // pre-sharding arithmetic bit for bit.
-                        let begin = t.max(slot.link.up.busy_until());
+                        let begin = match &self.swarm_links {
+                            Some(sl) => t.max(sl.up_busy_until(peer)),
+                            None => t.max(slot.link.up.busy_until()),
+                        };
                         let n_slices = o.slices.len();
                         let mut done = t;
                         for (s, wire) in o.slices.iter().enumerate() {
-                            done = slot.link.up.transfer(t, wire.len());
+                            done = match &mut self.swarm_links {
+                                Some(sl) => sl.up_transfer(peer, t, wire.len()),
+                                None => slot.link.up.transfer(t, wire.len()),
+                            };
+                            // Oversubscribed region trunk (empty unless
+                            // the WAN model is on): the slice drains
+                            // through the region's shared FIFO uplink
+                            // after the peer's own link — serializes,
+                            // never reorders completions.
+                            if !self.wan_trunks.is_empty() {
+                                let r = slot.region;
+                                done = self.wan_trunks[r].transfer(done, wire.len());
+                            }
                             slice_done[peer][s] = done;
                             if s + 1 < n_slices {
                                 sched.schedule_at(
@@ -1034,7 +1125,7 @@ impl<'e> Network<'e> {
                                 );
                             }
                         }
-                        lanes[peer].upload = Some((begin, done));
+                        lane_tab.set_upload(peer, begin, done);
                         sched.schedule_at(done, Event::UploadDone { peer });
                         // Shard-targeted spam is visible on the event
                         // spine: the junk slice landing on its target
@@ -1187,7 +1278,7 @@ impl<'e> Network<'e> {
         for (j, v) in verdict.per_peer.iter().enumerate() {
             if matches!(v.fast, FastCheck::Late | FastCheck::LateUpload) {
                 late_submissions += 1;
-                lanes[lane_of_submission[j]].late = true;
+                lane_tab.set_late(lane_of_submission[j]);
             }
         }
 
@@ -1373,9 +1464,17 @@ impl<'e> Network<'e> {
                     .filter(|s| s.uid == slot.state.uid)
                     .map(|s| s.wire_bytes)
                     .sum();
-                let begin = download_start.max(slot.link.down.busy_until());
-                let done = slot.link.down.transfer(download_start, total_sel - own);
-                lanes[si].download = Some((begin, done));
+                let (begin, done) = match &mut self.swarm_links {
+                    Some(sl) => (
+                        download_start.max(sl.down_busy_until(si)),
+                        sl.down_transfer(si, download_start, total_sel - own),
+                    ),
+                    None => (
+                        download_start.max(slot.link.down.busy_until()),
+                        slot.link.down.transfer(download_start, total_sel - own),
+                    ),
+                };
+                lane_tab.set_download(si, begin, done);
                 sched2.schedule_at(done, Event::DownloadDone { peer: si });
                 bytes_down += (total_sel - own) as u64;
                 // Barrier: comm ends when the slowest submitter has
@@ -1499,15 +1598,25 @@ impl<'e> Network<'e> {
                     .unwrap_or(false)
             })
             .count();
-        // Exact whole-population lane counters are taken over the FULL
-        // lane set; only afterwards may telemetry sampling truncate
-        // `lanes` to the deterministic bottom-k cohort (O(sample) report
-        // cost at swarm scale). With sampling off, lanes are untouched.
-        let lane_population = telemetry::lane_population(&lanes);
-        let lanes = match tele.sample_lanes() {
-            Some(k) => telemetry::sample_lanes(run_seed, lanes, k),
-            None => lanes,
+        // Exact whole-population lane counters come straight off the
+        // SoA arrays (the one O(peers) metrics pass per round — a few
+        // integer adds per lane, no strings). Only afterwards are
+        // `PeerLane`s materialized, and only for the kept cohort: with
+        // sampling on, the deterministic bottom-k indices; off, every
+        // lane — byte-identical to the historical per-peer assembly.
+        let lane_population = lane_tab.population();
+        let keep: Vec<usize> = match tele.sample_lanes() {
+            Some(k) => telemetry::sample_indices(
+                run_seed,
+                self.peers.iter().map(|s| s.state.hotkey.as_str()),
+                k,
+            ),
+            None => (0..n_peers).collect(),
         };
+        let lanes = lane_tab.materialize(&keep, |i| {
+            let s = &self.peers[i].state;
+            (s.uid, s.hotkey.clone(), s.tier)
+        });
         let report = RoundReport {
             round,
             t_start,

@@ -23,6 +23,15 @@
 //! lanes draw the host-crash detection marker (`X`), the takeover span
 //! (`t`, detection until the replacement host rebuilt the shard's state
 //! from the object store), and a `REASSIGNED from->to` annotation.
+//!
+//! Swarm-scale contract: `RoundReport::lanes` holds only the
+//! *materialized* lane cohort — with telemetry lane sampling on, the
+//! deterministic bottom-k subset, assembled from the round engine's
+//! struct-of-arrays lane table (`peer::swarm::LaneTable`). Everything
+//! here is O(|lanes|), so rendering a 100k-peer round costs O(sample),
+//! never O(peers); exact whole-population counts live in
+//! `RoundReport::lane_population`, which is computed off the flat
+//! arrays without materializing a single [`PeerLane`].
 
 use crate::coordinator::{PeerLane, RoundReport, ShardLane};
 

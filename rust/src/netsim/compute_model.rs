@@ -81,12 +81,26 @@ pub struct ComputeModel {
 /// from the same pure hash so faults, like hardware tiers, never consume
 /// a shared RNG stream.
 pub(crate) fn mix(seed: u64, hotkey: &str, tag: u64) -> u64 {
+    mix_finish(mix_prefix(seed, hotkey), tag)
+}
+
+/// The `(seed, hotkey)` half of [`mix`], split out so swarm-scale callers
+/// can hash a hotkey's bytes once at join time and finish per round with
+/// [`mix_finish`] — `mix(seed, hk, tag) == mix_finish(mix_prefix(seed, hk), tag)`
+/// bit-for-bit, so prefix-based draws are interchangeable with string draws.
+pub(crate) fn mix_prefix(seed: u64, hotkey: &str) -> u64 {
     let mut h = 0xcbf29ce484222325u64 ^ seed.wrapping_mul(0x9E3779B97F4A7C15);
     for b in hotkey.bytes() {
         h ^= b as u64;
         h = h.wrapping_mul(0x100000001b3);
     }
-    h ^= tag.wrapping_mul(0xD1B54A32D192ED03);
+    h
+}
+
+/// The per-draw half of [`mix`]: fold `tag` into a [`mix_prefix`] state and
+/// run the splitmix finalizer.
+pub(crate) fn mix_finish(prefix: u64, tag: u64) -> u64 {
+    let mut h = prefix ^ tag.wrapping_mul(0xD1B54A32D192ED03);
     h ^= h >> 29;
     h = h.wrapping_mul(0xBF58476D1CE4E5B9);
     h ^ (h >> 31)
@@ -103,13 +117,27 @@ impl ComputeModel {
         Self { seed, cfg }
     }
 
+    /// The `mix_prefix` of a hotkey under this model's seed. Hash the
+    /// string once at join time, then draw per round with the `*_from`
+    /// variants — bit-identical to the string-keyed methods, without
+    /// re-walking hotkey bytes on every draw (the O(peers · rounds)
+    /// string-hash cost that dominates at swarm scale).
+    pub fn prefix(&self, hotkey: &str) -> u64 {
+        mix_prefix(self.seed, hotkey)
+    }
+
     /// The tier a hotkey belongs to — a pure function of (seed, hotkey),
     /// so a peer's hardware never changes between rounds.
     pub fn tier(&self, hotkey: &str) -> ComputeTier {
+        self.tier_from(mix_prefix(self.seed, hotkey))
+    }
+
+    /// [`ComputeModel::tier`] keyed by a precomputed [`ComputeModel::prefix`].
+    pub fn tier_from(&self, prefix: u64) -> ComputeTier {
         if !self.cfg.enabled {
             return ComputeTier::Median;
         }
-        let u = unit(mix(self.seed, hotkey, 0x7E9));
+        let u = unit(mix_finish(prefix, 0x7E9));
         if u < self.cfg.fast_frac {
             ComputeTier::Fast
         } else if u < self.cfg.fast_frac + self.cfg.straggler_frac {
@@ -131,13 +159,19 @@ impl ComputeModel {
     /// Compute duration for `hotkey` in `round`, given the nominal compute
     /// window. Degenerate model: returns `window_s` unchanged (bit-exact).
     pub fn duration(&self, hotkey: &str, round: usize, window_s: f64) -> f64 {
+        self.duration_from(mix_prefix(self.seed, hotkey), round, window_s)
+    }
+
+    /// [`ComputeModel::duration`] keyed by a precomputed
+    /// [`ComputeModel::prefix`] — the swarm hot-path variant.
+    pub fn duration_from(&self, prefix: u64, round: usize, window_s: f64) -> f64 {
         if !self.cfg.enabled {
             return window_s;
         }
-        let mut d = window_s * self.multiplier(self.tier(hotkey));
-        let j = unit(mix(self.seed, hotkey, 0x11D ^ ((round as u64) << 8)));
+        let mut d = window_s * self.multiplier(self.tier_from(prefix));
+        let j = unit(mix_finish(prefix, 0x11D ^ ((round as u64) << 8)));
         d *= 1.0 + self.cfg.jitter_frac * (2.0 * j - 1.0);
-        let s = unit(mix(self.seed, hotkey, 0x57A11 ^ (round as u64).wrapping_mul(0x9E37)));
+        let s = unit(mix_finish(prefix, 0x57A11 ^ (round as u64).wrapping_mul(0x9E37)));
         if s < self.cfg.p_stall {
             d *= self.cfg.stall_mult;
         }
@@ -151,6 +185,28 @@ mod tests {
 
     fn enabled_cfg() -> HeterogeneityConfig {
         HeterogeneityConfig { enabled: true, ..Default::default() }
+    }
+
+    #[test]
+    fn prefix_split_matches_string_mix_bitwise() {
+        for (seed, hk) in [(0u64, "hk-00000"), (0xC0DE, "hk-12345"), (u64::MAX, "swm-000007")] {
+            let p = mix_prefix(seed, hk);
+            for tag in [0u64, 0x7E9, 0x11D, 0x57A11, u64::MAX] {
+                assert_eq!(mix(seed, hk, tag), mix_finish(p, tag));
+            }
+        }
+        // the model-level variants agree too, enabled and disabled
+        for cfg in [HeterogeneityConfig::default(), enabled_cfg()] {
+            let m = ComputeModel::new(0xBEEF, cfg);
+            let p = m.prefix("hk-00042");
+            assert_eq!(m.tier("hk-00042"), m.tier_from(p));
+            for r in 0..8 {
+                assert_eq!(
+                    m.duration("hk-00042", r, 1200.0).to_bits(),
+                    m.duration_from(p, r, 1200.0).to_bits()
+                );
+            }
+        }
     }
 
     #[test]

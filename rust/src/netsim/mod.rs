@@ -33,6 +33,13 @@
 //! [`Event::UploadRetry`] trace events plus the recovery behaviour in
 //! `coordinator::shard`. With faults off the layer draws nothing and
 //! emits nothing, so degenerate rounds stay bit-identical.
+//!
+//! At swarm scale, [`wan::WanModel`] layers a WAN topology on top of
+//! the per-peer links: pure-hash region assignment, asymmetric per-peer
+//! bandwidth spread, an inter-region latency hop, and optionally one
+//! oversubscribed FIFO uplink trunk per region. Disabled (the default)
+//! it is bitwise degenerate — no regions, base link shapes unchanged,
+//! no trunks.
 
 #![deny(missing_docs)]
 
@@ -42,9 +49,11 @@ pub mod faults;
 pub mod link;
 pub mod sched;
 pub mod testkit;
+pub mod wan;
 
 pub use clock::VirtualClock;
 pub use compute_model::{ComputeModel, ComputeTier, HeterogeneityConfig};
 pub use faults::{FaultConfig, FaultKind, FaultModel, FaultPlan, FaultScenario, ScriptedFault};
 pub use link::{Link, LinkPair};
 pub use sched::{Event, Scheduler};
+pub use wan::{LinkShape, WanConfig, WanModel};

@@ -154,6 +154,25 @@ impl Scheduler {
         self.clock.now()
     }
 
+    /// Rewind this scheduler for a fresh wave starting at `t`: drop any
+    /// still-queued events (the binary heap keeps its capacity, so a
+    /// swarm-scale round reuses one allocation across waves and rounds
+    /// instead of building a new heap per wave), detach a new cursor at
+    /// `t`, and restart the tie-break sequence. `processed` keeps
+    /// accumulating — it is lifetime observability, not wave state.
+    pub fn reset(&mut self, t: f64) {
+        self.heap.clear();
+        self.clock = VirtualClock::at(t);
+        self.seq = 0;
+    }
+
+    /// Current queue capacity (events the heap can hold without
+    /// reallocating) — lets swarm-scale callers assert steady-state
+    /// rounds stop growing memory.
+    pub fn capacity(&self) -> usize {
+        self.heap.capacity()
+    }
+
     /// Schedule `ev` at absolute time `t`. Times earlier than the cursor
     /// are clamped to it (an event cannot fire in the past).
     pub fn schedule_at(&mut self, t: f64, ev: Event) {
@@ -261,6 +280,40 @@ mod tests {
         s.schedule_in(2.5, Event::DeadlineHit);
         let (t, _) = s.pop().unwrap();
         assert_eq!(t, 12.5);
+    }
+
+    #[test]
+    fn reset_reuses_heap_and_matches_fresh_scheduler() {
+        let mut s = Scheduler::new(VirtualClock::at(100.0));
+        for i in 0..64 {
+            s.schedule_at(100.0 + i as f64, Event::ComputeDone { peer: i });
+        }
+        while s.pop().is_some() {}
+        let cap = s.capacity();
+        assert!(cap >= 64);
+        // reset rewinds the cursor and keeps the heap allocation
+        s.reset(5.0);
+        assert_eq!(s.capacity(), cap, "reset must retain heap capacity");
+        assert!(s.is_empty());
+        assert_eq!(s.now(), 5.0);
+        assert_eq!(s.processed, 64, "processed is lifetime, not wave, state");
+        // a reset scheduler pops the same (t, seq) order as a fresh one
+        let mut fresh = Scheduler::new(VirtualClock::at(5.0));
+        for sch in [&mut s, &mut fresh] {
+            sch.schedule_at(9.0, Event::ComputeDone { peer: 1 });
+            sch.schedule_at(9.0, Event::ComputeDone { peer: 2 });
+            sch.schedule_at(6.0, Event::DeadlineHit);
+        }
+        loop {
+            match (s.pop(), fresh.pop()) {
+                (None, None) => break,
+                (a, b) => assert_eq!(a, b),
+            }
+        }
+        // pending events are dropped by reset, not replayed
+        s.schedule_at(50.0, Event::DeadlineHit);
+        s.reset(0.0);
+        assert!(s.pop().is_none());
     }
 
     #[test]

@@ -1,0 +1,287 @@
+//! WAN topology model: regions, asymmetric per-peer links, and
+//! oversubscribed region uplink trunks.
+//!
+//! At swarm scale (10k–100k+ peers) the flat "every peer gets the §4.3
+//! reference link" model stops being representative: real swarms span
+//! geographic regions with an extra latency hop to the object store,
+//! per-peer bandwidth spread (consumer uplinks are the narrow,
+//! *asymmetric* side), and oversubscribed regional backhaul that
+//! serializes concurrent uploads. This module layers all three onto the
+//! existing [`Link`](super::link::Link) FIFO model without touching it:
+//!
+//! * **Regions** — every hotkey maps to a region by a pure hash of
+//!   `(run seed, hotkey)` (the same `mix` construction the compute-tier
+//!   and fault models use). Region `0` is the object store's home
+//!   region; peers elsewhere pay `inter_region_latency_s` extra on
+//!   every transfer's latency floor.
+//! * **Asymmetric spread** — per-peer up/down bandwidth multipliers
+//!   drawn from independent pure-hash taps, with separate spread knobs
+//!   for each direction (uplinks vary more than downlinks).
+//! * **Oversubscribed uplink trunks** — optionally, each region gets
+//!   one shared FIFO [`Link`](super::link::Link) of
+//!   `region_uplink_bps`; an upload occupies its peer's own uplink
+//!   first and then the region trunk. Because the trunk *is* a FIFO
+//!   `Link`, serialization can delay completions but can never reorder
+//!   them — the property test pins this.
+//!
+//! Like the compute-tier and fault layers, every draw is a pure
+//! function of `(run seed, hotkey)`: **no RNG stream is consumed**, so
+//! enabling the WAN model perturbs only simulated timing, never the
+//! training math or any peer's behavioural randomness. Disabled (the
+//! default), `link_shape` returns its inputs bit-for-bit unchanged,
+//! every region is `0`, and no trunks exist — rounds are byte-identical
+//! to the flat model.
+
+use super::compute_model::{mix_finish, mix_prefix, unit};
+use super::link::Link;
+
+/// Hash tag for the region draw (see `compute_model::mix`).
+const TAG_REGION: u64 = 0x9E61_0472;
+/// Hash tag for the per-peer uplink-bandwidth multiplier draw.
+const TAG_UPLINK: u64 = 0x0B75_110A;
+/// Hash tag for the per-peer downlink-bandwidth multiplier draw.
+const TAG_DOWNLINK: u64 = 0x0B75_22D0;
+
+/// WAN topology knobs (configured via `config::run::NetworkConfig`,
+/// JSON block `network.wan`). Default-off: the degenerate config maps
+/// every peer to region 0 with its base link, bit-identical to the flat
+/// model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WanConfig {
+    /// Master switch. Off = no regions, no bandwidth spread, no trunks;
+    /// `link_shape` returns base values bit-for-bit.
+    pub enabled: bool,
+    /// Number of regions peers hash into. Region 0 is the object
+    /// store's home region (no extra latency).
+    pub n_regions: usize,
+    /// Extra latency-floor seconds on every transfer for peers outside
+    /// region 0 (one WAN hop to the store).
+    pub inter_region_latency_s: f64,
+    /// Per-peer uplink bandwidth multiplier is drawn uniformly from
+    /// `[1 - uplink_spread, 1]`; uplinks are the narrow, high-variance
+    /// side of consumer links.
+    pub uplink_spread: f64,
+    /// Per-peer downlink multiplier drawn from `[1 - downlink_spread, 1]`.
+    pub downlink_spread: f64,
+    /// Shared FIFO uplink trunk bandwidth per region (oversubscribed
+    /// backhaul); `0.0` (the default) = uncontended, no trunks.
+    pub region_uplink_bps: f64,
+}
+
+impl Default for WanConfig {
+    fn default() -> Self {
+        Self {
+            enabled: false,
+            n_regions: 4,
+            inter_region_latency_s: 0.12,
+            uplink_spread: 0.5,
+            downlink_spread: 0.25,
+            region_uplink_bps: 0.0,
+        }
+    }
+}
+
+/// A peer's WAN-shaped link parameters, feeding
+/// [`LinkPair::new`](super::link::LinkPair::new).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkShape {
+    /// Uplink bits per second after the per-peer multiplier.
+    pub up_bps: f64,
+    /// Downlink bits per second after the per-peer multiplier.
+    pub down_bps: f64,
+    /// Latency floor, seconds, including the inter-region hop if any.
+    pub latency_s: f64,
+}
+
+/// Stateless WAN model seeded from the run seed. All draws are pure
+/// hashes of `(seed, hotkey)` — stable under churn (a hotkey that
+/// leaves and rejoins lands in the same region with the same link) and
+/// free of RNG-stream consumption.
+#[derive(Debug, Clone)]
+pub struct WanModel {
+    seed: u64,
+    /// The topology knobs in effect.
+    pub cfg: WanConfig,
+}
+
+impl WanModel {
+    /// A WAN model for the given run seed and knobs.
+    pub fn new(seed: u64, cfg: WanConfig) -> Self {
+        Self { seed, cfg }
+    }
+
+    /// Whether the topology is active (disabled = flat model).
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// The `(seed, hotkey)` hash prefix — hash once at join time, draw
+    /// per call with the `*_from` variants (bit-identical to the
+    /// string-keyed methods; same split as `ComputeModel::prefix`).
+    pub fn prefix(&self, hotkey: &str) -> u64 {
+        mix_prefix(self.seed, hotkey)
+    }
+
+    /// The region a hotkey lives in — a pure function of
+    /// `(seed, hotkey)`, so it never changes across rounds, leaves, or
+    /// rejoins. Always `0` when disabled.
+    pub fn region(&self, hotkey: &str) -> usize {
+        self.region_from(mix_prefix(self.seed, hotkey))
+    }
+
+    /// [`WanModel::region`] keyed by a precomputed [`WanModel::prefix`].
+    pub fn region_from(&self, prefix: u64) -> usize {
+        if !self.cfg.enabled || self.cfg.n_regions <= 1 {
+            return 0;
+        }
+        (mix_finish(prefix, TAG_REGION) % self.cfg.n_regions as u64) as usize
+    }
+
+    /// Shape a peer's link from the base (flat-model) parameters.
+    /// Disabled, the base values come back bit-for-bit unchanged — the
+    /// degeneracy the scale-invariance suite pins.
+    pub fn link_shape(
+        &self,
+        hotkey: &str,
+        up_bps: f64,
+        down_bps: f64,
+        latency_s: f64,
+    ) -> LinkShape {
+        self.shape_from(mix_prefix(self.seed, hotkey), up_bps, down_bps, latency_s)
+    }
+
+    /// [`WanModel::link_shape`] keyed by a precomputed [`WanModel::prefix`].
+    pub fn shape_from(&self, prefix: u64, up_bps: f64, down_bps: f64, latency_s: f64) -> LinkShape {
+        if !self.cfg.enabled {
+            return LinkShape { up_bps, down_bps, latency_s };
+        }
+        let up = up_bps * (1.0 - self.cfg.uplink_spread * unit(mix_finish(prefix, TAG_UPLINK)));
+        let down =
+            down_bps * (1.0 - self.cfg.downlink_spread * unit(mix_finish(prefix, TAG_DOWNLINK)));
+        let latency = if self.region_from(prefix) == 0 {
+            latency_s
+        } else {
+            latency_s + self.cfg.inter_region_latency_s
+        };
+        LinkShape { up_bps: up, down_bps: down, latency_s: latency }
+    }
+
+    /// The per-region shared uplink trunks, one FIFO [`Link`] per
+    /// region, or an empty vec when trunking is off (disabled model or
+    /// `region_uplink_bps == 0`). Trunks have a zero latency floor —
+    /// the inter-region hop is already charged on the peer's own link —
+    /// so an uncontended trunk only delays a transfer by its
+    /// serialization time.
+    pub fn trunks(&self) -> Vec<Link> {
+        if !self.cfg.enabled || self.cfg.region_uplink_bps <= 0.0 {
+            return Vec::new();
+        }
+        (0..self.cfg.n_regions.max(1))
+            .map(|_| Link::new(self.cfg.region_uplink_bps, 0.0))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enabled_cfg() -> WanConfig {
+        WanConfig { enabled: true, ..Default::default() }
+    }
+
+    #[test]
+    fn disabled_model_is_bitwise_degenerate() {
+        let m = WanModel::new(0xC0DE, WanConfig::default());
+        assert!(!m.enabled());
+        assert!(m.trunks().is_empty());
+        for hk in ["hk-00000", "hk-00917", "swm-000003"] {
+            assert_eq!(m.region(hk), 0);
+            let s = m.link_shape(hk, 110e6, 500e6, 0.2);
+            assert_eq!(s.up_bps.to_bits(), 110e6f64.to_bits());
+            assert_eq!(s.down_bps.to_bits(), 500e6f64.to_bits());
+            assert_eq!(s.latency_s.to_bits(), 0.2f64.to_bits());
+        }
+    }
+
+    #[test]
+    fn draws_are_pure_functions_of_seed_and_hotkey() {
+        let m = WanModel::new(7, enabled_cfg());
+        for i in 0..50 {
+            let hk = format!("hk-{i:05}");
+            let r = m.region(&hk);
+            let s = m.link_shape(&hk, 110e6, 500e6, 0.2);
+            // repeat draws, fresh model, and prefix variants all agree
+            assert_eq!(r, m.region(&hk));
+            assert_eq!(r, WanModel::new(7, enabled_cfg()).region(&hk));
+            let p = m.prefix(&hk);
+            assert_eq!(r, m.region_from(p));
+            let s2 = m.shape_from(p, 110e6, 500e6, 0.2);
+            assert_eq!(s.up_bps.to_bits(), s2.up_bps.to_bits());
+            assert_eq!(s.down_bps.to_bits(), s2.down_bps.to_bits());
+            assert_eq!(s.latency_s.to_bits(), s2.latency_s.to_bits());
+            assert!(r < 4);
+        }
+        // the seed feeds every draw
+        let other = WanModel::new(8, enabled_cfg());
+        let moved = (0..64).any(|i| {
+            let hk = format!("hk-{i:05}");
+            other.region(&hk) != m.region(&hk)
+        });
+        assert!(moved, "a different seed must reshuffle regions");
+    }
+
+    #[test]
+    fn regions_cover_and_latency_splits_home_vs_remote() {
+        let m = WanModel::new(3, enabled_cfg());
+        let mut seen = [0usize; 4];
+        for i in 0..400 {
+            let hk = format!("hk-{i:05}");
+            let r = m.region(&hk);
+            seen[r] += 1;
+            let s = m.link_shape(&hk, 110e6, 500e6, 0.2);
+            if r == 0 {
+                assert_eq!(s.latency_s.to_bits(), 0.2f64.to_bits(), "home region: no hop");
+            } else {
+                assert!((s.latency_s - 0.32).abs() < 1e-12, "remote: one WAN hop");
+            }
+            // spreads bound the multipliers
+            assert!(s.up_bps <= 110e6 && s.up_bps >= 0.5 * 110e6);
+            assert!(s.down_bps <= 500e6 && s.down_bps >= 0.75 * 500e6);
+        }
+        assert!(seen.iter().all(|&n| n > 0), "400 hotkeys must cover all 4 regions: {seen:?}");
+    }
+
+    #[test]
+    fn uplink_spread_is_wider_than_downlink_spread() {
+        // asymmetry: the default knobs give uplinks more variance
+        let m = WanModel::new(11, enabled_cfg());
+        let (mut up_lo, mut down_lo) = (f64::MAX, f64::MAX);
+        for i in 0..500 {
+            let s = m.link_shape(&format!("hk-{i:05}"), 1.0, 1.0, 0.0);
+            up_lo = up_lo.min(s.up_bps);
+            down_lo = down_lo.min(s.down_bps);
+        }
+        assert!(up_lo < 0.55 && up_lo >= 0.5, "uplink floor ~0.5, got {up_lo}");
+        assert!(down_lo < 0.80 && down_lo >= 0.75, "downlink floor ~0.75, got {down_lo}");
+    }
+
+    #[test]
+    fn trunks_exist_only_when_oversubscribed() {
+        let mut cfg = enabled_cfg();
+        assert!(WanModel::new(1, cfg.clone()).trunks().is_empty());
+        cfg.region_uplink_bps = 1e9;
+        let trunks = WanModel::new(1, cfg).trunks();
+        assert_eq!(trunks.len(), 4);
+        assert!(trunks.iter().all(|t| t.bps == 1e9 && t.latency_s == 0.0));
+    }
+
+    #[test]
+    fn single_region_topology_is_all_home() {
+        let cfg = WanConfig { n_regions: 1, ..enabled_cfg() };
+        let m = WanModel::new(9, cfg);
+        for i in 0..32 {
+            assert_eq!(m.region(&format!("hk-{i:05}")), 0);
+        }
+    }
+}

@@ -1,8 +1,16 @@
 //! Peers: replica state, honest + adversarial behaviours, and the churn
 //! model for dynamic permissionless participation (paper §4.4, App. A).
+//!
+//! At swarm scale (10k–100k+ peers) the per-peer round state moves to
+//! the struct-of-arrays storage in [`swarm`]: a flat link bank that
+//! replicates the FIFO link arithmetic bit-for-bit, a lane table with
+//! exact whole-population counters, and a timing-only round driver
+//! with zero per-peer heap allocation in steady state.
 
 pub mod churn;
+pub mod swarm;
 pub mod worker;
 
 pub use churn::{ChurnConfig, ChurnModel};
+pub use swarm::{LaneTable, SwarmConfig, SwarmLinks, SwarmRoster, SwarmRoundStats, SwarmSim};
 pub use worker::{Behavior, PeerState};

@@ -51,7 +51,10 @@ use crate::coordinator::network::RoundReport;
 use crate::netsim::sched::Event;
 
 pub use registry::{MetricRegistry, MetricValue, RegistrySnapshot};
-pub use sample::{lane_hash, lane_population, sample_lanes, LanePopulation};
+pub use sample::{
+    lane_hash, lane_hash_finish, lane_hash_prefix, lane_population, sample_indices,
+    sample_lanes, LanePopulation,
+};
 pub use span::SpanGuard;
 pub use trace::TraceBuilder;
 

@@ -16,12 +16,26 @@ use crate::coordinator::network::PeerLane;
 /// folded with the run seed, finished with a splitmix64 mix (same
 /// construction as the round-engine's `round_seed`, minus the round).
 pub fn lane_hash(run_seed: u64, hotkey: &str) -> u64 {
+    lane_hash_finish(lane_hash_prefix(hotkey), run_seed)
+}
+
+/// The hotkey-bytes half of [`lane_hash`] (seed-independent FNV-1a),
+/// split out so swarm-scale rosters can hash each hotkey once at join
+/// time: `lane_hash(seed, hk) == lane_hash_finish(lane_hash_prefix(hk), seed)`
+/// bit-for-bit.
+pub fn lane_hash_prefix(hotkey: &str) -> u64 {
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for &b in hotkey.as_bytes() {
         h ^= b as u64;
         h = h.wrapping_mul(0x0000_0100_0000_01b3);
     }
-    h ^= run_seed.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    h
+}
+
+/// The per-run half of [`lane_hash`]: fold the run seed into a
+/// [`lane_hash_prefix`] and run the finalizer.
+pub fn lane_hash_finish(prefix: u64, run_seed: u64) -> u64 {
+    let mut h = prefix ^ run_seed.wrapping_mul(0x9e37_79b9_7f4a_7c15);
     h ^= h >> 30;
     h = h.wrapping_mul(0xbf58_476d_1ce4_e5b9);
     h ^= h >> 27;
@@ -54,6 +68,28 @@ pub fn sample_lanes(run_seed: u64, lanes: Vec<PeerLane>, k: usize) -> Vec<PeerLa
     }
     out.reverse();
     out
+}
+
+/// Index-level twin of [`sample_lanes`]: the bottom-k positions by
+/// `lane_hash(run_seed, hotkey)` (ties broken by position), returned in
+/// ascending position order. `k == 0` or `n <= k` keeps every index.
+/// Picking indices *first* is what lets a swarm-scale report materialize
+/// only the sampled lanes — O(sample) hotkey strings — instead of
+/// building all n `PeerLane`s and truncating afterwards.
+pub fn sample_indices<'a, I>(run_seed: u64, hotkeys: I, k: usize) -> Vec<usize>
+where
+    I: ExactSizeIterator<Item = &'a str>,
+{
+    let n = hotkeys.len();
+    if k == 0 || n <= k {
+        return (0..n).collect();
+    }
+    let mut ranked: Vec<(u64, usize)> =
+        hotkeys.enumerate().map(|(i, hk)| (lane_hash(run_seed, hk), i)).collect();
+    ranked.sort_unstable();
+    let mut keep: Vec<usize> = ranked.into_iter().take(k).map(|(_, i)| i).collect();
+    keep.sort_unstable();
+    keep
 }
 
 /// Exact whole-population counters over a round's peer lanes. All
@@ -170,6 +206,32 @@ mod tests {
         .map(|l| l.hotkey)
         .collect();
         assert_eq!(kept_f, again, "same seed + same set -> identical sample");
+    }
+
+    #[test]
+    fn prefix_split_matches_lane_hash_bitwise() {
+        for hk in ["hk-00000", "swm-000042", ""] {
+            let p = lane_hash_prefix(hk);
+            for seed in [0u64, 7, 0xC0DE, u64::MAX] {
+                assert_eq!(lane_hash(seed, hk), lane_hash_finish(p, seed));
+            }
+        }
+    }
+
+    #[test]
+    fn sample_indices_matches_sample_lanes_membership() {
+        let names: Vec<String> = (0..9).map(|i| format!("hk-{i:05}")).collect();
+        let lanes: Vec<PeerLane> =
+            names.iter().enumerate().map(|(i, n)| lane(i, n)).collect();
+        for k in [0usize, 3, 5, 9, 20] {
+            let kept = sample_lanes(0x5EED, lanes.clone(), k);
+            let idx = sample_indices(0x5EED, names.iter().map(|s| s.as_str()), k);
+            assert_eq!(
+                kept.iter().map(|l| l.uid).collect::<Vec<_>>(),
+                idx,
+                "k={k}: index twin must pick the same cohort in the same order"
+            );
+        }
     }
 
     #[test]
